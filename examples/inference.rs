@@ -1,0 +1,100 @@
+//! Post-training inference: the paper's point that STLD-trained models
+//! keep the FULL architecture at inference time (§3.2 — unlike pruning).
+//!
+//! Run with: `cargo run --release --example inference`
+//!
+//! Trains a few DropPEFT rounds, saves the global checkpoint, reloads
+//! it, and serves batched classification through the full-depth
+//! `infer_lora` artifact, reporting accuracy and latency percentiles.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use droppeft::data::{batch::eval_batches, gen, TaskSpec};
+use droppeft::fed::{Engine, FedConfig};
+use droppeft::methods;
+use droppeft::model::{ckpt, BaseModel};
+use droppeft::runtime::tensor::Value;
+use droppeft::runtime::Runtime;
+use droppeft::util::stats;
+
+fn main() -> Result<()> {
+    let runtime = Arc::new(Runtime::new("artifacts")?);
+
+    // quick DropPEFT session to obtain a trained checkpoint
+    let mut cfg = FedConfig::quick("tiny", "agnews");
+    cfg.rounds = 10;
+    cfg.lr = 1e-2;
+    cfg.seed = 21;
+    let seed = cfg.seed;
+    let preset = cfg.preset.clone();
+    let method = methods::by_name("droppeft-lora", seed, cfg.rounds)?;
+    let mut engine = Engine::new(cfg, runtime.clone(), method)?;
+    let session = engine.run()?;
+    println!(
+        "trained: final acc {:.1}% over {} rounds",
+        100.0 * session.final_acc(),
+        session.records.len()
+    );
+
+    std::fs::create_dir_all("results")?;
+    ckpt::save(engine.global_state(), "results/inference_demo.ckpt")?;
+    let state = ckpt::load("results/inference_demo.ckpt")?;
+    println!("checkpoint round-tripped: {} trainable params", state.param_count());
+
+    // serve: full-depth logits on fresh batches
+    let spec = runtime.model(&preset)?.clone();
+    let mcfg = &spec.config;
+    let base = BaseModel::init(&spec, seed);
+    let ds = gen::generate(
+        &TaskSpec::by_name("agnews", 32 * mcfg.batch),
+        mcfg.seq,
+        mcfg.vocab,
+        seed ^ 0xF00D,
+    );
+    let all: Vec<usize> = (0..ds.len()).collect();
+    let batches = eval_batches(&ds, &all, mcfg.batch, 32);
+    runtime.warm(&preset, "infer_lora")?;
+
+    let mut lat_ms = Vec::new();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for b in &batches {
+        let inputs = vec![
+            Value::f32(base.layers.clone(), vec![base.n_layers, base.p]),
+            Value::f32(state.peft.clone(), vec![state.n_layers, state.q]),
+            Value::f32(base.globals.clone(), vec![base.globals.len()]),
+            Value::f32(state.head.clone(), vec![state.head.len()]),
+            b.tokens.clone(),
+        ];
+        let t0 = Instant::now();
+        let outs = runtime.execute(&preset, "infer_lora", &inputs)?;
+        lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        let logits = outs[0].as_f32()?;
+        let labels = b.labels.as_i32()?;
+        for (i, &lab) in labels.iter().enumerate() {
+            let row = &logits[i * mcfg.n_classes..(i + 1) * mcfg.n_classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j as i32)
+                .unwrap();
+            correct += (pred == lab) as usize;
+            total += 1;
+        }
+    }
+    println!(
+        "served {} batches ({} samples): acc {:.1}%  latency p50 {:.2} ms  p99 {:.2} ms  \
+         throughput {:.0} samples/s",
+        batches.len(),
+        total,
+        100.0 * correct as f64 / total as f64,
+        stats::percentile(&lat_ms, 50.0),
+        stats::percentile(&lat_ms, 99.0),
+        total as f64 / (lat_ms.iter().sum::<f64>() / 1e3)
+    );
+    Ok(())
+}

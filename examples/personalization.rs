@@ -1,0 +1,68 @@
+//! Personalization example: PTLS vs share-everything under severe
+//! non-IID skew (paper §4 / Fig. 15).
+//!
+//! Run with: `cargo run --release --example personalization`
+//!
+//! Two sessions at Dirichlet alpha = 0.1 (strong label skew): DropPEFT
+//! with PTLS (devices keep their most-adapting layers local) vs the b3
+//! ablation (all layers aggregated). Prints global and personalized
+//! accuracies plus each device's shared-layer pattern.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use droppeft::fed::{Engine, FedConfig};
+use droppeft::methods;
+use droppeft::runtime::Runtime;
+use droppeft::util::table::Table;
+
+fn cfg() -> FedConfig {
+    let mut c = FedConfig::quick("tiny", "qqp");
+    c.alpha = 0.1; // severe skew
+    c.rounds = 16;
+    c.n_devices = 12;
+    c.devices_per_round = 4;
+    c.local_batches = 3;
+    c.samples = 1_200;
+    c.lr = 1e-2;
+    c.eval_every = 4;
+    c.eval_batches = 8;
+    c.eval_personalized = true;
+    c.seed = 11;
+    c
+}
+
+fn main() -> Result<()> {
+    let runtime = Arc::new(Runtime::new("artifacts")?);
+    let mut t = Table::new(&["method", "global acc", "personalized acc"]);
+    for name in ["droppeft-lora", "droppeft-b3"] {
+        let c = cfg();
+        let m = methods::by_name(name, c.seed, c.rounds)?;
+        let label = m.name();
+        println!("== session: {label} (alpha = 0.1) ==");
+        let mut engine = Engine::new(c, runtime.clone(), m)?;
+        let r = engine.run()?;
+        println!("{}\n", r.table());
+        let global = r
+            .records
+            .iter()
+            .rev()
+            .find_map(|x| x.global_acc)
+            .unwrap_or(0.0);
+        let pers = r.records.iter().rev().find_map(|x| x.personalized_acc);
+        t.row(vec![
+            label,
+            format!("{:.1}%", 100.0 * global),
+            pers.map(|a| format!("{:.1}%", 100.0 * a))
+                .unwrap_or_else(|| "- (not personalized)".into()),
+        ]);
+    }
+    println!("{}", t.text());
+    println!(
+        "\nReading: under strong skew the shared global model underfits\n\
+         every device; PTLS's personalized layers recover local accuracy\n\
+         (paper Fig. 15: ~5% degradation with PTLS vs ~14% without)."
+    );
+    Ok(())
+}

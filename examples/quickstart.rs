@@ -1,0 +1,50 @@
+//! Quickstart: the smallest complete DropPEFT federated session.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first).
+//!
+//! Ten simulated Jetson-class devices fine-tune the `tiny` preset on the
+//! synthetic MNLI analog with the full DropPEFT stack — STLD layer
+//! dropout, the bandit dropout-rate configurator, and PTLS personalized
+//! layer sharing — and print the accuracy/time trajectory.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use droppeft::fed::{Engine, FedConfig};
+use droppeft::methods;
+use droppeft::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let runtime = Arc::new(Runtime::new("artifacts")?);
+
+    let mut cfg = FedConfig::quick("tiny", "mnli");
+    cfg.rounds = 12;
+    cfg.n_devices = 10;
+    cfg.devices_per_round = 3;
+    cfg.local_batches = 3;
+    cfg.samples = 1_000;
+    cfg.lr = 1e-2;
+    cfg.cost_model = Some("roberta-large".into()); // paper-scale wall-clock
+
+    let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds)?;
+    println!("== DropPEFT quickstart: {} ==", method.name());
+
+    let mut engine = Engine::new(cfg, runtime.clone(), method)?;
+    let result = engine.run()?;
+
+    println!("{}", result.table());
+    println!(
+        "\nfinal accuracy {:.1}% after {:.2} simulated hours ({} rounds)",
+        100.0 * result.final_acc(),
+        result.total_sim_secs() / 3600.0,
+        result.records.len()
+    );
+    println!(
+        "total traffic {:.1} MB, mean device energy {:.1} kJ",
+        result.total_traffic_bytes() as f64 / 1e6,
+        result.total_energy_j() / 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,162 @@
+"""AOT export: lower every executable the rust coordinator needs to HLO text.
+
+Interchange format is **HLO text**, not ``HloModuleProto.serialize()``:
+jax >= 0.5 emits protos with 64-bit instruction ids that this image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted per (preset, peft kind):
+
+- ``train_{kind}_k{K}`` for K in 1..n_layers — one STLD mini-batch over K
+  *active* layers (the rust side gathers active rows and picks the K
+  artifact; paper Eq. 3/4).
+- ``eval_{kind}``  — full-depth loss/#correct.
+- ``infer_{kind}`` — full-depth logits.
+
+``artifacts/manifest.json`` records every executable's I/O signature plus
+the packed parameter layouts (single source of truth for the rust side).
+
+Usage: ``python -m compile.aot --out ../artifacts [--presets tiny,small]
+[--kinds lora,adapter] [--max-k N]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model, packing
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args) -> list:
+    out = []
+    for a in args:
+        dt = {"float32": "f32", "int32": "i32"}[str(a.dtype)]
+        out.append({"shape": list(a.shape), "dtype": dt})
+    return out
+
+
+TRAIN_INPUTS = [
+    "layers", "peft", "opt_m", "opt_v", "globals", "head", "head_m",
+    "head_v", "tokens", "labels", "step", "lr",
+]
+TRAIN_OUTPUTS = [
+    "peft", "opt_m", "opt_v", "head", "head_m", "head_v", "loss",
+    "correct", "grad_norms",
+]
+EVAL_INPUTS = ["layers", "peft", "globals", "head", "tokens", "labels"]
+EVAL_OUTPUTS = ["loss", "correct"]
+INFER_INPUTS = ["layers", "peft", "globals", "head", "tokens"]
+INFER_OUTPUTS = ["logits"]
+
+
+def _named(names, sigs):
+    assert len(names) == len(sigs), (names, [s["shape"] for s in sigs])
+    return [{"name": n, **s} for n, s in zip(names, sigs)]
+
+
+def _train_out_sig(cfg, kind, k):
+    q = packing.peft_layout(cfg, kind).size
+    h = packing.head_layout(cfg).size
+    return [
+        {"shape": [k, q], "dtype": "f32"},
+        {"shape": [k, q], "dtype": "f32"},
+        {"shape": [k, q], "dtype": "f32"},
+        {"shape": [h], "dtype": "f32"},
+        {"shape": [h], "dtype": "f32"},
+        {"shape": [h], "dtype": "f32"},
+        {"shape": [], "dtype": "f32"},
+        {"shape": [], "dtype": "f32"},
+        {"shape": [k], "dtype": "f32"},
+    ]
+
+
+def export_model(cfg: packing.ModelConfig, kinds, out_dir: str,
+                 max_k: int | None, verbose: bool = True) -> dict:
+    arts = {}
+
+    def emit(name: str, fn, args, in_names, out_sigs):
+        t0 = time.time()
+        text = to_hlo_text(fn, args)
+        fname = f"{cfg.name}_{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        arts[name] = {
+            "file": fname,
+            "inputs": _named(in_names, _sig(args)),
+            "outputs": out_sigs,
+        }
+        if verbose:
+            print(f"  {fname:<36} {len(text)/1e6:6.2f} MB  {time.time()-t0:5.1f}s",
+                  flush=True)
+
+    for kind in kinds:
+        ks = range(1, cfg.n_layers + 1)
+        if max_k is not None:
+            ks = [k for k in ks if k <= max_k]
+        for k in ks:
+            fn, args = model.make_train_fn(cfg, kind, k)
+            emit(f"train_{kind}_k{k}", fn, args, TRAIN_INPUTS,
+                 _named(TRAIN_OUTPUTS, _train_out_sig(cfg, kind, k)))
+        fn, args = model.make_eval_fn(cfg, kind)
+        emit(f"eval_{kind}", fn, args, EVAL_INPUTS,
+             _named(EVAL_OUTPUTS, [{"shape": [], "dtype": "f32"}] * 2))
+        fn, args = model.make_infer_fn(cfg, kind)
+        emit(f"infer_{kind}", fn, args, INFER_INPUTS,
+             _named(INFER_OUTPUTS,
+                    [{"shape": [cfg.batch, cfg.n_classes], "dtype": "f32"}]))
+
+    return {
+        "config": cfg.to_json(),
+        "layouts": {
+            "layer": packing.layer_layout(cfg).to_json(),
+            "lora": packing.lora_layout(cfg).to_json(),
+            "adapter": packing.adapter_layout(cfg).to_json(),
+            "globals": packing.globals_layout(cfg).to_json(),
+            "head": packing.head_layout(cfg).to_json(),
+        },
+        "artifacts": arts,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small")
+    ap.add_argument("--kinds", default="lora,adapter")
+    ap.add_argument("--max-k", type=int, default=None,
+                    help="cap train-artifact active-layer counts (CI speed)")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    kinds = [k for k in args.kinds.split(",") if k]
+    manifest = {"version": 1, "models": {}}
+    t0 = time.time()
+    for name in args.presets.split(","):
+        cfg = packing.PRESETS[name]
+        print(f"preset {name}: L={cfg.n_layers} d={cfg.d_model} "
+              f"P={packing.layer_layout(cfg).size}", flush=True)
+        manifest["models"][name] = export_model(cfg, kinds, args.out, args.max_k)
+    path = os.path.join(args.out, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {path} ({time.time()-t0:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""L1 Pallas kernels for the DropPEFT reproduction.
+
+Public surface:
+
+- :func:`matmul.pl_matmul` — tiled dense matmul.
+- :func:`lora.lora_linear` — fused dense + low-rank projection (the PEFT
+  hot spot), differentiable via a Pallas-built custom VJP.
+- :func:`attention.attention` — flash-style streaming softmax attention.
+- :func:`layernorm.layernorm` — row-block layernorm.
+- :mod:`ref` — pure-jnp oracles used by pytest/hypothesis.
+- :mod:`roofline` — analytic VMEM/MXU estimates for real-TPU execution.
+
+``DROPPEFT_KERNEL_BACKEND=jnp`` re-exports the oracles under the kernel
+names (perf instrumentation only — see common.BACKEND).
+"""
+
+from . import common
+from . import ref
+
+if common.BACKEND == "jnp":  # §Perf comparison path
+    import jax.numpy as _jnp
+
+    def pl_matmul(x, y):  # noqa: D103 - mirrors matmul.pl_matmul
+        return ref.matmul(x, y)
+
+    def lora_linear(x, w, a, b, scale):  # noqa: D103
+        return ref.lora_matmul(x, w, a, b, scale)
+
+    def attention(q, k, v, block_q=64, block_k=64):  # noqa: D103
+        return ref.attention(q, k, v)
+
+    def layernorm(x, gamma, beta, eps=1e-5):  # noqa: D103
+        return ref.layernorm(x, gamma, beta, eps)
+else:
+    from .matmul import pl_matmul
+    from .lora import lora_linear
+    from .attention import attention
+    from .layernorm import layernorm
+
+__all__ = ["pl_matmul", "lora_linear", "attention", "layernorm", "ref", "common"]

@@ -1,0 +1,120 @@
+"""Fused scaled-dot-product attention kernel (flash-attention style).
+
+CUDA flash-attention tiles Q rows across threadblocks and streams K/V
+through shared memory with an online softmax. The TPU/Pallas translation
+(DESIGN.md §Hardware-Adaptation): one grid step owns a (block_q x d) Q tile
+resident in VMEM and iterates the KV sequence in block_k chunks with the
+streaming max/sum rescaling, so the S x S logits matrix never exists in
+HBM. Grid = (batch*heads, q_blocks); the KV loop is a fori_loop *inside*
+the kernel body (KV tiles are VMEM-resident for the small head dims used
+here; full models would stream them via a third grid axis).
+
+Backward: recompute-based jnp formula under ``jax.custom_vjp`` — the bwd is
+matmul-bound and XLA fuses it; the paper's savings come from skipping
+whole layers, not from a bespoke attention bwd (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from . import ref
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, seq_len: int, block_k: int):
+    """One grid step: a Q row-block against the whole (padded) KV stream."""
+    q = q_ref[0].astype(jnp.float32)  # [bq, d]
+    kall = k_ref[0].astype(jnp.float32)  # [Sp, d]
+    vall = v_ref[0].astype(jnp.float32)  # [Sp, d]
+    bq, d = q.shape
+    sp = kall.shape[0]
+    scale = jax.lax.rsqrt(jnp.float32(d))
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)  # running max
+    l0 = jnp.zeros((bq,), jnp.float32)  # running sum
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+
+    def body(i, carry):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(kall, i * block_k, block_k)
+        vb = jax.lax.dynamic_slice_in_dim(vall, i * block_k, block_k)
+        s = jnp.dot(q, kb.T, preferred_element_type=jnp.float32) * scale
+        # mask out zero-padded key positions beyond the true sequence
+        idx = i * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where(idx[None, :] < seq_len, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=1)
+        acc_new = acc * corr[:, None] + jnp.dot(
+            p, vb, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    _, l, acc = jax.lax.fori_loop(0, sp // block_k, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _attn_fwd_impl(q, k, v, block_q: int, block_k: int):
+    b, h, s, d = q.shape
+    bq = min(block_q, common.block_dim(s))
+    bk = min(block_k, common.block_dim(s))
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    qp = common.pad_to(qf, 1, bq)
+    kp = common.pad_to(kf, 1, bk)
+    vp = common.pad_to(vf, 1, bk)
+    sq = qp.shape[1]
+    sk = kp.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, seq_len=s, block_k=bk),
+        grid=(b * h, sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, sk, d), lambda g, i: (g, 0, 0)),
+            pl.BlockSpec((1, sk, d), lambda g, i: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda g, i: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        interpret=common.INTERPRET,
+    )(qp, kp, vp)
+    return out[:, :s, :].reshape(b, h, s, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def attention(q, k, v, block_q: int = 64, block_k: int = 64):
+    """softmax(q k^T / sqrt(d)) v over [B, H, S, D] tensors."""
+    return _attn_fwd_impl(q, k, v, block_q, block_k)
+
+
+def _vjp_fwd(q, k, v, block_q, block_k):
+    return _attn_fwd_impl(q, k, v, block_q, block_k), (q, k, v)
+
+
+def _vjp_bwd(block_q, block_k, res, g):
+    q, k, v = res
+    # Recompute-based backward (standard softmax-attention gradients).
+    d = q.shape[-1]
+    qf, kf, vf, gf = (t.astype(jnp.float32) for t in (q, k, v, g))
+    logits = jnp.einsum("bhsd,bhtd->bhst", qf, kf) / jnp.sqrt(jnp.float32(d))
+    p = jax.nn.softmax(logits, axis=-1)
+    dv = jnp.einsum("bhst,bhsd->bhtd", p, gf)
+    dp = jnp.einsum("bhsd,bhtd->bhst", gf, vf)
+    # softmax jacobian: dlogits = p * (dp - sum_t p*dp)
+    dlog = p * (dp - jnp.sum(p * dp, axis=-1, keepdims=True))
+    dlog = dlog / jnp.sqrt(jnp.float32(d))
+    dq = jnp.einsum("bhst,bhtd->bhsd", dlog, kf)
+    dk = jnp.einsum("bhst,bhsd->bhtd", dlog, qf)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+attention.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,72 @@
+"""Shared helpers for the Pallas kernels (L1).
+
+All kernels in this package are lowered with ``interpret=True``: the CPU
+PJRT plugin in this image cannot execute Mosaic custom-calls, so interpret
+mode (which lowers the kernel body to plain HLO) is the correctness path.
+Real-TPU characteristics (VMEM footprint, MXU utilization) are *estimated*
+analytically in :mod:`roofline` — interpret-mode wallclock is not a TPU
+proxy.
+
+Tiling convention: output tiles are MXU-shaped (128x128 by default, shrunk
+to the actual dim when smaller) and inputs are zero-padded up to block
+multiples; padding is mathematically inert for every kernel here (matmul
+accumulates zeros, layernorm/attention slice the pad off before reduce).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax.numpy as jnp
+
+# MXU systolic array is 128x128; VPU lanes are 8x128. Default tile edge.
+# DROPPEFT_BLOCK overrides for the §Perf block-size sweep (the interpret
+# path lowers each grid step to real HLO ops, so fewer/larger tiles trade
+# loop overhead against working-set size exactly like on hardware).
+MXU_EDGE = int(os.environ.get("DROPPEFT_BLOCK", "128"))
+
+# Flip to False to assert no kernel falls back to the jnp reference path.
+INTERPRET = True
+
+# §Perf instrumentation: DROPPEFT_KERNEL_BACKEND=jnp swaps every Pallas
+# kernel for its pure-jnp oracle at artifact-build time. Used to measure
+# the interpret-mode overhead on this CPU testbed (EXPERIMENTS.md §Perf);
+# the shipped default remains the Pallas path.
+BACKEND = os.environ.get("DROPPEFT_KERNEL_BACKEND", "pallas")
+
+
+def block_dim(n: int, preferred: int = MXU_EDGE) -> int:
+    """Pick a block edge for a dimension of size ``n``.
+
+    Returns ``preferred`` when the dim is at least one full tile, otherwise
+    the next power of two >= n (Pallas interpret mode handles any block
+    shape, but powers of two keep the roofline model simple and map 1:1 to
+    what Mosaic would pick on real hardware).
+    """
+    if n >= preferred:
+        return preferred
+    p = 8
+    while p < n:
+        p *= 2
+    return p
+
+
+def pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    """Zero-pad ``x`` along ``axis`` up to a multiple of ``mult``."""
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@functools.lru_cache(maxsize=None)
+def _noop():  # pragma: no cover - import-time smoke hook
+    return None

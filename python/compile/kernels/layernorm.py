@@ -1,0 +1,79 @@
+"""Row-block LayerNorm Pallas kernel.
+
+Each grid step owns a row-block resident in VMEM; mean/variance are a
+single VPU reduction over the feature axis (features fit one tile for the
+model widths used here). Backward is the standard closed-form layernorm
+gradient under ``jax.custom_vjp``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (
+        y * g_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    ).astype(o_ref.dtype)
+
+
+def _ln_fwd_impl(x, gamma, beta, eps):
+    rows, d = x.shape
+    br = common.block_dim(rows)
+    xp = common.pad_to(x, 0, br)
+    rp = xp.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=(rp // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, d), x.dtype),
+        interpret=common.INTERPRET,
+    )(xp, gamma, beta)
+    return out[:rows]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    """Row-wise layernorm over the last axis of a 2-D ``x``."""
+    return _ln_fwd_impl(x, gamma, beta, eps)
+
+
+def _vjp_fwd(x, gamma, beta, eps):
+    return _ln_fwd_impl(x, gamma, beta, eps), (x, gamma, beta)
+
+
+def _vjp_bwd(eps, res, g):
+    x, gamma, beta = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    d = x.shape[-1]
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = (xf - mu) * rstd
+    dgamma = jnp.sum(gf * xhat, axis=0).astype(gamma.dtype)
+    dbeta = jnp.sum(gf, axis=0).astype(beta.dtype)
+    gy = gf * gamma.astype(jnp.float32)
+    dx = (
+        gy - jnp.mean(gy, axis=-1, keepdims=True)
+        - xhat * jnp.mean(gy * xhat, axis=-1, keepdims=True)
+    ) * rstd
+    return dx.astype(x.dtype), dgamma, dbeta
+
+
+layernorm.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,115 @@
+"""Fused LoRA projection kernel (L1 hot spot).
+
+The paper's PEFT cost concern (§2.3) is that additive modules *add* work to
+an already matmul-bound forward pass: a naive LoRA layer reads the
+activation ``x`` from HBM three times (dense path, A path, B path). This
+kernel folds the low-rank bypass into the dense projection's tile loop:
+
+    y[i,j] = sum_k x[i,k] @ ( W[k,j] + scale * A[k,:] @ B[:,j] )
+
+so each ``x`` tile is read exactly once and the effective weight tile is
+materialized in VMEM (bk x bn floats, plus a bk x r and r x bn sliver for
+the low-rank factors — see roofline.py for the VMEM budget).
+
+The backward pass is a ``jax.custom_vjp`` expressed with the same tiled
+Pallas matmul building block:
+
+    dx = g @ (W + sAB)^T  = lora fwd kernel with transposed factors
+    dW = x^T g            (frozen in DropPEFT; XLA DCEs it when unused)
+    dA = s * x^T (g B^T)
+    dB = s * (xA)^T g
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from .matmul import pl_matmul
+
+
+def _lora_kernel(x_ref, w_ref, a_ref, b_ref, o_ref, *, scale: float):
+    """One (i, j, k) grid step over the fused effective-weight tile."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w_eff = w_ref[...].astype(jnp.float32) + scale * jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w_eff, preferred_element_type=jnp.float32
+    )
+
+
+def _lora_fwd_impl(x, w, a, b, scale):
+    m, k = x.shape
+    k2, n = w.shape
+    ka, r = a.shape
+    rb, nb = b.shape
+    assert k == k2 == ka and r == rb and n == nb, (
+        f"lora shape mismatch x{x.shape} w{w.shape} a{a.shape} b{b.shape}"
+    )
+    bm = common.block_dim(m)
+    bn = common.block_dim(n)
+    bk = common.block_dim(k)
+
+    xp = common.pad_to(common.pad_to(x, 0, bm), 1, bk)
+    wp = common.pad_to(common.pad_to(w, 0, bk), 1, bn)
+    ap = common.pad_to(a, 0, bk)  # rank axis stays whole: it is tiny
+    bp = common.pad_to(b, 1, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+
+    out = pl.pallas_call(
+        functools.partial(_lora_kernel, scale=float(scale)),
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, r), lambda i, j, kk: (kk, 0)),
+            pl.BlockSpec((r, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=common.INTERPRET,
+    )(xp, wp, ap, bp)
+    return out[:m, :n].astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def lora_linear(x, w, a, b, scale: float):
+    """y = x @ W + scale * (x @ A) @ B, fused single-pass over x.
+
+    Shapes: x [M,K], w [K,N], a [K,r], b [r,N] -> y [M,N].
+    """
+    return _lora_fwd_impl(x, w, a, b, scale)
+
+
+def _vjp_fwd(x, w, a, b, scale):
+    return _lora_fwd_impl(x, w, a, b, scale), (x, w, a, b)
+
+
+def _vjp_bwd(scale, res, g):
+    x, w, a, b = res
+    gf = g.astype(jnp.float32)
+    # dx via the same fused kernel on transposed factors:
+    # (W + sAB)^T = W^T + s B^T A^T
+    dx = lora_linear(gf, w.T, b.T, a.T, scale).astype(x.dtype)
+    # dW: only needed for full fine-tuning; DCE'd when the base is frozen.
+    dw = pl_matmul(x.T, gf).astype(w.dtype)
+    gb = pl_matmul(gf, b.T)  # [M, r]
+    da = (scale * pl_matmul(x.T, gb)).astype(a.dtype)
+    xa = pl_matmul(x, a)  # [M, r]
+    db = (scale * pl_matmul(xa.T, gf)).astype(b.dtype)
+    return dx, dw, da, db
+
+
+lora_linear.defvjp(_vjp_fwd, _vjp_bwd)

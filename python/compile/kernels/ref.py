@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *correctness ground truth*: pytest (python/tests) sweeps
+shapes and dtypes with hypothesis and asserts the Pallas kernels match
+these references to numerical tolerance. They are also the building blocks
+of the kernels' backward passes where a hand-written bwd kernel would buy
+nothing on this testbed (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Plain dense matmul, f32 accumulation."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def lora_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    scale: float,
+) -> jnp.ndarray:
+    """y = x @ W + scale * (x @ A) @ B  — the LoRA-augmented projection."""
+    dense = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    low = jnp.matmul(
+        jnp.matmul(x, a, preferred_element_type=jnp.float32),
+        b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return (dense + scale * low).astype(x.dtype)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Scaled dot-product attention over [B, H, S, D] tensors (no mask).
+
+    Softmax is computed in f32 regardless of the input dtype, matching the
+    kernel's streaming accumulator precision.
+    """
+    d = q.shape[-1]
+    logits = jnp.einsum(
+        "bhsd,bhtd->bhst", q, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.float32(d))
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p.astype(jnp.float32), v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """Row-wise layer normalization over the last axis."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,125 @@
+"""Analytic TPU roofline estimates for the L1 kernels.
+
+Interpret-mode wallclock on a 1-core CPU says nothing about TPU behaviour,
+so per DESIGN.md §Hardware-Adaptation we *estimate* the quantities that
+would be measured on real hardware from the BlockSpec schedule:
+
+- VMEM footprint per grid step (must stay under ~16 MiB/core headroom),
+- MXU utilization = useful MACs / (MXU-issue slots consumed),
+- arithmetic intensity and the memory-bound/compute-bound verdict against
+  a v4-like core (275 TFLOP/s bf16, 1.2 TB/s HBM).
+
+``pytest python/tests/test_roofline.py -s`` prints the table recorded in
+EXPERIMENTS.md §Perf (L1).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+MXU_EDGE = 128
+VMEM_BYTES = 16 * 1024 * 1024
+PEAK_FLOPS_BF16 = 275e12
+HBM_BW = 1.2e12
+
+
+@dataclass(frozen=True)
+class KernelEstimate:
+    name: str
+    vmem_bytes: int
+    flops: int
+    hbm_bytes: int
+    mxu_util: float
+
+    @property
+    def intensity(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1)
+
+    @property
+    def bound(self) -> str:
+        ridge = PEAK_FLOPS_BF16 / HBM_BW
+        return "compute" if self.intensity >= ridge else "memory"
+
+    @property
+    def est_time_s(self) -> float:
+        return max(self.flops / PEAK_FLOPS_BF16, self.hbm_bytes / HBM_BW)
+
+    def row(self) -> str:
+        return (
+            f"{self.name:<28} vmem={self.vmem_bytes/2**20:6.2f}MiB "
+            f"mxu={self.mxu_util*100:5.1f}% ai={self.intensity:8.1f} "
+            f"{self.bound}-bound est={self.est_time_s*1e6:8.2f}us"
+        )
+
+
+def _pad(n: int, b: int) -> int:
+    return -(-n // b) * b
+
+
+def matmul_estimate(m: int, k: int, n: int, bm=128, bn=128, bk=128, dtype_bytes=2) -> KernelEstimate:
+    """Tiled matmul: per-step VMEM = x-tile + y-tile + f32 acc tile."""
+    mp, kp, np_ = _pad(m, bm), _pad(k, bk), _pad(n, bn)
+    vmem = bm * bk * dtype_bytes + bk * bn * dtype_bytes + bm * bn * 4
+    flops = 2 * m * k * n
+    padded_flops = 2 * mp * kp * np_
+    # operational intensity assumes each input is streamed from HBM once
+    # (CMEM/VMEM reuse across output tiles); padding still costs traffic
+    hbm = (mp * kp + kp * np_) * dtype_bytes + mp * np_ * 4
+    # MXU slots: the systolic array issues bm x bn x bk MACs per pass
+    util = flops / padded_flops
+    return KernelEstimate("matmul", vmem, flops, hbm, util)
+
+
+def lora_estimate(m: int, k: int, n: int, r: int, bm=128, bn=128, bk=128) -> KernelEstimate:
+    """Fused LoRA projection: adds an (bk x r)@(r x bn) sliver per step."""
+    base = matmul_estimate(m, k, n, bm, bn, bk)
+    mp, kp, np_ = _pad(m, bm), _pad(k, bk), _pad(n, bn)
+    steps = (mp // bm) * (np_ // bn) * (kp // bk)
+    extra_flops = 2 * bk * r * bn * steps
+    extra_vmem = (bk * r + r * bn) * 2
+    extra_hbm = (kp * r + r * np_) * 2
+    flops = base.flops + 2 * m * r * n + 2 * m * k * r  # useful lora math
+    padded = 2 * mp * kp * np_ + extra_flops
+    util = flops / padded
+    return KernelEstimate(
+        f"lora_linear(r={r})",
+        base.vmem_bytes + extra_vmem,
+        flops,
+        base.hbm_bytes + extra_hbm,
+        util,
+    )
+
+
+def attention_estimate(bh: int, s: int, d: int, bq=64, bk=64) -> KernelEstimate:
+    """Flash-style attention: Q tile + KV stream + f32 accumulators."""
+    sp = _pad(s, bq)
+    vmem = bq * d * 2 + 2 * (sp * d * 2) + bq * d * 4 + 3 * bq * 4
+    flops = bh * (2 * s * s * d * 2)  # qk^T and pv
+    hbm = bh * (3 * s * d + s * d) * 2
+    util = (s / sp) * min(d / MXU_EDGE, 1.0)
+    return KernelEstimate(f"attention(S={s},D={d})", vmem, flops, hbm, util)
+
+
+def layernorm_estimate(rows: int, d: int, br=128) -> KernelEstimate:
+    rp = _pad(rows, br)
+    vmem = br * d * 2 + br * d * 2 + 2 * d * 2
+    flops = rows * d * 8
+    hbm = (rp * d * 2) * 2 + 2 * d * 2
+    return KernelEstimate(f"layernorm(d={d})", vmem, flops, hbm, rows / rp)
+
+
+def report(model_d: int = 1024, seq: int = 256, batch: int = 16, rank: int = 8) -> str:
+    """Roofline table at paper-scale dims (RoBERTa-large-ish)."""
+    mt = batch * seq
+    rows = [
+        matmul_estimate(mt, model_d, model_d),
+        lora_estimate(mt, model_d, model_d, rank),
+        attention_estimate(batch * 16, seq, model_d // 16),
+        layernorm_estimate(mt, model_d),
+    ]
+    hdr = f"-- L1 roofline @ d={model_d} S={seq} B={batch} (v4-like core) --"
+    return "\n".join([hdr] + [r.row() for r in rows])
+
+
+if __name__ == "__main__":
+    print(report())

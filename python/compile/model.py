@@ -1,0 +1,229 @@
+"""L2: the DropPEFT encoder-classifier compute graph (build-time JAX).
+
+The model is written as a ``lax.scan`` over *stacked per-layer parameter
+rows* so that one traced function serves any active-layer count ``K``: the
+rust coordinator samples the STLD mask (paper Eq. 3), gathers the K active
+layers' rows on the host, and invokes the K-layer train-step executable.
+Skipped layers therefore never enter the computation at all — compute and
+activation memory genuinely scale with E[L-tilde] (paper Eq. 4).
+
+All projection/normalization hot spots call the L1 Pallas kernels
+(``kernels.lora_linear``, ``kernels.attention``, ``kernels.pl_matmul``,
+``kernels.layernorm``); pure-jnp glue handles embedding/pooling/loss.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import packing
+from .packing import ModelConfig
+from .kernels import attention, layernorm, lora_linear, pl_matmul
+
+
+class TrainOut(NamedTuple):
+    """Outputs of one train step (order mirrors the manifest)."""
+
+    peft: jnp.ndarray      # [K, Q] updated PEFT rows
+    opt_m: jnp.ndarray     # [K, Q]
+    opt_v: jnp.ndarray     # [K, Q]
+    head: jnp.ndarray      # [H]
+    head_m: jnp.ndarray    # [H]
+    head_v: jnp.ndarray    # [H]
+    loss: jnp.ndarray      # scalar mean CE
+    correct: jnp.ndarray   # scalar #correct in batch
+    grad_norms: jnp.ndarray  # [K] per-layer PEFT grad l2 norms (PTLS Eq. 6)
+
+
+def _linear(x, w, b):
+    return pl_matmul(x, w) + b[None, :]
+
+
+def _attn_block(cfg: ModelConfig, h, lp, pp, kind: str):
+    """Multi-head self-attention with optional LoRA on Q/V projections."""
+    bsz, s, d = h.shape
+    x = h.reshape(bsz * s, d)
+    if kind == "lora":
+        scale = cfg.lora_alpha / cfg.lora_rank
+        q = lora_linear(x, lp["wq"], pp["q_a"], pp["q_b"], scale) + lp["wq_b"][None, :]
+        v = lora_linear(x, lp["wv"], pp["v_a"], pp["v_b"], scale) + lp["wv_b"][None, :]
+    else:
+        q = _linear(x, lp["wq"], lp["wq_b"])
+        v = _linear(x, lp["wv"], lp["wv_b"])
+    k = _linear(x, lp["wk"], lp["wk_b"])
+
+    def split(t):
+        return t.reshape(bsz, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+    o = attention(split(q), split(k), split(v))
+    o = o.transpose(0, 2, 1, 3).reshape(bsz * s, d)
+    o = _linear(o, lp["wo"], lp["wo_b"])
+    return o.reshape(bsz, s, d)
+
+
+def _ffn_block(cfg: ModelConfig, h, lp, pp, kind: str):
+    bsz, s, d = h.shape
+    x = h.reshape(bsz * s, d)
+    z = jax.nn.gelu(_linear(x, lp["w1"], lp["w1_b"]))
+    z = _linear(z, lp["w2"], lp["w2_b"])
+    if kind == "adapter":
+        # Houlsby-style bottleneck with internal residual; `up` is
+        # zero-initialized so an untrained adapter is the identity.
+        a = jax.nn.gelu(_linear(z, pp["down"], pp["down_b"]))
+        z = z + _linear(a, pp["up"], pp["up_b"])
+    return z.reshape(bsz, s, d)
+
+
+def transformer_layer(cfg: ModelConfig, kind: str, h, layer_row, peft_row):
+    """One post-LN transformer layer on stacked-row params (scan body)."""
+    lp = packing.unpack(layer_row, packing.layer_layout(cfg))
+    pp = packing.unpack(peft_row, packing.peft_layout(cfg, kind))
+    bsz, s, d = h.shape
+
+    def ln(x, g, b):
+        return layernorm(x.reshape(bsz * s, d), g, b).reshape(bsz, s, d)
+
+    h = ln(h + _attn_block(cfg, h, lp, pp, kind), lp["ln1_g"], lp["ln1_b"])
+    h = ln(h + _ffn_block(cfg, h, lp, pp, kind), lp["ln2_g"], lp["ln2_b"])
+    return h
+
+
+def forward(cfg: ModelConfig, kind: str, layers, peft, globals_, head, tokens):
+    """Logits for a [B, S] int32 token batch through K stacked layers."""
+    gp = packing.unpack(globals_, packing.globals_layout(cfg))
+    hp = packing.unpack(head, packing.head_layout(cfg))
+    h = gp["embedding"][tokens] + gp["positional"][None, :, :]
+
+    def body(carry, rows):
+        lrow, prow = rows
+        return transformer_layer(cfg, kind, carry, lrow, prow), ()
+
+    h, _ = jax.lax.scan(body, h, (layers, peft))
+    bsz, s, d = h.shape
+    h = layernorm(h.reshape(bsz * s, d), gp["lnf_g"], gp["lnf_b"]).reshape(bsz, s, d)
+    pooled = jnp.mean(h, axis=1)  # [B, d]
+    return pl_matmul(pooled, hp["head_w"]) + hp["head_b"][None, :]
+
+
+def loss_and_metrics(cfg, kind, layers, peft, globals_, head, tokens, labels):
+    logits = forward(cfg, kind, layers, peft, globals_, head, tokens)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    loss = jnp.mean(nll)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, correct
+
+
+def _adamw(p, g, m, v, step, lr, *, b1=0.9, b2=0.999, eps=1e-8, wd=0.01):
+    """Decoupled-weight-decay Adam, identical on [K,Q] rows and [H] vectors."""
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * jnp.square(g)
+    mhat = m / (1.0 - jnp.power(b1, step))
+    vhat = v / (1.0 - jnp.power(b2, step))
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    return p, m, v
+
+
+def train_step(cfg: ModelConfig, kind: str,
+               layers, peft, opt_m, opt_v,
+               globals_, head, head_m, head_v,
+               tokens, labels, step, lr) -> TrainOut:
+    """One STLD mini-batch over K active layers: fwd, bwd, AdamW.
+
+    Only ``peft`` rows and the ``head`` are trainable; the frozen base
+    gradient paths are dead code that XLA eliminates (matching PEFT's
+    backward-pass saving, paper Fig. 1).
+    """
+
+    def lfn(peft_p, head_p):
+        loss, correct = loss_and_metrics(
+            cfg, kind, layers, peft_p, globals_, head_p, tokens, labels
+        )
+        return loss, correct
+
+    (loss, correct), (g_peft, g_head) = jax.value_and_grad(
+        lfn, argnums=(0, 1), has_aux=True
+    )(peft, head)
+
+    grad_norms = jnp.sqrt(jnp.sum(jnp.square(g_peft), axis=1) + 1e-12)
+    peft_n, m_n, v_n = _adamw(peft, g_peft, opt_m, opt_v, step, lr)
+    head_n, hm_n, hv_n = _adamw(head, g_head, head_m, head_v, step, lr)
+    return TrainOut(peft_n, m_n, v_n, head_n, hm_n, hv_n, loss, correct, grad_norms)
+
+
+def eval_step(cfg: ModelConfig, kind: str, layers, peft, globals_, head,
+              tokens, labels):
+    """Full-depth evaluation: (mean loss, #correct) on one batch."""
+    loss, correct = loss_and_metrics(
+        cfg, kind, layers, peft, globals_, head, tokens, labels
+    )
+    return loss, correct
+
+
+def infer_step(cfg: ModelConfig, kind: str, layers, peft, globals_, head, tokens):
+    """Full-depth logits (serving / examples)."""
+    return forward(cfg, kind, layers, peft, globals_, head, tokens)
+
+
+def make_train_fn(cfg: ModelConfig, kind: str, k_active: int):
+    """Close over static config; returns (fn, example_args) for lowering."""
+    p = packing.layer_layout(cfg).size
+    q = packing.peft_layout(cfg, kind).size
+    g = packing.globals_layout(cfg).size
+    h = packing.head_layout(cfg).size
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((k_active, p), f32),
+        jax.ShapeDtypeStruct((k_active, q), f32),
+        jax.ShapeDtypeStruct((k_active, q), f32),
+        jax.ShapeDtypeStruct((k_active, q), f32),
+        jax.ShapeDtypeStruct((g,), f32),
+        jax.ShapeDtypeStruct((h,), f32),
+        jax.ShapeDtypeStruct((h,), f32),
+        jax.ShapeDtypeStruct((h,), f32),
+        jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.batch,), jnp.int32),
+        jax.ShapeDtypeStruct((), f32),
+        jax.ShapeDtypeStruct((), f32),
+    )
+    fn = functools.partial(train_step, cfg, kind)
+    return fn, args
+
+
+def make_eval_fn(cfg: ModelConfig, kind: str):
+    p = packing.layer_layout(cfg).size
+    q = packing.peft_layout(cfg, kind).size
+    g = packing.globals_layout(cfg).size
+    h = packing.head_layout(cfg).size
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((cfg.n_layers, p), f32),
+        jax.ShapeDtypeStruct((cfg.n_layers, q), f32),
+        jax.ShapeDtypeStruct((g,), f32),
+        jax.ShapeDtypeStruct((h,), f32),
+        jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.batch,), jnp.int32),
+    )
+    fn = functools.partial(eval_step, cfg, kind)
+    return fn, args
+
+
+def make_infer_fn(cfg: ModelConfig, kind: str):
+    p = packing.layer_layout(cfg).size
+    q = packing.peft_layout(cfg, kind).size
+    g = packing.globals_layout(cfg).size
+    h = packing.head_layout(cfg).size
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((cfg.n_layers, p), f32),
+        jax.ShapeDtypeStruct((cfg.n_layers, q), f32),
+        jax.ShapeDtypeStruct((g,), f32),
+        jax.ShapeDtypeStruct((h,), f32),
+        jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32),
+    )
+    fn = functools.partial(infer_step, cfg, kind)
+    return fn, args

@@ -1,0 +1,186 @@
+"""Packed parameter layouts shared between L2 (python) and L3 (rust).
+
+Every parameter group is flattened into a single f32 vector ("pack") with a
+deterministic layout table of ``(name, shape, offset)`` entries. The rust
+coordinator never hardcodes shapes: the layout tables are serialized into
+``artifacts/manifest.json`` and are the single source of truth for host-side
+initialization, gather/scatter of STLD-active layer rows, aggregation, and
+checkpointing.
+
+Pack kinds:
+
+- ``layer``   — one transformer layer's frozen base params (row of [L, P])
+- ``lora``    — one layer's LoRA params (row of [L, Q_lora])
+- ``adapter`` — one layer's adapter params (row of [L, Q_adapter])
+- ``globals`` — embedding + positional table + final layernorm
+- ``head``    — classifier weight + bias
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture of the encoder classifier."""
+
+    name: str
+    vocab: int
+    seq: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_layers: int
+    n_classes: int
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+    adapter_dim: int = 16
+    batch: int = 16
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "vocab": self.vocab,
+            "seq": self.seq,
+            "d_model": self.d_model,
+            "n_heads": self.n_heads,
+            "d_ff": self.d_ff,
+            "n_layers": self.n_layers,
+            "n_classes": self.n_classes,
+            "lora_rank": self.lora_rank,
+            "lora_alpha": self.lora_alpha,
+            "adapter_dim": self.adapter_dim,
+            "batch": self.batch,
+        }
+
+
+# Presets: the paper fine-tunes 0.3-1.5B encoders on Jetson-class devices;
+# this testbed is one CPU core, so e2e runs use `small` and `base` is the
+# compile-scale demonstration (see DESIGN.md §Substitutions).
+PRESETS = {
+    "tiny": ModelConfig("tiny", vocab=512, seq=32, d_model=32, n_heads=2,
+                        d_ff=128, n_layers=4, n_classes=4, lora_rank=4,
+                        adapter_dim=8, batch=8),
+    "small": ModelConfig("small", vocab=4096, seq=64, d_model=128, n_heads=4,
+                         d_ff=512, n_layers=12, n_classes=4, lora_rank=8,
+                         adapter_dim=16, batch=16),
+    "base": ModelConfig("base", vocab=30522, seq=128, d_model=256, n_heads=8,
+                        d_ff=1024, n_layers=24, n_classes=4, lora_rank=8,
+                        adapter_dim=32, batch=16),
+}
+
+
+@dataclass
+class Layout:
+    """Ordered (name, shape) table with computed offsets into a flat pack."""
+
+    entries: list = field(default_factory=list)  # (name, shape, offset)
+    size: int = 0
+
+    def add(self, name: str, shape: tuple) -> None:
+        n = math.prod(shape) if shape else 1
+        self.entries.append((name, tuple(shape), self.size))
+        self.size += n
+
+    def slices(self):
+        """name -> (offset, shape) mapping."""
+        return {n: (off, shp) for n, shp, off in self.entries}
+
+    def to_json(self) -> dict:
+        return {
+            "size": self.size,
+            "entries": [
+                {"name": n, "shape": list(s), "offset": off}
+                for n, s, off in self.entries
+            ],
+        }
+
+
+def layer_layout(cfg: ModelConfig) -> Layout:
+    """Frozen base params of one transformer layer (post-LN, BERT-style)."""
+    d, ff = cfg.d_model, cfg.d_ff
+    lo = Layout()
+    for proj in ("wq", "wk", "wv", "wo"):
+        lo.add(proj, (d, d))
+        lo.add(proj + "_b", (d,))
+    lo.add("ln1_g", (d,))
+    lo.add("ln1_b", (d,))
+    lo.add("w1", (d, ff))
+    lo.add("w1_b", (ff,))
+    lo.add("w2", (ff, d))
+    lo.add("w2_b", (d,))
+    lo.add("ln2_g", (d,))
+    lo.add("ln2_b", (d,))
+    return lo
+
+
+def lora_layout(cfg: ModelConfig) -> Layout:
+    """LoRA A/B factors on the attention Q and V projections."""
+    d, r = cfg.d_model, cfg.lora_rank
+    lo = Layout()
+    for proj in ("q", "v"):
+        lo.add(f"{proj}_a", (d, r))
+        lo.add(f"{proj}_b", (r, d))
+    return lo
+
+
+def adapter_layout(cfg: ModelConfig) -> Layout:
+    """Bottleneck adapter (down, GeLU, up, internal residual) after the FFN."""
+    d, a = cfg.d_model, cfg.adapter_dim
+    lo = Layout()
+    lo.add("down", (d, a))
+    lo.add("down_b", (a,))
+    lo.add("up", (a, d))
+    lo.add("up_b", (d,))
+    return lo
+
+
+def peft_layout(cfg: ModelConfig, kind: str) -> Layout:
+    if kind == "lora":
+        return lora_layout(cfg)
+    if kind == "adapter":
+        return adapter_layout(cfg)
+    raise ValueError(f"unknown peft kind {kind!r}")
+
+
+def globals_layout(cfg: ModelConfig) -> Layout:
+    lo = Layout()
+    lo.add("embedding", (cfg.vocab, cfg.d_model))
+    lo.add("positional", (cfg.seq, cfg.d_model))
+    lo.add("lnf_g", (cfg.d_model,))
+    lo.add("lnf_b", (cfg.d_model,))
+    return lo
+
+
+def head_layout(cfg: ModelConfig) -> Layout:
+    lo = Layout()
+    lo.add("head_w", (cfg.d_model, cfg.n_classes))
+    lo.add("head_b", (cfg.n_classes,))
+    return lo
+
+
+def unpack(pack, layout: Layout):
+    """Split a flat [..., size] array into a name->array dict (jnp or np)."""
+    out = {}
+    for name, shape, off in layout.entries:
+        n = math.prod(shape) if shape else 1
+        out[name] = pack[..., off:off + n].reshape(pack.shape[:-1] + shape)
+    return out
+
+
+def param_counts(cfg: ModelConfig) -> dict:
+    """Total parameter accounting used by DESIGN/EXPERIMENTS tables."""
+    lp = layer_layout(cfg).size
+    return {
+        "per_layer": lp,
+        "base": lp * cfg.n_layers + globals_layout(cfg).size,
+        "lora": lora_layout(cfg).size * cfg.n_layers,
+        "adapter": adapter_layout(cfg).size * cfg.n_layers,
+        "head": head_layout(cfg).size,
+    }

@@ -1,0 +1,96 @@
+"""§Perf L1/L2 sweep: time the compiled small-preset train step under
+kernel/block variants (DESIGN.md PERFORMANCE OPTIMIZATION).
+
+Usage: ``python -m compile.perf_sweep [--preset small] [--steps 5]``
+
+Variants are applied through the env knobs read by kernels.common at
+import time, so each variant runs in a subprocess.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+WORKER = r"""
+import time, numpy as np, jax, jax.numpy as jnp
+from compile import model, packing
+cfg = packing.PRESETS["{preset}"]
+kind = "lora"
+k = cfg.n_layers
+fn, args = model.make_train_fn(cfg, kind, k)
+rng = np.random.default_rng(0)
+vals = []
+for a in args:
+    if a.dtype == jnp.int32:
+        hi = cfg.vocab if len(a.shape) == 2 else cfg.n_classes
+        vals.append(jnp.asarray(rng.integers(0, hi, a.shape, dtype=np.int32)))
+    elif a.shape == ():
+        vals.append(jnp.float32(1.0))
+    else:
+        vals.append(jnp.asarray(0.02 * rng.standard_normal(a.shape).astype(np.float32)))
+jit = jax.jit(fn)
+t0 = time.time(); out = jit(*vals); jax.block_until_ready(out.loss)
+compile_s = time.time() - t0
+times = []
+for _ in range({steps}):
+    t0 = time.time()
+    out = jit(*vals)
+    jax.block_until_ready(out.loss)
+    times.append(time.time() - t0)
+print("RESULT", min(times), sum(times) / len(times), compile_s)
+"""
+
+
+def run_variant(name: str, env: dict, preset: str, steps: int) -> dict:
+    e = dict(os.environ)
+    e.update(env)
+    code = WORKER.format(preset=preset, steps=steps)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=e,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT"):
+            _, best, mean, comp = line.split()
+            return {
+                "variant": name,
+                "best_s": float(best),
+                "mean_s": float(mean),
+                "compile_s": float(comp),
+            }
+    raise RuntimeError(f"variant {name} failed:\n{out.stdout}\n{out.stderr}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small")
+    ap.add_argument("--steps", type=int, default=5)
+    args = ap.parse_args()
+
+    variants = [
+        ("pallas block=128 (default)", {"DROPPEFT_BLOCK": "128",
+                                        "DROPPEFT_KERNEL_BACKEND": "pallas"}),
+        ("pallas block=256", {"DROPPEFT_BLOCK": "256",
+                              "DROPPEFT_KERNEL_BACKEND": "pallas"}),
+        ("pallas block=512", {"DROPPEFT_BLOCK": "512",
+                              "DROPPEFT_KERNEL_BACKEND": "pallas"}),
+        ("pallas block=64", {"DROPPEFT_BLOCK": "64",
+                             "DROPPEFT_KERNEL_BACKEND": "pallas"}),
+        ("jnp oracle backend", {"DROPPEFT_KERNEL_BACKEND": "jnp"}),
+    ]
+    results = []
+    for name, env in variants:
+        r = run_variant(name, env, args.preset, args.steps)
+        print(f"{name:<28} best {r['best_s']*1e3:8.1f} ms  "
+              f"mean {r['mean_s']*1e3:8.1f} ms  compile {r['compile_s']:5.1f} s",
+              flush=True)
+        results.append(r)
+    print(json.dumps(results))
+
+
+if __name__ == "__main__":
+    main()

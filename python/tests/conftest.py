@@ -1,0 +1,9 @@
+"""Shared pytest fixtures for the L1/L2 suites."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,49 @@
+"""AOT pipeline: exported HLO text + manifest structure."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, packing
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.main(["--out", str(out), "--presets", "tiny", "--kinds", "lora",
+              "--max-k", "2"])
+    return out
+
+
+def test_manifest_structure(exported):
+    m = json.load(open(exported / "manifest.json"))
+    assert m["version"] == 1
+    tiny = m["models"]["tiny"]
+    assert tiny["config"]["n_layers"] == 4
+    arts = tiny["artifacts"]
+    assert set(arts) == {"train_lora_k1", "train_lora_k2", "eval_lora", "infer_lora"}
+    t1 = arts["train_lora_k1"]
+    assert [i["name"] for i in t1["inputs"]] == aot.TRAIN_INPUTS
+    assert [o["name"] for o in t1["outputs"]] == aot.TRAIN_OUTPUTS
+    # shapes carry the active-K leading dim
+    assert t1["inputs"][0]["shape"][0] == 1
+    assert arts["train_lora_k2"]["inputs"][0]["shape"][0] == 2
+
+
+def test_hlo_text_files_exist_and_parse_shape(exported):
+    m = json.load(open(exported / "manifest.json"))
+    for art in m["models"]["tiny"]["artifacts"].values():
+        path = exported / art["file"]
+        assert path.exists()
+        head = path.read_text()[:200]
+        assert "HloModule" in head, f"{art['file']} is not HLO text"
+
+
+def test_layouts_match_packing(exported):
+    m = json.load(open(exported / "manifest.json"))
+    cfg = packing.PRESETS["tiny"]
+    lo = m["models"]["tiny"]["layouts"]
+    assert lo["layer"]["size"] == packing.layer_layout(cfg).size
+    assert lo["lora"]["size"] == packing.lora_layout(cfg).size
+    assert lo["globals"]["size"] == packing.globals_layout(cfg).size

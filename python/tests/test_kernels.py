@@ -1,0 +1,207 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; explicit tests cover the gradient paths
+(custom VJPs) and edge shapes (non-divisible by block sizes, rank-1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+
+DIMS = st.integers(min_value=1, max_value=96)
+SMALL = st.integers(min_value=1, max_value=40)
+
+
+def _arr(rng, shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray((scale * rng.standard_normal(shape)).astype(dtype))
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS)
+def test_matmul_matches_ref(m, k, n):
+    rng = np.random.default_rng(m * 10007 + k * 101 + n)
+    x = _arr(rng, (m, k))
+    y = _arr(rng, (k, n))
+    np.testing.assert_allclose(
+        K.pl_matmul(x, y), K.ref.matmul(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype, rng):
+    x = jnp.asarray(rng.standard_normal((33, 65)).astype(np.float32)).astype(dtype)
+    y = jnp.asarray(rng.standard_normal((65, 17)).astype(np.float32)).astype(dtype)
+    got = K.pl_matmul(x, y)
+    want = K.ref.matmul(x, y)
+    assert got.dtype == x.dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=2e-2,
+        atol=2e-2,
+    )
+
+
+def test_matmul_grads(rng):
+    x = _arr(rng, (20, 30))
+    y = _arr(rng, (30, 10))
+    g1 = jax.grad(lambda a, b: jnp.sum(K.pl_matmul(a, b) ** 2), (0, 1))(x, y)
+    g2 = jax.grad(lambda a, b: jnp.sum(K.ref.matmul(a, b) ** 2), (0, 1))(x, y)
+    for u, v in zip(g1, g2):
+        np.testing.assert_allclose(u, v, rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_block_edges(rng):
+    # exactly one tile, and one element over a tile boundary
+    for m, k, n in [(128, 128, 128), (129, 128, 127), (1, 1, 1), (256, 64, 8)]:
+        x = _arr(rng, (m, k))
+        y = _arr(rng, (k, n))
+        np.testing.assert_allclose(
+            K.pl_matmul(x, y), K.ref.matmul(x, y), rtol=1e-4, atol=1e-4
+        )
+
+
+# ------------------------------------------------------------------ lora
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=SMALL, k=SMALL, n=SMALL, r=st.integers(1, 16))
+def test_lora_matches_ref(m, k, n, r):
+    rng = np.random.default_rng(m * 7 + k * 11 + n * 13 + r)
+    x = _arr(rng, (m, k))
+    w = _arr(rng, (k, n))
+    a = _arr(rng, (k, r))
+    b = _arr(rng, (r, n))
+    np.testing.assert_allclose(
+        K.lora_linear(x, w, a, b, 2.0),
+        K.ref.lora_matmul(x, w, a, b, 2.0),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_lora_zero_b_is_dense(rng):
+    # standard LoRA init: B = 0 => output equals the frozen dense path
+    x = _arr(rng, (8, 16))
+    w = _arr(rng, (16, 12))
+    a = _arr(rng, (16, 4))
+    b = jnp.zeros((4, 12), jnp.float32)
+    np.testing.assert_allclose(
+        K.lora_linear(x, w, a, b, 2.0), K.ref.matmul(x, w), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_lora_grads_full(rng):
+    x = _arr(rng, (12, 20))
+    w = _arr(rng, (20, 8))
+    a = _arr(rng, (20, 4))
+    b = _arr(rng, (4, 8))
+
+    def f(fn):
+        return jax.grad(
+            lambda *t: jnp.sum(fn(*t, 0.5) ** 3), argnums=(0, 1, 2, 3)
+        )(x, w, a, b)
+
+    for u, v in zip(f(K.lora_linear), f(K.ref.lora_matmul)):
+        np.testing.assert_allclose(u, v, rtol=1e-3, atol=1e-3)
+
+
+def test_lora_grad_zero_b_gives_zero_da(rng):
+    # dA = s * x^T (g B^T): must vanish at B = 0 (LoRA warmup property)
+    x = _arr(rng, (8, 16))
+    w = _arr(rng, (16, 12))
+    a = _arr(rng, (16, 4))
+    b = jnp.zeros((4, 12), jnp.float32)
+    da = jax.grad(lambda aa: jnp.sum(K.lora_linear(x, w, aa, b, 1.0)), 0)(a)
+    np.testing.assert_allclose(da, jnp.zeros_like(da), atol=1e-6)
+
+
+# ------------------------------------------------------------- attention
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    s=st.integers(1, 70),
+    d=st.sampled_from([4, 8, 16, 32]),
+)
+def test_attention_matches_ref(b, h, s, d):
+    rng = np.random.default_rng(b * 3 + h * 5 + s * 7 + d)
+    q = _arr(rng, (b, h, s, d))
+    k = _arr(rng, (b, h, s, d))
+    v = _arr(rng, (b, h, s, d))
+    np.testing.assert_allclose(
+        K.attention(q, k, v), K.ref.attention(q, k, v), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_attention_softmax_rows_bounded(rng):
+    # outputs are convex combinations of V rows
+    q = _arr(rng, (1, 2, 24, 8), scale=3.0)
+    k = _arr(rng, (1, 2, 24, 8), scale=3.0)
+    v = jnp.ones((1, 2, 24, 8), jnp.float32)
+    out = K.attention(q, k, v)
+    np.testing.assert_allclose(out, jnp.ones_like(out), rtol=1e-5, atol=1e-5)
+
+
+def test_attention_grads(rng):
+    q = _arr(rng, (2, 2, 17, 8))
+    k = _arr(rng, (2, 2, 17, 8))
+    v = _arr(rng, (2, 2, 17, 8))
+
+    def g(fn):
+        return jax.grad(lambda *t: jnp.sum(fn(*t) ** 2), argnums=(0, 1, 2))(q, k, v)
+
+    for u, v_ in zip(g(K.attention), g(K.ref.attention)):
+        np.testing.assert_allclose(u, v_, rtol=1e-3, atol=1e-3)
+
+
+def test_attention_extreme_logits_stable(rng):
+    # streaming max/sum must not overflow with large logits
+    q = _arr(rng, (1, 1, 16, 8), scale=30.0)
+    k = _arr(rng, (1, 1, 16, 8), scale=30.0)
+    v = _arr(rng, (1, 1, 16, 8))
+    out = np.asarray(K.attention(q, k, v))
+    assert np.isfinite(out).all()
+
+
+# ------------------------------------------------------------- layernorm
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 100), d=st.sampled_from([8, 32, 64, 128]))
+def test_layernorm_matches_ref(rows, d):
+    rng = np.random.default_rng(rows * 31 + d)
+    x = _arr(rng, (rows, d), scale=2.0)
+    g = _arr(rng, (d,))
+    b = _arr(rng, (d,))
+    np.testing.assert_allclose(
+        K.layernorm(x, g, b), K.ref.layernorm(x, g, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_layernorm_normalizes(rng):
+    x = _arr(rng, (16, 64), scale=10.0)
+    y = np.asarray(K.layernorm(x, jnp.ones(64), jnp.zeros(64)))
+    np.testing.assert_allclose(y.mean(axis=-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.std(axis=-1), 1.0, atol=1e-2)
+
+
+def test_layernorm_grads(rng):
+    x = _arr(rng, (9, 32))
+    g = _arr(rng, (32,))
+    b = _arr(rng, (32,))
+
+    def gr(fn):
+        return jax.grad(lambda *t: jnp.sum(fn(*t) ** 2), argnums=(0, 1, 2))(x, g, b)
+
+    for u, v in zip(gr(K.layernorm), gr(K.ref.layernorm)):
+        np.testing.assert_allclose(u, v, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,160 @@
+"""L2 correctness: the encoder-classifier compute graph.
+
+Key invariants:
+- the K-layer scan (STLD-active artifact) equals manually composing the
+  same layers (the static-graph STLD design is exact, not approximate);
+- training steps reduce loss on a fixed batch;
+- AdamW matches a numpy reference;
+- eval/infer artifacts agree with train-time forward.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, packing
+
+CFG = packing.PRESETS["tiny"]
+
+
+def make_inputs(cfg, kind, k, rng, seed_labels=True):
+    p = packing.layer_layout(cfg).size
+    q = packing.peft_layout(cfg, kind).size
+    g = packing.globals_layout(cfg).size
+    h = packing.head_layout(cfg).size
+    f = lambda *shape: jnp.asarray(0.02 * rng.standard_normal(shape).astype(np.float32))
+    layers = f(k, p)
+    peft = f(k, q)
+    zeros = jnp.zeros((k, q), jnp.float32)
+    globals_ = f(g)
+    head = jnp.zeros((h,), jnp.float32)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq), dtype=np.int32))
+    labels = jnp.asarray(rng.integers(0, cfg.n_classes, (cfg.batch,), dtype=np.int32))
+    return layers, peft, zeros, globals_, head, tokens, labels
+
+
+@pytest.mark.parametrize("kind", ["lora", "adapter"])
+def test_scan_equals_manual_composition(kind, rng):
+    """forward(scan over K rows) == layer-by-layer composition."""
+    k = 3
+    layers, peft, _, globals_, head, tokens, _ = make_inputs(CFG, kind, k, rng)
+    logits_scan = model.forward(CFG, kind, layers, peft, globals_, head, tokens)
+
+    # manual: apply each layer row in sequence
+    gp = packing.unpack(globals_, packing.globals_layout(CFG))
+    h_ = gp["embedding"][tokens] + gp["positional"][None, :, :]
+    for i in range(k):
+        h_ = model.transformer_layer(CFG, kind, h_, layers[i], peft[i])
+    bsz, s, d = h_.shape
+    from compile.kernels import layernorm, pl_matmul
+
+    h2 = layernorm(h_.reshape(bsz * s, d), gp["lnf_g"], gp["lnf_b"]).reshape(bsz, s, d)
+    pooled = jnp.mean(h2, axis=1)
+    hp = packing.unpack(head, packing.head_layout(CFG))
+    logits_manual = pl_matmul(pooled, hp["head_w"]) + hp["head_b"][None, :]
+    np.testing.assert_allclose(logits_scan, logits_manual, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", ["lora", "adapter"])
+def test_train_step_reduces_loss(kind, rng):
+    k = CFG.n_layers
+    layers, peft, zeros, globals_, head, tokens, labels = make_inputs(CFG, kind, k, rng)
+    fn = jax.jit(lambda *a: model.train_step(CFG, kind, *a))
+    m = v = zeros
+    hm = hv = jnp.zeros_like(head)
+    losses = []
+    state = (peft, m, v, head, hm, hv)
+    for step in range(12):
+        out = fn(layers, state[0], state[1], state[2], globals_, state[3],
+                 state[4], state[5], tokens, labels,
+                 jnp.float32(step + 1), jnp.float32(1e-2))
+        state = (out.peft, out.opt_m, out.opt_v, out.head, out.head_m, out.head_v)
+        losses.append(float(out.loss))
+    assert losses[-1] < losses[0] - 0.05, f"no learning: {losses}"
+    assert all(b <= a + 1e-4 for a, b in zip(losses, losses[1:])), losses
+
+
+def test_train_step_only_updates_trainables(rng):
+    """Outputs contain updated peft/head; grad norms are per active layer."""
+    k = 2
+    layers, peft, zeros, globals_, head, tokens, labels = make_inputs(CFG, "lora", k, rng)
+    out = jax.jit(lambda *a: model.train_step(CFG, "lora", *a))(
+        layers, peft, zeros, zeros, globals_, head,
+        jnp.zeros_like(head), jnp.zeros_like(head),
+        tokens, labels, jnp.float32(1.0), jnp.float32(1e-3))
+    assert out.peft.shape == (k, packing.lora_layout(CFG).size)
+    assert out.grad_norms.shape == (k,)
+    assert np.isfinite(np.asarray(out.grad_norms)).all()
+    assert float(out.correct) <= CFG.batch
+
+
+def test_eval_matches_forward_argmax(rng):
+    kind = "lora"
+    k = CFG.n_layers
+    layers, peft, _, globals_, head, tokens, labels = make_inputs(CFG, kind, k, rng)
+    head = jnp.asarray(0.1 * rng.standard_normal(head.shape).astype(np.float32))
+    logits = model.forward(CFG, kind, layers, peft, globals_, head, tokens)
+    want_correct = int((jnp.argmax(logits, -1) == labels).sum())
+    loss, correct = jax.jit(lambda *a: model.eval_step(CFG, kind, *a))(
+        layers, peft, globals_, head, tokens, labels)
+    assert int(correct) == want_correct
+    assert float(loss) > 0.0
+
+
+def test_infer_shapes(rng):
+    kind = "adapter"
+    k = CFG.n_layers
+    layers, peft, _, globals_, head, tokens, _ = make_inputs(CFG, kind, k, rng)
+    logits = jax.jit(lambda *a: model.infer_step(CFG, kind, *a))(
+        layers, peft, globals_, head, tokens)
+    assert logits.shape == (CFG.batch, CFG.n_classes)
+
+
+def test_adapter_zero_up_is_identity(rng):
+    """Zero-initialized adapter up-projection => layer ignores the adapter."""
+    k = 2
+    layers, peft, _, globals_, head, tokens, _ = make_inputs(CFG, "adapter", k, rng)
+    lo = packing.adapter_layout(CFG)
+    peft_zeroed = np.asarray(peft).copy()
+    off, shape = lo.slices()["up"]
+    n = int(np.prod(shape))
+    peft_zeroed[:, off:off + n] = 0.0
+    off_b, shape_b = lo.slices()["up_b"]
+    nb = int(np.prod(shape_b))
+    peft_zeroed[:, off_b:off_b + nb] = 0.0
+    with_adapter = model.forward(CFG, "adapter", layers, jnp.asarray(peft_zeroed),
+                                 globals_, head, tokens)
+    none_peft = jnp.zeros_like(peft)
+    without = model.forward(CFG, "adapter", layers, none_peft, globals_, head, tokens)
+    np.testing.assert_allclose(with_adapter, without, rtol=1e-4, atol=1e-4)
+
+
+def test_adamw_matches_numpy_reference(rng):
+    p = jnp.asarray(rng.standard_normal(32).astype(np.float32))
+    g = jnp.asarray(rng.standard_normal(32).astype(np.float32))
+    m = jnp.zeros(32, jnp.float32)
+    v = jnp.zeros(32, jnp.float32)
+    lr, b1, b2, eps, wd = 1e-3, 0.9, 0.999, 1e-8, 0.01
+    step = 3.0
+    pn, mn, vn = model._adamw(p, g, m, v, jnp.float32(step), jnp.float32(lr))
+
+    m_ref = (1 - b1) * np.asarray(g)
+    v_ref = (1 - b2) * np.asarray(g) ** 2
+    mhat = m_ref / (1 - b1 ** step)
+    vhat = v_ref / (1 - b2 ** step)
+    p_ref = np.asarray(p) - lr * (mhat / (np.sqrt(vhat) + eps) + wd * np.asarray(p))
+    np.testing.assert_allclose(pn, p_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(mn, m_ref, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(vn, v_ref, rtol=1e-5, atol=1e-7)
+
+
+def test_k1_artifact_shape(rng):
+    """K=1 (deepest dropout) still trains."""
+    layers, peft, zeros, globals_, head, tokens, labels = make_inputs(CFG, "lora", 1, rng)
+    out = jax.jit(lambda *a: model.train_step(CFG, "lora", *a))(
+        layers, peft, zeros, zeros, globals_, head,
+        jnp.zeros_like(head), jnp.zeros_like(head),
+        tokens, labels, jnp.float32(1.0), jnp.float32(1e-3))
+    assert out.peft.shape[0] == 1
+    assert np.isfinite(float(out.loss))

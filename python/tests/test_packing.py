@@ -1,0 +1,73 @@
+"""Packed-layout invariants: the layout tables are the contract between
+python (authoring) and rust (runtime), so they must be dense, ordered,
+and exactly sized."""
+
+import math
+
+import numpy as np
+import pytest
+
+from compile import packing
+
+
+@pytest.mark.parametrize("preset", list(packing.PRESETS))
+@pytest.mark.parametrize(
+    "builder",
+    [
+        packing.layer_layout,
+        packing.lora_layout,
+        packing.adapter_layout,
+        packing.globals_layout,
+        packing.head_layout,
+    ],
+)
+def test_layout_dense_and_ordered(preset, builder):
+    cfg = packing.PRESETS[preset]
+    lo = builder(cfg)
+    cursor = 0
+    names = set()
+    for name, shape, off in lo.entries:
+        assert off == cursor, f"{name} gap at {off} != {cursor}"
+        assert name not in names, f"duplicate entry {name}"
+        names.add(name)
+        cursor += math.prod(shape) if shape else 1
+    assert cursor == lo.size
+
+
+def test_unpack_roundtrip():
+    cfg = packing.PRESETS["tiny"]
+    lo = packing.layer_layout(cfg)
+    rng = np.random.default_rng(0)
+    pack = rng.standard_normal((3, lo.size)).astype(np.float32)
+    parts = packing.unpack(pack, lo)
+    # reassemble and compare
+    rebuilt = np.concatenate(
+        [parts[name].reshape(3, -1) for name, _, _ in lo.entries], axis=1
+    )
+    np.testing.assert_array_equal(pack, rebuilt)
+    assert parts["wq"].shape == (3, cfg.d_model, cfg.d_model)
+
+
+def test_param_counts_scale_with_preset():
+    tiny = packing.param_counts(packing.PRESETS["tiny"])
+    small = packing.param_counts(packing.PRESETS["small"])
+    base = packing.param_counts(packing.PRESETS["base"])
+    assert tiny["base"] < small["base"] < base["base"]
+    # PEFT is a small fraction of the base (the PEFT premise)
+    for counts in (small, base):
+        assert counts["lora"] < 0.05 * counts["base"]
+        assert counts["adapter"] < 0.05 * counts["base"]
+
+
+def test_layout_json_schema():
+    cfg = packing.PRESETS["tiny"]
+    j = packing.layer_layout(cfg).to_json()
+    assert j["size"] > 0
+    assert all({"name", "shape", "offset"} <= set(e) for e in j["entries"])
+
+
+def test_config_json_roundtrip():
+    cfg = packing.PRESETS["small"]
+    j = cfg.to_json()
+    assert j["d_model"] == cfg.d_model
+    assert j["name"] == "small"

@@ -1,0 +1,46 @@
+"""L1 roofline estimates: the real-TPU performance story (DESIGN.md
+§Hardware-Adaptation). Run with `-s` to print the table recorded in
+EXPERIMENTS.md §Perf."""
+
+from compile.kernels import roofline as rl
+
+
+def test_vmem_within_budget():
+    # every kernel's per-step working set must fit VMEM with headroom
+    ests = [
+        rl.matmul_estimate(4096, 1024, 1024),
+        rl.lora_estimate(4096, 1024, 1024, 8),
+        rl.attention_estimate(256, 256, 64),
+        rl.layernorm_estimate(4096, 1024),
+    ]
+    for e in ests:
+        assert e.vmem_bytes < rl.VMEM_BYTES * 0.75, f"{e.name}: {e.vmem_bytes}"
+
+
+def test_mxu_utilization_reasonable():
+    # aligned shapes should keep the MXU mostly busy
+    e = rl.matmul_estimate(4096, 1024, 1024)
+    assert e.mxu_util > 0.95
+    # badly aligned shapes show the padding cost
+    bad = rl.matmul_estimate(130, 130, 130)
+    assert bad.mxu_util < 0.5
+
+
+def test_lora_fusion_overhead_is_small():
+    # the fused LoRA pass should cost only a few % over the dense matmul
+    dense = rl.matmul_estimate(4096, 1024, 1024)
+    lora = rl.lora_estimate(4096, 1024, 1024, 8)
+    assert lora.est_time_s < dense.est_time_s * 1.15
+
+
+def test_large_matmul_compute_bound():
+    e = rl.matmul_estimate(4096, 4096, 4096)
+    assert e.bound == "compute"
+    ln = rl.layernorm_estimate(4096, 1024)
+    assert ln.bound == "memory"
+
+
+def test_report_renders(capsys):
+    print(rl.report())
+    out = capsys.readouterr().out
+    assert "matmul" in out and "lora" in out

@@ -1,0 +1,120 @@
+//! L3 coordinator hot-path micro-benchmarks (benchkit; criterion is not
+//! in the offline registry). These are the §Perf optimization targets:
+//! everything that runs per batch or per round outside the XLA step.
+//!
+//! Run with `cargo bench` (part of `make bench`).
+
+use droppeft::benchkit::{Bench, Suite};
+use droppeft::data::{dirichlet_partition, gen, TaskSpec};
+use droppeft::model::{gather_rows, scatter_rows};
+use droppeft::ptls::{self, Upload};
+use droppeft::stld::{DropoutConfig, RateShape};
+use droppeft::util::json::Json;
+use droppeft::util::rng::Rng;
+
+fn main() {
+    let mut suite = Suite::new();
+    let mut rng = Rng::seed_from(1);
+
+    // STLD mask sampling (runs once per local batch)
+    let cfg = DropoutConfig::shaped(RateShape::Incremental, 0.5, 24, &mut rng);
+    {
+        let mut r = rng.fork(1);
+        suite.add(
+            Bench::new("stld/sample_active L=24")
+                .target_secs(0.5)
+                .run(|| cfg.sample_active(&mut r)),
+        );
+    }
+
+    // gather/scatter of active PEFT rows (per batch; small-preset Q)
+    let q = 4096;
+    let l = 24;
+    let flat: Vec<f32> = (0..l * q).map(|x| x as f32).collect();
+    let idx: Vec<usize> = (0..l).step_by(2).collect();
+    suite.add(
+        Bench::new("model/gather_rows 12x4096")
+            .target_secs(0.5)
+            .throughput((idx.len() * q) as f64, "elem/s")
+            .run(|| gather_rows(&flat, q, &idx)),
+    );
+    {
+        let mut dst = flat.clone();
+        let rows = gather_rows(&flat, q, &idx);
+        suite.add(
+            Bench::new("model/scatter_rows 12x4096")
+                .target_secs(0.5)
+                .throughput(rows.len() as f64, "elem/s")
+                .run(|| {
+                    scatter_rows(&mut dst, q, &idx, &rows);
+                    dst[0]
+                }),
+        );
+    }
+
+    // PTLS heterogeneous aggregation (per round; 10 uploads of 12 rows)
+    {
+        let mut r = rng.fork(2);
+        let uploads: Vec<Upload> = (0..10)
+            .map(|d| {
+                let layers: Vec<usize> = (0..l).filter(|_| r.bernoulli(0.5)).collect();
+                ptls::random_upload(d, layers, q, 130, 1.0 + r.f64(), &mut r)
+            })
+            .collect();
+        let mut global = vec![0.0f32; l * q];
+        let mut head = vec![0.0f32; 130];
+        suite.add(
+            Bench::new("ptls/aggregate 10 uploads L=24 Q=4096")
+                .target_secs(0.5)
+                .run(|| ptls::aggregate(&mut global, &mut head, q, &uploads)),
+        );
+    }
+
+    // Eq. 6 importance accumulation (per batch)
+    {
+        let mut acc = ptls::ImportanceAccum::new(l);
+        let active: Vec<usize> = (0..l / 2).collect();
+        let norms = vec![0.5f32; l / 2];
+        suite.add(
+            Bench::new("ptls/importance_record L=24")
+                .target_secs(0.3)
+                .run(|| acc.record(&active, &norms)),
+        );
+    }
+
+    // manifest-scale JSON parsing (startup path)
+    {
+        let manifest = std::fs::read_to_string("artifacts/manifest.json")
+            .unwrap_or_else(|_| "{\"version\":1,\"models\":{}}".to_string());
+        suite.add(
+            Bench::new("json/parse manifest")
+                .target_secs(0.5)
+                .throughput(manifest.len() as f64, "byte/s")
+                .run(|| Json::parse(&manifest).unwrap()),
+        );
+    }
+
+    // Dirichlet partition (session setup)
+    {
+        let mut r = rng.fork(3);
+        let labels: Vec<i32> = (0..20_000).map(|_| r.below(4) as i32).collect();
+        suite.add(
+            Bench::new("data/dirichlet_partition 20k x 100dev")
+                .target_secs(0.5)
+                .run(|| dirichlet_partition(&labels, 4, 100, 1.0, &mut r)),
+        );
+    }
+
+    // synthetic corpus generation (session setup)
+    {
+        let spec = TaskSpec::by_name("mnli", 1000);
+        suite.add(
+            Bench::new("data/generate mnli 1000x64")
+                .target_secs(0.5)
+                .throughput(1000.0 * 64.0, "tok/s")
+                .run(|| gen::generate(&spec, 64, 4096, 7)),
+        );
+    }
+
+    println!("\n{}", suite.markdown("L3 micro-benchmarks"));
+}

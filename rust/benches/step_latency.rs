@@ -1,0 +1,94 @@
+//! End-to-end XLA step latency per STLD active-layer count K — the
+//! real-runtime validation of paper Eq. 4 (compute scales with E[K]) and
+//! the per-table bench backing Table 1 / Fig. 13 compute columns.
+//!
+//! Requires `make artifacts`. Run with `cargo bench`.
+
+use std::sync::Arc;
+
+use droppeft::benchkit::{Bench, Suite};
+use droppeft::data::{gen, TaskSpec};
+use droppeft::model::{BaseModel, TrainState};
+use droppeft::runtime::tensor::Value;
+use droppeft::runtime::Runtime;
+
+fn main() {
+    let rt = Arc::new(Runtime::new("artifacts").expect("make artifacts first"));
+    let mut suite = Suite::new();
+
+    for preset in ["tiny", "small"] {
+        let Ok(spec) = rt.model(preset) else { continue };
+        let spec = spec.clone();
+        let mcfg = spec.config.clone();
+        let base = BaseModel::init(&spec, 1);
+        let state = TrainState::init(&spec, "lora", 1).unwrap();
+        let ds = gen::generate(
+            &TaskSpec::by_name("mnli", mcfg.batch),
+            mcfg.seq,
+            mcfg.vocab,
+            5,
+        );
+        let idx: Vec<usize> = (0..mcfg.batch).collect();
+        let batch = droppeft::data::batch::batch_from_indices(&ds, &idx, mcfg.batch, mcfg.seq);
+
+        let l = mcfg.n_layers;
+        let ks: Vec<usize> = [1, l / 2, l].into_iter().filter(|&k| k >= 1).collect();
+        let mut k_means = Vec::new();
+        for &k in &ks {
+            let active: Vec<usize> = (0..k).collect();
+            let (peft, m, v) = state.gather_peft(&active);
+            let inputs = vec![
+                Value::f32(base.gather(&active), vec![k, base.p]),
+                Value::f32(peft, vec![k, state.q]),
+                Value::f32(m, vec![k, state.q]),
+                Value::f32(v, vec![k, state.q]),
+                Value::f32(base.globals.clone(), vec![base.globals.len()]),
+                Value::f32(state.head.clone(), vec![state.head.len()]),
+                Value::f32(state.head_m.clone(), vec![state.head_m.len()]),
+                Value::f32(state.head_v.clone(), vec![state.head_v.len()]),
+                batch.tokens.clone(),
+                batch.labels.clone(),
+                Value::scalar_f32(1.0),
+                Value::scalar_f32(0.001),
+            ];
+            let name = format!("train_lora_k{k}");
+            rt.warm(preset, &name).unwrap();
+            let r = Bench::new(format!("{preset}/train step K={k}/{l}"))
+                .warmup(2)
+                .iters(5, 200)
+                .target_secs(1.5)
+                .run(|| rt.execute(preset, &name, &inputs).unwrap());
+            k_means.push((k, r.mean_ns));
+            suite.add(r);
+        }
+        // Eq. 4 check: K=L/2 should cost well under K=L
+        if k_means.len() == 3 {
+            let half = k_means[1].1;
+            let full = k_means[2].1;
+            println!(
+                "  -> Eq.4 scaling on {preset}: K=L/2 costs {:.0}% of K=L",
+                100.0 * half / full
+            );
+        }
+
+        // eval (full depth) latency
+        let eval_inputs = vec![
+            Value::f32(base.layers.clone(), vec![l, base.p]),
+            Value::f32(state.peft.clone(), vec![l, state.q]),
+            Value::f32(base.globals.clone(), vec![base.globals.len()]),
+            Value::f32(state.head.clone(), vec![state.head.len()]),
+            batch.tokens.clone(),
+            batch.labels.clone(),
+        ];
+        rt.warm(preset, "eval_lora").unwrap();
+        suite.add(
+            Bench::new(format!("{preset}/eval step (full depth)"))
+                .warmup(2)
+                .iters(5, 200)
+                .target_secs(1.0)
+                .run(|| rt.execute(preset, "eval_lora", &eval_inputs).unwrap()),
+        );
+    }
+
+    println!("\n{}", suite.markdown("XLA step latency vs active depth"));
+}

@@ -1,0 +1,379 @@
+//! Online dropout-rate configurator (paper §3.3, Algorithm 1).
+//!
+//! Multi-armed-bandit exploration/exploitation over dropout-rate
+//! configurations. An *arm* maps a device's speed tier to an average
+//! dropout rate (the paper's decision-space reduction: a preset shape —
+//! incremental by default — plus one average per device class, drawn from
+//! a discretized rate set). Reward of an arm = mean accuracy gain per
+//! simulated second across the devices that ran it (Eq. 5).
+//!
+//! The schedule alternates: one *exploration* round evaluates every
+//! candidate configuration (candidates = surviving top performers +
+//! `n*eps` fresh random arms), then the best-known arm is *exploited* for
+//! `explore_interval` rounds, then exploration resumes (Lines 5-22).
+//! A sliding history window evicts stale arms (Line 12).
+
+use crate::stld::{DropoutConfig, RateShape};
+use crate::util::rng::Rng;
+
+/// Discretized average-rate choices (paper: {0.0, 0.1, ..., 0.9}).
+pub const RATE_GRID: [f64; 10] = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+
+/// Device speed tier (maps Jetson kinds; slow devices want higher rates).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tier {
+    Slow,
+    Medium,
+    Fast,
+}
+
+pub const TIERS: [Tier; 3] = [Tier::Slow, Tier::Medium, Tier::Fast];
+
+/// One bandit arm: an average dropout rate per device tier.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Arm {
+    pub rates: [f64; 3], // indexed by Tier as usize
+    pub shape: RateShape,
+}
+
+impl Arm {
+    pub fn rate_for(&self, tier: Tier) -> f64 {
+        self.rates[tier as usize]
+    }
+
+    pub fn config_for(&self, tier: Tier, n_layers: usize, rng: &mut Rng) -> DropoutConfig {
+        DropoutConfig::shaped(self.shape, self.rate_for(tier).min(0.9), n_layers, rng)
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "[{:.1}/{:.1}/{:.1}]",
+            self.rates[0], self.rates[1], self.rates[2]
+        )
+    }
+
+    fn random(rng: &mut Rng) -> Arm {
+        // slow tier should never drop *less* than the fast tier: order the
+        // three sampled grid rates descending (slow gets the highest).
+        let mut r = [
+            RATE_GRID[rng.below(RATE_GRID.len())],
+            RATE_GRID[rng.below(RATE_GRID.len())],
+            RATE_GRID[rng.below(RATE_GRID.len())],
+        ];
+        r.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        Arm {
+            rates: r,
+            shape: RateShape::Incremental,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct ArmState {
+    arm: Arm,
+    /// latest observed reward (accuracy gain per second, Eq. 5)
+    reward: f64,
+    /// rounds since last evaluation (staleness)
+    age: usize,
+    evals: usize,
+}
+
+/// What the configurator tells the engine to run this round.
+#[derive(Clone, Debug)]
+pub struct RoundPlan {
+    pub arm: Arm,
+    pub exploring: bool,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Mode {
+    Explore { next_candidate: usize },
+    Exploit { rounds_left: usize },
+}
+
+/// Algorithm 1 state machine.
+pub struct Configurator {
+    candidates: Vec<ArmState>,
+    /// history window (Line 11-12): most recently evaluated arms
+    window: usize,
+    /// candidate pool size n
+    n: usize,
+    /// exploration rate eps
+    eps: f64,
+    /// exploitation streak length (Input: explor_r)
+    explore_interval: usize,
+    mode: Mode,
+    rng: Rng,
+}
+
+impl Configurator {
+    pub fn new(seed: u64) -> Configurator {
+        Configurator::with_params(seed, 6, 0.34, 5, 12)
+    }
+
+    pub fn with_params(
+        seed: u64,
+        n: usize,
+        eps: f64,
+        explore_interval: usize,
+        window: usize,
+    ) -> Configurator {
+        let mut rng = Rng::seed_from(seed ^ 0xBAD1_7000);
+        // start-up configuration list (Input `list`): a spread of uniform
+        // averages so the first exploration round sees diverse behaviour.
+        let starts = [0.0, 0.2, 0.4, 0.6];
+        let mut candidates: Vec<ArmState> = starts
+            .iter()
+            .map(|&r| ArmState {
+                arm: Arm {
+                    rates: [r, r, r],
+                    shape: RateShape::Incremental,
+                },
+                reward: f64::NEG_INFINITY,
+                age: 0,
+                evals: 0,
+            })
+            .collect();
+        while candidates.len() < n {
+            candidates.push(ArmState {
+                arm: Arm::random(&mut rng),
+                reward: f64::NEG_INFINITY,
+                age: 0,
+                evals: 0,
+            });
+        }
+        Configurator {
+            candidates,
+            window,
+            n,
+            eps,
+            explore_interval,
+            mode: Mode::Explore { next_candidate: 0 },
+            rng,
+        }
+    }
+
+    /// Plan the next round: which arm should devices run?
+    pub fn plan(&mut self) -> RoundPlan {
+        match self.mode {
+            Mode::Explore { next_candidate } => RoundPlan {
+                arm: self.candidates[next_candidate.min(self.candidates.len() - 1)].arm,
+                exploring: true,
+            },
+            Mode::Exploit { .. } => RoundPlan {
+                arm: self.best_arm(),
+                exploring: false,
+            },
+        }
+    }
+
+    /// Report the round's measured reward for the planned arm and advance
+    /// the explore/exploit schedule.
+    pub fn feedback(&mut self, plan: &RoundPlan, reward: f64) {
+        for c in self.candidates.iter_mut() {
+            c.age += 1;
+        }
+        if let Some(c) = self
+            .candidates
+            .iter_mut()
+            .find(|c| c.arm == plan.arm)
+        {
+            // latest observation wins (the favourable config drifts over
+            // the session, so old rewards must not dominate — Fig. 7)
+            c.reward = if c.evals == 0 {
+                reward
+            } else {
+                0.5 * c.reward + 0.5 * reward
+            };
+            c.age = 0;
+            c.evals += 1;
+        }
+
+        self.mode = match self.mode {
+            Mode::Explore { next_candidate } => {
+                if next_candidate + 1 < self.candidates.len() {
+                    Mode::Explore {
+                        next_candidate: next_candidate + 1,
+                    }
+                } else {
+                    // exploration sweep done: prune & reseed (Lines 11-15)
+                    self.prune_and_reseed();
+                    Mode::Exploit {
+                        rounds_left: self.explore_interval,
+                    }
+                }
+            }
+            Mode::Exploit { rounds_left } => {
+                if rounds_left > 1 {
+                    Mode::Exploit {
+                        rounds_left: rounds_left - 1,
+                    }
+                } else {
+                    Mode::Explore { next_candidate: 0 }
+                }
+            }
+        };
+    }
+
+    fn prune_and_reseed(&mut self) {
+        // drop stale arms (Line 12) and keep top-(n*(1-eps)) by reward
+        self.candidates.retain(|c| c.age <= self.window);
+        self.candidates.sort_by(|a, b| {
+            b.reward
+                .partial_cmp(&a.reward)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let keep = ((self.n as f64) * (1.0 - self.eps)).round().max(1.0) as usize;
+        self.candidates.truncate(keep);
+        // fresh random explorers (Line 6)
+        while self.candidates.len() < self.n {
+            let arm = Arm::random(&mut self.rng);
+            if self.candidates.iter().any(|c| c.arm == arm) {
+                continue;
+            }
+            self.candidates.push(ArmState {
+                arm,
+                reward: f64::NEG_INFINITY,
+                age: 0,
+                evals: 0,
+            });
+        }
+    }
+
+    /// Best-known arm (highest reward; Line 18).
+    pub fn best_arm(&self) -> Arm {
+        self.candidates
+            .iter()
+            .max_by(|a, b| {
+                a.reward
+                    .partial_cmp(&b.reward)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .map(|c| c.arm)
+            .unwrap_or(Arm {
+                rates: [0.5, 0.3, 0.2],
+                shape: RateShape::Incremental,
+            })
+    }
+
+    pub fn is_exploring(&self) -> bool {
+        matches!(self.mode, Mode::Explore { .. })
+    }
+}
+
+/// Map a device's sustained throughput to a speed tier (thresholds sit
+/// between the Jetson profiles' effective rates).
+pub fn tier_of(effective_gflops: f64) -> Tier {
+    if effective_gflops < 1_500.0 {
+        Tier::Slow
+    } else if effective_gflops < 4_000.0 {
+        Tier::Medium
+    } else {
+        Tier::Fast
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testkit::proptest;
+
+    /// Simulated environment: reward peaks at rate 0.5 for every tier.
+    fn env_reward(arm: &Arm) -> f64 {
+        let mut r = 0.0;
+        for t in arm.rates {
+            r += 1.0 - (t - 0.5).abs();
+        }
+        r / 3.0
+    }
+
+    #[test]
+    fn converges_to_good_arm() {
+        let mut c = Configurator::new(7);
+        for _ in 0..120 {
+            let plan = c.plan();
+            c.feedback(&plan, env_reward(&plan.arm));
+        }
+        let best = c.best_arm();
+        let quality = env_reward(&best);
+        assert!(quality > 0.75, "best arm {best:?} quality {quality}");
+    }
+
+    #[test]
+    fn exploitation_uses_best_known() {
+        let mut c = Configurator::with_params(1, 4, 0.25, 3, 8);
+        // run one full exploration sweep with a known-best arm
+        let mut best_seen = f64::NEG_INFINITY;
+        while c.is_exploring() {
+            let plan = c.plan();
+            let r = env_reward(&plan.arm);
+            best_seen = best_seen.max(r);
+            c.feedback(&plan, r);
+        }
+        let plan = c.plan();
+        assert!(!plan.exploring);
+        assert!((env_reward(&plan.arm) - best_seen).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schedule_alternates() {
+        let mut c = Configurator::with_params(2, 3, 0.34, 2, 8);
+        let mut phases = Vec::new();
+        for _ in 0..20 {
+            let plan = c.plan();
+            phases.push(plan.exploring);
+            c.feedback(&plan, 0.1);
+        }
+        assert!(phases.iter().any(|&e| e));
+        assert!(phases.iter().any(|&e| !e));
+        // exploitation streaks have the configured length
+        let mut streak = 0;
+        let mut max_streak = 0;
+        for &e in &phases {
+            if !e {
+                streak += 1;
+                max_streak = max_streak.max(streak);
+            } else {
+                streak = 0;
+            }
+        }
+        assert_eq!(max_streak, 2);
+    }
+
+    #[test]
+    fn slow_tier_rate_dominates() {
+        proptest("arm tier ordering", 100, |rng| {
+            let arm = Arm::random(rng);
+            prop_assert!(
+                arm.rates[0] >= arm.rates[1] && arm.rates[1] >= arm.rates[2],
+                "rates not ordered {:?}",
+                arm.rates
+            );
+            prop_assert!(
+                arm.rates.iter().all(|r| RATE_GRID.contains(r)),
+                "off-grid rate {:?}",
+                arm.rates
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pool_size_invariant_after_reseed() {
+        let mut c = Configurator::with_params(3, 6, 0.34, 2, 8);
+        for _ in 0..50 {
+            let plan = c.plan();
+            c.feedback(&plan, 0.5);
+            assert!(c.candidates.len() <= 6);
+            assert!(!c.candidates.is_empty());
+        }
+    }
+
+    #[test]
+    fn tier_mapping() {
+        assert_eq!(tier_of(600.0), Tier::Slow); // TX2
+        assert_eq!(tier_of(3_150.0), Tier::Medium); // NX
+        assert_eq!(tier_of(4_800.0), Tier::Fast); // AGX
+    }
+}

@@ -1,0 +1,191 @@
+//! Criterion-style micro-bench harness (criterion is not in the offline
+//! registry). Warmup + timed iterations, mean/p50/p99 reporting, and a
+//! markdown summary consumed by EXPERIMENTS.md §Perf.
+//!
+//! `cargo bench` runs the `[[bench]]` targets (harness = false) which call
+//! into this module.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        let tp = match self.throughput {
+            Some((v, unit)) => format!("  {v:10.1} {unit}"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>10} iters  mean {:>11}  p50 {:>11}  p99 {:>11}{}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            tp
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    min_iters: usize,
+    max_iters: usize,
+    target_secs: f64,
+    /// elements processed per iteration, for throughput reporting
+    elems_per_iter: Option<(f64, &'static str)>,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Bench {
+        Bench {
+            name: name.into(),
+            warmup: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            target_secs: 1.0,
+            elems_per_iter: None,
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn iters(mut self, min: usize, max: usize) -> Self {
+        self.min_iters = min;
+        self.max_iters = max;
+        self
+    }
+
+    pub fn target_secs(mut self, s: f64) -> Self {
+        self.target_secs = s;
+        self
+    }
+
+    /// Report throughput as elems/sec with the given unit label.
+    pub fn throughput(mut self, elems: f64, unit: &'static str) -> Self {
+        self.elems_per_iter = Some((elems, unit));
+        self
+    }
+
+    pub fn run<F, T>(self, mut f: F) -> BenchResult
+    where
+        F: FnMut() -> T,
+    {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        // estimate per-iter cost to size the measured run
+        let probe = Instant::now();
+        std::hint::black_box(f());
+        let est = probe.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_secs / est) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let mean = stats::mean(&samples);
+        BenchResult {
+            name: self.name,
+            iters,
+            mean_ns: mean,
+            p50_ns: stats::percentile(&samples, 50.0),
+            p99_ns: stats::percentile(&samples, 99.0),
+            throughput: self
+                .elems_per_iter
+                .map(|(e, u)| (e / (mean / 1e9), u)),
+        }
+    }
+}
+
+/// Collect results and emit both stdout lines and a markdown block.
+#[derive(Default)]
+pub struct Suite {
+    pub results: Vec<BenchResult>,
+}
+
+impl Suite {
+    pub fn new() -> Suite {
+        Suite::default()
+    }
+
+    pub fn add(&mut self, r: BenchResult) {
+        println!("{}", r.line());
+        self.results.push(r);
+    }
+
+    pub fn markdown(&self, title: &str) -> String {
+        let mut t = crate::util::table::Table::new(&["bench", "mean", "p50", "p99"]);
+        for r in &self.results {
+            t.row(vec![
+                r.name.clone(),
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.p50_ns),
+                fmt_ns(r.p99_ns),
+            ]);
+        }
+        format!("### {title}\n\n{}\n", t.markdown())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = Bench::new("noop")
+            .warmup(1)
+            .iters(5, 50)
+            .target_secs(0.01)
+            .run(|| 1 + 1);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn formats_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 us");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let r = Bench::new("tp")
+            .iters(5, 10)
+            .target_secs(0.01)
+            .throughput(1000.0, "elem/s")
+            .run(|| std::hint::black_box(42));
+        assert!(r.throughput.is_some());
+    }
+}

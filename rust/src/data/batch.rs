@@ -1,0 +1,163 @@
+//! Mini-batch assembly from device shards.
+//!
+//! Batches are fixed-size (the compiled artifacts have a static batch
+//! dimension); shards smaller than a batch sample with replacement, which
+//! matches how the FedPETuning benchmark pads tiny non-IID shards.
+
+use crate::runtime::tensor::Value;
+use crate::util::rng::Rng;
+
+use super::gen::Dataset;
+
+/// A device-local batch ready for the train/eval artifacts.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Value,
+    pub labels: Value,
+    pub size: usize,
+}
+
+/// Assemble a batch from explicit sample indices.
+pub fn batch_from_indices(ds: &Dataset, idx: &[usize], batch: usize, seq: usize) -> Batch {
+    assert_eq!(idx.len(), batch);
+    let mut tokens = Vec::with_capacity(batch * seq);
+    let mut labels = Vec::with_capacity(batch);
+    for &i in idx {
+        tokens.extend_from_slice(ds.row(i));
+        labels.push(ds.labels[i]);
+    }
+    Batch {
+        tokens: Value::i32(tokens, vec![batch, seq]),
+        labels: Value::i32(labels, vec![batch]),
+        size: batch,
+    }
+}
+
+/// Iterator-ish sampler over a shard: shuffles, walks epochs, resamples
+/// with replacement when the shard is smaller than a batch.
+#[derive(Clone, Debug)]
+pub struct BatchSampler {
+    shard: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl BatchSampler {
+    pub fn new(shard: Vec<usize>, rng: Rng) -> BatchSampler {
+        assert!(!shard.is_empty(), "empty shard");
+        let mut s = BatchSampler {
+            shard,
+            cursor: 0,
+            rng,
+        };
+        s.reshuffle();
+        s
+    }
+
+    fn reshuffle(&mut self) {
+        let mut shard = std::mem::take(&mut self.shard);
+        self.rng.shuffle(&mut shard);
+        self.shard = shard;
+        self.cursor = 0;
+    }
+
+    /// Number of full batches in one epoch (at least 1 via replacement).
+    pub fn batches_per_epoch(&self, batch: usize) -> usize {
+        (self.shard.len() / batch).max(1)
+    }
+
+    pub fn next_batch(&mut self, ds: &Dataset, batch: usize) -> Batch {
+        let seq = ds.seq;
+        if self.shard.len() >= batch {
+            if self.cursor + batch > self.shard.len() {
+                self.reshuffle();
+            }
+            let idx: Vec<usize> = self.shard[self.cursor..self.cursor + batch].to_vec();
+            self.cursor += batch;
+            batch_from_indices(ds, &idx, batch, seq)
+        } else {
+            // replacement sampling for tiny shards
+            let idx: Vec<usize> = (0..batch)
+                .map(|_| self.shard[self.rng.below(self.shard.len())])
+                .collect();
+            batch_from_indices(ds, &idx, batch, seq)
+        }
+    }
+}
+
+/// Fixed eval batches covering (a prefix of) a shard deterministically.
+pub fn eval_batches(ds: &Dataset, shard: &[usize], batch: usize, max_batches: usize) -> Vec<Batch> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + batch <= shard.len() && out.len() < max_batches {
+        out.push(batch_from_indices(ds, &shard[i..i + batch], batch, ds.seq));
+        i += batch;
+    }
+    if out.is_empty() && !shard.is_empty() {
+        // tiny shard: tile it up to one batch
+        let idx: Vec<usize> = (0..batch).map(|j| shard[j % shard.len()]).collect();
+        out.push(batch_from_indices(ds, &idx, batch, ds.seq));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen::{generate, TaskSpec};
+
+    fn small_ds() -> Dataset {
+        generate(&TaskSpec::by_name("agnews", 64), 16, 256, 1)
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let ds = small_ds();
+        let b = batch_from_indices(&ds, &(0..8).collect::<Vec<_>>(), 8, 16);
+        assert_eq!(b.tokens.shape(), &[8, 16]);
+        assert_eq!(b.labels.shape(), &[8]);
+    }
+
+    #[test]
+    fn sampler_epochs_cover_shard() {
+        let ds = small_ds();
+        let mut s = BatchSampler::new((0..32).collect(), Rng::seed_from(3));
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..4 {
+            let b = s.next_batch(&ds, 8);
+            for lab in b.labels.as_i32().unwrap() {
+                let _ = lab;
+            }
+            assert_eq!(b.size, 8);
+            seen.extend(b.tokens.as_i32().unwrap().iter().copied());
+        }
+        assert!(!seen.is_empty());
+    }
+
+    #[test]
+    fn tiny_shard_replacement() {
+        let ds = small_ds();
+        let mut s = BatchSampler::new(vec![1, 2, 3], Rng::seed_from(4));
+        let b = s.next_batch(&ds, 8);
+        assert_eq!(b.size, 8);
+    }
+
+    #[test]
+    fn eval_batches_deterministic() {
+        let ds = small_ds();
+        let shard: Vec<usize> = (0..40).collect();
+        let a = eval_batches(&ds, &shard, 8, 3);
+        let b = eval_batches(&ds, &shard, 8, 3);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[0].tokens, b[0].tokens);
+    }
+
+    #[test]
+    fn eval_batches_tiny_shard_tiles() {
+        let ds = small_ds();
+        let shard = vec![5, 6];
+        let b = eval_batches(&ds, &shard, 8, 2);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].size, 8);
+    }
+}

@@ -1,0 +1,270 @@
+//! Synthetic GLUE-style corpora (DESIGN.md §Substitutions).
+//!
+//! The paper fine-tunes on MNLI/QQP (pair classification) and AGNews
+//! (topic classification). We build class-conditional token processes with
+//! the same task *shapes*:
+//!
+//! - `agnews`: single segment; each class has a small set of signal tokens
+//!   sprinkled over a shared zipf background.
+//! - `qqp`: `[CLS] seg1 [SEP] seg2`; label 1 iff both segments carry the
+//!   same topic's signal tokens (paraphrase analog).
+//! - `mnli`: pair; entail = same topic, contradict = same topic + negation
+//!   marker tokens in seg2, neutral = different topic.
+//!
+//! The pair tasks require cross-segment comparison, exercising attention —
+//! a linear head over pooled embeddings cannot solve them alone.
+
+use crate::util::rng::Rng;
+
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const NEG: i32 = 3;
+/// first ordinary token id
+pub const FIRST_TOKEN: i32 = 4;
+
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: String,
+    pub n_classes: usize,
+    pub pair_task: bool,
+    /// signal tokens per topic/class
+    pub signal_tokens: usize,
+    /// probability a position carries a signal token
+    pub signal_prob: f64,
+    /// number of distinct topics for pair tasks
+    pub n_topics: usize,
+    pub samples: usize,
+}
+
+impl TaskSpec {
+    /// The three paper datasets, scaled to the testbed (`samples` can be
+    /// overridden per experiment).
+    pub fn by_name(name: &str, samples: usize) -> TaskSpec {
+        match name {
+            "agnews" => TaskSpec {
+                name: "agnews".into(),
+                n_classes: 4,
+                pair_task: false,
+                signal_tokens: 4,
+                signal_prob: 0.15,
+                n_topics: 4,
+                samples,
+            },
+            "qqp" => TaskSpec {
+                name: "qqp".into(),
+                n_classes: 2,
+                pair_task: true,
+                signal_tokens: 4,
+                signal_prob: 0.3,
+                n_topics: 6,
+                samples,
+            },
+            "mnli" => TaskSpec {
+                name: "mnli".into(),
+                n_classes: 3,
+                pair_task: true,
+                signal_tokens: 4,
+                signal_prob: 0.3,
+                n_topics: 6,
+                samples,
+            },
+            _ => panic!("unknown dataset {name:?} (agnews|qqp|mnli)"),
+        }
+    }
+}
+
+/// A materialized dataset: row-major [n, seq] tokens + labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub spec: TaskSpec,
+    pub seq: usize,
+    pub vocab: usize,
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.seq..(i + 1) * self.seq]
+    }
+}
+
+/// Deterministic signal-token set for a topic (avoids specials).
+fn signal_token(vocab: usize, topic: usize, j: usize) -> i32 {
+    let h = (topic as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((j as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    (FIRST_TOKEN as u64 + h % (vocab as u64 - FIRST_TOKEN as u64)) as i32
+}
+
+/// Zipf-ish background token (quadratic transform favors low ids).
+fn background_token(vocab: usize, rng: &mut Rng) -> i32 {
+    let u = rng.f64();
+    let t = (u * u * (vocab - FIRST_TOKEN as usize) as f64) as i32;
+    FIRST_TOKEN + t
+}
+
+fn fill_segment(
+    out: &mut [i32],
+    vocab: usize,
+    topic: usize,
+    spec: &TaskSpec,
+    rng: &mut Rng,
+) {
+    for slot in out.iter_mut() {
+        if rng.bernoulli(spec.signal_prob) {
+            let j = rng.below(spec.signal_tokens);
+            *slot = signal_token(vocab, topic, j);
+        } else {
+            *slot = background_token(vocab, rng);
+        }
+    }
+}
+
+/// Generate the full dataset for a task at (seq, vocab) of the compiled
+/// model preset.
+pub fn generate(spec: &TaskSpec, seq: usize, vocab: usize, seed: u64) -> Dataset {
+    assert!(vocab > 64, "vocab too small for synthetic tasks");
+    let mut rng = Rng::seed_from(seed ^ 0xDA7A_5E7);
+    let n = spec.samples;
+    let mut tokens = vec![PAD; n * seq];
+    let mut labels = vec![0i32; n];
+
+    for i in 0..n {
+        let label = rng.below(spec.n_classes);
+        labels[i] = label as i32;
+        let row = &mut tokens[i * seq..(i + 1) * seq];
+        if !spec.pair_task {
+            // single-segment: class == topic
+            row[0] = CLS;
+            fill_segment(&mut row[1..], vocab, label, spec, &mut rng);
+        } else {
+            let half = seq / 2;
+            row[0] = CLS;
+            row[half] = SEP;
+            let topic = rng.below(spec.n_topics);
+            fill_segment(&mut row[1..half], vocab, topic, spec, &mut rng);
+            let (topic2, negate) = match (spec.name.as_str(), label) {
+                // qqp: 1 = paraphrase (same topic), 0 = different
+                ("qqp", 1) => (topic, false),
+                ("qqp", _) => (other_topic(topic, spec.n_topics, &mut rng), false),
+                // mnli: 0 entail, 1 contradict (same + NEG), 2 neutral
+                ("mnli", 0) => (topic, false),
+                ("mnli", 1) => (topic, true),
+                _ => (other_topic(topic, spec.n_topics, &mut rng), false),
+            };
+            fill_segment(&mut row[half + 1..], vocab, topic2, spec, &mut rng);
+            if negate {
+                // sprinkle negation markers through segment 2
+                let seg2 = half + 1;
+                let count = ((seq - seg2) / 6).max(2);
+                for _ in 0..count {
+                    let p = seg2 + rng.below(seq - seg2);
+                    row[p] = NEG;
+                }
+            }
+        }
+    }
+    Dataset {
+        spec: spec.clone(),
+        seq,
+        vocab,
+        tokens,
+        labels,
+    }
+}
+
+fn other_topic(topic: usize, n_topics: usize, rng: &mut Rng) -> usize {
+    debug_assert!(n_topics > 1);
+    let t = rng.below(n_topics - 1);
+    if t >= topic {
+        t + 1
+    } else {
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_label_range() {
+        for name in ["agnews", "qqp", "mnli"] {
+            let spec = TaskSpec::by_name(name, 200);
+            let ds = generate(&spec, 32, 512, 7);
+            assert_eq!(ds.len(), 200);
+            assert_eq!(ds.tokens.len(), 200 * 32);
+            assert!(ds
+                .labels
+                .iter()
+                .all(|&l| (l as usize) < spec.n_classes));
+            assert!(ds.tokens.iter().all(|&t| t >= 0 && (t as usize) < 512));
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let spec = TaskSpec::by_name("mnli", 50);
+        let a = generate(&spec, 32, 512, 1);
+        let b = generate(&spec, 32, 512, 1);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.labels, b.labels);
+        let c = generate(&spec, 32, 512, 2);
+        assert_ne!(a.tokens, c.tokens);
+    }
+
+    #[test]
+    fn pair_structure() {
+        let spec = TaskSpec::by_name("qqp", 100);
+        let ds = generate(&spec, 32, 512, 3);
+        for i in 0..ds.len() {
+            let row = ds.row(i);
+            assert_eq!(row[0], CLS);
+            assert_eq!(row[16], SEP);
+        }
+    }
+
+    #[test]
+    fn signal_tokens_distinguish_classes() {
+        // single-seq task: class-0 rows should contain class-0 signal
+        // tokens far more often than class-1 rows do.
+        let spec = TaskSpec::by_name("agnews", 2000);
+        let ds = generate(&spec, 32, 512, 11);
+        let sig0: Vec<i32> = (0..spec.signal_tokens)
+            .map(|j| signal_token(512, 0, j))
+            .collect();
+        let count = |class: i32| -> usize {
+            (0..ds.len())
+                .filter(|&i| ds.labels[i] == class)
+                .map(|i| ds.row(i).iter().filter(|t| sig0.contains(t)).count())
+                .sum()
+        };
+        assert!(count(0) > count(1) * 3, "{} vs {}", count(0), count(1));
+    }
+
+    #[test]
+    fn mnli_contradiction_has_neg_markers() {
+        let spec = TaskSpec::by_name("mnli", 500);
+        let ds = generate(&spec, 32, 512, 13);
+        let neg_frac = |class: i32| -> f64 {
+            let rows: Vec<usize> = (0..ds.len()).filter(|&i| ds.labels[i] == class).collect();
+            let with_neg = rows
+                .iter()
+                .filter(|&&i| ds.row(i).contains(&NEG))
+                .count();
+            with_neg as f64 / rows.len() as f64
+        };
+        assert!(neg_frac(1) > 0.95);
+        assert!(neg_frac(0) < 0.2);
+    }
+}

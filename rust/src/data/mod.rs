@@ -1,0 +1,10 @@
+//! Data substrate: synthetic GLUE-style corpora, non-IID Dirichlet
+//! partitioning, and fixed-size batch assembly.
+
+pub mod batch;
+pub mod gen;
+pub mod partition;
+
+pub use batch::{Batch, BatchSampler};
+pub use gen::{Dataset, TaskSpec};
+pub use partition::{dirichlet_partition, split_shard, Shard};

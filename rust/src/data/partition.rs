@@ -1,0 +1,174 @@
+//! Non-IID federated data partitioning (paper §6.1).
+//!
+//! Label-skew Dirichlet protocol as in FedPETuning/FedNLP: for every
+//! class, the class's samples are distributed across devices with
+//! proportions drawn from Dir(alpha); lower alpha => stronger skew. Each
+//! device then splits its shard into train/val.
+
+use crate::util::rng::Rng;
+
+/// Per-device sample indices into the parent dataset.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub train: Vec<usize>,
+    pub val: Vec<usize>,
+}
+
+/// Partition by Dirichlet label skew. Every sample lands on exactly one
+/// device; devices left empty receive one random steal so each device can
+/// participate (matching the benchmarks' behaviour).
+pub fn dirichlet_partition(
+    labels: &[i32],
+    n_classes: usize,
+    n_devices: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    assert!(n_devices > 0);
+    let mut per_device: Vec<Vec<usize>> = vec![Vec::new(); n_devices];
+    for c in 0..n_classes {
+        let mut idx: Vec<usize> = labels
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| l as usize == c)
+            .map(|(i, _)| i)
+            .collect();
+        rng.shuffle(&mut idx);
+        let props = rng.dirichlet(alpha, n_devices);
+        // largest-remainder rounding of proportions to counts
+        let n = idx.len();
+        let mut counts: Vec<usize> = props.iter().map(|p| (p * n as f64) as usize).collect();
+        let mut assigned: usize = counts.iter().sum();
+        // hand leftovers to the devices with the largest fractional parts
+        let mut rema: Vec<(f64, usize)> = props
+            .iter()
+            .enumerate()
+            .map(|(d, p)| (p * n as f64 - counts[d] as f64, d))
+            .collect();
+        rema.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut ri = 0;
+        while assigned < n {
+            counts[rema[ri % rema.len()].1] += 1;
+            assigned += 1;
+            ri += 1;
+        }
+        let mut cursor = 0;
+        for (d, &cnt) in counts.iter().enumerate() {
+            per_device[d].extend_from_slice(&idx[cursor..cursor + cnt]);
+            cursor += cnt;
+        }
+    }
+    // no device may be empty: steal one sample from the largest shard
+    for d in 0..n_devices {
+        if per_device[d].is_empty() {
+            let donor = (0..n_devices)
+                .max_by_key(|&e| per_device[e].len())
+                .unwrap();
+            if per_device[donor].len() > 1 {
+                let take = per_device[donor].pop().unwrap();
+                per_device[d].push(take);
+            }
+        }
+    }
+    for shard in per_device.iter_mut() {
+        rng.shuffle(shard);
+    }
+    per_device
+}
+
+/// Split one device's shard into train/val (paper: local validation set
+/// drives the bandit reward; local test mirrors the local distribution).
+pub fn split_shard(mut shard: Vec<usize>, val_fraction: f64, rng: &mut Rng) -> Shard {
+    rng.shuffle(&mut shard);
+    let n_val = ((shard.len() as f64 * val_fraction) as usize).clamp(1, shard.len().saturating_sub(1).max(1));
+    if shard.len() <= 1 {
+        return Shard {
+            train: shard.clone(),
+            val: shard,
+        };
+    }
+    let val = shard.split_off(shard.len() - n_val);
+    Shard { train: shard, val }
+}
+
+/// Empirical label distribution of a shard (used in tests and reports).
+pub fn label_hist(labels: &[i32], shard: &[usize], n_classes: usize) -> Vec<usize> {
+    let mut h = vec![0usize; n_classes];
+    for &i in shard {
+        h[labels[i] as usize] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testkit::proptest;
+
+    fn fake_labels(n: usize, c: usize, rng: &mut Rng) -> Vec<i32> {
+        (0..n).map(|_| rng.below(c) as i32).collect()
+    }
+
+    #[test]
+    fn partition_conserves_mass() {
+        proptest("partition conserves mass", 25, |rng| {
+            let n = 500 + rng.below(500);
+            let c = 2 + rng.below(4);
+            let d = 2 + rng.below(20);
+            let alpha = [0.1, 1.0, 10.0][rng.below(3)];
+            let labels = fake_labels(n, c, rng);
+            let parts = dirichlet_partition(&labels, c, d, alpha, rng);
+            let total: usize = parts.iter().map(|p| p.len()).sum();
+            prop_assert!(total == n, "lost samples: {total} != {n}");
+            let mut all: Vec<usize> = parts.concat();
+            all.sort_unstable();
+            all.dedup();
+            prop_assert!(all.len() == n, "duplicate assignment");
+            prop_assert!(
+                parts.iter().all(|p| !p.is_empty()),
+                "empty device shard"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn alpha_monotone_skew() {
+        // lower alpha should give higher average per-device label skew
+        let mut rng = Rng::seed_from(5);
+        let labels = fake_labels(4000, 4, &mut rng);
+        let skew = |alpha: f64, rng: &mut Rng| -> f64 {
+            let parts = dirichlet_partition(&labels, 4, 20, alpha, rng);
+            let mut s = 0.0;
+            for p in &parts {
+                let h = label_hist(&labels, p, 4);
+                let n: usize = h.iter().sum();
+                let maxf = h.iter().copied().max().unwrap_or(0) as f64 / n.max(1) as f64;
+                s += maxf;
+            }
+            s / parts.len() as f64
+        };
+        let lo = skew(0.1, &mut rng);
+        let hi = skew(100.0, &mut rng);
+        assert!(lo > hi + 0.15, "skew(0.1)={lo} vs skew(100)={hi}");
+    }
+
+    #[test]
+    fn split_shard_proportions() {
+        let mut rng = Rng::seed_from(8);
+        let s = split_shard((0..100).collect(), 0.2, &mut rng);
+        assert_eq!(s.train.len() + s.val.len(), 100);
+        assert_eq!(s.val.len(), 20);
+    }
+
+    #[test]
+    fn split_tiny_shards() {
+        let mut rng = Rng::seed_from(9);
+        let s = split_shard(vec![42], 0.2, &mut rng);
+        assert!(!s.train.is_empty() || !s.val.is_empty());
+        let s2 = split_shard(vec![1, 2], 0.5, &mut rng);
+        assert_eq!(s2.train.len() + s2.val.len(), 2);
+        assert!(!s2.train.is_empty());
+    }
+}

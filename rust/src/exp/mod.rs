@@ -1,0 +1,140 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§2 motivation + §6). One module per experiment family; the
+//! DESIGN.md experiment index maps each paper artifact to its harness.
+//!
+//! `droppeft exp <id> [--quick] [--preset tiny] [--out results]`
+//! writes both stdout tables and `results/<id>.md` (+ raw JSON series)
+//! that EXPERIMENTS.md quotes.
+
+mod noniid;
+mod static_costs;
+mod table3;
+mod training;
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::fed::{Engine, FedConfig};
+use crate::metrics::SessionResult;
+use crate::methods::Method;
+use crate::runtime::Runtime;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Shared experiment context.
+pub struct Ctx {
+    pub runtime: Arc<Runtime>,
+    pub out_dir: std::path::PathBuf,
+    pub quick: bool,
+    pub preset: String,
+    pub seed: u64,
+}
+
+impl Ctx {
+    /// Baseline session dimensions for this testbed (shrunk in --quick).
+    pub fn base_cfg(&self, dataset: &str) -> FedConfig {
+        let mut cfg = FedConfig::quick(&self.preset, dataset);
+        if self.quick {
+            cfg.n_devices = 10;
+            cfg.devices_per_round = 3;
+            cfg.rounds = 10;
+            cfg.local_batches = 2;
+            cfg.samples = 800;
+            cfg.eval_batches = 8;
+        } else {
+            cfg.n_devices = 20;
+            cfg.devices_per_round = 5;
+            cfg.rounds = 36;
+            cfg.local_batches = 4;
+            cfg.samples = 2_000;
+            cfg.eval_batches = 24;
+        }
+        cfg.seed = self.seed;
+        cfg.eval_every = 2;
+        // the tiny/small presets want a larger step than the paper's
+        // full-size models (frozen random base, few trainables)
+        cfg.lr = 5e-3;
+        // Table-3-style wall-clock: simulate at paper scale
+        cfg.cost_model = Some("roberta-large".to_string());
+        cfg
+    }
+
+    pub fn run_session(
+        &self,
+        cfg: FedConfig,
+        method: Box<dyn Method>,
+    ) -> Result<SessionResult> {
+        let name = method.name();
+        let t0 = std::time::Instant::now();
+        let mut engine = Engine::new(cfg, self.runtime.clone(), method)?;
+        let r = engine.run()?;
+        crate::info!(
+            "session {name} done: final {:.1}% in {:.1}s host time",
+            100.0 * r.final_acc(),
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(r)
+    }
+
+    /// Persist an experiment report (markdown + optional JSON series).
+    pub fn write_report(&self, id: &str, markdown: &str, raw: Option<Json>) -> Result<()> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let md_path = self.out_dir.join(format!("{id}.md"));
+        std::fs::write(&md_path, markdown)
+            .with_context(|| format!("writing {md_path:?}"))?;
+        if let Some(j) = raw {
+            std::fs::write(self.out_dir.join(format!("{id}.json")), j.to_string())?;
+        }
+        crate::info!("wrote {md_path:?}");
+        Ok(())
+    }
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let id = args
+        .opt_str("id")
+        .or_else(|| args.positionals.first().cloned())
+        .unwrap_or_else(|| "all".to_string());
+    let ctx = Ctx {
+        runtime: Arc::new(Runtime::new(args.str_or("artifacts", "artifacts"))?),
+        out_dir: args.str_or("out", "results").into(),
+        quick: args.flag("quick"),
+        preset: args.str_or("preset", "tiny"),
+        seed: args.u64_or("seed", 42)?,
+    };
+    args.finish()?;
+    dispatch(&ctx, &id)
+}
+
+fn dispatch(ctx: &Ctx, id: &str) -> Result<()> {
+    match id {
+        "table1" => static_costs::table1(ctx),
+        "fig2" => static_costs::fig2(ctx),
+        "fig3" => static_costs::fig3(ctx),
+        "fig10" => static_costs::fig10(ctx),
+        "fig6a" => training::fig6a(ctx),
+        "fig6b" => training::fig6b(ctx),
+        "fig7" => training::fig7(ctx),
+        "fig13" => training::fig13(ctx),
+        "fig14" => training::fig14(ctx),
+        "table3" => table3::table3(ctx).map(|_| ()),
+        "fig9" => table3::fig9(ctx),
+        "fig11" => table3::fig11(ctx),
+        "fig12" => table3::fig12(ctx),
+        "fig15" => noniid::fig15(ctx),
+        "all" => {
+            for id in [
+                "table1", "fig2", "fig3", "fig10", "fig6a", "fig6b", "fig7",
+                "fig13", "fig14", "table3-bundle", "fig15",
+            ] {
+                println!("\n================ exp {id} ================");
+                dispatch(ctx, id)?;
+            }
+            Ok(())
+        }
+        // table3 + fig9 + fig11 + fig12 from one grid run
+        "table3-bundle" => table3::bundle(ctx),
+        _ => anyhow::bail!("unknown experiment {id:?} (see DESIGN.md index)"),
+    }
+}

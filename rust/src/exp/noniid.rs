@@ -1,0 +1,54 @@
+//! Figure 15: final accuracy under varying non-IID degrees (Dirichlet
+//! alpha) — the PTLS ablation (§6.4).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::methods;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+pub fn fig15(ctx: &Ctx) -> Result<()> {
+    let alphas = if ctx.quick {
+        vec![0.1, 10.0]
+    } else {
+        vec![0.1, 1.0, 10.0]
+    };
+    let method_names = ["droppeft-lora", "droppeft-b3", "fedadapter", "fedadaopt"];
+    let mut t = Table::new(&["alpha", "method", "final acc", "personalized acc"]);
+    let mut series = Vec::new();
+    for &alpha in &alphas {
+        for name in method_names {
+            let mut cfg = ctx.base_cfg("qqp");
+            cfg.alpha = alpha;
+            cfg.eval_personalized = true;
+            let m = methods::by_name(name, ctx.seed, cfg.rounds)?;
+            let r = ctx.run_session(cfg, m)?;
+            let pers = r
+                .records
+                .iter()
+                .rev()
+                .find_map(|rec| rec.personalized_acc);
+            t.row(vec![
+                format!("{alpha}"),
+                r.method.clone(),
+                format!("{:.1}%", 100.0 * r.final_acc()),
+                pers.map(|a| format!("{:.1}%", 100.0 * a))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+            series.push(Json::obj(vec![
+                ("alpha", Json::num(alpha)),
+                ("method", Json::str(r.method.clone())),
+                ("final_acc", Json::num(r.final_acc())),
+            ]));
+        }
+    }
+    let md = format!(
+        "## Figure 15 — final accuracy vs non-IID degree\n\n{}\n\n\
+         Paper: all methods degrade as alpha falls 10 -> 0.1, but PTLS\n\
+         holds DropPEFT's loss to ~5% while b3/baselines drop 13-14%.\n",
+        t.markdown()
+    );
+    println!("{}", t.text());
+    ctx.write_report("fig15", &md, Some(Json::Arr(series)))
+}

@@ -1,0 +1,198 @@
+//! Table 3 (time-to-accuracy + final accuracy across methods/datasets)
+//! and its companion figures: 9 (timelines), 11 (energy), 12 (traffic).
+//!
+//! One grid run feeds all four artifacts; `fig9/fig11/fig12` re-run the
+//! grid when invoked standalone (sessions are testbed-sized).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::metrics::SessionResult;
+use crate::methods;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+const METHODS: [&str; 6] = [
+    "fedlora",
+    "fedhetlora",
+    "droppeft-lora",
+    "fedadapter",
+    "fedadaopt",
+    "droppeft-adapter",
+];
+
+fn datasets(ctx: &Ctx) -> Vec<&'static str> {
+    if ctx.quick {
+        vec!["mnli"]
+    } else {
+        vec!["qqp", "mnli", "agnews"]
+    }
+}
+
+pub fn grid(ctx: &Ctx) -> Result<Vec<SessionResult>> {
+    let mut out = Vec::new();
+    for ds in datasets(ctx) {
+        for m in METHODS {
+            let cfg = ctx.base_cfg(ds);
+            let method = methods::by_name(m, ctx.seed, cfg.rounds)?;
+            out.push(ctx.run_session(cfg, method)?);
+        }
+    }
+    Ok(out)
+}
+
+/// Target accuracy per dataset: highest accuracy *achievable by every
+/// method* (paper §6.1 Metrics), slightly discounted for noise.
+fn targets(runs: &[SessionResult]) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for ds in runs
+        .iter()
+        .map(|r| r.dataset.clone())
+        .collect::<std::collections::BTreeSet<_>>()
+    {
+        let t = runs
+            .iter()
+            .filter(|r| r.dataset == ds)
+            .map(|r| r.best_acc())
+            .fold(f64::INFINITY, f64::min);
+        out.push((ds, t * 0.98));
+    }
+    out
+}
+
+pub fn table3(ctx: &Ctx) -> Result<Vec<SessionResult>> {
+    let runs = grid(ctx)?;
+    let tg = targets(&runs);
+    let mut t = Table::new(&[
+        "dataset", "method", "target", "time-to-acc (h)", "final acc",
+    ]);
+    let mut speedups = Vec::new();
+    for (ds, target) in &tg {
+        let mut rows: Vec<(&SessionResult, Option<f64>)> = runs
+            .iter()
+            .filter(|r| &r.dataset == ds)
+            .map(|r| (r, r.time_to_acc(*target)))
+            .collect();
+        rows.sort_by(|a, b| a.0.method.cmp(&b.0.method));
+        for (r, tta) in &rows {
+            t.row(vec![
+                ds.clone(),
+                r.method.clone(),
+                format!("{:.1}%", 100.0 * target),
+                tta.map(|s| format!("{:.2}", s / 3600.0))
+                    .unwrap_or_else(|| "n/a".into()),
+                format!("{:.1}%", 100.0 * r.final_acc()),
+            ]);
+        }
+        // headline: DropPEFT(LoRA) speedup over FedLoRA
+        let get = |name: &str| {
+            rows.iter()
+                .find(|(r, _)| r.method.contains(name))
+                .and_then(|(_, t)| *t)
+        };
+        if let (Some(ours), Some(base)) = (get("DropPEFT(LoRA)"), get("FedLoRA")) {
+            speedups.push(format!(
+                "{ds}: DropPEFT(LoRA) {:.1}x faster than FedLoRA to target",
+                base / ours.max(1e-9)
+            ));
+        }
+        if let (Some(ours), Some(base)) = (get("DropPEFT(Adapter)"), get("FedAdapter")) {
+            speedups.push(format!(
+                "{ds}: DropPEFT(Adapter) {:.1}x faster than FedAdapter",
+                base / ours.max(1e-9)
+            ));
+        }
+    }
+    let md = format!(
+        "## Table 3 — time-to-accuracy and final accuracy\n\n{}\n\n{}\n\n\
+         Paper: DropPEFT reaches targets 1.3-6.3x faster and gains\n\
+         0.8-5.3% absolute final accuracy over the baselines.\n",
+        t.markdown(),
+        speedups.join("\n")
+    );
+    println!("{}", t.text());
+    for s in &speedups {
+        println!("{s}");
+    }
+    let raw = Json::Arr(runs.iter().map(|r| r.to_json()).collect());
+    ctx.write_report("table3", &md, Some(raw))?;
+    Ok(runs)
+}
+
+/// Run the grid once and emit table3 + fig9 + fig11 + fig12 (used by
+/// `exp all` to avoid re-running sessions).
+pub fn bundle(ctx: &Ctx) -> Result<()> {
+    let runs = table3(ctx)?;
+    fig9_from(ctx, &runs)?;
+    fig11_from(ctx, &runs)?;
+    fig12_from(ctx, &runs)
+}
+
+/// Fig. 9: accuracy-vs-wall-clock timelines for every method.
+pub fn fig9(ctx: &Ctx) -> Result<()> {
+    let runs = grid(ctx)?;
+    fig9_from(ctx, &runs)
+}
+
+fn fig9_from(ctx: &Ctx, runs: &[SessionResult]) -> Result<()> {
+    let mut md = String::from("## Figure 9 — time-to-accuracy timelines\n");
+    let mut series = Vec::new();
+    for r in runs {
+        md.push_str(&format!("\n### {} on {}\n\n| sim h | acc |\n|---|---|\n", r.method, r.dataset));
+        for (h, a) in r.acc_timeline() {
+            md.push_str(&format!("| {h:.3} | {:.1}% |\n", 100.0 * a));
+        }
+        series.push(r.to_json());
+    }
+    println!("fig9: {} sessions dumped", runs.len());
+    ctx.write_report("fig9", &md, Some(Json::Arr(series)))
+}
+
+/// Fig. 11: per-device average energy consumption by method.
+pub fn fig11(ctx: &Ctx) -> Result<()> {
+    let runs = grid(ctx)?;
+    fig11_from(ctx, &runs)
+}
+
+fn fig11_from(ctx: &Ctx, runs: &[SessionResult]) -> Result<()> {
+    let mut t = Table::new(&["dataset", "method", "energy (kJ/device)"]);
+    for r in runs {
+        t.row(vec![
+            r.dataset.clone(),
+            r.method.clone(),
+            format!("{:.1}", r.total_energy_j() / 1e3),
+        ]);
+    }
+    let md = format!(
+        "## Figure 11 — per-device energy to end of session\n\n{}\n\n\
+         Paper: DropPEFT saves 38-65% energy vs baselines (fewer FLOPs per\n\
+         round and shorter rounds).\n",
+        t.markdown()
+    );
+    println!("{}", t.text());
+    ctx.write_report("fig11", &md, None)
+}
+
+/// Fig. 12: total network traffic of all devices.
+pub fn fig12(ctx: &Ctx) -> Result<()> {
+    let runs = grid(ctx)?;
+    fig12_from(ctx, &runs)
+}
+
+fn fig12_from(ctx: &Ctx, runs: &[SessionResult]) -> Result<()> {
+    let mut t = Table::new(&["dataset", "method", "traffic (GB, all devices)"]);
+    for r in runs {
+        t.row(vec![
+            r.dataset.clone(),
+            r.method.clone(),
+            format!("{:.3}", r.total_traffic_bytes() as f64 / 1e9),
+        ]);
+    }
+    let md = format!(
+        "## Figure 12 — total network traffic\n\n{}\n\n\
+         Paper: PTLS's partial-layer upload cuts 22-62% of traffic.\n",
+        t.markdown()
+    );
+    println!("{}", t.text());
+    ctx.write_report("fig12", &md, None)
+}

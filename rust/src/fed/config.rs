@@ -1,0 +1,63 @@
+//! Federated session configuration (paper §6.1 "FL Settings").
+
+#[derive(Clone, Debug)]
+pub struct FedConfig {
+    /// compiled model preset ("tiny" | "small" | "base")
+    pub preset: String,
+    /// dataset analog ("mnli" | "qqp" | "agnews")
+    pub dataset: String,
+    /// total device population (paper: 100 for MNLI/QQP, 1000 for AGNews)
+    pub n_devices: usize,
+    /// devices sampled per round (paper: 10, or 100 for AGNews)
+    pub devices_per_round: usize,
+    pub rounds: usize,
+    /// mini-batches of local fine-tuning per device per round
+    /// (paper: one local epoch; capped for the 1-core testbed)
+    pub local_batches: usize,
+    pub lr: f64,
+    /// Dirichlet non-IIDness (paper default 1.0)
+    pub alpha: f64,
+    /// total dataset size before partitioning
+    pub samples: usize,
+    pub seed: u64,
+    /// evaluate global accuracy every this many rounds
+    pub eval_every: usize,
+    /// batches of the held-out test set used per evaluation
+    pub eval_batches: usize,
+    /// also evaluate per-device personalized accuracy (slower)
+    pub eval_personalized: bool,
+    /// stop early once global accuracy reaches this target
+    pub target_acc: Option<f64>,
+    /// worker threads for device-parallel local training
+    pub workers: usize,
+    /// simulate costs at a paper-scale model (e.g. "roberta-large"):
+    /// training *quality* comes from the compiled preset, but wall-clock /
+    /// memory / traffic are computed for this architecture, with the STLD
+    /// active fraction mapped proportionally (semi-emulation, §6.1)
+    pub cost_model: Option<String>,
+}
+
+impl FedConfig {
+    /// Testbed-scaled defaults (see DESIGN.md §Substitutions: population
+    /// and rounds shrink with the model so a session fits the budget).
+    pub fn quick(preset: &str, dataset: &str) -> FedConfig {
+        FedConfig {
+            preset: preset.to_string(),
+            dataset: dataset.to_string(),
+            n_devices: 20,
+            devices_per_round: 4,
+            rounds: 20,
+            local_batches: 4,
+            lr: 5e-4,
+            alpha: 1.0,
+            samples: 2_000,
+            seed: 42,
+            eval_every: 2,
+            eval_batches: 4,
+            eval_personalized: false,
+            target_acc: None,
+            workers: crate::util::pool::default_workers(),
+            cost_model: None,
+        }
+    }
+}

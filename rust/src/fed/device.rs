@@ -1,0 +1,54 @@
+//! Simulated end device: data shard + hardware profile + bandwidth
+//! process + (for personalized methods) persistent local training state.
+
+use crate::bandit::{tier_of, Tier};
+use crate::data::Shard;
+use crate::hw::{Bandwidth, DeviceProfile};
+use crate::model::TrainState;
+use crate::util::rng::Rng;
+
+/// What strategy objects are allowed to see about a device.
+#[derive(Clone, Debug)]
+pub struct DeviceInfo {
+    pub id: usize,
+    pub tier: Tier,
+    pub effective_gflops: f64,
+    pub mem_bytes: u64,
+    pub n_samples: usize,
+}
+
+pub struct DeviceCtx {
+    pub id: usize,
+    pub shard: Shard,
+    pub profile: DeviceProfile,
+    pub mode: usize,
+    pub bandwidth: Bandwidth,
+    pub rng: Rng,
+    /// persistent local state (PTLS-personalized methods only)
+    pub personal: Option<TrainState>,
+    /// layers this device shared last round (these get refreshed from the
+    /// global model at the next download)
+    pub last_shared: Vec<usize>,
+    /// rounds this device has participated in
+    pub participations: usize,
+}
+
+impl DeviceCtx {
+    pub fn info(&self) -> DeviceInfo {
+        DeviceInfo {
+            id: self.id,
+            tier: tier_of(self.profile.effective_gflops(self.mode)),
+            effective_gflops: self.profile.effective_gflops(self.mode),
+            mem_bytes: self.profile.mem_bytes,
+            n_samples: self.shard.train.len(),
+        }
+    }
+
+    pub fn effective_gflops(&self) -> f64 {
+        self.profile.effective_gflops(self.mode)
+    }
+
+    pub fn power_w(&self) -> f64 {
+        self.profile.power(self.mode)
+    }
+}

@@ -1,0 +1,10 @@
+//! Federated fine-tuning engine: session configuration, simulated
+//! devices, and the round loop (real XLA training + simulated wall-clock).
+
+pub mod config;
+pub mod device;
+pub mod engine;
+
+pub use config::FedConfig;
+pub use device::{DeviceCtx, DeviceInfo};
+pub use engine::Engine;

@@ -1,0 +1,293 @@
+//! Analytic compute / memory / communication cost model.
+//!
+//! This is the semi-emulation half of the testbed (DESIGN.md
+//! §Substitutions): training *quality* comes from real XLA steps, but
+//! per-device wall-clock, memory and energy are computed from these
+//! formulas, whose constants are calibrated so that the paper-scale
+//! checkpoints land on the paper's own numbers (e.g. FFT of a 1.5B model
+//! = 27.5 GB in Table 1 / Fig. 3 — see tests below).
+//!
+//! Units: FLOPs (f64), bytes (u64), seconds/joules (f64).
+
+use crate::runtime::manifest::ModelCfg;
+
+/// Bytes per tensor element in the on-device training format (bf16).
+const B_ACT: f64 = 2.0;
+const B_PARAM: f64 = 2.0;
+/// AdamW moments kept in bf16 x2 (paper Fig. 3 ratio opt ~= 2x params).
+const B_OPT: f64 = 4.0;
+/// Parameter updates cross the network as f32.
+pub const B_WIRE: u64 = 4;
+/// Cellular/WiFi radio power while transmitting (W).
+pub const RADIO_W: f64 = 2.5;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Forward,
+    /// backward with frozen base (PEFT): activation-gradient chain only
+    BackwardPeft,
+    /// backward with all parameters trainable (full fine-tuning)
+    BackwardFull,
+}
+
+/// Per-layer base parameter count (attention + FFN + 2 LN).
+pub fn layer_params(cfg: &ModelCfg) -> f64 {
+    let d = cfg.d_model as f64;
+    let ff = cfg.d_ff as f64;
+    4.0 * (d * d + d) + 2.0 * d * ff + ff + d + 4.0 * d
+}
+
+/// Total base parameters (layers + embedding/positional/final-LN).
+pub fn base_params(cfg: &ModelCfg) -> f64 {
+    layer_params(cfg) * cfg.n_layers as f64
+        + (cfg.vocab + cfg.seq) as f64 * cfg.d_model as f64
+        + 2.0 * cfg.d_model as f64
+}
+
+/// Per-layer PEFT parameter count.
+pub fn peft_params_per_layer(cfg: &ModelCfg, kind: &str) -> f64 {
+    let d = cfg.d_model as f64;
+    match kind {
+        "lora" => 4.0 * d * cfg.lora_rank as f64,
+        "adapter" => 2.0 * d * cfg.adapter_dim as f64 + (cfg.adapter_dim + cfg.d_model) as f64,
+        "none" => 0.0,
+        _ => panic!("unknown peft kind {kind:?}"),
+    }
+}
+
+/// Forward FLOPs through `k_active` transformer layers for one batch.
+pub fn forward_flops(cfg: &ModelCfg, k_active: usize, kind: &str) -> f64 {
+    let t = (cfg.batch * cfg.seq) as f64;
+    let d = cfg.d_model as f64;
+    let ff = cfg.d_ff as f64;
+    let s = cfg.seq as f64;
+    let b = cfg.batch as f64;
+    let proj = 8.0 * t * d * d; // q,k,v,o
+    let attn = 4.0 * b * s * s * d; // scores + weighted values
+    let ffn = 4.0 * t * d * ff;
+    let peft = match kind {
+        "lora" => 8.0 * t * d * cfg.lora_rank as f64,
+        "adapter" => 4.0 * t * d * cfg.adapter_dim as f64,
+        _ => 0.0,
+    };
+    let head = 2.0 * b * d * cfg.n_classes as f64 + 2.0 * t * d; // pool+head
+    k_active as f64 * (proj + attn + ffn + peft) + head
+}
+
+/// Total train-step FLOPs.
+///
+/// Frozen-base PEFT pays the forward pass plus the activation-gradient
+/// chain (~= another forward) plus the tiny PEFT weight-gradient matmuls;
+/// full fine-tuning pays forward + dx chain + dW for everything (the
+/// classic 3x forward). This is exactly the paper's Fig. 1/2 story: PEFT
+/// halves the backward but cannot touch the forward.
+pub fn train_flops(cfg: &ModelCfg, k_active: usize, kind: &str, full_ft: bool) -> f64 {
+    let f = forward_flops(cfg, k_active, kind);
+    if full_ft {
+        3.0 * f
+    } else {
+        let t = (cfg.batch * cfg.seq) as f64;
+        let peft_grads = 2.0 * k_active as f64 * peft_params_per_layer(cfg, kind) * t
+            / cfg.seq as f64; // dW for peft rows only
+        2.0 * f + peft_grads
+    }
+}
+
+/// Activation bytes that must stay resident for the backward pass when
+/// `k_active` layers participate (skipped layers store nothing — the
+/// identity has no saved tensors).
+pub fn activation_bytes(cfg: &ModelCfg, k_active: usize) -> f64 {
+    let t = (cfg.batch * cfg.seq) as f64;
+    let d = cfg.d_model as f64;
+    let ff = cfg.d_ff as f64;
+    let s = cfg.seq as f64;
+    let b = cfg.batch as f64;
+    let per_layer = t * (12.0 * d + 2.0 * ff) * B_ACT + b * cfg.n_heads as f64 * s * s * B_ACT;
+    k_active as f64 * per_layer + 2.0 * t * d * B_ACT
+}
+
+/// Peak training memory footprint in bytes.
+///
+/// `k_active` is the (expected) number of active layers; the base weights
+/// of *all* layers stay resident (a skipped layer may activate next batch),
+/// but activations/gradients exist only for active layers and optimizer
+/// state only for trainable parameters.
+pub fn train_memory_bytes(cfg: &ModelCfg, k_active: usize, kind: &str, full_ft: bool) -> f64 {
+    let p = base_params(cfg);
+    let q_total = peft_params_per_layer(cfg, kind) * cfg.n_layers as f64
+        + (cfg.d_model * cfg.n_classes + cfg.n_classes) as f64;
+    let params = p * B_PARAM + q_total * B_PARAM;
+    let act = activation_bytes(cfg, k_active);
+    let (grads, opt) = if full_ft {
+        (p * B_PARAM, p * B_OPT)
+    } else {
+        let q_active = peft_params_per_layer(cfg, kind) * k_active as f64;
+        (q_active * B_PARAM, q_total * B_OPT)
+    };
+    params + act + grads + opt
+}
+
+/// Memory breakdown (params, activations, gradients, optimizer) — Fig. 3.
+pub fn memory_breakdown(cfg: &ModelCfg, k_active: usize, kind: &str, full_ft: bool) -> [f64; 4] {
+    let p = base_params(cfg);
+    let q_total = peft_params_per_layer(cfg, kind) * cfg.n_layers as f64;
+    let params = p * B_PARAM + q_total * B_PARAM;
+    let act = activation_bytes(cfg, k_active);
+    let (grads, opt) = if full_ft {
+        (p * B_PARAM, p * B_OPT)
+    } else {
+        (
+            peft_params_per_layer(cfg, kind) * k_active as f64 * B_PARAM,
+            q_total * B_OPT,
+        )
+    };
+    [params, act, grads, opt]
+}
+
+/// Bytes moved per round for a device sharing `n_shared` PEFT layer rows
+/// (+ head), both directions. `full_model` covers the no-PEFT baseline.
+pub fn comm_bytes(cfg: &ModelCfg, kind: &str, n_shared: usize, full_model: bool) -> u64 {
+    let params = if full_model {
+        base_params(cfg)
+    } else {
+        peft_params_per_layer(cfg, kind) * n_shared as f64
+            + (cfg.d_model * cfg.n_classes + cfg.n_classes) as f64
+    };
+    2 * (params as u64) * B_WIRE // down + up
+}
+
+/// Seconds to push `bytes` through `bps` bits/sec.
+pub fn comm_secs(bytes: u64, bps: f64) -> f64 {
+    (bytes as f64) * 8.0 / bps.max(1.0)
+}
+
+/// Seconds of computation for `flops` at `gflops` sustained.
+pub fn comp_secs(flops: f64, gflops: f64) -> f64 {
+    flops / (gflops * 1e9)
+}
+
+/// Joules for a round: compute at device power + radio while transmitting.
+pub fn energy_j(comp_s: f64, device_power_w: f64, comm_s: f64) -> f64 {
+    comp_s * device_power_w + comm_s * RADIO_W
+}
+
+/// Paper-scale model configs (never compiled — cost model inputs only).
+pub fn paper_model(name: &str) -> ModelCfg {
+    let (d, l, ff, heads, seq) = match name {
+        "roberta-base" => (768, 12, 3072, 12, 256),
+        "bert-large" | "roberta-large" => (1024, 24, 4096, 16, 256),
+        "deberta-large" => (1024, 24, 4096, 16, 256),
+        "deberta-xxl" => (1536, 48, 6144, 24, 256),
+        _ => panic!("unknown paper model {name:?}"),
+    };
+    ModelCfg {
+        name: name.to_string(),
+        vocab: 128_100,
+        seq,
+        d_model: d,
+        n_heads: heads,
+        d_ff: ff,
+        n_layers: l,
+        n_classes: 3,
+        lora_rank: 8,
+        lora_alpha: 16.0,
+        adapter_dim: 64,
+        batch: 16,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deberta_xxl_calibration_matches_paper() {
+        // Table 1 / Fig. 3: FFT of DeBERTaV2-xxlarge (1.5B) needs ~27.5 GB.
+        let cfg = paper_model("deberta-xxl");
+        let p = base_params(&cfg);
+        assert!((1.3e9..1.8e9).contains(&p), "param count {p}");
+        let gb = train_memory_bytes(&cfg, cfg.n_layers, "none", true) / 1e9;
+        assert!((24.0..31.0).contains(&gb), "FFT memory {gb} GB");
+        // PEFT saves ~30% (paper: 27.5 -> 18.7-18.9 GB)
+        let peft = train_memory_bytes(&cfg, cfg.n_layers, "lora", false) / 1e9;
+        assert!((16.0..21.0).contains(&peft), "PEFT memory {peft} GB");
+        // DropPEFT at dropout 0.6 lands near Table 1's 11.2 GB
+        let k = (cfg.n_layers as f64 * 0.4).round() as usize;
+        let ours = train_memory_bytes(&cfg, k, "lora", false) / 1e9;
+        assert!((8.0..14.0).contains(&ours), "DropPEFT memory {ours} GB");
+    }
+
+    #[test]
+    fn activations_dominate_peft_memory() {
+        // Fig. 3: activations are ~80% of PEFT's footprint.
+        let cfg = paper_model("deberta-xxl");
+        let [params, act, grads, opt] = memory_breakdown(&cfg, cfg.n_layers, "lora", false);
+        let total = params + act + grads + opt;
+        let frac = act / total;
+        assert!((0.7..0.93).contains(&frac), "activation fraction {frac}");
+    }
+
+    #[test]
+    fn fft_breakdown_fractions() {
+        // Fig. 3 FFT: params 10.9%, act 54.9%, grads 11.3%, opt 22.9%
+        let cfg = paper_model("deberta-xxl");
+        let br = memory_breakdown(&cfg, cfg.n_layers, "none", true);
+        let total: f64 = br.iter().sum();
+        let f: Vec<f64> = br.iter().map(|x| x / total).collect();
+        assert!((0.08..0.14).contains(&f[0]), "params {f:?}");
+        assert!((0.45..0.65).contains(&f[1]), "act {f:?}");
+        assert!((0.08..0.14).contains(&f[2]), "grads {f:?}");
+        assert!((0.17..0.28).contains(&f[3]), "opt {f:?}");
+    }
+
+    #[test]
+    fn peft_backward_saving_but_forward_intact() {
+        // Fig. 2: PEFT reduces backward, not forward; fwd ~50% of PEFT step
+        let cfg = paper_model("roberta-large");
+        let l = cfg.n_layers;
+        let fwd = forward_flops(&cfg, l, "lora");
+        let peft = train_flops(&cfg, l, "lora", false);
+        let fft = train_flops(&cfg, l, "none", true);
+        assert!(peft < fft * 0.75, "peft {peft} vs fft {fft}");
+        let frac = fwd / peft;
+        assert!((0.4..0.6).contains(&frac), "fwd fraction {frac}");
+    }
+
+    #[test]
+    fn stld_scales_with_active_fraction() {
+        // Eq. 4: compute and memory shrink by ~ (L - E[K]) / L
+        let cfg = paper_model("roberta-large");
+        let full = train_flops(&cfg, 24, "lora", false);
+        let half = train_flops(&cfg, 12, "lora", false);
+        let ratio = half / full;
+        assert!((0.45..0.55).contains(&ratio), "flops ratio {ratio}");
+        let m_full = activation_bytes(&cfg, 24);
+        let m_half = activation_bytes(&cfg, 12);
+        assert!((0.45..0.6).contains(&(m_half / m_full)));
+    }
+
+    #[test]
+    fn comm_peft_tiny_vs_full() {
+        // >95% communication saving (paper §2.2)
+        let cfg = paper_model("deberta-xxl");
+        let full = comm_bytes(&cfg, "none", cfg.n_layers, true);
+        let peft = comm_bytes(&cfg, "lora", cfg.n_layers, false);
+        assert!((peft as f64) < (full as f64) * 0.05);
+    }
+
+    #[test]
+    fn table1_comm_time_scale() {
+        // Table 1: 1.5B params over 40 Mbps take ~40.5 min per round
+        // (f32 on the wire, both directions).
+        let cfg = paper_model("deberta-xxl");
+        let bytes = comm_bytes(&cfg, "none", cfg.n_layers, true);
+        let mins = comm_secs(bytes, 40e6) / 60.0;
+        assert!((30.0..55.0).contains(&mins), "comm {mins} min");
+    }
+
+    #[test]
+    fn energy_accounting() {
+        let e = energy_j(100.0, 20.0, 10.0);
+        assert!((e - (2000.0 + 25.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,8 @@
+//! Hardware simulation substrate: Jetson device profiles, the analytic
+//! compute/memory/communication cost model, and the stochastic bandwidth
+//! process. See DESIGN.md §Substitutions for the calibration story.
+
+pub mod cost;
+pub mod profile;
+
+pub use profile::{sample_device, Bandwidth, DeviceKind, DeviceProfile, AGX, NX, TX2};

@@ -1,0 +1,170 @@
+//! Jetson-class device profiles (paper Table 2) and power modes.
+//!
+//! The paper measures on-device times on real TX2/NX/AGX boards and
+//! replays them in a semi-emulated federation; we replace the measurement
+//! step with an analytic throughput model (see DESIGN.md §Substitutions)
+//! whose constants come from the boards' public specs and the paper's own
+//! Table 1 timings.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceKind {
+    Tx2,
+    Nx,
+    Agx,
+}
+
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub kind: DeviceKind,
+    pub name: &'static str,
+    /// peak half-precision throughput at the max power mode, in GFLOP/s
+    pub peak_gflops: f64,
+    /// usable device memory for the training job, bytes
+    pub mem_bytes: u64,
+    /// board power draw at max mode, watts
+    pub power_w: f64,
+    /// number of selectable power modes (paper: TX2/NX 4 modes, AGX 8)
+    pub n_modes: usize,
+    /// fraction of peak actually achieved on transformer training
+    /// (model FLOPs utilization; Jetson-class boards sustain ~25-35%)
+    pub mfu: f64,
+}
+
+pub const TX2: DeviceProfile = DeviceProfile {
+    kind: DeviceKind::Tx2,
+    name: "TX2",
+    peak_gflops: 2_000.0, // 2 TFLOPS (Table 2)
+    mem_bytes: 8 * 1024 * 1024 * 1024,
+    power_w: 15.0,
+    n_modes: 4,
+    mfu: 0.30,
+};
+
+pub const NX: DeviceProfile = DeviceProfile {
+    kind: DeviceKind::Nx,
+    name: "NX",
+    peak_gflops: 10_500.0, // 21 TOPS int8 ~ 10.5 TFLOPS fp16
+    mem_bytes: 16 * 1024 * 1024 * 1024,
+    power_w: 20.0,
+    n_modes: 4,
+    mfu: 0.30,
+};
+
+pub const AGX: DeviceProfile = DeviceProfile {
+    kind: DeviceKind::Agx,
+    name: "AGX",
+    peak_gflops: 16_000.0, // 32 TOPS int8 ~ 16 TFLOPS fp16
+    mem_bytes: 32 * 1024 * 1024 * 1024,
+    power_w: 30.0,
+    n_modes: 8,
+    mfu: 0.30,
+};
+
+impl DeviceProfile {
+    /// Throughput multiplier of power mode `m` (0 = max performance).
+    /// Modes step down roughly linearly to ~35% of peak, matching the
+    /// published nvpmodel tables.
+    pub fn mode_factor(&self, mode: usize) -> f64 {
+        assert!(mode < self.n_modes, "mode {mode} of {}", self.n_modes);
+        let lo = 0.35;
+        if self.n_modes == 1 {
+            return 1.0;
+        }
+        1.0 - (1.0 - lo) * (mode as f64) / (self.n_modes as f64 - 1.0)
+    }
+
+    /// Effective sustained training throughput (GFLOP/s) in mode `m`.
+    pub fn effective_gflops(&self, mode: usize) -> f64 {
+        self.peak_gflops * self.mfu * self.mode_factor(mode)
+    }
+
+    /// Power draw in mode `m` (scales ~linearly with the mode factor,
+    /// with a 30% idle floor).
+    pub fn power(&self, mode: usize) -> f64 {
+        self.power_w * (0.3 + 0.7 * self.mode_factor(mode))
+    }
+}
+
+/// The paper's device mix: a heterogeneous population of TX2/NX/AGX in
+/// random power modes.
+pub fn sample_device(rng: &mut Rng) -> (DeviceProfile, usize) {
+    let p = match rng.below(3) {
+        0 => TX2,
+        1 => NX,
+        _ => AGX,
+    };
+    let mode = rng.below(p.n_modes);
+    (p, mode)
+}
+
+/// Stochastic last-mile bandwidth process: each device gets a base rate
+/// drawn U(1, 100) Mbps (paper §6.1) and per-round lognormal jitter.
+#[derive(Clone, Debug)]
+pub struct Bandwidth {
+    pub base_mbps: f64,
+}
+
+impl Bandwidth {
+    pub fn sample_base(rng: &mut Rng) -> Bandwidth {
+        Bandwidth {
+            base_mbps: rng.range_f64(1.0, 100.0),
+        }
+    }
+
+    /// This round's achievable rate in bits/sec.
+    pub fn round_bps(&self, rng: &mut Rng) -> f64 {
+        let jitter = (rng.gauss() * 0.25).exp();
+        (self.base_mbps * jitter).clamp(1.0, 100.0) * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_factors_monotone() {
+        for p in [TX2, NX, AGX] {
+            let f: Vec<f64> = (0..p.n_modes).map(|m| p.mode_factor(m)).collect();
+            assert_eq!(f[0], 1.0);
+            for w in f.windows(2) {
+                assert!(w[0] > w[1]);
+            }
+            assert!(*f.last().unwrap() >= 0.3);
+        }
+    }
+
+    #[test]
+    fn effective_below_peak() {
+        assert!(AGX.effective_gflops(0) < AGX.peak_gflops);
+        assert!(TX2.effective_gflops(3) < TX2.effective_gflops(0));
+    }
+
+    #[test]
+    fn bandwidth_in_range() {
+        let mut rng = Rng::seed_from(2);
+        let bw = Bandwidth::sample_base(&mut rng);
+        for _ in 0..100 {
+            let b = bw.round_bps(&mut rng);
+            assert!((1e6..=100e6).contains(&b), "bw {b}");
+        }
+    }
+
+    #[test]
+    fn device_mix_covers_all_kinds() {
+        let mut rng = Rng::seed_from(3);
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            let (p, m) = sample_device(&mut rng);
+            assert!(m < p.n_modes);
+            seen[match p.kind {
+                DeviceKind::Tx2 => 0,
+                DeviceKind::Nx => 1,
+                DeviceKind::Agx => 2,
+            }] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

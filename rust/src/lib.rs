@@ -1,0 +1,24 @@
+//! DropPEFT: efficient federated fine-tuning of LLMs with stochastic
+//! transformer layer dropout — rust coordinator (L3) of the three-layer
+//! rust + JAX + Pallas reproduction. See DESIGN.md for the architecture
+//! and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod bandit;
+pub mod benchkit;
+pub mod data;
+pub mod exp;
+pub mod fed;
+pub mod hw;
+pub mod methods;
+pub mod metrics;
+pub mod model;
+pub mod ptls;
+pub mod runtime;
+pub mod stld;
+pub mod testkit;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

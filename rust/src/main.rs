@@ -1,0 +1,122 @@
+//! `droppeft` CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   train      run one federated fine-tuning session
+//!   exp <id>   regenerate a paper table/figure (table1, fig2, ..., all)
+//!   inspect    print manifest + artifact statistics
+//!   help
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use droppeft::fed::{Engine, FedConfig};
+use droppeft::methods;
+use droppeft::runtime::Runtime;
+use droppeft::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("exp") => droppeft::exp::run(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("help") | None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown subcommand {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+droppeft — federated LLM fine-tuning with stochastic transformer layer dropout
+
+USAGE:
+  droppeft train [--method droppeft-lora] [--preset tiny] [--dataset mnli]
+                 [--rounds 20] [--devices 20] [--per-round 4]
+                 [--local-batches 4] [--alpha 1.0] [--samples 2000]
+                 [--lr 5e-4] [--seed 42] [--eval-every 2]
+                 [--target-acc 0.9] [--personal-eval] [--artifacts DIR]
+  droppeft exp <table1|fig2|fig3|fig6a|fig6b|fig7|table3|fig9|fig10|fig11|
+                fig12|fig13|fig14|fig15|all> [--quick] [--out results]
+  droppeft inspect [--artifacts DIR]
+
+Methods: fedlora fedadapter fedhetlora fedadaopt
+         droppeft-lora droppeft-adapter droppeft-b1 droppeft-b2 droppeft-b3
+";
+
+pub fn fed_config_from(args: &Args) -> Result<FedConfig> {
+    let mut cfg = FedConfig::quick(
+        &args.str_or("preset", "tiny"),
+        &args.str_or("dataset", "mnli"),
+    );
+    cfg.rounds = args.usize_or("rounds", cfg.rounds)?;
+    cfg.n_devices = args.usize_or("devices", cfg.n_devices)?;
+    cfg.devices_per_round = args.usize_or("per-round", cfg.devices_per_round)?;
+    cfg.local_batches = args.usize_or("local-batches", cfg.local_batches)?;
+    cfg.alpha = args.f64_or("alpha", cfg.alpha)?;
+    cfg.samples = args.usize_or("samples", cfg.samples)?;
+    cfg.lr = args.f64_or("lr", cfg.lr)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
+    cfg.eval_personalized = args.flag("personal-eval");
+    if let Some(t) = args.opt_str("target-acc") {
+        cfg.target_acc = Some(t.parse()?);
+    }
+    cfg.cost_model = args.opt_str("cost-model");
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = fed_config_from(args)?;
+    let method_name = args.str_or("method", "droppeft-lora");
+    let artifacts = args.str_or("artifacts", "artifacts");
+    args.finish()?;
+
+    let runtime = Arc::new(Runtime::new(&artifacts)?);
+    let method = methods::by_name(&method_name, cfg.seed, cfg.rounds)?;
+    droppeft::info!(
+        "training {} on {}/{} ({} devices, {} rounds)",
+        method.name(),
+        cfg.preset,
+        cfg.dataset,
+        cfg.n_devices,
+        cfg.rounds
+    );
+    let mut engine = Engine::new(cfg, runtime.clone(), method)?;
+    let result = engine.run()?;
+    println!("{}", result.table());
+    println!(
+        "\nfinal acc {:.1}%  best {:.1}%  sim time {:.2} h  traffic {:.1} MB",
+        100.0 * result.final_acc(),
+        100.0 * result.best_acc(),
+        result.total_sim_secs() / 3600.0,
+        result.total_traffic_bytes() as f64 / 1e6
+    );
+    println!("\nruntime stats:\n{}", runtime.stats_report());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    args.finish()?;
+    let rt = Runtime::new(&artifacts)?;
+    for (name, spec) in &rt.manifest.models {
+        let c = &spec.config;
+        println!(
+            "preset {name}: L={} d={} heads={} ff={} vocab={} seq={} batch={}",
+            c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab, c.seq, c.batch
+        );
+        println!(
+            "  base params/layer P={}  lora Q={}  adapter Q={}  globals={}  head={}",
+            spec.layer_layout.size,
+            spec.lora_layout.size,
+            spec.adapter_layout.size,
+            spec.globals_layout.size,
+            spec.head_layout.size
+        );
+        println!("  artifacts: {}", spec.artifacts.len());
+    }
+    Ok(())
+}

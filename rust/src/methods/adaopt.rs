@@ -1,0 +1,106 @@
+//! FedAdaOPT (Cai et al., §6.1 baseline): adapter fine-tuning with a
+//! progressive configuration-upgrade schedule — training starts with
+//! adapters in the top few layers only and deepens over the session,
+//! which boosts early accuracy per unit time.
+//!
+//! Our compiled graphs are static, so "frozen" layers are realized by
+//! resetting their PEFT rows to the downloaded values after local
+//! training (their updates are discarded) and excluding them from the
+//! upload; the engine's cost model charges a shortened backward chain
+//! through `bwd_fraction`.
+
+use super::{Method, SharePolicy};
+use crate::fed::device::DeviceInfo;
+use crate::stld::DropoutConfig;
+use crate::util::rng::Rng;
+
+pub struct FedAdaOpt {
+    total_rounds: usize,
+    round: usize,
+}
+
+impl FedAdaOpt {
+    pub fn new(total_rounds: usize) -> FedAdaOpt {
+        FedAdaOpt {
+            total_rounds: total_rounds.max(1),
+            round: 0,
+        }
+    }
+
+    /// Number of (topmost) trainable adapter layers at `round`:
+    /// starts at ~L/4, grows linearly to L by 60% of the session.
+    pub fn trained_depth(&self, round: usize, n_layers: usize) -> usize {
+        let start = (n_layers / 4).max(1);
+        let grow_until = (self.total_rounds as f64 * 0.6).max(1.0);
+        let frac = (round as f64 / grow_until).min(1.0);
+        let depth = start as f64 + frac * (n_layers - start) as f64;
+        (depth.round() as usize).clamp(start, n_layers)
+    }
+
+    /// First trainable layer index at `round`.
+    pub fn freeze_below(&self, round: usize, n_layers: usize) -> usize {
+        n_layers - self.trained_depth(round, n_layers)
+    }
+}
+
+impl Method for FedAdaOpt {
+    fn name(&self) -> String {
+        "FedAdaOPT".into()
+    }
+
+    fn kind(&self) -> &str {
+        "adapter"
+    }
+
+    fn begin_round(&mut self, round: usize) {
+        self.round = round;
+    }
+
+    fn dropout_for(
+        &mut self,
+        _round: usize,
+        _dev: &DeviceInfo,
+        n_layers: usize,
+        _rng: &mut Rng,
+    ) -> DropoutConfig {
+        DropoutConfig::none(n_layers)
+    }
+
+    fn share_policy(&self, n_layers: usize) -> SharePolicy {
+        SharePolicy::TopLayers(self.trained_depth(self.round, n_layers))
+    }
+
+    fn frozen_below(&self, round: usize, n_layers: usize) -> usize {
+        self.freeze_below(round, n_layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_grows_monotonically() {
+        let m = FedAdaOpt::new(100);
+        let depths: Vec<usize> = (0..100).map(|r| m.trained_depth(r, 24)).collect();
+        assert_eq!(depths[0], 6); // L/4
+        assert!(depths.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*depths.last().unwrap(), 24);
+        // reaches full depth by 60% of the session
+        assert_eq!(m.trained_depth(60, 24), 24);
+    }
+
+    #[test]
+    fn freeze_boundary() {
+        let m = FedAdaOpt::new(10);
+        assert_eq!(m.freeze_below(0, 12), 12 - m.trained_depth(0, 12));
+        assert_eq!(m.freeze_below(10, 12), 0);
+    }
+
+    #[test]
+    fn short_sessions_degenerate_gracefully() {
+        let m = FedAdaOpt::new(1);
+        assert!(m.trained_depth(0, 4) >= 1);
+        assert_eq!(m.trained_depth(1, 4), 4);
+    }
+}

@@ -1,0 +1,220 @@
+//! DropPEFT — the paper's system (§3) plus its ablation variants (§6.4):
+//!
+//! - STLD (§3.2): per-batch stochastic layer dropout with the incremental
+//!   rate shape (the paper's recommended default).
+//! - Online configurator (§3.3, Algorithm 1): a bandit over per-tier
+//!   average dropout rates, reward = accuracy gain per simulated second.
+//! - PTLS (§4): devices upload the L/2 lowest-importance layers (Eq. 6)
+//!   and keep the rest personalized.
+//!
+//! Ablations: `stld=false` => b1 (no dropout), `bandit=false` => b2
+//! (fixed rate), `ptls=false` => b3 (share everything, no personal state).
+
+use super::{Method, SharePolicy};
+use crate::bandit::{Configurator, RoundPlan};
+use crate::fed::device::DeviceInfo;
+use crate::stld::{DropoutConfig, RateShape};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct DropPeftOptions {
+    pub stld: bool,
+    pub bandit: bool,
+    pub ptls: bool,
+    /// used when bandit == false (ablation b2)
+    pub fixed_rate: f64,
+    /// rate shape used with fixed_rate (Fig. 6b studies)
+    pub fixed_shape: RateShape,
+    /// fraction of layers shared per round under PTLS
+    pub share_fraction: f64,
+}
+
+impl Default for DropPeftOptions {
+    fn default() -> Self {
+        DropPeftOptions {
+            stld: true,
+            bandit: true,
+            ptls: true,
+            fixed_rate: 0.5,
+            fixed_shape: RateShape::Incremental,
+            share_fraction: 0.5,
+        }
+    }
+}
+
+pub struct DropPeft {
+    kind: String,
+    opts: DropPeftOptions,
+    configurator: Configurator,
+    plan: Option<RoundPlan>,
+}
+
+impl DropPeft {
+    pub fn new(kind: &str, seed: u64, opts: DropPeftOptions) -> DropPeft {
+        assert!(kind == "lora" || kind == "adapter");
+        DropPeft {
+            kind: kind.to_string(),
+            opts,
+            configurator: Configurator::new(seed),
+            plan: None,
+        }
+    }
+}
+
+impl Method for DropPeft {
+    fn name(&self) -> String {
+        let suffix = match (self.opts.stld, self.opts.bandit, self.opts.ptls) {
+            (false, _, _) => "-b1",
+            (_, false, _) => "-b2",
+            (_, _, false) => "-b3",
+            _ => "",
+        };
+        let kind = if self.kind == "lora" { "LoRA" } else { "Adapter" };
+        format!("DropPEFT({kind}){suffix}")
+    }
+
+    fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    fn begin_round(&mut self, _round: usize) {
+        if self.opts.stld && self.opts.bandit {
+            self.plan = Some(self.configurator.plan());
+        }
+    }
+
+    fn dropout_for(
+        &mut self,
+        _round: usize,
+        dev: &DeviceInfo,
+        n_layers: usize,
+        rng: &mut Rng,
+    ) -> DropoutConfig {
+        if !self.opts.stld {
+            return DropoutConfig::none(n_layers);
+        }
+        if let Some(plan) = &self.plan {
+            plan.arm.config_for(dev.tier, n_layers, rng)
+        } else {
+            DropoutConfig::shaped(
+                self.opts.fixed_shape,
+                self.opts.fixed_rate.min(0.9),
+                n_layers,
+                rng,
+            )
+        }
+    }
+
+    fn share_policy(&self, n_layers: usize) -> SharePolicy {
+        if self.opts.ptls {
+            let k = ((n_layers as f64) * self.opts.share_fraction)
+                .round()
+                .max(1.0) as usize;
+            SharePolicy::LowestImportance(k)
+        } else {
+            SharePolicy::All
+        }
+    }
+
+    fn personalized(&self) -> bool {
+        self.opts.ptls
+    }
+
+    fn end_round(&mut self, reward: f64) {
+        if let Some(plan) = self.plan.take() {
+            self.configurator.feedback(&plan, reward);
+        }
+    }
+
+    fn arm_label(&self) -> Option<String> {
+        self.plan.as_ref().map(|p| {
+            format!(
+                "{}{}",
+                p.arm.label(),
+                if p.exploring { "?" } else { "!" }
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::Tier;
+
+    fn dev(tier: Tier) -> DeviceInfo {
+        DeviceInfo {
+            id: 0,
+            tier,
+            effective_gflops: 1000.0,
+            mem_bytes: 1 << 33,
+            n_samples: 64,
+        }
+    }
+
+    #[test]
+    fn b1_disables_dropout() {
+        let mut m = DropPeft::new(
+            "lora",
+            1,
+            DropPeftOptions {
+                stld: false,
+                ..Default::default()
+            },
+        );
+        m.begin_round(0);
+        let mut rng = Rng::seed_from(2);
+        let c = m.dropout_for(0, &dev(Tier::Fast), 12, &mut rng);
+        assert_eq!(c.avg(), 0.0);
+        assert!(m.name().ends_with("-b1"));
+    }
+
+    #[test]
+    fn b2_uses_fixed_rate() {
+        let mut m = DropPeft::new(
+            "lora",
+            1,
+            DropPeftOptions {
+                bandit: false,
+                fixed_rate: 0.4,
+                ..Default::default()
+            },
+        );
+        m.begin_round(3);
+        let mut rng = Rng::seed_from(2);
+        let c = m.dropout_for(3, &dev(Tier::Slow), 12, &mut rng);
+        assert!((c.avg() - 0.4).abs() < 0.05, "avg {}", c.avg());
+    }
+
+    #[test]
+    fn b3_shares_everything() {
+        let m = DropPeft::new(
+            "lora",
+            1,
+            DropPeftOptions {
+                ptls: false,
+                ..Default::default()
+            },
+        );
+        assert!(matches!(m.share_policy(12), SharePolicy::All));
+        assert!(!m.personalized());
+    }
+
+    #[test]
+    fn full_system_plans_and_learns() {
+        let mut m = DropPeft::new("lora", 7, DropPeftOptions::default());
+        let mut rng = Rng::seed_from(3);
+        for round in 0..30 {
+            m.begin_round(round);
+            let c = m.dropout_for(round, &dev(Tier::Slow), 12, &mut rng);
+            assert!(c.n_layers() == 12);
+            assert!(m.arm_label().is_some());
+            m.end_round(0.5);
+        }
+        assert!(matches!(
+            m.share_policy(12),
+            SharePolicy::LowestImportance(6)
+        ));
+        assert!(m.personalized());
+    }
+}

@@ -1,0 +1,126 @@
+//! FedHetLoRA (Cho et al., §6.1 baseline): heterogeneous LoRA ranks per
+//! device capability, local rank self-pruning, sparsity-weighted
+//! aggregation.
+//!
+//! The compiled artifacts have a fixed rank r_max; a device with rank
+//! r < r_max trains the same graph but its update is masked to the first
+//! r rank-columns after every local round (numerically identical update
+//! subspace — DESIGN.md §Substitutions). Aggregation weight scales with
+//! the device's rank (the "sparsity-weighted" rule).
+
+use super::Method;
+use crate::bandit::Tier;
+use crate::fed::device::DeviceInfo;
+use crate::model::TrainState;
+use crate::runtime::manifest::ModelSpec;
+use crate::stld::DropoutConfig;
+use crate::util::rng::Rng;
+
+pub struct FedHetLora;
+
+impl FedHetLora {
+    pub fn new() -> FedHetLora {
+        FedHetLora
+    }
+
+    /// Device rank by speed tier (fast devices afford full rank).
+    pub fn rank_for(tier: Tier, r_max: usize) -> usize {
+        match tier {
+            Tier::Slow => (r_max / 4).max(1),
+            Tier::Medium => (r_max / 2).max(1),
+            Tier::Fast => r_max,
+        }
+    }
+}
+
+impl Default for FedHetLora {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Zero the rank-columns >= `rank` of every LoRA factor in every layer
+/// row. Factor layouts: `*_a` is [d, r] (mask columns), `*_b` is [r, d]
+/// (mask rows).
+pub fn mask_rank(state: &mut TrainState, spec: &ModelSpec, rank: usize) {
+    let layout = spec
+        .peft_layout("lora")
+        .expect("hetlora requires lora layout");
+    let q = layout.size;
+    for li in 0..state.n_layers {
+        for e in &layout.entries {
+            let base = li * q + e.offset;
+            if e.name.ends_with("_a") {
+                let (d, r) = (e.shape[0], e.shape[1]);
+                for i in 0..d {
+                    for j in rank..r {
+                        state.peft[base + i * r + j] = 0.0;
+                    }
+                }
+            } else if e.name.ends_with("_b") {
+                let (r, d) = (e.shape[0], e.shape[1]);
+                for i in rank..r {
+                    for j in 0..d {
+                        state.peft[base + i * d + j] = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Method for FedHetLora {
+    fn name(&self) -> String {
+        "FedHetLoRA".into()
+    }
+
+    fn kind(&self) -> &str {
+        "lora"
+    }
+
+    fn dropout_for(
+        &mut self,
+        _round: usize,
+        _dev: &DeviceInfo,
+        n_layers: usize,
+        _rng: &mut Rng,
+    ) -> DropoutConfig {
+        DropoutConfig::none(n_layers)
+    }
+
+    fn postprocess(
+        &self,
+        dev: &DeviceInfo,
+        _round: usize,
+        state: &mut TrainState,
+        spec: &ModelSpec,
+    ) {
+        let rank = Self::rank_for(dev.tier, spec.config.lora_rank);
+        if rank < spec.config.lora_rank {
+            mask_rank(state, spec, rank);
+        }
+    }
+
+    fn aggregation_weight(&self, dev: &DeviceInfo) -> f64 {
+        // sparsity-weighted: richer updates weigh more
+        let rank_frac = match dev.tier {
+            Tier::Slow => 0.25,
+            Tier::Medium => 0.5,
+            Tier::Fast => 1.0,
+        };
+        dev.n_samples as f64 * rank_frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_tiers() {
+        assert_eq!(FedHetLora::rank_for(Tier::Slow, 8), 2);
+        assert_eq!(FedHetLora::rank_for(Tier::Medium, 8), 4);
+        assert_eq!(FedHetLora::rank_for(Tier::Fast, 8), 8);
+        assert_eq!(FedHetLora::rank_for(Tier::Slow, 2), 1);
+    }
+}

@@ -1,0 +1,164 @@
+//! Fine-tuning method strategies: DropPEFT (the paper's system), its
+//! ablations (b1/b2/b3, §6.4), and the four baselines (§6.1).
+//!
+//! A `Method` plugs into the federated engine and decides, per round and
+//! device: the STLD dropout-rate configuration, how many PEFT layers the
+//! device shares, whether devices keep personalized state, any
+//! post-training update mask (HetLoRA rank pruning, AdaOPT freezing), and
+//! the aggregation weight.
+
+mod adaopt;
+mod droppeft;
+mod hetlora;
+mod vanilla;
+
+pub use adaopt::FedAdaOpt;
+pub use droppeft::{DropPeft, DropPeftOptions};
+pub use hetlora::{mask_rank, FedHetLora};
+pub use vanilla::FedVanilla;
+
+use crate::fed::device::DeviceInfo;
+use crate::runtime::manifest::ModelSpec;
+use crate::stld::DropoutConfig;
+use crate::util::rng::Rng;
+
+/// Which PEFT layer rows a device uploads each round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SharePolicy {
+    /// every layer (vanilla FedAvg over PEFT modules)
+    All,
+    /// the k layers with the lowest PTLS importance (Eq. 6)
+    LowestImportance(usize),
+    /// the topmost k layers (FedAdaOPT's progressive depth)
+    TopLayers(usize),
+}
+
+pub trait Method: Send {
+    fn name(&self) -> String;
+
+    /// PEFT kind: "lora" | "adapter".
+    fn kind(&self) -> &str;
+
+    /// Called once at the start of every round.
+    fn begin_round(&mut self, _round: usize) {}
+
+    /// STLD dropout-rate configuration for one device this round.
+    fn dropout_for(
+        &mut self,
+        round: usize,
+        dev: &DeviceInfo,
+        n_layers: usize,
+        rng: &mut Rng,
+    ) -> DropoutConfig;
+
+    /// Which PEFT layer rows the device uploads.
+    fn share_policy(&self, n_layers: usize) -> SharePolicy {
+        let _ = n_layers;
+        SharePolicy::All
+    }
+
+    /// Layers below this index are frozen this round: their local updates
+    /// are discarded before upload (FedAdaOPT's progressive schedule) and
+    /// the cost model charges a shortened backward chain.
+    fn frozen_below(&self, _round: usize, _n_layers: usize) -> usize {
+        0
+    }
+
+    /// Devices keep persistent personalized state between rounds?
+    fn personalized(&self) -> bool {
+        false
+    }
+
+    /// Post-process a device's locally-updated state before upload
+    /// (rank masking, freeze-set reset, ...).
+    fn postprocess(
+        &self,
+        _dev: &DeviceInfo,
+        _round: usize,
+        _state: &mut crate::model::TrainState,
+        _spec: &ModelSpec,
+    ) {
+    }
+
+    /// Server aggregation weight for this device's upload.
+    fn aggregation_weight(&self, dev: &DeviceInfo) -> f64 {
+        dev.n_samples as f64
+    }
+
+    /// Round feedback: mean accuracy gain per simulated second (Eq. 5).
+    fn end_round(&mut self, _reward: f64) {}
+
+    /// Current bandit arm label for metrics (None when not adaptive).
+    fn arm_label(&self) -> Option<String> {
+        None
+    }
+}
+
+/// Construct any method by its experiment name.
+pub fn by_name(name: &str, seed: u64, total_rounds: usize) -> anyhow::Result<Box<dyn Method>> {
+    let m: Box<dyn Method> = match name {
+        "fedlora" => Box::new(FedVanilla::new("lora")),
+        "fedadapter" => Box::new(FedVanilla::new("adapter")),
+        "fedhetlora" => Box::new(FedHetLora::new()),
+        "fedadaopt" => Box::new(FedAdaOpt::new(total_rounds)),
+        "droppeft-lora" => Box::new(DropPeft::new("lora", seed, DropPeftOptions::default())),
+        "droppeft-adapter" => {
+            Box::new(DropPeft::new("adapter", seed, DropPeftOptions::default()))
+        }
+        "droppeft-b1" => Box::new(DropPeft::new(
+            "lora",
+            seed,
+            DropPeftOptions {
+                stld: false,
+                ..DropPeftOptions::default()
+            },
+        )),
+        "droppeft-b2" => Box::new(DropPeft::new(
+            "lora",
+            seed,
+            DropPeftOptions {
+                bandit: false,
+                fixed_rate: 0.5,
+                ..DropPeftOptions::default()
+            },
+        )),
+        "droppeft-b3" => Box::new(DropPeft::new(
+            "lora",
+            seed,
+            DropPeftOptions {
+                ptls: false,
+                ..DropPeftOptions::default()
+            },
+        )),
+        _ => anyhow::bail!(
+            "unknown method {name:?} (fedlora|fedadapter|fedhetlora|fedadaopt|\
+             droppeft-lora|droppeft-adapter|droppeft-b1|droppeft-b2|droppeft-b3)"
+        ),
+    };
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_covers_all_methods() {
+        for name in [
+            "fedlora",
+            "fedadapter",
+            "fedhetlora",
+            "fedadaopt",
+            "droppeft-lora",
+            "droppeft-adapter",
+            "droppeft-b1",
+            "droppeft-b2",
+            "droppeft-b3",
+        ] {
+            let m = by_name(name, 1, 50).unwrap();
+            assert!(!m.name().is_empty());
+            assert!(m.kind() == "lora" || m.kind() == "adapter");
+        }
+        assert!(by_name("bogus", 1, 50).is_err());
+    }
+}

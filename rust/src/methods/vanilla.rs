@@ -1,0 +1,71 @@
+//! FedLoRA / FedAdapter — the vanilla federated PEFT baselines (§6.1):
+//! every layer keeps its module, no dropout, every layer shared, plain
+//! sample-weighted FedAvg.
+
+use super::Method;
+use crate::fed::device::DeviceInfo;
+use crate::stld::DropoutConfig;
+use crate::util::rng::Rng;
+
+pub struct FedVanilla {
+    kind: String,
+}
+
+impl FedVanilla {
+    pub fn new(kind: &str) -> FedVanilla {
+        assert!(kind == "lora" || kind == "adapter");
+        FedVanilla {
+            kind: kind.to_string(),
+        }
+    }
+}
+
+impl Method for FedVanilla {
+    fn name(&self) -> String {
+        match self.kind.as_str() {
+            "lora" => "FedLoRA".into(),
+            _ => "FedAdapter".into(),
+        }
+    }
+
+    fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    fn dropout_for(
+        &mut self,
+        _round: usize,
+        _dev: &DeviceInfo,
+        n_layers: usize,
+        _rng: &mut Rng,
+    ) -> DropoutConfig {
+        DropoutConfig::none(n_layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::Tier;
+
+    fn dev() -> DeviceInfo {
+        DeviceInfo {
+            id: 0,
+            tier: Tier::Medium,
+            effective_gflops: 3000.0,
+            mem_bytes: 1 << 34,
+            n_samples: 100,
+        }
+    }
+
+    #[test]
+    fn no_dropout_all_shared() {
+        let mut m = FedVanilla::new("lora");
+        let mut rng = Rng::seed_from(1);
+        let c = m.dropout_for(0, &dev(), 12, &mut rng);
+        assert_eq!(c.avg(), 0.0);
+        assert!(matches!(m.share_policy(12), super::super::SharePolicy::All));
+        assert!(!m.personalized());
+        assert_eq!(m.aggregation_weight(&dev()), 100.0);
+    }
+}

@@ -1,0 +1,223 @@
+//! Session metrics: per-round records, time-to-accuracy, resource
+//! accounting, and report emission (paper §6.1 "Metrics").
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// simulated duration of this round (max over participants)
+    pub sim_secs: f64,
+    /// cumulative simulated clock at the END of this round
+    pub clock_secs: f64,
+    pub train_loss: f64,
+    /// mean STLD-active layer fraction across local batches
+    pub active_frac: f64,
+    /// global model accuracy on the held-out test set (eval rounds only)
+    pub global_acc: Option<f64>,
+    /// mean per-device personalized accuracy (PTLS methods, eval rounds)
+    pub personalized_acc: Option<f64>,
+    /// bytes moved by all participants this round (up + down)
+    pub traffic_bytes: u64,
+    /// mean per-participant energy this round (J)
+    pub energy_j_mean: f64,
+    /// mean per-participant peak memory (bytes, cost model)
+    pub mem_peak_mean: f64,
+    /// bandit arm label, when a configurator is driving
+    pub arm: Option<String>,
+    /// host wall-clock spent on this round (perf diagnostics)
+    pub host_secs: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct SessionResult {
+    pub method: String,
+    pub dataset: String,
+    pub preset: String,
+    pub records: Vec<RoundRecord>,
+}
+
+impl SessionResult {
+    /// Best accuracy measured (personalized if available, else global).
+    pub fn best_acc(&self) -> f64 {
+        self.records
+            .iter()
+            .filter_map(|r| r.personalized_acc.or(r.global_acc))
+            .fold(0.0, f64::max)
+    }
+
+    /// Last measured accuracy ("final accuracy" in Table 3).
+    pub fn final_acc(&self) -> f64 {
+        self.records
+            .iter()
+            .rev()
+            .find_map(|r| r.personalized_acc.or(r.global_acc))
+            .unwrap_or(0.0)
+    }
+
+    /// Simulated seconds until accuracy first reached `target`
+    /// (time-to-accuracy; None if never reached).
+    pub fn time_to_acc(&self, target: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| {
+                r.personalized_acc.or(r.global_acc).unwrap_or(0.0) >= target
+            })
+            .map(|r| r.clock_secs)
+    }
+
+    pub fn total_sim_secs(&self) -> f64 {
+        self.records.last().map(|r| r.clock_secs).unwrap_or(0.0)
+    }
+
+    pub fn total_traffic_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.traffic_bytes).sum()
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.records.iter().map(|r| r.energy_j_mean).sum()
+    }
+
+    pub fn mean_mem_peak(&self) -> f64 {
+        let xs: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.mem_peak_mean > 0.0)
+            .map(|r| r.mem_peak_mean)
+            .collect();
+        crate::util::stats::mean(&xs)
+    }
+
+    /// (clock hours, accuracy) series for timeline figures.
+    pub fn acc_timeline(&self) -> Vec<(f64, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| {
+                r.personalized_acc
+                    .or(r.global_acc)
+                    .map(|a| (r.clock_secs / 3600.0, a))
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rounds: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("round", Json::num(r.round as f64)),
+                    ("sim_secs", Json::num(r.sim_secs)),
+                    ("clock_secs", Json::num(r.clock_secs)),
+                    ("train_loss", Json::num(r.train_loss)),
+                    ("active_frac", Json::num(r.active_frac)),
+                    (
+                        "global_acc",
+                        r.global_acc.map(Json::num).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "personalized_acc",
+                        r.personalized_acc.map(Json::num).unwrap_or(Json::Null),
+                    ),
+                    ("traffic_bytes", Json::num(r.traffic_bytes as f64)),
+                    ("energy_j_mean", Json::num(r.energy_j_mean)),
+                    ("mem_peak_mean", Json::num(r.mem_peak_mean)),
+                    (
+                        "arm",
+                        r.arm
+                            .as_ref()
+                            .map(|a| Json::str(a.clone()))
+                            .unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("method", Json::str(self.method.clone())),
+            ("dataset", Json::str(self.dataset.clone())),
+            ("preset", Json::str(self.preset.clone())),
+            ("rounds", Json::Arr(rounds)),
+        ])
+    }
+
+    /// Round-by-round text table (examples / debugging).
+    pub fn table(&self) -> String {
+        let mut t = Table::new(&[
+            "round", "clock", "loss", "act%", "acc", "traffic", "arm",
+        ]);
+        for r in &self.records {
+            t.row(vec![
+                r.round.to_string(),
+                format!("{:.2}h", r.clock_secs / 3600.0),
+                format!("{:.4}", r.train_loss),
+                format!("{:.0}%", 100.0 * r.active_frac),
+                r.personalized_acc
+                    .or(r.global_acc)
+                    .map(|a| format!("{:.1}%", 100.0 * a))
+                    .unwrap_or_else(|| "-".into()),
+                format!("{:.1}MB", r.traffic_bytes as f64 / 1e6),
+                r.arm.clone().unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t.text()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, clock: f64, acc: Option<f64>) -> RoundRecord {
+        RoundRecord {
+            round,
+            clock_secs: clock,
+            global_acc: acc,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn time_to_acc_finds_first_crossing() {
+        let s = SessionResult {
+            records: vec![
+                rec(0, 10.0, Some(0.3)),
+                rec(1, 20.0, Some(0.6)),
+                rec(2, 30.0, Some(0.7)),
+            ],
+            ..Default::default()
+        };
+        assert_eq!(s.time_to_acc(0.5), Some(20.0));
+        assert_eq!(s.time_to_acc(0.9), None);
+        assert_eq!(s.final_acc(), 0.7);
+        assert_eq!(s.best_acc(), 0.7);
+    }
+
+    #[test]
+    fn personalized_takes_precedence() {
+        let mut r = rec(0, 5.0, Some(0.4));
+        r.personalized_acc = Some(0.8);
+        let s = SessionResult {
+            records: vec![r],
+            ..Default::default()
+        };
+        assert_eq!(s.final_acc(), 0.8);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let s = SessionResult {
+            method: "droppeft".into(),
+            dataset: "mnli".into(),
+            preset: "tiny".into(),
+            records: vec![rec(0, 1.0, Some(0.5))],
+        };
+        let j = s.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("method").unwrap().as_str().unwrap(), "droppeft");
+        assert_eq!(
+            parsed.get("rounds").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+}

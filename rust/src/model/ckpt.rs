@@ -1,0 +1,147 @@
+//! Checkpoint serialization for `TrainState` (simple length-prefixed
+//! binary format; no serde offline). Used by the examples to resume
+//! federated sessions and by tests for round-trip invariants.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::store::TrainState;
+
+const MAGIC: &[u8; 8] = b"DPEFTCK1";
+
+fn write_vec(w: &mut impl Write, v: &[f32]) -> Result<()> {
+    w.write_all(&(v.len() as u64).to_le_bytes())?;
+    for x in v {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_vec(r: &mut impl Read) -> Result<Vec<f32>> {
+    let mut len8 = [0u8; 8];
+    r.read_exact(&mut len8)?;
+    let n = u64::from_le_bytes(len8) as usize;
+    if n > (1usize << 31) {
+        bail!("checkpoint section too large ({n} elements)");
+    }
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn save(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?,
+    );
+    f.write_all(MAGIC)?;
+    let kind = state.kind.as_bytes();
+    f.write_all(&(kind.len() as u64).to_le_bytes())?;
+    f.write_all(kind)?;
+    f.write_all(&(state.q as u64).to_le_bytes())?;
+    f.write_all(&(state.n_layers as u64).to_le_bytes())?;
+    f.write_all(&state.step.to_le_bytes())?;
+    for v in [
+        &state.peft,
+        &state.opt_m,
+        &state.opt_v,
+        &state.head,
+        &state.head_m,
+        &state.head_v,
+    ] {
+        write_vec(&mut f, v)?;
+    }
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<TrainState> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a droppeft checkpoint (bad magic)");
+    }
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let klen = u64::from_le_bytes(len8) as usize;
+    if klen > 64 {
+        bail!("corrupt checkpoint (kind length {klen})");
+    }
+    let mut kind = vec![0u8; klen];
+    f.read_exact(&mut kind)?;
+    f.read_exact(&mut len8)?;
+    let q = u64::from_le_bytes(len8) as usize;
+    f.read_exact(&mut len8)?;
+    let n_layers = u64::from_le_bytes(len8) as usize;
+    f.read_exact(&mut len8)?;
+    let step = u64::from_le_bytes(len8);
+    let peft = read_vec(&mut f)?;
+    let opt_m = read_vec(&mut f)?;
+    let opt_v = read_vec(&mut f)?;
+    let head = read_vec(&mut f)?;
+    let head_m = read_vec(&mut f)?;
+    let head_v = read_vec(&mut f)?;
+    if peft.len() != q * n_layers {
+        bail!("corrupt checkpoint: peft len {} != q*L {}", peft.len(), q * n_layers);
+    }
+    Ok(TrainState {
+        kind: String::from_utf8(kind).context("kind not utf-8")?,
+        q,
+        n_layers,
+        peft,
+        opt_m,
+        opt_v,
+        head,
+        head_m,
+        head_v,
+        step,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_state() -> TrainState {
+        TrainState {
+            kind: "lora".into(),
+            q: 4,
+            n_layers: 2,
+            peft: (0..8).map(|x| x as f32 * 0.5).collect(),
+            opt_m: vec![0.1; 8],
+            opt_v: vec![0.2; 8],
+            head: vec![1.0, 2.0, 3.0],
+            head_m: vec![0.0; 3],
+            head_v: vec![0.0; 3],
+            step: 17,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("droppeft_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.ckpt");
+        let s = dummy_state();
+        save(&s, &path).unwrap();
+        let t = load(&path).unwrap();
+        assert_eq!(s, t);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("droppeft_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxx").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Host-side model state: packed parameter stores, initialization,
+//! gather/scatter of STLD-active rows, and checkpointing.
+
+pub mod ckpt;
+pub mod store;
+
+pub use store::{gather_rows, scatter_rows, BaseModel, TrainState};

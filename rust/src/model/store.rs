@@ -1,0 +1,227 @@
+//! Host-side parameter store.
+//!
+//! The coordinator owns all model state as packed f32 vectors whose
+//! layouts come from the manifest (python/compile/packing.py is the single
+//! source of truth). The frozen base (`layers` + `globals`) is shared
+//! read-only across simulated devices; trainable state (`peft` rows +
+//! classifier head + AdamW moments) lives in `TrainState` and is what
+//! federated aggregation operates on.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::runtime::manifest::{Layout, ModelSpec};
+use crate::util::rng::Rng;
+
+/// Initialization rule derived from a layout entry's name: weights get
+/// N(0, 0.02), biases zeros, layernorm gains ones — matching the python
+/// model's expectations (e.g. zero-init LoRA B / adapter up => identity).
+fn init_entry(name: &str, n: usize, rng: &mut Rng, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), n);
+    let zero = name.ends_with("_b")
+        || name == "q_b"
+        || name == "v_b"
+        || name == "up"
+        || name == "head_w";
+    let one = name.ends_with("_g");
+    if one {
+        out.fill(1.0);
+    } else if zero {
+        out.fill(0.0);
+    } else {
+        for x in out.iter_mut() {
+            *x = (rng.gauss() * 0.02) as f32;
+        }
+    }
+}
+
+fn init_pack(layout: &Layout, rng: &mut Rng) -> Vec<f32> {
+    let mut v = vec![0.0f32; layout.size];
+    for e in &layout.entries {
+        let n = e.elements();
+        init_entry(&e.name, n, rng, &mut v[e.offset..e.offset + n]);
+    }
+    v
+}
+
+/// Frozen base model shared by every device (Arc-cloned, never mutated).
+#[derive(Debug)]
+pub struct BaseModel {
+    /// [L * P] packed rows
+    pub layers: Vec<f32>,
+    pub p: usize,
+    pub n_layers: usize,
+    /// [G]
+    pub globals: Vec<f32>,
+}
+
+impl BaseModel {
+    /// Deterministic "pretrained" base from an experiment seed.
+    pub fn init(spec: &ModelSpec, seed: u64) -> Arc<BaseModel> {
+        let mut rng = Rng::seed_from(seed ^ 0xBA5E_BA5E);
+        let l = spec.config.n_layers;
+        let p = spec.layer_layout.size;
+        let mut layers = vec![0.0f32; l * p];
+        for li in 0..l {
+            for e in &spec.layer_layout.entries {
+                let n = e.elements();
+                let off = li * p + e.offset;
+                init_entry(&e.name, n, &mut rng, &mut layers[off..off + n]);
+            }
+        }
+        let globals = init_pack(&spec.globals_layout, &mut rng);
+        Arc::new(BaseModel {
+            layers,
+            p,
+            n_layers: l,
+            globals,
+        })
+    }
+
+    /// Gather the packed rows for the given layer indices (STLD-active set).
+    pub fn gather(&self, idx: &[usize]) -> Vec<f32> {
+        gather_rows(&self.layers, self.p, idx)
+    }
+
+    /// f32 parameter count (base + globals).
+    pub fn param_count(&self) -> usize {
+        self.layers.len() + self.globals.len()
+    }
+}
+
+/// Trainable state: PEFT rows for all L layers + head + AdamW moments.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    pub kind: String,
+    pub q: usize,
+    pub n_layers: usize,
+    /// [L * Q]
+    pub peft: Vec<f32>,
+    pub opt_m: Vec<f32>,
+    pub opt_v: Vec<f32>,
+    /// [H]
+    pub head: Vec<f32>,
+    pub head_m: Vec<f32>,
+    pub head_v: Vec<f32>,
+    /// AdamW step counter (bias correction)
+    pub step: u64,
+}
+
+impl TrainState {
+    pub fn init(spec: &ModelSpec, kind: &str, seed: u64) -> Result<TrainState> {
+        let layout = spec.peft_layout(kind)?;
+        let mut rng = Rng::seed_from(seed ^ 0x9EF7_0000);
+        let l = spec.config.n_layers;
+        let q = layout.size;
+        let mut peft = vec![0.0f32; l * q];
+        for li in 0..l {
+            for e in &layout.entries {
+                let n = e.elements();
+                let off = li * q + e.offset;
+                init_entry(&e.name, n, &mut rng, &mut peft[off..off + n]);
+            }
+        }
+        let h = spec.head_layout.size;
+        let mut head = vec![0.0f32; h];
+        for e in &spec.head_layout.entries {
+            let n = e.elements();
+            init_entry(&e.name, n, &mut rng, &mut head[e.offset..e.offset + n]);
+        }
+        Ok(TrainState {
+            kind: kind.to_string(),
+            q,
+            n_layers: l,
+            peft,
+            opt_m: vec![0.0; l * q],
+            opt_v: vec![0.0; l * q],
+            head,
+            head_m: vec![0.0; h],
+            head_v: vec![0.0; h],
+            step: 0,
+        })
+    }
+
+    pub fn gather_peft(&self, idx: &[usize]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        (
+            gather_rows(&self.peft, self.q, idx),
+            gather_rows(&self.opt_m, self.q, idx),
+            gather_rows(&self.opt_v, self.q, idx),
+        )
+    }
+
+    pub fn scatter_peft(&mut self, idx: &[usize], peft: &[f32], m: &[f32], v: &[f32]) {
+        scatter_rows(&mut self.peft, self.q, idx, peft);
+        scatter_rows(&mut self.opt_m, self.q, idx, m);
+        scatter_rows(&mut self.opt_v, self.q, idx, v);
+    }
+
+    /// Trainable parameter count (peft + head).
+    pub fn param_count(&self) -> usize {
+        self.peft.len() + self.head.len()
+    }
+
+    /// Bytes uploaded when sharing `n_shared` layers plus the head.
+    pub fn upload_bytes(&self, n_shared: usize) -> u64 {
+        ((n_shared * self.q + self.head.len()) * 4) as u64
+    }
+}
+
+/// Gather rows of a [L, Q]-packed flat vector.
+pub fn gather_rows(flat: &[f32], q: usize, idx: &[usize]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(idx.len() * q);
+    for &i in idx {
+        out.extend_from_slice(&flat[i * q..(i + 1) * q]);
+    }
+    out
+}
+
+/// Scatter rows back into a [L, Q]-packed flat vector.
+pub fn scatter_rows(flat: &mut [f32], q: usize, idx: &[usize], rows: &[f32]) {
+    assert_eq!(rows.len(), idx.len() * q, "scatter size mismatch");
+    for (j, &i) in idx.iter().enumerate() {
+        flat[i * q..(i + 1) * q].copy_from_slice(&rows[j * q..(j + 1) * q]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let q = 3;
+        let mut flat: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let idx = [3, 1];
+        let rows = gather_rows(&flat, q, &idx);
+        assert_eq!(rows, vec![9.0, 10.0, 11.0, 3.0, 4.0, 5.0]);
+        let mut modified = rows.clone();
+        for x in modified.iter_mut() {
+            *x += 100.0;
+        }
+        scatter_rows(&mut flat, q, &idx, &modified);
+        assert_eq!(&flat[9..12], &[109.0, 110.0, 111.0]);
+        assert_eq!(&flat[3..6], &[103.0, 104.0, 105.0]);
+        // untouched rows unchanged
+        assert_eq!(&flat[0..3], &[0.0, 1.0, 2.0]);
+        assert_eq!(&flat[6..9], &[6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn init_rules() {
+        let mut rng = Rng::seed_from(0);
+        let mut w = vec![9.0f32; 16];
+        init_entry("wq", 16, &mut rng, &mut w);
+        assert!(w.iter().any(|&x| x != 0.0));
+        assert!(w.iter().all(|&x| x.abs() < 0.2));
+        let mut b = vec![9.0f32; 4];
+        init_entry("wq_b", 4, &mut rng, &mut b);
+        assert!(b.iter().all(|&x| x == 0.0));
+        let mut g = vec![0.0f32; 4];
+        init_entry("ln1_g", 4, &mut rng, &mut g);
+        assert!(g.iter().all(|&x| x == 1.0));
+        let mut up = vec![9.0f32; 4];
+        init_entry("up", 4, &mut rng, &mut up);
+        assert!(up.iter().all(|&x| x == 0.0));
+    }
+}

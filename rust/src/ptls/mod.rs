@@ -1,0 +1,312 @@
+//! Personalized Transformer Layer Sharing (paper §4).
+//!
+//! Two pieces:
+//!
+//! 1. **Selection** — the gradient criterion (Eq. 6): per-layer PEFT
+//!    gradient norms, averaged over the batches where the layer was
+//!    active, rank layers by how hard they are adapting to local data.
+//!    High-importance layers stay *personalized*; each device uploads the
+//!    `k` lowest-importance layers as its *shared* set.
+//! 2. **Heterogeneous aggregation** (Fig. 8) — the server averages only
+//!    the overlapping shared rows (sample-weighted); rows nobody shared
+//!    keep their previous global value; devices keep their personalized
+//!    rows locally.
+
+use crate::util::rng::Rng;
+
+/// Accumulates Eq. 6 over a device's local batches.
+#[derive(Clone, Debug)]
+pub struct ImportanceAccum {
+    sum: Vec<f64>,
+    count: Vec<usize>,
+}
+
+impl ImportanceAccum {
+    pub fn new(n_layers: usize) -> ImportanceAccum {
+        ImportanceAccum {
+            sum: vec![0.0; n_layers],
+            count: vec![0; n_layers],
+        }
+    }
+
+    /// Record one batch: `active` are the STLD-active layer indices and
+    /// `grad_norms[j]` the PEFT gradient norm of active layer j.
+    pub fn record(&mut self, active: &[usize], grad_norms: &[f32]) {
+        assert_eq!(active.len(), grad_norms.len());
+        for (j, &l) in active.iter().enumerate() {
+            self.sum[l] += grad_norms[j] as f64;
+            self.count[l] += 1;
+        }
+    }
+
+    /// I_l per layer. Layers never activated this round get importance 0
+    /// (they did not adapt at all, so they are maximally shareable).
+    pub fn importance(&self) -> Vec<f64> {
+        self.sum
+            .iter()
+            .zip(&self.count)
+            .map(|(s, &c)| if c == 0 { 0.0 } else { s / c as f64 })
+            .collect()
+    }
+}
+
+/// Choose the shared set: the `k` layers with the LOWEST importance
+/// (stable adaptation => safe to merge globally). Ties break toward lower
+/// indices for determinism.
+pub fn select_shared(importance: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..importance.len()).collect();
+    idx.sort_by(|&a, &b| {
+        importance[a]
+            .partial_cmp(&importance[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut out: Vec<usize> = idx.into_iter().take(k.min(importance.len())).collect();
+    out.sort_unstable();
+    out
+}
+
+/// One device's upload: which layer rows (+ weight for aggregation).
+#[derive(Clone, Debug)]
+pub struct Upload {
+    pub device: usize,
+    /// sorted layer indices being shared
+    pub layers: Vec<usize>,
+    /// packed [len(layers) * q] rows
+    pub rows: Vec<f32>,
+    /// aggregation weight (local sample count, or rank for HetLoRA)
+    pub weight: f64,
+    /// classifier head (always shared)
+    pub head: Vec<f32>,
+}
+
+/// Heterogeneous layer aggregation (Fig. 8): weighted-average overlapping
+/// rows into `global_peft` ([L*q]); untouched rows stay as they were.
+/// Head is weighted-averaged across all uploads. Returns per-layer
+/// contributor counts (for tests/metrics).
+pub fn aggregate(
+    global_peft: &mut [f32],
+    global_head: &mut [f32],
+    q: usize,
+    uploads: &[Upload],
+) -> Vec<usize> {
+    let n_layers = global_peft.len() / q;
+    let mut contributors = vec![0usize; n_layers];
+    let mut layer_weight = vec![0.0f64; n_layers];
+    let mut layer_acc = vec![0.0f64; global_peft.len()];
+
+    for up in uploads {
+        assert_eq!(up.rows.len(), up.layers.len() * q, "upload row size");
+        for (j, &l) in up.layers.iter().enumerate() {
+            assert!(l < n_layers, "layer index {l} out of range");
+            contributors[l] += 1;
+            layer_weight[l] += up.weight;
+            let src = &up.rows[j * q..(j + 1) * q];
+            let dst = &mut layer_acc[l * q..(l + 1) * q];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += up.weight * s as f64;
+            }
+        }
+    }
+    for l in 0..n_layers {
+        if contributors[l] > 0 {
+            let w = layer_weight[l].max(f64::MIN_POSITIVE);
+            for i in l * q..(l + 1) * q {
+                global_peft[i] = (layer_acc[i] / w) as f32;
+            }
+        }
+    }
+
+    // head: every upload contributes
+    if !uploads.is_empty() {
+        let wsum: f64 = uploads.iter().map(|u| u.weight).sum();
+        if wsum > 0.0 {
+            for (i, g) in global_head.iter_mut().enumerate() {
+                let acc: f64 = uploads
+                    .iter()
+                    .map(|u| u.weight * u.head[i] as f64)
+                    .sum();
+                *g = (acc / wsum) as f32;
+            }
+        }
+    }
+    contributors
+}
+
+/// Convenience for tests: a random upload sharing `layers`.
+pub fn random_upload(
+    device: usize,
+    layers: Vec<usize>,
+    q: usize,
+    head_len: usize,
+    weight: f64,
+    rng: &mut Rng,
+) -> Upload {
+    let rows = (0..layers.len() * q).map(|_| rng.f32() - 0.5).collect();
+    let head = (0..head_len).map(|_| rng.f32() - 0.5).collect();
+    Upload {
+        device,
+        layers,
+        rows,
+        weight,
+        head,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testkit::proptest;
+
+    #[test]
+    fn importance_only_counts_active_batches() {
+        let mut acc = ImportanceAccum::new(4);
+        acc.record(&[0, 2], &[1.0, 3.0]);
+        acc.record(&[0, 1], &[2.0, 5.0]);
+        let i = acc.importance();
+        assert_eq!(i[0], 1.5); // (1+2)/2
+        assert_eq!(i[1], 5.0);
+        assert_eq!(i[2], 3.0);
+        assert_eq!(i[3], 0.0); // never active => shareable
+    }
+
+    #[test]
+    fn select_shared_takes_lowest() {
+        let imp = vec![5.0, 1.0, 3.0, 0.5];
+        assert_eq!(select_shared(&imp, 2), vec![1, 3]);
+        assert_eq!(select_shared(&imp, 10), vec![0, 1, 2, 3]);
+        assert_eq!(select_shared(&imp, 0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn overlap_mean_nonoverlap_identity() {
+        // Fig. 8: layers 0,2 overlap (both devices), layer 1 personalized
+        let q = 2;
+        let mut global = vec![9.0f32; 3 * q];
+        let mut head = vec![0.0f32; 2];
+        let ups = vec![
+            Upload {
+                device: 0,
+                layers: vec![0, 2],
+                rows: vec![1.0, 1.0, 3.0, 3.0],
+                weight: 1.0,
+                head: vec![1.0, 0.0],
+            },
+            Upload {
+                device: 1,
+                layers: vec![0, 2],
+                rows: vec![3.0, 3.0, 5.0, 5.0],
+                weight: 1.0,
+                head: vec![3.0, 0.0],
+            },
+        ];
+        let contrib = aggregate(&mut global, &mut head, q, &ups);
+        assert_eq!(contrib, vec![2, 0, 2]);
+        assert_eq!(&global[0..2], &[2.0, 2.0]); // averaged
+        assert_eq!(&global[2..4], &[9.0, 9.0]); // untouched
+        assert_eq!(&global[4..6], &[4.0, 4.0]);
+        assert_eq!(head, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn weighted_average_respects_sample_counts() {
+        let q = 1;
+        let mut global = vec![0.0f32; 1];
+        let mut head = vec![0.0f32; 1];
+        let ups = vec![
+            Upload {
+                device: 0,
+                layers: vec![0],
+                rows: vec![0.0],
+                weight: 3.0,
+                head: vec![0.0],
+            },
+            Upload {
+                device: 1,
+                layers: vec![0],
+                rows: vec![4.0],
+                weight: 1.0,
+                head: vec![4.0],
+            },
+        ];
+        aggregate(&mut global, &mut head, q, &ups);
+        assert_eq!(global[0], 1.0); // (3*0 + 1*4)/4
+        assert_eq!(head[0], 1.0);
+    }
+
+    #[test]
+    fn aggregation_idempotent_on_identical_uploads() {
+        proptest("aggregation idempotence", 30, |rng| {
+            let q = 1 + rng.below(8);
+            let l = 2 + rng.below(6);
+            let rows: Vec<f32> = (0..l * q).map(|_| rng.f32()).collect();
+            let head: Vec<f32> = (0..3).map(|_| rng.f32()).collect();
+            let layers: Vec<usize> = (0..l).collect();
+            let mut global = rows.clone();
+            let mut ghead = head.clone();
+            let ups: Vec<Upload> = (0..3)
+                .map(|d| Upload {
+                    device: d,
+                    layers: layers.clone(),
+                    rows: rows.clone(),
+                    weight: 1.0 + rng.f64(),
+                    head: head.clone(),
+                })
+                .collect();
+            aggregate(&mut global, &mut ghead, q, &ups);
+            for (a, b) in global.iter().zip(&rows) {
+                prop_assert!((a - b).abs() < 1e-5, "changed identical rows");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn aggregated_values_within_upload_hull() {
+        proptest("aggregation convexity", 30, |rng| {
+            let q = 2;
+            let l = 4;
+            let mut global = vec![0.5f32; l * q];
+            let mut head = vec![0.5f32; 2];
+            let n_dev = 2 + rng.below(4);
+            let ups: Vec<Upload> = (0..n_dev)
+                .map(|d| {
+                    let layers = crate::ptls::select_shared(
+                        &(0..l).map(|_| rng.f64()).collect::<Vec<_>>(),
+                        2,
+                    );
+                    random_upload(d, layers, q, 2, 1.0 + rng.f64() * 5.0, rng)
+                })
+                .collect();
+            let before = global.clone();
+            aggregate(&mut global, &mut head, q, &ups);
+            for li in 0..l {
+                let shared: Vec<&Upload> =
+                    ups.iter().filter(|u| u.layers.contains(&li)).collect();
+                for qi in 0..q {
+                    let v = global[li * q + qi];
+                    if shared.is_empty() {
+                        prop_assert!(v == before[li * q + qi], "unshared row moved");
+                    } else {
+                        let vals: Vec<f32> = shared
+                            .iter()
+                            .map(|u| {
+                                let j =
+                                    u.layers.iter().position(|&x| x == li).unwrap();
+                                u.rows[j * q + qi]
+                            })
+                            .collect();
+                        let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+                        let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                        prop_assert!(
+                            v >= lo - 1e-5 && v <= hi + 1e-5,
+                            "row value {v} outside hull [{lo},{hi}]"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,291 @@
+//! Typed view of `artifacts/manifest.json` — the single source of truth
+//! emitted by `python -m compile.aot` describing every AOT executable's I/O
+//! signature and the packed parameter layouts (DESIGN.md §Layer-2).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            _ => bail!("unknown dtype {s:?}"),
+        }
+    }
+
+    pub fn bytes(self) -> usize {
+        4
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape,
+            dtype: Dtype::parse(j.get("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One named slice of a packed parameter vector.
+#[derive(Clone, Debug)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl LayoutEntry {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Packed-vector layout table (mirror of python packing.Layout).
+#[derive(Clone, Debug, Default)]
+pub struct Layout {
+    pub size: usize,
+    pub entries: Vec<LayoutEntry>,
+}
+
+impl Layout {
+    fn from_json(j: &Json) -> Result<Layout> {
+        let entries = j
+            .get("entries")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(LayoutEntry {
+                    name: e.get("name")?.as_str()?.to_string(),
+                    shape: e
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                    offset: e.get("offset")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Layout {
+            size: j.get("size")?.as_usize()?,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&LayoutEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("layout has no entry {name:?}"))
+    }
+
+    /// (offset, len) of a named slice.
+    pub fn slice(&self, name: &str) -> Result<(usize, usize)> {
+        let e = self.entry(name)?;
+        Ok((e.offset, e.elements()))
+    }
+}
+
+/// Static model architecture (mirror of python packing.ModelConfig).
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub n_classes: usize,
+    pub lora_rank: usize,
+    pub lora_alpha: f64,
+    pub adapter_dim: usize,
+    pub batch: usize,
+}
+
+impl ModelCfg {
+    fn from_json(j: &Json) -> Result<ModelCfg> {
+        Ok(ModelCfg {
+            name: j.get("name")?.as_str()?.to_string(),
+            vocab: j.get("vocab")?.as_usize()?,
+            seq: j.get("seq")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_classes: j.get("n_classes")?.as_usize()?,
+            lora_rank: j.get("lora_rank")?.as_usize()?,
+            lora_alpha: j.get("lora_alpha")?.as_f64()?,
+            adapter_dim: j.get("adapter_dim")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+        })
+    }
+}
+
+/// Everything the coordinator knows about one compiled model preset.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub config: ModelCfg,
+    pub layer_layout: Layout,
+    pub lora_layout: Layout,
+    pub adapter_layout: Layout,
+    pub globals_layout: Layout,
+    pub head_layout: Layout,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ModelSpec {
+    pub fn peft_layout(&self, kind: &str) -> Result<&Layout> {
+        match kind {
+            "lora" => Ok(&self.lora_layout),
+            "adapter" => Ok(&self.adapter_layout),
+            _ => bail!("unknown peft kind {kind:?}"),
+        }
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("manifest has no artifact {name:?}"))
+    }
+
+    pub fn train_artifact(&self, kind: &str, k: usize) -> Result<&ArtifactSpec> {
+        self.artifact(&format!("train_{kind}_k{k}"))
+    }
+
+    /// Largest K with a train artifact (normally == n_layers).
+    pub fn max_train_k(&self, kind: &str) -> usize {
+        (1..=self.config.n_layers)
+            .rev()
+            .find(|k| self.artifacts.contains_key(&format!("train_{kind}_k{k}")))
+            .unwrap_or(0)
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let version = j.get("version")?.as_usize()?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.get("models")?.as_obj()? {
+            let layouts = mj.get("layouts")?;
+            let mut artifacts = BTreeMap::new();
+            for (aname, aj) in mj.get("artifacts")?.as_obj()? {
+                let spec = ArtifactSpec {
+                    name: aname.clone(),
+                    file: root.join(aj.get("file")?.as_str()?),
+                    inputs: aj
+                        .get("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: aj
+                        .get("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                };
+                artifacts.insert(aname.clone(), spec);
+            }
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    config: ModelCfg::from_json(mj.get("config")?)?,
+                    layer_layout: Layout::from_json(layouts.get("layer")?)?,
+                    lora_layout: Layout::from_json(layouts.get("lora")?)?,
+                    adapter_layout: Layout::from_json(layouts.get("adapter")?)?,
+                    globals_layout: Layout::from_json(layouts.get("globals")?)?,
+                    head_layout: Layout::from_json(layouts.get("head")?)?,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { root, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .with_context(|| format!("manifest has no model {name:?} (presets built: {:?})",
+                                     self.models.keys().collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("i32").unwrap(), Dtype::I32);
+        assert!(Dtype::parse("f64").is_err());
+    }
+
+    #[test]
+    fn layout_from_json() {
+        let j = Json::parse(
+            r#"{"size":10,"entries":[{"name":"w","shape":[2,3],"offset":0},
+                {"name":"b","shape":[4],"offset":6}]}"#,
+        )
+        .unwrap();
+        let lo = Layout::from_json(&j).unwrap();
+        assert_eq!(lo.size, 10);
+        assert_eq!(lo.slice("b").unwrap(), (6, 4));
+        assert_eq!(lo.entry("w").unwrap().elements(), 6);
+        assert!(lo.entry("nope").is_err());
+    }
+}

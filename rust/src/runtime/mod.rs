@@ -1,0 +1,183 @@
+//! L3 runtime: loads AOT HLO-text artifacts and executes them on the PJRT
+//! CPU client. This is the only module that touches the `xla` crate; the
+//! rest of the coordinator sees `Value`s and artifact names.
+//!
+//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`, with
+//! HLO **text** as the interchange format (serialized jax≥0.5 protos are
+//! rejected by xla_extension 0.5.1).
+
+pub mod manifest;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use manifest::{ArtifactSpec, Manifest, ModelSpec};
+use tensor::Value;
+
+/// Cumulative execution statistics per artifact (perf pass input).
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+    pub marshal_secs: f64,
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+/// PJRT-backed executor with lazy per-artifact compilation and caching.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Compiled>>>,
+    stats: Mutex<HashMap<String, ExecStats>>,
+    /// serialize execution: one CPU core; parallel executes just thrash
+    exec_lock: Mutex<()>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+            exec_lock: Mutex::new(()),
+        })
+    }
+
+    pub fn model(&self, preset: &str) -> Result<&ModelSpec> {
+        self.manifest.model(preset)
+    }
+
+    fn compiled(&self, preset: &str, artifact: &str) -> Result<Arc<Compiled>> {
+        let key = format!("{preset}/{artifact}");
+        if let Some(c) = self.cache.lock().unwrap().get(&key) {
+            return Ok(c.clone());
+        }
+        let spec = self.manifest.model(preset)?.artifact(artifact)?.clone();
+        let t0 = Instant::now();
+        let path = spec
+            .file
+            .to_str()
+            .context("artifact path is not valid utf-8")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {artifact}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        crate::debug!("compiled {key} in {dt:.2}s");
+        self.stats
+            .lock()
+            .unwrap()
+            .entry(key.clone())
+            .or_default()
+            .compile_secs += dt;
+        let c = Arc::new(Compiled { exe, spec });
+        self.cache.lock().unwrap().insert(key, c.clone());
+        Ok(c)
+    }
+
+    /// Pre-compile an artifact (used by examples to front-load latency).
+    pub fn warm(&self, preset: &str, artifact: &str) -> Result<()> {
+        self.compiled(preset, artifact).map(|_| ())
+    }
+
+    /// Execute an artifact: inputs are validated against the manifest
+    /// signature; outputs come back as typed host `Value`s.
+    pub fn execute(&self, preset: &str, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let c = self.compiled(preset, artifact)?;
+        anyhow::ensure!(
+            inputs.len() == c.spec.inputs.len(),
+            "{artifact}: got {} inputs, manifest wants {}",
+            inputs.len(),
+            c.spec.inputs.len()
+        );
+        let tm = Instant::now();
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (v, spec) in inputs.iter().zip(&c.spec.inputs) {
+            v.check(spec)
+                .with_context(|| format!("artifact {artifact}"))?;
+            lits.push(v.to_literal()?);
+        }
+        let marshal_in = tm.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let result = {
+            let _g = self.exec_lock.lock().unwrap();
+            c.exe
+                .execute::<xla::Literal>(&lits)
+                .with_context(|| format!("executing {artifact}"))?
+        };
+        let exec_secs = t0.elapsed().as_secs_f64();
+
+        let tm2 = Instant::now();
+        // lowered with return_tuple=True → single tuple literal
+        let tuple = result[0][0]
+            .to_literal_sync()?
+            .to_tuple()
+            .context("artifact did not return a tuple")?;
+        anyhow::ensure!(
+            tuple.len() == c.spec.outputs.len(),
+            "{artifact}: got {} outputs, manifest says {}",
+            tuple.len(),
+            c.spec.outputs.len()
+        );
+        let outs = tuple
+            .iter()
+            .zip(&c.spec.outputs)
+            .map(|(l, s)| Value::from_literal(l, s))
+            .collect::<Result<Vec<_>>>()?;
+        let marshal_out = tm2.elapsed().as_secs_f64();
+
+        let mut st = self.stats.lock().unwrap();
+        let e = st.entry(format!("{preset}/{artifact}")).or_default();
+        e.calls += 1;
+        e.total_secs += exec_secs;
+        e.marshal_secs += marshal_in + marshal_out;
+        Ok(outs)
+    }
+
+    /// Snapshot of per-artifact execution statistics.
+    pub fn stats(&self) -> Vec<(String, ExecStats)> {
+        let mut v: Vec<_> = self
+            .stats
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
+        v
+    }
+
+    pub fn stats_report(&self) -> String {
+        let mut t = crate::util::table::Table::new(&[
+            "artifact", "calls", "exec total", "exec/call", "marshal", "compile",
+        ]);
+        for (name, s) in self.stats() {
+            t.row(vec![
+                name,
+                s.calls.to_string(),
+                format!("{:.2}s", s.total_secs),
+                format!("{:.1}ms", 1e3 * s.total_secs / s.calls.max(1) as f64),
+                format!("{:.2}s", s.marshal_secs),
+                format!("{:.2}s", s.compile_secs),
+            ]);
+        }
+        t.text()
+    }
+}

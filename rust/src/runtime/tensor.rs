@@ -1,0 +1,170 @@
+//! Host-side tensor values marshaled to/from PJRT literals.
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Dtype, TensorSpec};
+
+/// A host tensor: either f32 or i32 payload plus a shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Value {
+    pub fn scalar_f32(x: f32) -> Value {
+        Value::F32(vec![x], vec![])
+    }
+
+    pub fn scalar_i32(x: i32) -> Value {
+        Value::I32(vec![x], vec![])
+    }
+
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Value {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>().max(1),
+            "shape {shape:?} vs len {}",
+            data.len()
+        );
+        Value::F32(data, shape)
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Value {
+        assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        Value::I32(data, shape)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(_, s) | Value::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Value::F32(..) => Dtype::F32,
+            Value::I32(..) => Dtype::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32(d, _) => d.len(),
+            Value::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Value::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32(d, _) => Ok(d),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        match self {
+            Value::F32(d, _) if d.len() == 1 => Ok(d[0]),
+            Value::I32(d, _) if d.len() == 1 => Ok(d[0] as f32),
+            _ => bail!("not a scalar: shape {:?}", self.shape()),
+        }
+    }
+
+    /// Validate against a manifest tensor spec.
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!(
+                "tensor {}: dtype mismatch (got {:?}, manifest wants {:?})",
+                spec.name,
+                self.dtype(),
+                spec.dtype
+            );
+        }
+        if self.shape() != spec.shape.as_slice() {
+            bail!(
+                "tensor {}: shape mismatch (got {:?}, manifest wants {:?})",
+                spec.name,
+                self.shape(),
+                spec.shape
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32(d, _) => xla::Literal::vec1(d),
+            Value::I32(d, _) => xla::Literal::vec1(d),
+        };
+        lit.reshape(&dims).context("literal reshape")
+    }
+
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Value> {
+        let v = match spec.dtype {
+            Dtype::F32 => Value::F32(lit.to_vec::<f32>()?, spec.shape.clone()),
+            Dtype::I32 => Value::I32(lit.to_vec::<i32>()?, spec.shape.clone()),
+        };
+        if v.len() != spec.elements() {
+            bail!(
+                "artifact output {}: got {} elements, manifest says {}",
+                spec.name,
+                v.len(),
+                spec.elements()
+            );
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize], dtype: Dtype) -> TensorSpec {
+        TensorSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+            dtype,
+        }
+    }
+
+    #[test]
+    fn shape_checking() {
+        let v = Value::f32(vec![0.0; 6], vec![2, 3]);
+        assert!(v.check(&spec("x", &[2, 3], Dtype::F32)).is_ok());
+        assert!(v.check(&spec("x", &[3, 2], Dtype::F32)).is_err());
+        assert!(v.check(&spec("x", &[2, 3], Dtype::I32)).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_len_panics() {
+        Value::f32(vec![0.0; 5], vec![2, 3]);
+    }
+
+    #[test]
+    fn scalar_access() {
+        assert_eq!(Value::scalar_f32(2.5).scalar().unwrap(), 2.5);
+        assert_eq!(Value::scalar_i32(3).scalar().unwrap(), 3.0);
+        assert!(Value::f32(vec![1.0, 2.0], vec![2]).scalar().is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! Stochastic Transformer Layer Dropout (paper §3.2).
+//!
+//! A dropout *configuration* assigns each transformer layer `l` a rate
+//! `P_l ∈ [0, 1)`; per mini-batch, layer `l` is deactivated independently
+//! with probability `P_l` (Eq. 3) and the batch trains only the active
+//! subnetwork (Eq. 1/2). Expected active depth is `E[K] = Σ(1 - P_l)`
+//! (Eq. 4). The configurations here mirror the paper's Fig. 6(b)
+//! distributions; the sampler guarantees at least one active layer (the
+//! artifacts are compiled for K >= 1; a zero-depth batch trains nothing).
+
+use crate::util::rng::Rng;
+
+/// Rate distribution shapes studied in the paper (Fig. 6b).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RateShape {
+    /// P_l = avg for all l
+    Uniform,
+    /// P_l decays with depth: early layers dropped MORE (paper "decay")
+    Decay,
+    /// P_l grows with depth: early layers preserved (paper "incremental",
+    /// the recommended default — early layers extract low-level features)
+    Incremental,
+    /// P_l ~ N(avg, 0.1), clamped
+    Normal,
+}
+
+/// Per-layer dropout-rate configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DropoutConfig {
+    pub rates: Vec<f64>,
+}
+
+pub const MAX_RATE: f64 = 0.95;
+
+impl DropoutConfig {
+    /// All-zero rates: STLD disabled (conventional PEFT; ablation b1).
+    pub fn none(n_layers: usize) -> DropoutConfig {
+        DropoutConfig {
+            rates: vec![0.0; n_layers],
+        }
+    }
+
+    /// Build a configuration with the given shape and average rate.
+    ///
+    /// For Decay/Incremental the paper's forms (`1 - l/(L+1)`,
+    /// `l/(L+1)`) average ~0.5; we scale them linearly so any target
+    /// average in [0, 0.95) is expressible.
+    pub fn shaped(shape: RateShape, avg: f64, n_layers: usize, rng: &mut Rng) -> DropoutConfig {
+        assert!((0.0..MAX_RATE).contains(&avg), "avg rate {avg}");
+        let l = n_layers as f64;
+        let mut rates: Vec<f64> = match shape {
+            RateShape::Uniform => vec![avg; n_layers],
+            RateShape::Incremental => (1..=n_layers)
+                .map(|i| 2.0 * avg * i as f64 / (l + 1.0))
+                .collect(),
+            RateShape::Decay => (1..=n_layers)
+                .map(|i| 2.0 * avg * (l + 1.0 - i as f64) / (l + 1.0))
+                .collect(),
+            RateShape::Normal => (0..n_layers).map(|_| rng.normal(avg, 0.1)).collect(),
+        };
+        for r in rates.iter_mut() {
+            *r = r.clamp(0.0, MAX_RATE);
+        }
+        DropoutConfig { rates }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.rates.len()
+    }
+
+    /// Average dropout rate (the paper's 1/L Σ P_l).
+    pub fn avg(&self) -> f64 {
+        if self.rates.is_empty() {
+            return 0.0;
+        }
+        self.rates.iter().sum::<f64>() / self.rates.len() as f64
+    }
+
+    /// Expected active depth E[K] (Eq. 4).
+    pub fn expected_active(&self) -> f64 {
+        self.rates.iter().map(|p| 1.0 - p).sum()
+    }
+
+    /// Sample one mini-batch's active layer index set (sorted ascending).
+    /// Guaranteed non-empty: if every layer gets dropped, the layer with
+    /// the lowest rate is forced active.
+    pub fn sample_active(&self, rng: &mut Rng) -> Vec<usize> {
+        let mut active: Vec<usize> = (0..self.rates.len())
+            .filter(|&l| !rng.bernoulli(self.rates[l]))
+            .collect();
+        if active.is_empty() {
+            let keep = self
+                .rates
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            active.push(keep);
+        }
+        active
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testkit::proptest;
+
+    #[test]
+    fn shapes_hit_target_average() {
+        let mut rng = Rng::seed_from(1);
+        for shape in [
+            RateShape::Uniform,
+            RateShape::Decay,
+            RateShape::Incremental,
+        ] {
+            for avg in [0.1, 0.3, 0.45] {
+                let c = DropoutConfig::shaped(shape, avg, 24, &mut rng);
+                assert!(
+                    (c.avg() - avg).abs() < 0.02,
+                    "{shape:?} avg {} != {avg}",
+                    c.avg()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_preserves_early_layers() {
+        let mut rng = Rng::seed_from(2);
+        let c = DropoutConfig::shaped(RateShape::Incremental, 0.5, 12, &mut rng);
+        assert!(c.rates[0] < c.rates[11]);
+        assert!(c.rates.windows(2).all(|w| w[0] <= w[1]));
+        let d = DropoutConfig::shaped(RateShape::Decay, 0.5, 12, &mut rng);
+        assert!(d.rates[0] > d.rates[11]);
+    }
+
+    #[test]
+    fn empirical_rate_matches_configured() {
+        proptest("STLD empirical rate", 10, |rng| {
+            let avg = 0.1 + 0.7 * rng.f64();
+            let c = DropoutConfig::shaped(RateShape::Uniform, avg, 16, rng);
+            let trials = 2000;
+            let mut active_total = 0usize;
+            for _ in 0..trials {
+                active_total += c.sample_active(rng).len();
+            }
+            let empirical_active = active_total as f64 / trials as f64;
+            let expected = c.expected_active();
+            prop_assert!(
+                (empirical_active - expected).abs() < 0.5,
+                "E[K]={expected} but measured {empirical_active}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn never_empty_even_at_max_rates() {
+        proptest("STLD non-empty", 50, |rng| {
+            let c = DropoutConfig {
+                rates: vec![MAX_RATE; 8],
+            };
+            let a = c.sample_active(rng);
+            prop_assert!(!a.is_empty(), "empty active set");
+            prop_assert!(a.windows(2).all(|w| w[0] < w[1]), "not sorted: {a:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn none_config_keeps_all_layers() {
+        let mut rng = Rng::seed_from(3);
+        let c = DropoutConfig::none(6);
+        assert_eq!(c.sample_active(&mut rng), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(c.expected_active(), 6.0);
+    }
+}

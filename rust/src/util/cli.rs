@@ -1,0 +1,167 @@
+//! Tiny CLI argument substrate (no clap in the offline registry).
+//!
+//! Grammar: `droppeft <subcommand> [--flag] [--key value] [--key=value]`.
+//! Typed accessors with defaults; unknown-flag detection via `finish()`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    /// positionals after the subcommand (e.g. `exp table1`)
+    pub positionals: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    a.opts
+                        .insert(stripped.to_string(), it.next().unwrap().clone());
+                } else {
+                    a.flags.push(stripped.to_string());
+                }
+            } else if a.subcommand.is_none() {
+                a.subcommand = Some(tok.clone());
+            } else {
+                a.positionals.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.opts.get(key).cloned()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.opt_str(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.opt_str(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{key} {s:?} is not an integer")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.opt_str(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{key} {s:?} is not an integer")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.opt_str(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{key} {s:?} is not a number")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.opt_str(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| t.to_string())
+                .collect(),
+        }
+    }
+
+    /// Error on any option/flag that no accessor ever looked at.
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.opts.keys() {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown option --{k} (try `droppeft help`)");
+            }
+        }
+        for f in &self.flags {
+            if !seen.iter().any(|s| s == f) {
+                bail!("unknown flag --{f} (try `droppeft help`)");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::parse(&argv("train --rounds 10 --preset=small --verbose")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("rounds", 0).unwrap(), 10);
+        assert_eq!(a.str_or("preset", "tiny"), "small");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv("exp")).unwrap();
+        assert_eq!(a.f64_or("alpha", 1.0).unwrap(), 1.0);
+        assert_eq!(a.list_or("kinds", &["lora", "adapter"]), ["lora", "adapter"]);
+    }
+
+    #[test]
+    fn rejects_unknown_after_finish() {
+        let a = Args::parse(&argv("train --bogus 1")).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn collects_extra_positionals() {
+        let a = Args::parse(&argv("exp table1 --quick")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positionals, ["table1"]);
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn bad_types_error() {
+        let a = Args::parse(&argv("x --n abc")).unwrap();
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&argv("x --ks 1,2,3")).unwrap();
+        assert_eq!(a.list_or("ks", &[]), ["1", "2", "3"]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Substrate layer: everything a well-stocked crates.io would normally
+//! provide, rebuilt in-repo because this environment is offline (see
+//! .cargo/config.toml). Each module is small, tested, and used by the
+//! coordinator proper.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod table;

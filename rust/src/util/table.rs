@@ -1,0 +1,122 @@
+//! Aligned text / markdown table emitter for experiment reports.
+//!
+//! Every `exp::*` harness prints its paper table/figure through this so
+//! EXPERIMENTS.md rows are copy-pasteable.
+
+#[derive(Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Markdown table (used in EXPERIMENTS.md).
+    pub fn markdown(&self) -> String {
+        let w = self.widths();
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            s
+        };
+        let mut out = line(&self.header);
+        out.push_str("\n|");
+        for wi in &w {
+            out.push_str(&format!("{}-|", "-".repeat(wi + 1)));
+        }
+        for r in &self.rows {
+            out.push('\n');
+            out.push_str(&line(r));
+        }
+        out
+    }
+
+    /// Plain aligned text (stdout).
+    pub fn text(&self) -> String {
+        let w = self.widths();
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = w[i] + 2))
+                .collect::<String>()
+                .trim_end()
+                .to_string()
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().map(|x| x + 2).sum::<usize>().saturating_sub(2)));
+        for r in &self.rows {
+            out.push('\n');
+            out.push_str(&line(r));
+        }
+        out
+    }
+}
+
+/// `format!`-friendly float with fixed decimals.
+pub fn f(x: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, x)
+}
+
+/// Hours with one decimal (paper's time-to-accuracy unit).
+pub fn hours(seconds: f64) -> String {
+    format!("{:.1} h", seconds / 3600.0)
+}
+
+/// Percent with one decimal.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.starts_with("| a"));
+        assert_eq!(md.lines().count(), 3);
+        assert!(md.contains("| 1"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        Table::new(&["a"]).row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(hours(3600.0), "1.0 h");
+        assert_eq!(pct(0.876), "87.6%");
+        assert_eq!(f(1.23456, 2), "1.23");
+    }
+}

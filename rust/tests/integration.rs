@@ -1,0 +1,283 @@
+//! Integration tests over the full L3 stack: PJRT runtime + artifacts +
+//! federated engine. Requires `make artifacts` (the tiny preset).
+
+use std::sync::Arc;
+
+use droppeft::data::{gen, TaskSpec};
+use droppeft::fed::{Engine, FedConfig};
+use droppeft::methods;
+use droppeft::model::{BaseModel, TrainState};
+use droppeft::runtime::tensor::Value;
+use droppeft::runtime::Runtime;
+
+// The PJRT client is not Send/Sync (Rc internals in the xla crate), so
+// each test thread builds its own Runtime; compiled executables are
+// cached within the thread for the duration of the test.
+thread_local! {
+    static RT: std::cell::OnceCell<Arc<Runtime>> = const { std::cell::OnceCell::new() };
+}
+
+fn runtime() -> Arc<Runtime> {
+    RT.with(|c| {
+        c.get_or_init(|| {
+            let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            Arc::new(Runtime::new(dir).expect("run `make artifacts` before cargo test"))
+        })
+        .clone()
+    })
+}
+
+fn quick_cfg() -> FedConfig {
+    let mut cfg = FedConfig::quick("tiny", "mnli");
+    cfg.rounds = 4;
+    cfg.n_devices = 8;
+    cfg.devices_per_round = 3;
+    cfg.local_batches = 2;
+    cfg.samples = 400;
+    cfg.eval_every = 2;
+    cfg.eval_batches = 2;
+    cfg.lr = 5e-3;
+    cfg
+}
+
+/// Build train-step inputs for a direct runtime call.
+fn train_inputs(
+    rt: &Runtime,
+    base: &BaseModel,
+    state: &TrainState,
+    active: &[usize],
+    step: f32,
+) -> Vec<Value> {
+    let spec = rt.model("tiny").unwrap();
+    let mcfg = &spec.config;
+    let ds = gen::generate(
+        &TaskSpec::by_name("agnews", mcfg.batch),
+        mcfg.seq,
+        mcfg.vocab,
+        99,
+    );
+    let idx: Vec<usize> = (0..mcfg.batch).collect();
+    let batch = droppeft::data::batch::batch_from_indices(&ds, &idx, mcfg.batch, mcfg.seq);
+    let k = active.len();
+    let (peft, m, v) = state.gather_peft(active);
+    vec![
+        Value::f32(base.gather(active), vec![k, base.p]),
+        Value::f32(peft, vec![k, state.q]),
+        Value::f32(m, vec![k, state.q]),
+        Value::f32(v, vec![k, state.q]),
+        Value::f32(base.globals.clone(), vec![base.globals.len()]),
+        Value::f32(state.head.clone(), vec![state.head.len()]),
+        Value::f32(state.head_m.clone(), vec![state.head_m.len()]),
+        Value::f32(state.head_v.clone(), vec![state.head_v.len()]),
+        batch.tokens,
+        batch.labels,
+        Value::scalar_f32(step),
+        Value::scalar_f32(0.01),
+    ]
+}
+
+#[test]
+fn runtime_executes_train_artifact_with_valid_outputs() {
+    let rt = runtime();
+    let spec = rt.model("tiny").unwrap().clone();
+    let base = BaseModel::init(&spec, 3);
+    let state = TrainState::init(&spec, "lora", 3).unwrap();
+    let active = vec![0, 2];
+    let inputs = train_inputs(&rt, &base, &state, &active, 1.0);
+    let outs = rt.execute("tiny", "train_lora_k2", &inputs).unwrap();
+    assert_eq!(outs.len(), 9);
+    let loss = outs[6].scalar().unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    let gn = outs[8].as_f32().unwrap();
+    assert_eq!(gn.len(), 2);
+    // updated peft differs from input (something trained)
+    assert_ne!(outs[0].as_f32().unwrap(), inputs[1].as_f32().unwrap());
+}
+
+#[test]
+fn runtime_rejects_bad_shapes_and_unknown_artifacts() {
+    let rt = runtime();
+    let spec = rt.model("tiny").unwrap().clone();
+    let base = BaseModel::init(&spec, 3);
+    let state = TrainState::init(&spec, "lora", 3).unwrap();
+    let mut inputs = train_inputs(&rt, &base, &state, &[0, 2], 1.0);
+    // wrong K for this artifact
+    assert!(rt.execute("tiny", "train_lora_k3", &inputs).is_err());
+    // wrong dtype
+    inputs[10] = Value::scalar_i32(1);
+    assert!(rt.execute("tiny", "train_lora_k2", &inputs).is_err());
+    // unknown artifact / preset
+    assert!(rt.execute("tiny", "nope", &[]).is_err());
+    assert!(rt.execute("nope", "train_lora_k2", &[]).is_err());
+}
+
+#[test]
+fn repeated_steps_on_one_batch_overfit() {
+    let rt = runtime();
+    let spec = rt.model("tiny").unwrap().clone();
+    let base = BaseModel::init(&spec, 5);
+    let mut state = TrainState::init(&spec, "lora", 5).unwrap();
+    let active: Vec<usize> = (0..spec.config.n_layers).collect();
+    let mut losses = Vec::new();
+    for step in 1..=10 {
+        let inputs = train_inputs(&rt, &base, &state, &active, step as f32);
+        let outs = rt
+            .execute("tiny", &format!("train_lora_k{}", active.len()), &inputs)
+            .unwrap();
+        state.scatter_peft(
+            &active,
+            outs[0].as_f32().unwrap(),
+            outs[1].as_f32().unwrap(),
+            outs[2].as_f32().unwrap(),
+        );
+        state.head = outs[3].as_f32().unwrap().to_vec();
+        state.head_m = outs[4].as_f32().unwrap().to_vec();
+        state.head_v = outs[5].as_f32().unwrap().to_vec();
+        losses.push(outs[6].scalar().unwrap());
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] - 0.05),
+        "no overfitting: {losses:?}"
+    );
+}
+
+#[test]
+fn execution_is_deterministic() {
+    let rt = runtime();
+    let spec = rt.model("tiny").unwrap().clone();
+    let base = BaseModel::init(&spec, 7);
+    let state = TrainState::init(&spec, "lora", 7).unwrap();
+    let inputs = train_inputs(&rt, &base, &state, &[1, 3], 1.0);
+    let a = rt.execute("tiny", "train_lora_k2", &inputs).unwrap();
+    let b = rt.execute("tiny", "train_lora_k2", &inputs).unwrap();
+    assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+    assert_eq!(a[6].scalar().unwrap(), b[6].scalar().unwrap());
+}
+
+#[test]
+fn engine_session_droppeft_produces_wellformed_records() {
+    let cfg = quick_cfg();
+    let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
+    let mut engine = Engine::new(cfg, runtime(), method).unwrap();
+    let r = engine.run().unwrap();
+    assert_eq!(r.records.len(), 4);
+    let mut prev_clock = 0.0;
+    for rec in &r.records {
+        assert!(rec.train_loss.is_finite() && rec.train_loss > 0.0);
+        assert!(rec.clock_secs > prev_clock);
+        prev_clock = rec.clock_secs;
+        assert!((0.0..=1.0).contains(&rec.active_frac));
+        assert!(rec.traffic_bytes > 0);
+        if let Some(a) = rec.global_acc {
+            assert!((0.0..=1.0).contains(&a));
+        }
+    }
+    // eval happened on schedule (rounds 1 and 3)
+    assert!(r.records[1].global_acc.is_some());
+    assert!(r.records[3].global_acc.is_some());
+    assert!(r.records[0].global_acc.is_none());
+}
+
+#[test]
+fn engine_runs_every_method() {
+    for name in [
+        "fedlora",
+        "fedadapter",
+        "fedhetlora",
+        "fedadaopt",
+        "droppeft-adapter",
+        "droppeft-b1",
+        "droppeft-b2",
+        "droppeft-b3",
+    ] {
+        let mut cfg = quick_cfg();
+        cfg.rounds = 2;
+        cfg.eval_every = 2;
+        let method = methods::by_name(name, cfg.seed, cfg.rounds).unwrap();
+        let mut engine = Engine::new(cfg, runtime(), method).unwrap();
+        let r = engine.run().unwrap_or_else(|e| panic!("{name}: {e:?}"));
+        assert_eq!(r.records.len(), 2, "{name}");
+        assert!(r.records[1].global_acc.is_some(), "{name}");
+    }
+}
+
+#[test]
+fn engine_sessions_are_reproducible() {
+    let mk = || {
+        let cfg = quick_cfg();
+        let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
+        let mut engine = Engine::new(cfg, runtime(), method).unwrap();
+        engine.run().unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.train_loss, rb.train_loss);
+        assert_eq!(ra.global_acc, rb.global_acc);
+        assert_eq!(ra.clock_secs, rb.clock_secs);
+        assert_eq!(ra.traffic_bytes, rb.traffic_bytes);
+    }
+}
+
+#[test]
+fn stld_reduces_simulated_round_time() {
+    // fixed dropout 0.6 must produce cheaper rounds than no dropout
+    let run = |method_name: &str| {
+        let mut cfg = quick_cfg();
+        cfg.rounds = 3;
+        cfg.cost_model = Some("roberta-large".into());
+        let method = methods::by_name(method_name, cfg.seed, cfg.rounds).unwrap();
+        let mut engine = Engine::new(cfg, runtime(), method).unwrap();
+        engine.run().unwrap()
+    };
+    let plain = run("fedlora");
+    let dropped = run("droppeft-b2"); // fixed rate 0.5, PTLS on
+    assert!(
+        dropped.total_sim_secs() < plain.total_sim_secs() * 0.8,
+        "dropout {:.1}s vs plain {:.1}s",
+        dropped.total_sim_secs(),
+        plain.total_sim_secs()
+    );
+    // and less traffic (PTLS shares half the layers)
+    assert!(dropped.total_traffic_bytes() < plain.total_traffic_bytes());
+}
+
+#[test]
+fn checkpoint_roundtrip_through_engine_state() {
+    let cfg = quick_cfg();
+    let method = methods::by_name("droppeft-lora", cfg.seed, 2).unwrap();
+    let mut engine = Engine::new(cfg, runtime(), method).unwrap();
+    engine.run_round(0).unwrap();
+    let dir = std::env::temp_dir().join("droppeft_it_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("global.ckpt");
+    droppeft::model::ckpt::save(engine.global_state(), &path).unwrap();
+    let loaded = droppeft::model::ckpt::load(&path).unwrap();
+    assert_eq!(&loaded, engine.global_state());
+}
+
+#[test]
+fn hetlora_masks_slow_device_ranks() {
+    let rt = runtime();
+    let spec = rt.model("tiny").unwrap().clone();
+    let mut state = TrainState::init(&spec, "lora", 11).unwrap();
+    // fill with nonzero
+    for x in state.peft.iter_mut() {
+        *x = 1.0;
+    }
+    droppeft::methods::mask_rank(&mut state, &spec, 1);
+    let layout = spec.peft_layout("lora").unwrap();
+    let q = layout.size;
+    let (off, _) = layout.slice("q_a").unwrap();
+    let r = spec.config.lora_rank;
+    // column 0 kept, columns >= 1 zeroed for every row of q_a
+    let qa = &state.peft[off..off + spec.config.d_model * r];
+    for (i, &v) in qa.iter().enumerate() {
+        if i % r == 0 {
+            assert_eq!(v, 1.0);
+        } else {
+            assert_eq!(v, 0.0);
+        }
+    }
+    let _ = q;
+}

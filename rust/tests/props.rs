@@ -1,0 +1,214 @@
+//! Cross-module property tests (testkit) on coordinator invariants that
+//! span multiple subsystems. Pure-rust: no artifacts required.
+
+use droppeft::bandit::{tier_of, Configurator};
+use droppeft::data::{dirichlet_partition, gen, partition::label_hist, TaskSpec};
+use droppeft::hw::cost;
+use droppeft::model::{gather_rows, scatter_rows};
+use droppeft::prop_assert;
+use droppeft::ptls::{self, Upload};
+use droppeft::stld::{DropoutConfig, RateShape};
+use droppeft::testkit::proptest;
+use droppeft::util::json::Json;
+use droppeft::util::rng::Rng;
+
+#[test]
+fn gather_scatter_is_identity_on_full_permutation() {
+    proptest("gather/scatter permutation identity", 50, |rng| {
+        let l = 2 + rng.below(10);
+        let q = 1 + rng.below(64);
+        let flat: Vec<f32> = (0..l * q).map(|_| rng.f32()).collect();
+        let mut idx: Vec<usize> = (0..l).collect();
+        rng.shuffle(&mut idx);
+        let rows = gather_rows(&flat, q, &idx);
+        let mut out = vec![0.0f32; l * q];
+        scatter_rows(&mut out, q, &idx, &rows);
+        prop_assert!(out == flat, "permutation roundtrip changed data");
+        Ok(())
+    });
+}
+
+#[test]
+fn stld_expected_depth_equals_eq4() {
+    proptest("Eq.4 expected depth", 20, |rng| {
+        let l = 4 + rng.below(28);
+        let shape = [RateShape::Uniform, RateShape::Decay, RateShape::Incremental]
+            [rng.below(3)];
+        let avg = 0.1 + 0.7 * rng.f64();
+        let cfg = DropoutConfig::shaped(shape, avg, l, rng);
+        let expected = cfg.expected_active();
+        let trials = 3000;
+        let mut total = 0usize;
+        for _ in 0..trials {
+            total += cfg.sample_active(rng).len();
+        }
+        let measured = total as f64 / trials as f64;
+        prop_assert!(
+            (measured - expected).abs() < 0.3 + 0.05 * l as f64,
+            "E[K]={expected:.2} measured {measured:.2} (L={l})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn cost_model_monotone_in_depth_and_width() {
+    proptest("cost monotonicity", 30, |rng| {
+        let mut cfg = cost::paper_model("roberta-base");
+        cfg.n_layers = 4 + rng.below(40);
+        let k1 = 1 + rng.below(cfg.n_layers);
+        let k2 = 1 + rng.below(cfg.n_layers);
+        let (lo, hi) = (k1.min(k2), k1.max(k2));
+        for kind in ["lora", "adapter"] {
+            prop_assert!(
+                cost::train_flops(&cfg, lo, kind, false)
+                    <= cost::train_flops(&cfg, hi, kind, false),
+                "flops not monotone in K ({lo} vs {hi})"
+            );
+            prop_assert!(
+                cost::train_memory_bytes(&cfg, lo, kind, false)
+                    <= cost::train_memory_bytes(&cfg, hi, kind, false),
+                "memory not monotone in K"
+            );
+        }
+        // FFT always costs at least as much as PEFT at equal depth
+        prop_assert!(
+            cost::train_flops(&cfg, hi, "none", true)
+                >= cost::train_flops(&cfg, hi, "lora", false) * 0.99,
+            "FFT cheaper than PEFT?"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn aggregation_mass_conservation_under_random_share_sets() {
+    proptest("aggregation leaves unshared rows untouched", 40, |rng| {
+        let l = 3 + rng.below(8);
+        let q = 1 + rng.below(16);
+        let global: Vec<f32> = (0..l * q).map(|_| rng.f32()).collect();
+        let mut g = global.clone();
+        let mut head = vec![0.0f32; 4];
+        let n_dev = 1 + rng.below(6);
+        let ups: Vec<Upload> = (0..n_dev)
+            .map(|d| {
+                let layers: Vec<usize> =
+                    (0..l).filter(|_| rng.bernoulli(0.4)).collect();
+                ptls::random_upload(d, layers, q, 4, 1.0 + rng.f64() * 9.0, rng)
+            })
+            .collect();
+        ptls::aggregate(&mut g, &mut head, q, &ups);
+        for li in 0..l {
+            let touched = ups.iter().any(|u| u.layers.contains(&li));
+            if !touched {
+                prop_assert!(
+                    g[li * q..(li + 1) * q] == global[li * q..(li + 1) * q],
+                    "untouched layer {li} moved"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn partition_union_is_exact_for_all_datasets() {
+    proptest("partition exactness across datasets", 12, |rng| {
+        let name = ["mnli", "qqp", "agnews"][rng.below(3)];
+        let spec = TaskSpec::by_name(name, 300 + rng.below(700));
+        let ds = gen::generate(&spec, 32, 512, rng.next_u64());
+        let n_dev = 2 + rng.below(30);
+        let alpha = [0.1, 1.0, 10.0][rng.below(3)];
+        let parts = dirichlet_partition(&ds.labels, spec.n_classes, n_dev, alpha, rng);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        prop_assert!(total == ds.len(), "mass {total} != {}", ds.len());
+        // every class's counts across devices sum to the dataset's
+        for c in 0..spec.n_classes {
+            let want = ds.labels.iter().filter(|&&x| x as usize == c).count();
+            let got: usize = parts
+                .iter()
+                .map(|p| label_hist(&ds.labels, p, spec.n_classes)[c])
+                .sum();
+            prop_assert!(got == want, "class {c}: {got} != {want}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bandit_reward_ordering_drives_exploitation() {
+    proptest("bandit picks the better arm", 10, |rng| {
+        let seed = rng.next_u64();
+        let mut c = Configurator::with_params(seed, 4, 0.25, 3, 10);
+        // environment: reward = mean rate (higher dropout strictly better)
+        for _ in 0..40 {
+            let plan = c.plan();
+            let r: f64 = plan.arm.rates.iter().sum::<f64>() / 3.0;
+            c.feedback(&plan, r);
+        }
+        let best = c.best_arm();
+        let quality: f64 = best.rates.iter().sum::<f64>() / 3.0;
+        prop_assert!(quality >= 0.4, "bandit settled on weak arm {best:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn json_roundtrip_arbitrary_trees() {
+    proptest("json roundtrip", 60, |rng| {
+        fn build(rng: &mut Rng, depth: usize) -> Json {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.bernoulli(0.5)),
+                2 => Json::Num((rng.f64() * 2e6).round() / 64.0 - 1e4),
+                3 => Json::Str(format!("s{}-\u{e9}\t\"x\"", rng.below(1000))),
+                4 => Json::Arr((0..rng.below(5)).map(|_| build(rng, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.below(5))
+                        .map(|i| (format!("k{i}"), build(rng, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = build(rng, 3);
+        let emitted = v.to_string();
+        let parsed = Json::parse(&emitted)
+            .map_err(|e| format!("reparse failed: {e} on {emitted}"))?;
+        prop_assert!(parsed == v, "roundtrip mismatch:\n{v:?}\n{parsed:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn tiers_partition_the_speed_axis() {
+    proptest("tier mapping total", 100, |rng| {
+        let g = rng.f64() * 20_000.0;
+        let _ = tier_of(g); // must not panic anywhere on the axis
+        Ok(())
+    });
+}
+
+#[test]
+fn select_shared_is_deterministic_and_sorted() {
+    proptest("PTLS selection determinism", 50, |rng| {
+        let l = 2 + rng.below(24);
+        let imp: Vec<f64> = (0..l).map(|_| rng.f64()).collect();
+        let k = rng.below(l + 1);
+        let a = ptls::select_shared(&imp, k);
+        let b = ptls::select_shared(&imp, k);
+        prop_assert!(a == b, "nondeterministic selection");
+        prop_assert!(a.windows(2).all(|w| w[0] < w[1]), "unsorted {a:?}");
+        prop_assert!(a.len() == k.min(l), "wrong count");
+        // every selected importance <= every unselected importance
+        let max_sel = a.iter().map(|&i| imp[i]).fold(f64::NEG_INFINITY, f64::max);
+        let min_unsel = (0..l)
+            .filter(|i| !a.contains(i))
+            .map(|i| imp[i])
+            .fold(f64::INFINITY, f64::min);
+        prop_assert!(
+            a.is_empty() || a.len() == l || max_sel <= min_unsel + 1e-12,
+            "selected {max_sel} > unselected {min_unsel}"
+        );
+        Ok(())
+    });
+}
