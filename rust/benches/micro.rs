@@ -116,5 +116,31 @@ fn main() {
         );
     }
 
+    // worker-pool fan-out overhead (per round: one job per selected
+    // device; measures thread scope + slot plumbing, not the payload)
+    {
+        let workers = droppeft::util::pool::default_workers();
+        suite.add(
+            Bench::new(format!("pool/run_parallel 8 jobs x{workers}w"))
+                .target_secs(0.3)
+                .run(|| {
+                    let jobs: Vec<_> = (0..8)
+                        .map(|i: u64| move || std::hint::black_box(i.wrapping_mul(0x9E37)))
+                        .collect();
+                    droppeft::util::pool::run_parallel(workers, jobs)
+                }),
+        );
+        suite.add(
+            Bench::new("pool/run_parallel 8 jobs x1w (serial path)")
+                .target_secs(0.3)
+                .run(|| {
+                    let jobs: Vec<_> = (0..8)
+                        .map(|i: u64| move || std::hint::black_box(i.wrapping_mul(0x9E37)))
+                        .collect();
+                    droppeft::util::pool::run_parallel(1, jobs)
+                }),
+        );
+    }
+
     println!("\n{}", suite.markdown("L3 micro-benchmarks"));
 }

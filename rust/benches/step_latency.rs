@@ -1,19 +1,30 @@
 //! End-to-end XLA step latency per STLD active-layer count K — the
 //! real-runtime validation of paper Eq. 4 (compute scales with E[K]) and
-//! the per-table bench backing Table 1 / Fig. 13 compute columns.
+//! the per-table bench backing Table 1 / Fig. 13 compute columns — plus
+//! the parallel-round-executor comparison (workers=1 vs workers=default)
+//! emitted as machine-readable `BENCH_round_parallel.json`.
 //!
 //! Requires `make artifacts`. Run with `cargo bench`.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use droppeft::benchkit::{Bench, Suite};
 use droppeft::data::{gen, TaskSpec};
+use droppeft::fed::{Engine, FedConfig};
 use droppeft::model::{BaseModel, TrainState};
 use droppeft::runtime::tensor::Value;
 use droppeft::runtime::Runtime;
+use droppeft::util::json::Json;
 
 fn main() {
-    let rt = Arc::new(Runtime::new("artifacts").expect("make artifacts first"));
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            eprintln!("SKIPPED step_latency: artifacts not built ({e:#}); run `make artifacts`");
+            return;
+        }
+    };
     let mut suite = Suite::new();
 
     for preset in ["tiny", "small"] {
@@ -91,4 +102,66 @@ fn main() {
     }
 
     println!("\n{}", suite.markdown("XLA step latency vs active depth"));
+
+    bench_round_parallel(&rt);
+}
+
+/// Host wall-clock of a full federated round at workers=1 vs the host's
+/// default worker count (same seed, identical results by construction —
+/// see tests/parallel_determinism.rs). Emits BENCH_round_parallel.json.
+fn bench_round_parallel(rt: &Arc<Runtime>) {
+    if rt.model("tiny").is_err() {
+        return;
+    }
+    const DEVICES_PER_ROUND: usize = 8;
+    const TIMED_ROUNDS: usize = 2;
+
+    let time_session = |workers: usize| -> f64 {
+        let mut cfg = FedConfig::quick("tiny", "mnli");
+        // large round budget so neither the eval_every schedule nor the
+        // last-round eval fires inside the timed window
+        cfg.rounds = 1000;
+        cfg.n_devices = 16;
+        cfg.devices_per_round = DEVICES_PER_ROUND;
+        cfg.local_batches = 2;
+        cfg.samples = 800;
+        cfg.eval_every = 1000; // keep periodic eval out of the timing
+        cfg.eval_batches = 2;
+        cfg.workers = workers;
+        let method =
+            droppeft::methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
+        let mut engine = Engine::new(cfg, rt.clone(), method).unwrap();
+        // warm round: pays one-time XLA compilation, fills the caches
+        engine.run_round(0).unwrap();
+        let t0 = Instant::now();
+        for round in 1..=TIMED_ROUNDS {
+            engine.run_round(round).unwrap();
+        }
+        t0.elapsed().as_secs_f64()
+    };
+
+    let n_workers = droppeft::util::pool::default_workers();
+    let serial_secs = time_session(1);
+    let parallel_secs = time_session(n_workers);
+    let speedup = serial_secs / parallel_secs.max(1e-9);
+    println!(
+        "round-parallel: {DEVICES_PER_ROUND} devices/round x {TIMED_ROUNDS} rounds  \
+         workers=1 {serial_secs:.2}s  workers={n_workers} {parallel_secs:.2}s  \
+         speedup {speedup:.2}x"
+    );
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("round_parallel".to_string())),
+        ("devices_per_round", Json::num(DEVICES_PER_ROUND as f64)),
+        ("rounds_timed", Json::num(TIMED_ROUNDS as f64)),
+        ("workers_serial", Json::num(1.0)),
+        ("workers_parallel", Json::num(n_workers as f64)),
+        ("serial_secs", Json::num(serial_secs)),
+        ("parallel_secs", Json::num(parallel_secs)),
+        ("speedup", Json::num(speedup)),
+    ]);
+    match std::fs::write("BENCH_round_parallel.json", j.to_string()) {
+        Ok(()) => println!("wrote BENCH_round_parallel.json"),
+        Err(e) => eprintln!("could not write BENCH_round_parallel.json: {e}"),
+    }
 }

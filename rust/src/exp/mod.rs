@@ -29,6 +29,9 @@ pub struct Ctx {
     pub quick: bool,
     pub preset: String,
     pub seed: u64,
+    /// worker threads for device-parallel local training (does not affect
+    /// results: identical seed => identical sessions at any count)
+    pub workers: usize,
 }
 
 impl Ctx {
@@ -51,6 +54,7 @@ impl Ctx {
             cfg.eval_batches = 24;
         }
         cfg.seed = self.seed;
+        cfg.workers = self.workers;
         cfg.eval_every = 2;
         // the tiny/small presets want a larger step than the paper's
         // full-size models (frozen random base, few trainables)
@@ -102,6 +106,9 @@ pub fn run(args: &Args) -> Result<()> {
         quick: args.flag("quick"),
         preset: args.str_or("preset", "tiny"),
         seed: args.u64_or("seed", 42)?,
+        workers: args
+            .usize_or("workers", crate::util::pool::default_workers())?
+            .max(1),
     };
     args.finish()?;
     dispatch(&ctx, &id)

@@ -1,0 +1,254 @@
+//! Client-side local round execution.
+//!
+//! A `ClientTask` is a self-contained worker that runs one device's local
+//! STLD fine-tuning round from an immutable `DevicePlan`: gather active
+//! rows → execute the K-layer train artifact → scatter back, then
+//! importance accounting, share-set selection, upload packaging, and
+//! simulated cost accounting. It borrows only read-only session context
+//! (`Runtime`, `ModelSpec`, `BaseModel`, `Dataset`, config, the method's
+//! `&self` hooks) so many tasks can run concurrently on worker threads.
+
+use anyhow::{Context, Result};
+
+use crate::data::{batch::eval_batches, Batch, BatchSampler, Dataset};
+use crate::fed::config::FedConfig;
+use crate::fed::round::{DevicePlan, LocalOutcome, RoundPlan};
+use crate::hw::cost;
+use crate::methods::{Method, SharePolicy};
+use crate::model::{gather_rows, BaseModel, TrainState};
+use crate::ptls::{self, ImportanceAccum, Upload};
+use crate::runtime::manifest::ModelSpec;
+use crate::runtime::tensor::Value;
+use crate::runtime::Runtime;
+
+/// Read-only session context shared by client workers and server eval.
+#[derive(Clone, Copy)]
+pub struct ClientCtx<'a> {
+    pub runtime: &'a Runtime,
+    pub cfg: &'a FedConfig,
+    pub spec: &'a ModelSpec,
+    pub base: &'a BaseModel,
+    pub dataset: &'a Dataset,
+}
+
+/// One round's local-training worker. `run` consumes a `DevicePlan` and
+/// never needs `&mut` access to any engine state.
+pub struct ClientTask<'a> {
+    ctx: ClientCtx<'a>,
+    method: &'a dyn Method,
+    round: usize,
+    kind: String,
+    personalized: bool,
+}
+
+impl<'a> ClientTask<'a> {
+    pub fn new(ctx: ClientCtx<'a>, method: &'a dyn Method, plan: &RoundPlan) -> ClientTask<'a> {
+        ClientTask {
+            ctx,
+            method,
+            round: plan.round,
+            kind: plan.kind.clone(),
+            personalized: plan.personalized,
+        }
+    }
+
+    /// Device-side work for one round: local STLD training, importance
+    /// accounting, share-set selection, upload packaging, cost accounting.
+    pub fn run(&self, plan: DevicePlan) -> Result<LocalOutcome> {
+        let DevicePlan {
+            device,
+            info,
+            dropout,
+            start_state,
+            shard_train,
+            shard_val,
+            sampler_rng,
+            mut mask_rng,
+            bps,
+            power_w,
+            frozen_below,
+            share_policy,
+            agg_weight,
+        } = plan;
+        let mcfg = &self.ctx.spec.config;
+        let n_layers = mcfg.n_layers;
+
+        let mut state = start_state;
+        let snapshot_peft = state.peft.clone(); // for frozen-layer reset
+
+        // ---- local STLD fine-tuning ----
+        let epoch_batches = (shard_train.len() / mcfg.batch).max(1);
+        let mut sampler = BatchSampler::new(shard_train, sampler_rng);
+        let n_batches = self
+            .ctx
+            .cfg
+            .local_batches
+            .min(sampler.batches_per_epoch(mcfg.batch).max(1))
+            .max(1);
+
+        // cost accounting runs at paper scale when configured (§6.1
+        // semi-emulation): map the STLD active fraction onto the paper
+        // model's depth
+        let ccfg = match &self.ctx.cfg.cost_model {
+            Some(name) => cost::paper_model(name),
+            None => mcfg.clone(),
+        };
+        let scale_k = |k: usize| -> usize {
+            ((k as f64 / n_layers as f64) * ccfg.n_layers as f64)
+                .round()
+                .max(1.0) as usize
+        };
+
+        let mut importance = ImportanceAccum::new(n_layers);
+        let mut loss_sum = 0.0;
+        let mut flops_total = 0.0;
+        let mut mem_peak: f64 = 0.0;
+        let mut active_total = 0usize;
+
+        for _ in 0..n_batches {
+            let active = dropout.sample_active(&mut mask_rng);
+            let k = active.len();
+            active_total += k;
+            let batch = sampler.next_batch(self.ctx.dataset, mcfg.batch);
+            let (loss, grad_norms) = self.train_batch(&mut state, &active, &batch)?;
+            loss_sum += loss;
+            importance.record(&active, &grad_norms);
+
+            flops_total += cost::train_flops(&ccfg, scale_k(k), &self.kind, false);
+            mem_peak =
+                mem_peak.max(cost::train_memory_bytes(&ccfg, scale_k(k), &self.kind, false));
+        }
+        // paper setting: one local epoch over the device's shard; the
+        // testbed caps executed batches, so charge the un-executed
+        // remainder of the epoch at the mean executed cost
+        if epoch_batches > n_batches {
+            flops_total *= epoch_batches as f64 / n_batches as f64;
+        }
+
+        // frozen layers (FedAdaOPT): discard their local updates
+        if frozen_below > 0 {
+            let q = state.q;
+            state.peft[..frozen_below * q].copy_from_slice(&snapshot_peft[..frozen_below * q]);
+        }
+        self.method
+            .postprocess(&info, self.round, &mut state, self.ctx.spec);
+
+        // ---- local validation accuracy (bandit reward signal) ----
+        let local_acc = {
+            let batches = eval_batches(self.ctx.dataset, &shard_val, mcfg.batch, 2);
+            eval_state(&self.ctx, &state, &batches)?
+        };
+
+        // ---- share-set selection + upload ----
+        let imp = importance.importance();
+        let shared: Vec<usize> = match share_policy {
+            SharePolicy::All => (0..n_layers).collect(),
+            SharePolicy::LowestImportance(k) => ptls::select_shared(&imp, k),
+            SharePolicy::TopLayers(k) => (n_layers - k.min(n_layers)..n_layers).collect(),
+        };
+        let rows = gather_rows(&state.peft, state.q, &shared);
+        let upload = Upload {
+            device: info.id,
+            layers: shared,
+            rows,
+            weight: agg_weight,
+            head: state.head.clone(),
+        };
+
+        // ---- simulated cost accounting ----
+        let shared_scaled =
+            ((upload.layers.len() as f64 / n_layers as f64) * ccfg.n_layers as f64).round()
+                as usize;
+        let comm_bytes = cost::comm_bytes(&ccfg, &self.kind, shared_scaled, false);
+        let comp_secs = cost::comp_secs(flops_total, info.effective_gflops);
+        let comm_secs = cost::comm_secs(comm_bytes, bps);
+        let energy_j = cost::energy_j(comp_secs, power_w, comm_secs);
+
+        Ok(LocalOutcome {
+            device,
+            upload,
+            final_state: if self.personalized { Some(state) } else { None },
+            local_acc,
+            mean_loss: loss_sum / n_batches as f64,
+            active_frac: active_total as f64 / (n_batches * n_layers) as f64,
+            comp_secs,
+            comm_secs,
+            energy_j,
+            mem_peak,
+            traffic_bytes: comm_bytes,
+        })
+    }
+
+    /// Execute one STLD mini-batch through the K-active-layer artifact.
+    fn train_batch(
+        &self,
+        state: &mut TrainState,
+        active: &[usize],
+        batch: &Batch,
+    ) -> Result<(f64, Vec<f32>)> {
+        let k = active.len();
+        let base = self.ctx.base;
+        let p = base.p;
+        let layers = Value::f32(base.gather(active), vec![k, p]);
+        let (peft, m, v) = state.gather_peft(active);
+        let q = state.q;
+        state.step += 1;
+        let inputs = vec![
+            layers,
+            Value::f32(peft, vec![k, q]),
+            Value::f32(m, vec![k, q]),
+            Value::f32(v, vec![k, q]),
+            Value::f32(base.globals.clone(), vec![base.globals.len()]),
+            Value::f32(state.head.clone(), vec![state.head.len()]),
+            Value::f32(state.head_m.clone(), vec![state.head_m.len()]),
+            Value::f32(state.head_v.clone(), vec![state.head_v.len()]),
+            batch.tokens.clone(),
+            batch.labels.clone(),
+            Value::scalar_f32(state.step as f32),
+            Value::scalar_f32(self.ctx.cfg.lr as f32),
+        ];
+        let artifact = format!("train_{}_k{k}", self.kind);
+        let outs = self
+            .ctx
+            .runtime
+            .execute(&self.ctx.cfg.preset, &artifact, &inputs)
+            .with_context(|| format!("train step K={k}"))?;
+        // outputs: peft', m', v', head', head_m', head_v', loss, correct, gn
+        let mut it = outs.into_iter();
+        let peft_n = it.next().unwrap().into_f32()?;
+        let m_n = it.next().unwrap().into_f32()?;
+        let v_n = it.next().unwrap().into_f32()?;
+        state.scatter_peft(active, &peft_n, &m_n, &v_n);
+        state.head = it.next().unwrap().into_f32()?;
+        state.head_m = it.next().unwrap().into_f32()?;
+        state.head_v = it.next().unwrap().into_f32()?;
+        let loss = it.next().unwrap().scalar()? as f64;
+        let _correct = it.next().unwrap().scalar()?;
+        let gn = it.next().unwrap().into_f32()?;
+        anyhow::ensure!(loss.is_finite(), "non-finite training loss");
+        Ok((loss, gn))
+    }
+}
+
+/// Accuracy of a state on the given batches (full-depth eval). Shared by
+/// client local validation and the server's periodic evaluation.
+pub fn eval_state(ctx: &ClientCtx<'_>, state: &TrainState, batches: &[Batch]) -> Result<f64> {
+    let base = ctx.base;
+    let mut correct = 0.0;
+    let mut total = 0.0;
+    for b in batches {
+        let inputs = vec![
+            Value::f32(base.layers.clone(), vec![base.n_layers, base.p]),
+            Value::f32(state.peft.clone(), vec![state.n_layers, state.q]),
+            Value::f32(base.globals.clone(), vec![base.globals.len()]),
+            Value::f32(state.head.clone(), vec![state.head.len()]),
+            b.tokens.clone(),
+            b.labels.clone(),
+        ];
+        let artifact = format!("eval_{}", state.kind);
+        let outs = ctx.runtime.execute(&ctx.cfg.preset, &artifact, &inputs)?;
+        correct += outs[1].scalar()? as f64;
+        total += ctx.spec.config.batch as f64;
+    }
+    Ok(if total > 0.0 { correct / total } else { 0.0 })
+}

@@ -2,8 +2,8 @@
 //! process + (for personalized methods) persistent local training state.
 
 use crate::bandit::{tier_of, Tier};
-use crate::data::Shard;
-use crate::hw::{Bandwidth, DeviceProfile};
+use crate::data::{dirichlet_partition, split_shard, Shard};
+use crate::hw::{sample_device, Bandwidth, DeviceProfile};
 use crate::model::TrainState;
 use crate::util::rng::Rng;
 
@@ -51,4 +51,36 @@ impl DeviceCtx {
     pub fn power_w(&self) -> f64 {
         self.profile.power(self.mode)
     }
+}
+
+/// Build the simulated device population: non-IID Dirichlet data shards
+/// plus sampled hardware profiles, power modes, and bandwidth processes.
+pub fn build_population(
+    labels: &[i32],
+    n_classes: usize,
+    n_devices: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Vec<DeviceCtx> {
+    let shards = dirichlet_partition(labels, n_classes, n_devices, alpha, rng);
+    shards
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            let mut drng = rng.fork(id as u64);
+            let (profile, mode) = sample_device(&mut drng);
+            let bandwidth = Bandwidth::sample_base(&mut drng);
+            DeviceCtx {
+                id,
+                shard: split_shard(shard, 0.2, &mut drng),
+                profile,
+                mode,
+                bandwidth,
+                rng: drng,
+                personal: None,
+                last_shared: Vec::new(),
+                participations: 0,
+            }
+        })
+        .collect()
 }

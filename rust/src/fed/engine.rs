@@ -1,33 +1,32 @@
-//! The federated fine-tuning engine (paper §3.1 training process).
+//! The federated fine-tuning engine (paper §3.1 training process) — a
+//! thin orchestrator over the server/client split.
 //!
-//! Per round: the server plans dropout configurations (method strategy),
-//! selected devices run real XLA local training with STLD (gather active
-//! rows → execute the K-layer train artifact → scatter back), report
-//! uploads + local validation accuracy, and the server performs
-//! heterogeneous aggregation (PTLS) and bandit feedback. Wall-clock is
-//! *simulated* from the hw cost model (semi-emulation, §6.1) while model
-//! quality is real.
+//! Per round: `fed::round::plan_round` runs the sequential planning pass
+//! (method strategy + RNG pre-draws + downloads), `ClientTask`s execute
+//! the per-device plans — fanned out over `util::pool::run_parallel` with
+//! `cfg.workers` threads — and `fed::server::Server` absorbs the outcomes
+//! (PTLS aggregation, bandit feedback, clock accounting) in selection
+//! order. Wall-clock is *simulated* from the hw cost model
+//! (semi-emulation, §6.1) while model quality is real; the same seed
+//! yields bit-identical results at any worker count.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::data::{
-    batch::eval_batches, dirichlet_partition, gen, split_shard, Batch, BatchSampler, Dataset,
-    TaskSpec,
-};
+use crate::data::{batch::eval_batches, gen, Batch, Dataset, TaskSpec};
+use crate::fed::client::{ClientCtx, ClientTask};
 use crate::fed::config::FedConfig;
-use crate::fed::device::DeviceCtx;
-use crate::hw::{cost, sample_device, Bandwidth};
+use crate::fed::device::{self, DeviceCtx};
+use crate::fed::round::{self, LocalOutcome, RoundPlan};
+use crate::fed::server::{self, Server};
 use crate::metrics::{RoundRecord, SessionResult};
-use crate::methods::{Method, SharePolicy};
+use crate::methods::Method;
 use crate::model::{BaseModel, TrainState};
-use crate::ptls::{self, ImportanceAccum, Upload};
 use crate::runtime::manifest::ModelSpec;
-use crate::runtime::tensor::Value;
 use crate::runtime::Runtime;
-use crate::stld::DropoutConfig;
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 pub struct Engine {
@@ -38,32 +37,13 @@ pub struct Engine {
     dataset: Dataset,
     test_batches: Vec<Batch>,
     devices: Vec<DeviceCtx>,
-    global: TrainState,
     method: Box<dyn Method>,
+    server: Server,
     rng: Rng,
-    clock: f64,
-    prev_acc: f64,
-}
-
-/// Outcome of one device's local round.
-struct LocalOutcome {
-    upload: Upload,
-    local_acc: f64,
-    mean_loss: f64,
-    active_frac: f64,
-    comp_secs: f64,
-    comm_secs: f64,
-    energy_j: f64,
-    mem_peak: f64,
-    traffic_bytes: u64,
 }
 
 impl Engine {
-    pub fn new(
-        cfg: FedConfig,
-        runtime: Arc<Runtime>,
-        method: Box<dyn Method>,
-    ) -> Result<Engine> {
+    pub fn new(cfg: FedConfig, runtime: Arc<Runtime>, method: Box<dyn Method>) -> Result<Engine> {
         let spec = runtime.model(&cfg.preset)?.clone();
         let mcfg = &spec.config;
         let mut rng = Rng::seed_from(cfg.seed);
@@ -77,33 +57,13 @@ impl Engine {
         let test_batches = eval_batches(&test_set, &all, mcfg.batch, cfg.eval_batches);
 
         // non-IID partition + device population
-        let shards = dirichlet_partition(
+        let devices = device::build_population(
             &dataset.labels,
             task.n_classes,
             cfg.n_devices,
             cfg.alpha,
             &mut rng,
         );
-        let devices: Vec<DeviceCtx> = shards
-            .into_iter()
-            .enumerate()
-            .map(|(id, shard)| {
-                let mut drng = rng.fork(id as u64);
-                let (profile, mode) = sample_device(&mut drng);
-                let bandwidth = Bandwidth::sample_base(&mut drng);
-                DeviceCtx {
-                    id,
-                    shard: split_shard(shard, 0.2, &mut drng),
-                    profile,
-                    mode,
-                    bandwidth,
-                    rng: drng,
-                    personal: None,
-                    last_shared: Vec::new(),
-                    participations: 0,
-                }
-            })
-            .collect();
 
         let base = BaseModel::init(&spec, cfg.seed);
         let global = TrainState::init(&spec, method.kind(), cfg.seed)?;
@@ -115,11 +75,9 @@ impl Engine {
             dataset,
             test_batches,
             devices,
-            global,
             method,
+            server: Server::new(global),
             rng,
-            clock: 0.0,
-            prev_acc: 0.0,
         })
     }
 
@@ -129,6 +87,17 @@ impl Engine {
 
     pub fn spec(&self) -> &ModelSpec {
         &self.spec
+    }
+
+    /// Read-only session context handed to client tasks and server eval.
+    fn ctx(&self) -> ClientCtx<'_> {
+        ClientCtx {
+            runtime: &*self.runtime,
+            cfg: &self.cfg,
+            spec: &self.spec,
+            base: &*self.base,
+            dataset: &self.dataset,
+        }
     }
 
     /// Run the full session.
@@ -157,361 +126,61 @@ impl Engine {
         Ok(result)
     }
 
-    /// One federated round.
+    /// One federated round: plan sequentially, execute clients in
+    /// parallel, finish sequentially.
     pub fn run_round(&mut self, round: usize) -> Result<RoundRecord> {
         let host_t0 = Instant::now();
-        self.method.begin_round(round);
-        let n_layers = self.spec.config.n_layers;
-        let selected = self
-            .rng
-            .sample_indices(self.devices.len(), self.cfg.devices_per_round.min(self.devices.len()));
-
-        // plan per-device configurations (method is &mut; sequential)
-        let mut plans: Vec<(usize, DropoutConfig)> = Vec::new();
-        for &d in &selected {
-            let info = self.devices[d].info();
-            let mut drng = self.devices[d].rng.fork(round as u64);
-            let cfgd = self
-                .method
-                .dropout_for(round, &info, n_layers, &mut drng);
-            plans.push((d, cfgd));
-        }
-
-        // local training (serialized: PJRT CPU client is single-core here;
-        // simulated time still treats devices as concurrent)
-        let mut outcomes: Vec<LocalOutcome> = Vec::new();
-        for (d, cfgd) in &plans {
-            let out = self.local_round(round, *d, cfgd)?;
-            outcomes.push(out);
-        }
-
-        // server: heterogeneous aggregation (Fig. 8)
-        let uploads: Vec<Upload> = outcomes.iter().map(|o| o.upload.clone()).collect();
-        ptls::aggregate(
-            &mut self.global.peft,
-            &mut self.global.head,
-            self.global.q,
-            &uploads,
+        let plan = round::plan_round(
+            round,
+            &self.cfg,
+            &self.spec,
+            &mut *self.method,
+            &mut self.devices,
+            self.server.global(),
+            &mut self.rng,
         );
-
-        // round accounting: synchronous FedAvg => round time is the
-        // slowest participant
-        let round_secs = outcomes
-            .iter()
-            .map(|o| o.comp_secs + o.comm_secs)
-            .fold(0.0, f64::max);
-        self.clock += round_secs;
-        let traffic: u64 = outcomes.iter().map(|o| o.traffic_bytes).sum();
-        let energy = crate::util::stats::mean(
-            &outcomes.iter().map(|o| o.energy_j).collect::<Vec<_>>(),
-        );
-        let mem = crate::util::stats::mean(
-            &outcomes.iter().map(|o| o.mem_peak).collect::<Vec<_>>(),
-        );
-        let loss = crate::util::stats::mean(
-            &outcomes.iter().map(|o| o.mean_loss).collect::<Vec<_>>(),
-        );
-        let active = crate::util::stats::mean(
-            &outcomes.iter().map(|o| o.active_frac).collect::<Vec<_>>(),
-        );
-
-        // bandit reward: mean accuracy gain per simulated second (Eq. 5)
-        let mean_local_acc = crate::util::stats::mean(
-            &outcomes.iter().map(|o| o.local_acc).collect::<Vec<_>>(),
-        );
-        let mean_t = crate::util::stats::mean(
-            &outcomes
-                .iter()
-                .map(|o| o.comp_secs + o.comm_secs)
-                .collect::<Vec<_>>(),
-        )
-        .max(1e-6);
-        let reward = (mean_local_acc - self.prev_acc) / mean_t;
-        self.prev_acc = mean_local_acc;
-        let arm = self.method.arm_label();
-        self.method.end_round(reward);
+        let selected = plan.selected();
+        let results = self.run_clients(plan);
+        // a failed client must not wipe the finished clients' state
+        let outcomes = server::collect_outcomes(results, &mut self.devices)?;
+        let mut rec = self
+            .server
+            .finish_round(round, outcomes, &mut self.devices, &mut *self.method);
 
         // periodic evaluation
-        let (mut global_acc, mut pers_acc) = (None, None);
-        if round % self.cfg.eval_every == self.cfg.eval_every - 1
-            || round + 1 == self.cfg.rounds
-        {
-            global_acc = Some(self.eval_global()?);
+        let last = round + 1 == self.cfg.rounds;
+        if round % self.cfg.eval_every == self.cfg.eval_every - 1 || last {
+            rec.global_acc = Some(self.server.eval_global(&self.ctx(), &self.test_batches)?);
             if self.cfg.eval_personalized && self.method.personalized() {
-                pers_acc = Some(self.eval_personalized(&selected)?);
+                rec.personalized_acc =
+                    Some(self.server.eval_personalized(&self.ctx(), &self.devices, &selected)?);
             }
         }
-
-        Ok(RoundRecord {
-            round,
-            sim_secs: round_secs,
-            clock_secs: self.clock,
-            train_loss: loss,
-            active_frac: active,
-            global_acc,
-            personalized_acc: pers_acc,
-            traffic_bytes: traffic,
-            energy_j_mean: energy,
-            mem_peak_mean: mem,
-            arm,
-            host_secs: host_t0.elapsed().as_secs_f64(),
-        })
+        rec.host_secs = host_t0.elapsed().as_secs_f64();
+        Ok(rec)
     }
 
-    /// Device-side work for one round: download, local STLD training,
-    /// importance accounting, share-set selection, upload packaging.
-    fn local_round(
-        &mut self,
-        round: usize,
-        dev_idx: usize,
-        dropout: &DropoutConfig,
-    ) -> Result<LocalOutcome> {
-        let mcfg = self.spec.config.clone();
-        let n_layers = mcfg.n_layers;
-        let kind = self.method.kind().to_string();
-        let info = self.devices[dev_idx].info();
-
-        // ---- download: assemble this round's starting state ----
-        let personalized = self.method.personalized();
-        let mut state = if personalized {
-            let dev = &mut self.devices[dev_idx];
-            match dev.personal.take() {
-                Some(mut s) => {
-                    // refresh previously-shared rows from the global model
-                    let idx = dev.last_shared.clone();
-                    let q = s.q;
-                    for &l in &idx {
-                        s.peft[l * q..(l + 1) * q]
-                            .copy_from_slice(&self.global.peft[l * q..(l + 1) * q]);
-                        s.opt_m[l * q..(l + 1) * q].fill(0.0);
-                        s.opt_v[l * q..(l + 1) * q].fill(0.0);
-                    }
-                    s.head.copy_from_slice(&self.global.head);
-                    s
-                }
-                None => {
-                    let mut s = self.global.clone();
-                    s.opt_m.fill(0.0);
-                    s.opt_v.fill(0.0);
-                    s
-                }
-            }
-        } else {
-            let mut s = self.global.clone();
-            s.opt_m.fill(0.0);
-            s.opt_v.fill(0.0);
-            s.head_m.fill(0.0);
-            s.head_v.fill(0.0);
-            s
-        };
-        let snapshot_peft = state.peft.clone(); // for frozen-layer reset
-
-        // ---- local STLD fine-tuning ----
-        let shard = self.devices[dev_idx].shard.train.clone();
-        let mut sampler =
-            BatchSampler::new(shard, self.devices[dev_idx].rng.fork(0x10CA1 ^ round as u64));
-        let n_batches = self
-            .cfg
-            .local_batches
-            .min(sampler.batches_per_epoch(mcfg.batch).max(1))
-            .max(1);
-
-        // cost accounting runs at paper scale when configured (§6.1
-        // semi-emulation): map the STLD active fraction onto the paper
-        // model's depth
-        let ccfg = match &self.cfg.cost_model {
-            Some(name) => cost::paper_model(name),
-            None => mcfg.clone(),
-        };
-        let scale_k = |k: usize| -> usize {
-            ((k as f64 / n_layers as f64) * ccfg.n_layers as f64).round().max(1.0) as usize
-        };
-
-        let mut importance = ImportanceAccum::new(n_layers);
-        let mut loss_sum = 0.0;
-        let mut flops_total = 0.0;
-        let mut mem_peak: f64 = 0.0;
-        let mut active_total = 0usize;
-        let mut srng = self.devices[dev_idx].rng.fork(0x5eed ^ round as u64);
-
-        for _ in 0..n_batches {
-            let active = dropout.sample_active(&mut srng);
-            let k = active.len();
-            active_total += k;
-            let batch = sampler.next_batch(&self.dataset, mcfg.batch);
-            let (loss, grad_norms) =
-                self.train_batch(&mut state, &active, &batch, &kind)?;
-            loss_sum += loss;
-            importance.record(&active, &grad_norms);
-
-            flops_total += cost::train_flops(&ccfg, scale_k(k), &kind, false);
-            mem_peak = mem_peak.max(cost::train_memory_bytes(&ccfg, scale_k(k), &kind, false));
-        }
-        // paper setting: one local epoch over the device's shard; the
-        // testbed caps executed batches, so charge the un-executed
-        // remainder of the epoch at the mean executed cost
-        let epoch_batches = (self.devices[dev_idx].shard.train.len() / mcfg.batch).max(1);
-        if epoch_batches > n_batches {
-            flops_total *= epoch_batches as f64 / n_batches as f64;
-        }
-
-        // frozen layers (FedAdaOPT): discard their local updates
-        let frozen = self.method.frozen_below(round, n_layers);
-        if frozen > 0 {
-            let q = state.q;
-            state.peft[..frozen * q].copy_from_slice(&snapshot_peft[..frozen * q]);
-        }
-        self.method
-            .postprocess(&info, round, &mut state, &self.spec);
-
-        // ---- local validation accuracy (bandit reward signal) ----
-        let local_acc = {
-            let val = self.devices[dev_idx].shard.val.clone();
-            let batches = eval_batches(&self.dataset, &val, mcfg.batch, 2);
-            self.eval_state(&state, &batches)?
-        };
-
-        // ---- share-set selection + upload ----
-        let imp = importance.importance();
-        let shared: Vec<usize> = match self.method.share_policy(n_layers) {
-            SharePolicy::All => (0..n_layers).collect(),
-            SharePolicy::LowestImportance(k) => ptls::select_shared(&imp, k),
-            SharePolicy::TopLayers(k) => (n_layers - k.min(n_layers)..n_layers).collect(),
-        };
-        let rows = crate::model::gather_rows(&state.peft, state.q, &shared);
-        let upload = Upload {
-            device: info.id,
-            layers: shared.clone(),
-            rows,
-            weight: self.method.aggregation_weight(&info),
-            head: state.head.clone(),
-        };
-
-        // ---- simulated cost accounting ----
-        let shared_scaled =
-            ((shared.len() as f64 / n_layers as f64) * ccfg.n_layers as f64).round() as usize;
-        let comm_bytes = cost::comm_bytes(&ccfg, &kind, shared_scaled, false);
-        let dev = &mut self.devices[dev_idx];
-        let bps = dev.bandwidth.round_bps(&mut dev.rng);
-        let comp_secs = cost::comp_secs(flops_total, dev.effective_gflops());
-        let comm_secs = cost::comm_secs(comm_bytes, bps);
-        let energy_j = cost::energy_j(comp_secs, dev.power_w(), comm_secs);
-
-        dev.participations += 1;
-        dev.last_shared = shared;
-        if personalized {
-            dev.personal = Some(state);
-        }
-
-        Ok(LocalOutcome {
-            upload,
-            local_acc,
-            mean_loss: loss_sum / n_batches as f64,
-            active_frac: active_total as f64 / (n_batches * n_layers) as f64,
-            comp_secs,
-            comm_secs,
-            energy_j,
-            mem_peak,
-            traffic_bytes: comm_bytes,
-        })
-    }
-
-    /// Execute one STLD mini-batch through the K-active-layer artifact.
-    fn train_batch(
-        &self,
-        state: &mut TrainState,
-        active: &[usize],
-        batch: &Batch,
-        kind: &str,
-    ) -> Result<(f64, Vec<f32>)> {
-        let k = active.len();
-        let p = self.base.p;
-        let layers = Value::f32(self.base.gather(active), vec![k, p]);
-        let (peft, m, v) = state.gather_peft(active);
-        let q = state.q;
-        state.step += 1;
-        let inputs = vec![
-            layers,
-            Value::f32(peft, vec![k, q]),
-            Value::f32(m, vec![k, q]),
-            Value::f32(v, vec![k, q]),
-            Value::f32(self.base.globals.clone(), vec![self.base.globals.len()]),
-            Value::f32(state.head.clone(), vec![state.head.len()]),
-            Value::f32(state.head_m.clone(), vec![state.head_m.len()]),
-            Value::f32(state.head_v.clone(), vec![state.head_v.len()]),
-            batch.tokens.clone(),
-            batch.labels.clone(),
-            Value::scalar_f32(state.step as f32),
-            Value::scalar_f32(self.cfg.lr as f32),
-        ];
-        let artifact = format!("train_{kind}_k{k}");
-        let outs = self
-            .runtime
-            .execute(&self.cfg.preset, &artifact, &inputs)
-            .with_context(|| format!("train step K={k}"))?;
-        // outputs: peft', m', v', head', head_m', head_v', loss, correct, gn
-        let mut it = outs.into_iter();
-        let peft_n = it.next().unwrap().into_f32()?;
-        let m_n = it.next().unwrap().into_f32()?;
-        let v_n = it.next().unwrap().into_f32()?;
-        state.scatter_peft(active, &peft_n, &m_n, &v_n);
-        state.head = it.next().unwrap().into_f32()?;
-        state.head_m = it.next().unwrap().into_f32()?;
-        state.head_v = it.next().unwrap().into_f32()?;
-        let loss = it.next().unwrap().scalar()? as f64;
-        let _correct = it.next().unwrap().scalar()?;
-        let gn = it.next().unwrap().into_f32()?;
-        anyhow::ensure!(loss.is_finite(), "non-finite training loss");
-        Ok((loss, gn))
-    }
-
-    /// Accuracy of a state on the given batches (full-depth eval).
-    pub fn eval_state(&self, state: &TrainState, batches: &[Batch]) -> Result<f64> {
-        let mcfg = &self.spec.config;
-        let mut correct = 0.0;
-        let mut total = 0.0;
-        for b in batches {
-            let inputs = vec![
-                Value::f32(
-                    self.base.layers.clone(),
-                    vec![self.base.n_layers, self.base.p],
-                ),
-                Value::f32(state.peft.clone(), vec![state.n_layers, state.q]),
-                Value::f32(self.base.globals.clone(), vec![self.base.globals.len()]),
-                Value::f32(state.head.clone(), vec![state.head.len()]),
-                b.tokens.clone(),
-                b.labels.clone(),
-            ];
-            let artifact = format!("eval_{}", state.kind);
-            let outs = self.runtime.execute(&self.cfg.preset, &artifact, &inputs)?;
-            correct += outs[1].scalar()? as f64;
-            total += mcfg.batch as f64;
-        }
-        Ok(if total > 0.0 { correct / total } else { 0.0 })
+    /// Fan the plan's device jobs out over the worker pool; results come
+    /// back in selection order regardless of scheduling.
+    fn run_clients(&self, plan: RoundPlan) -> Vec<Result<LocalOutcome>> {
+        let task = ClientTask::new(self.ctx(), &*self.method, &plan);
+        let task = &task;
+        let jobs: Vec<_> = plan
+            .devices
+            .into_iter()
+            .map(|dp| move || task.run(dp))
+            .collect();
+        pool::run_parallel(self.cfg.workers.max(1), jobs)
     }
 
     /// Global-model accuracy on the held-out test set.
     pub fn eval_global(&self) -> Result<f64> {
-        self.eval_state(&self.global, &self.test_batches)
-    }
-
-    /// Mean personalized accuracy over the given devices' local val sets.
-    fn eval_personalized(&self, device_ids: &[usize]) -> Result<f64> {
-        let mut accs = Vec::new();
-        for &d in device_ids {
-            let dev = &self.devices[d];
-            if let Some(state) = &dev.personal {
-                let batches =
-                    eval_batches(&self.dataset, &dev.shard.val, self.spec.config.batch, 2);
-                accs.push(self.eval_state(state, &batches)?);
-            }
-        }
-        Ok(crate::util::stats::mean(&accs))
+        self.server.eval_global(&self.ctx(), &self.test_batches)
     }
 
     /// Global train state (examples / checkpointing).
     pub fn global_state(&self) -> &TrainState {
-        &self.global
+        self.server.global()
     }
 
     pub fn runtime(&self) -> &Runtime {

@@ -1,10 +1,24 @@
-//! Federated fine-tuning engine: session configuration, simulated
-//! devices, and the round loop (real XLA training + simulated wall-clock).
+//! Federated fine-tuning engine, layered server/client style:
+//!
+//! - [`round`] — the sequential planning pass (`RoundPlan` / `DevicePlan`)
+//!   and per-device results (`LocalOutcome`);
+//! - [`client`] — `ClientTask`, the self-contained local-round worker that
+//!   runs on pool threads;
+//! - [`server`] — PTLS aggregation, bandit feedback, clock accounting,
+//!   periodic evaluation;
+//! - [`engine`] — the thin orchestrator tying the round loop together
+//!   (real XLA training + simulated wall-clock).
 
+pub mod client;
 pub mod config;
 pub mod device;
 pub mod engine;
+pub mod round;
+pub mod server;
 
+pub use client::{ClientCtx, ClientTask};
 pub use config::FedConfig;
 pub use device::{DeviceCtx, DeviceInfo};
 pub use engine::Engine;
+pub use round::{DevicePlan, LocalOutcome, RoundPlan};
+pub use server::Server;

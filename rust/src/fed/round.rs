@@ -1,0 +1,182 @@
+//! Round planning: the sequential pass that turns the `&mut` pieces of a
+//! federated round (method strategy state, device RNG streams, persistent
+//! personalized state) into an immutable `RoundPlan` that client workers
+//! can execute in parallel, plus the `LocalOutcome` each worker returns.
+//!
+//! Determinism contract: everything stochastic about a round is drawn
+//! *here*, in selection order, from per-device RNG streams — exactly the
+//! sequence the old serial engine used. A `DevicePlan` is therefore a
+//! self-contained job description and the number of workers executing the
+//! plans cannot change any result.
+
+use crate::fed::config::FedConfig;
+use crate::fed::device::{DeviceCtx, DeviceInfo};
+use crate::methods::{Method, SharePolicy};
+use crate::model::TrainState;
+use crate::ptls::Upload;
+use crate::runtime::manifest::ModelSpec;
+use crate::stld::DropoutConfig;
+use crate::util::rng::Rng;
+
+/// Everything one client worker needs to run one device's local round.
+/// Owns its inputs (state snapshot, shard indices, forked RNG streams);
+/// borrows nothing mutable from the engine.
+///
+/// Memory trade-off: the plan holds one downloaded `TrainState` per
+/// selected device up front (the serial engine materialized one at a
+/// time), so peak state copies scale with `devices_per_round` rather
+/// than the worker count. Acceptable at testbed scale; revisit if
+/// `devices_per_round` grows into the hundreds.
+pub struct DevicePlan {
+    /// index into the engine's device population
+    pub device: usize,
+    pub info: DeviceInfo,
+    /// STLD dropout-rate configuration chosen by the method
+    pub dropout: DropoutConfig,
+    /// this round's starting state (the simulated "download")
+    pub start_state: TrainState,
+    /// training-sample indices of the device's shard
+    pub shard_train: Vec<usize>,
+    /// local validation indices (bandit reward signal)
+    pub shard_val: Vec<usize>,
+    /// RNG stream for batch sampling
+    pub sampler_rng: Rng,
+    /// RNG stream for per-batch STLD masks
+    pub mask_rng: Rng,
+    /// this round's achievable uplink rate, bits/sec (pre-drawn)
+    pub bps: f64,
+    /// board power draw in the sampled power mode, watts
+    pub power_w: f64,
+    /// layers below this index are frozen (FedAdaOPT)
+    pub frozen_below: usize,
+    pub share_policy: SharePolicy,
+    /// server aggregation weight for this device's upload
+    pub agg_weight: f64,
+}
+
+/// An immutable plan for one federated round.
+pub struct RoundPlan {
+    pub round: usize,
+    /// PEFT kind: "lora" | "adapter"
+    pub kind: String,
+    /// devices keep persistent personalized state between rounds?
+    pub personalized: bool,
+    /// per-device jobs, in selection order
+    pub devices: Vec<DevicePlan>,
+}
+
+impl RoundPlan {
+    /// Selected device indices, in selection order.
+    pub fn selected(&self) -> Vec<usize> {
+        self.devices.iter().map(|d| d.device).collect()
+    }
+}
+
+/// Outcome of one device's local round, as returned by a client worker.
+pub struct LocalOutcome {
+    /// index into the engine's device population
+    pub device: usize,
+    pub upload: Upload,
+    /// locally-updated state to persist on the device (PTLS methods)
+    pub final_state: Option<TrainState>,
+    /// local validation accuracy (bandit reward signal)
+    pub local_acc: f64,
+    pub mean_loss: f64,
+    /// mean STLD-active layer fraction across local batches
+    pub active_frac: f64,
+    pub comp_secs: f64,
+    pub comm_secs: f64,
+    pub energy_j: f64,
+    pub mem_peak: f64,
+    pub traffic_bytes: u64,
+}
+
+/// Plan one round: device selection, per-device dropout configuration,
+/// download assembly, and RNG pre-draws. Runs sequentially (the method is
+/// `&mut`, devices mutate their RNG streams and surrender personal state)
+/// so the plan is reproducible regardless of later execution order.
+pub fn plan_round(
+    round: usize,
+    cfg: &FedConfig,
+    spec: &ModelSpec,
+    method: &mut dyn Method,
+    devices: &mut [DeviceCtx],
+    global: &TrainState,
+    rng: &mut Rng,
+) -> RoundPlan {
+    method.begin_round(round);
+    let n_layers = spec.config.n_layers;
+    let selected = rng.sample_indices(devices.len(), cfg.devices_per_round.min(devices.len()));
+    let personalized = method.personalized();
+    let kind = method.kind().to_string();
+
+    let mut plans = Vec::with_capacity(selected.len());
+    for &d in &selected {
+        let dev = &mut devices[d];
+        let info = dev.info();
+        // per-device RNG draws in the exact order of the serial engine:
+        // dropout fork, sampler fork, mask fork, bandwidth jitter
+        let mut drng = dev.rng.fork(round as u64);
+        let dropout = method.dropout_for(round, &info, n_layers, &mut drng);
+        let start_state = download(dev, global, personalized);
+        let sampler_rng = dev.rng.fork(0x10CA1 ^ round as u64);
+        let mask_rng = dev.rng.fork(0x5eed ^ round as u64);
+        let bps = dev.bandwidth.round_bps(&mut dev.rng);
+        plans.push(DevicePlan {
+            device: d,
+            dropout,
+            start_state,
+            shard_train: dev.shard.train.clone(),
+            shard_val: dev.shard.val.clone(),
+            sampler_rng,
+            mask_rng,
+            bps,
+            power_w: dev.power_w(),
+            frozen_below: method.frozen_below(round, n_layers),
+            share_policy: method.share_policy(n_layers),
+            agg_weight: method.aggregation_weight(&info),
+            info,
+        });
+    }
+    RoundPlan {
+        round,
+        kind,
+        personalized,
+        devices: plans,
+    }
+}
+
+/// Assemble a device's starting state for the round (the "download"):
+/// personalized methods refresh previously-shared rows from the global
+/// model; everyone else starts from a fresh global clone with cold
+/// optimizer moments.
+fn download(dev: &mut DeviceCtx, global: &TrainState, personalized: bool) -> TrainState {
+    if personalized {
+        match dev.personal.take() {
+            Some(mut s) => {
+                let q = s.q;
+                for &l in &dev.last_shared {
+                    s.peft[l * q..(l + 1) * q]
+                        .copy_from_slice(&global.peft[l * q..(l + 1) * q]);
+                    s.opt_m[l * q..(l + 1) * q].fill(0.0);
+                    s.opt_v[l * q..(l + 1) * q].fill(0.0);
+                }
+                s.head.copy_from_slice(&global.head);
+                s
+            }
+            None => {
+                let mut s = global.clone();
+                s.opt_m.fill(0.0);
+                s.opt_v.fill(0.0);
+                s
+            }
+        }
+    } else {
+        let mut s = global.clone();
+        s.opt_m.fill(0.0);
+        s.opt_v.fill(0.0);
+        s.head_m.fill(0.0);
+        s.head_v.fill(0.0);
+        s
+    }
+}

@@ -1,0 +1,172 @@
+//! Server-side round bookkeeping: heterogeneous PTLS aggregation (Fig. 8),
+//! synchronous round-time accounting (round time = slowest participant),
+//! bandit feedback (Eq. 5), device-session mutations, and periodic
+//! evaluation. All of it is sequential and runs in selection order, so
+//! results are independent of how the client tasks were scheduled.
+
+use anyhow::Result;
+
+use crate::data::batch::{eval_batches, Batch};
+use crate::fed::client::{eval_state, ClientCtx};
+use crate::fed::device::DeviceCtx;
+use crate::fed::round::LocalOutcome;
+use crate::methods::Method;
+use crate::metrics::RoundRecord;
+use crate::model::TrainState;
+use crate::ptls::{self, Upload};
+use crate::util::stats;
+
+/// The federated server: owns the global model, the simulated clock, and
+/// the bandit reward baseline.
+pub struct Server {
+    global: TrainState,
+    clock: f64,
+    prev_acc: f64,
+}
+
+/// Persist device-side session results (participation count, shared set,
+/// personalized state) in selection order.
+pub fn persist_outcomes(outcomes: &mut [LocalOutcome], devices: &mut [DeviceCtx]) {
+    for out in outcomes.iter_mut() {
+        let dev = &mut devices[out.device];
+        dev.participations += 1;
+        dev.last_shared = out.upload.layers.clone();
+        if let Some(state) = out.final_state.take() {
+            dev.personal = Some(state);
+        }
+    }
+}
+
+/// Unwrap a round's per-client results. On any failure, first persist the
+/// clients that did finish — the serial engine persisted each device as it
+/// completed, so a failed round must not wipe the survivors' personalized
+/// state — then surface the first error in selection order.
+pub fn collect_outcomes(
+    results: Vec<Result<LocalOutcome>>,
+    devices: &mut [DeviceCtx],
+) -> Result<Vec<LocalOutcome>> {
+    if results.iter().all(|r| r.is_ok()) {
+        return Ok(results.into_iter().filter_map(Result::ok).collect());
+    }
+    let mut finished: Vec<LocalOutcome> = Vec::new();
+    let mut first_err = None;
+    for r in results {
+        match r {
+            Ok(out) => finished.push(out),
+            Err(e) => first_err = first_err.or(Some(e)),
+        }
+    }
+    persist_outcomes(&mut finished, devices);
+    Err(first_err.expect("checked above: at least one client failed"))
+}
+
+impl Server {
+    pub fn new(global: TrainState) -> Server {
+        Server {
+            global,
+            clock: 0.0,
+            prev_acc: 0.0,
+        }
+    }
+
+    pub fn global(&self) -> &TrainState {
+        &self.global
+    }
+
+    /// Cumulative simulated clock (end of the last finished round).
+    pub fn clock_secs(&self) -> f64 {
+        self.clock
+    }
+
+    /// Absorb a round's client outcomes: persist device-side session
+    /// state, aggregate uploads into the global model, advance the
+    /// simulated clock, and feed the bandit. Outcomes must arrive in
+    /// selection order (the parallel pool preserves input order).
+    /// Returns a `RoundRecord` with the evaluation fields unset.
+    pub fn finish_round(
+        &mut self,
+        round: usize,
+        mut outcomes: Vec<LocalOutcome>,
+        devices: &mut [DeviceCtx],
+        method: &mut dyn Method,
+    ) -> RoundRecord {
+        // device-side session mutations, in selection order
+        persist_outcomes(&mut outcomes, devices);
+
+        // heterogeneous aggregation (Fig. 8)
+        let uploads: Vec<Upload> = outcomes.iter().map(|o| o.upload.clone()).collect();
+        ptls::aggregate(
+            &mut self.global.peft,
+            &mut self.global.head,
+            self.global.q,
+            &uploads,
+        );
+
+        // round accounting: synchronous FedAvg => round time is the
+        // slowest participant
+        let round_secs = outcomes
+            .iter()
+            .map(|o| o.comp_secs + o.comm_secs)
+            .fold(0.0, f64::max);
+        self.clock += round_secs;
+        let traffic: u64 = outcomes.iter().map(|o| o.traffic_bytes).sum();
+        let energy = stats::mean(&outcomes.iter().map(|o| o.energy_j).collect::<Vec<_>>());
+        let mem = stats::mean(&outcomes.iter().map(|o| o.mem_peak).collect::<Vec<_>>());
+        let loss = stats::mean(&outcomes.iter().map(|o| o.mean_loss).collect::<Vec<_>>());
+        let active = stats::mean(&outcomes.iter().map(|o| o.active_frac).collect::<Vec<_>>());
+
+        // bandit reward: mean accuracy gain per simulated second (Eq. 5)
+        let mean_local_acc =
+            stats::mean(&outcomes.iter().map(|o| o.local_acc).collect::<Vec<_>>());
+        let mean_t = stats::mean(
+            &outcomes
+                .iter()
+                .map(|o| o.comp_secs + o.comm_secs)
+                .collect::<Vec<_>>(),
+        )
+        .max(1e-6);
+        let reward = (mean_local_acc - self.prev_acc) / mean_t;
+        self.prev_acc = mean_local_acc;
+        let arm = method.arm_label();
+        method.end_round(reward);
+
+        RoundRecord {
+            round,
+            sim_secs: round_secs,
+            clock_secs: self.clock,
+            train_loss: loss,
+            active_frac: active,
+            global_acc: None,
+            personalized_acc: None,
+            traffic_bytes: traffic,
+            energy_j_mean: energy,
+            mem_peak_mean: mem,
+            arm,
+            host_secs: 0.0,
+        }
+    }
+
+    /// Global-model accuracy on the held-out test set.
+    pub fn eval_global(&self, ctx: &ClientCtx<'_>, test_batches: &[Batch]) -> Result<f64> {
+        eval_state(ctx, &self.global, test_batches)
+    }
+
+    /// Mean personalized accuracy over the given devices' local val sets.
+    pub fn eval_personalized(
+        &self,
+        ctx: &ClientCtx<'_>,
+        devices: &[DeviceCtx],
+        device_ids: &[usize],
+    ) -> Result<f64> {
+        let mut accs = Vec::new();
+        for &d in device_ids {
+            let dev = &devices[d];
+            if let Some(state) = &dev.personal {
+                let batches =
+                    eval_batches(ctx.dataset, &dev.shard.val, ctx.spec.config.batch, 2);
+                accs.push(eval_state(ctx, state, &batches)?);
+            }
+        }
+        Ok(stats::mean(&accs))
+    }
+}

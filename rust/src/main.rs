@@ -38,8 +38,12 @@ USAGE:
                  [--local-batches 4] [--alpha 1.0] [--samples 2000]
                  [--lr 5e-4] [--seed 42] [--eval-every 2]
                  [--target-acc 0.9] [--personal-eval] [--artifacts DIR]
+                 [--workers N]   (device-parallel local training;
+                                  default: host parallelism; same seed =>
+                                  identical results at any N)
   droppeft exp <table1|fig2|fig3|fig6a|fig6b|fig7|table3|fig9|fig10|fig11|
                 fig12|fig13|fig14|fig15|all> [--quick] [--out results]
+                [--workers N]
   droppeft inspect [--artifacts DIR]
 
 Methods: fedlora fedadapter fedhetlora fedadaopt
@@ -65,6 +69,7 @@ pub fn fed_config_from(args: &Args) -> Result<FedConfig> {
         cfg.target_acc = Some(t.parse()?);
     }
     cfg.cost_model = args.opt_str("cost-model");
+    cfg.workers = args.usize_or("workers", cfg.workers)?.max(1);
     Ok(cfg)
 }
 
@@ -77,12 +82,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     let runtime = Arc::new(Runtime::new(&artifacts)?);
     let method = methods::by_name(&method_name, cfg.seed, cfg.rounds)?;
     droppeft::info!(
-        "training {} on {}/{} ({} devices, {} rounds)",
+        "training {} on {}/{} ({} devices, {} rounds, {} workers)",
         method.name(),
         cfg.preset,
         cfg.dataset,
         cfg.n_devices,
-        cfg.rounds
+        cfg.rounds,
+        cfg.workers
     );
     let mut engine = Engine::new(cfg, runtime.clone(), method)?;
     let result = engine.run()?;

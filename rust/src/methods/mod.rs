@@ -33,7 +33,13 @@ pub enum SharePolicy {
     TopLayers(usize),
 }
 
-pub trait Method: Send {
+/// Planning API contract: the engine drives all `&mut self` hooks
+/// (`begin_round`, `dropout_for`, `end_round`) sequentially during the
+/// round-planning pass, in device-selection order. The read-only hooks
+/// (`postprocess`, `share_policy`, ...) may additionally be called from
+/// parallel client workers, hence the `Sync` bound — implementations must
+/// not rely on interior mutability.
+pub trait Method: Send + Sync {
     fn name(&self) -> String;
 
     /// PEFT kind: "lora" | "adapter".

@@ -11,6 +11,7 @@ pub mod manifest;
 pub mod tensor;
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -33,26 +34,58 @@ struct Compiled {
     spec: ArtifactSpec,
 }
 
+// SAFETY: the PJRT C API itself is thread-safe for execution, and on our
+// side `Compiled` values are shared via `Arc<Compiled>` (the Arc is
+// cloned, never the inner executable) with only `&self` methods invoked
+// from worker threads. Caveat: the `xla` binding's own handle plumbing is
+// not auditable from this repo — if a binding version performs internal
+// non-atomic refcount traffic inside `execute`, concurrent execution is
+// unsound for it; `DROPPEFT_SERIAL_EXEC=1` / `set_serialize_exec(true)`
+// restores the old fully-serialized behavior as the escape hatch.
+unsafe impl Send for Compiled {}
+unsafe impl Sync for Compiled {}
+
 /// PJRT-backed executor with lazy per-artifact compilation and caching.
+///
+/// Concurrency model: `execute` may be called from many threads at once —
+/// the per-artifact `cache`/`stats` maps are mutex-guarded, compilation is
+/// serialized behind `compile_lock`, and execution runs lock-free unless
+/// the opt-in serialization mode is on (`set_serialize_exec`, or the
+/// `DROPPEFT_SERIAL_EXEC` env var) for single-core hosts or debugging.
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     cache: Mutex<HashMap<String, Arc<Compiled>>>,
     stats: Mutex<HashMap<String, ExecStats>>,
-    /// serialize execution: one CPU core; parallel executes just thrash
+    /// taken around `execute` only when `serialize_exec` is on
     exec_lock: Mutex<()>,
+    serialize_exec: AtomicBool,
+    /// lazy compilation stays serialized: PJRT compiles are heavyweight
+    /// and concurrent compiles of one artifact would duplicate work
+    compile_lock: Mutex<()>,
 }
+
+// SAFETY: `client` is only touched inside `compiled()` while holding
+// `compile_lock`; every other shared field is a Mutex or an atomic. See
+// the `Compiled` safety note for why executables may cross threads.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
 
 impl Runtime {
     pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let serial = std::env::var("DROPPEFT_SERIAL_EXEC")
+            .map(|v| v != "0")
+            .unwrap_or(false);
         Ok(Runtime {
             client,
             manifest,
             cache: Mutex::new(HashMap::new()),
             stats: Mutex::new(HashMap::new()),
             exec_lock: Mutex::new(()),
+            serialize_exec: AtomicBool::new(serial),
+            compile_lock: Mutex::new(()),
         })
     }
 
@@ -60,8 +93,23 @@ impl Runtime {
         self.manifest.model(preset)
     }
 
+    /// Opt into (or out of) globally serialized artifact execution.
+    pub fn set_serialize_exec(&self, on: bool) {
+        self.serialize_exec.store(on, Ordering::Relaxed);
+    }
+
+    pub fn serialize_exec(&self) -> bool {
+        self.serialize_exec.load(Ordering::Relaxed)
+    }
+
     fn compiled(&self, preset: &str, artifact: &str) -> Result<Arc<Compiled>> {
         let key = format!("{preset}/{artifact}");
+        if let Some(c) = self.cache.lock().unwrap().get(&key) {
+            return Ok(c.clone());
+        }
+        // serialize compilation; double-check the cache once we hold the
+        // lock so racing callers compile each artifact exactly once
+        let _compiling = self.compile_lock.lock().unwrap();
         if let Some(c) = self.cache.lock().unwrap().get(&key) {
             return Ok(c.clone());
         }
@@ -117,7 +165,10 @@ impl Runtime {
 
         let t0 = Instant::now();
         let result = {
-            let _g = self.exec_lock.lock().unwrap();
+            let _g = self
+                .serialize_exec
+                .load(Ordering::Relaxed)
+                .then(|| self.exec_lock.lock().unwrap());
             c.exe
                 .execute::<xla::Literal>(&lits)
                 .with_context(|| format!("executing {artifact}"))?
@@ -160,7 +211,9 @@ impl Runtime {
             .iter()
             .map(|(k, s)| (k.clone(), s.clone()))
             .collect();
-        v.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
+        // total_cmp is total even over NaN, so a pathological entry (e.g.
+        // zero-call artifacts with poisoned timings) cannot panic the sort
+        v.sort_by(|a, b| b.1.total_secs.total_cmp(&a.1.total_secs));
         v
     }
 

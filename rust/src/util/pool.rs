@@ -1,10 +1,14 @@
 //! Scoped worker-pool substrate (no tokio in the offline registry).
 //!
-//! The federated engine fans device-local training out over OS threads.
-//! The PJRT CPU client is itself multi-threaded-safe for `execute`, but on
-//! this 1-core testbed the default worker count is `available_parallelism`;
-//! the pool exists so the engine's structure matches a real multi-core
-//! deployment and can be scaled with `--workers`.
+//! The federated engine fans device-local training out over OS threads
+//! (`fed::client::ClientTask`s, one per selected device). Results come
+//! back in input order, so callers see identical streams at any worker
+//! count. A panicking job never hangs or poisons the pool: workers catch
+//! the unwind, remaining jobs are cancelled, and the first panic (by input
+//! order) is re-raised on the calling thread.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 /// Run `jobs` across `workers` threads, returning results in input order.
 pub fn run_parallel<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
@@ -18,29 +22,58 @@ where
         return jobs.into_iter().map(|j| j()).collect();
     }
 
-    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut slots: Vec<Option<std::thread::Result<T>>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    let panicked = AtomicBool::new(false);
     // hand every job a stable slot; work-steal by index
     let jobs: Vec<std::sync::Mutex<Option<F>>> =
         jobs.into_iter().map(|j| std::sync::Mutex::new(Some(j))).collect();
-    let slot_ptrs: Vec<std::sync::Mutex<&mut Option<T>>> =
+    let slot_ptrs: Vec<std::sync::Mutex<&mut Option<std::thread::Result<T>>>> =
         slots.iter_mut().map(std::sync::Mutex::new).collect();
 
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if panicked.load(Ordering::Relaxed) {
+                    break; // a sibling job blew up: stop claiming work
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
                 let job = jobs[i].lock().unwrap().take().unwrap();
-                let out = job();
+                let out = catch_unwind(AssertUnwindSafe(job));
+                if out.is_err() {
+                    panicked.store(true, Ordering::Relaxed);
+                }
                 **slot_ptrs[i].lock().unwrap() = Some(out);
             });
         }
     });
 
-    slots.into_iter().map(|s| s.expect("job completed")).collect()
+    // re-raise the first captured panic (lowest input index) so callers
+    // see a deterministic failure instead of a poisoned slot
+    let mut payload = None;
+    for s in slots.iter_mut() {
+        if matches!(s, Some(Err(_))) {
+            if let Some(Err(p)) = s.take() {
+                payload = Some(p);
+            }
+            break;
+        }
+    }
+    if let Some(p) = payload {
+        resume_unwind(p);
+    }
+    slots
+        .into_iter()
+        .map(|s| match s {
+            Some(Ok(v)) => v,
+            // unclaimed slots only exist after a recorded panic, which
+            // resume_unwind has already re-raised above
+            _ => unreachable!("pool job skipped without a recorded panic"),
+        })
+        .collect()
 }
 
 /// Default worker count for this host.
@@ -86,5 +119,46 @@ mod tests {
             .collect();
         let _ = run_parallel(8, jobs);
         assert_eq!(c.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn panicking_job_surfaces_as_panic_not_hang() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..16)
+            .map(|i| -> Box<dyn FnOnce() -> usize + Send> {
+                if i == 5 {
+                    Box::new(|| panic!("boom"))
+                } else {
+                    Box::new(move || i)
+                }
+            })
+            .collect();
+        let res = catch_unwind(AssertUnwindSafe(|| run_parallel(4, jobs)));
+        let payload = res.expect_err("worker panic must propagate to the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "boom", "original panic payload must survive");
+    }
+
+    #[test]
+    fn panic_propagates_on_single_worker_path_too() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![Box::new(|| panic!("solo"))];
+        assert!(catch_unwind(AssertUnwindSafe(|| run_parallel(1, jobs))).is_err());
+    }
+
+    #[test]
+    fn earliest_panic_wins_when_several_jobs_blow_up() {
+        // Every job panics with its index; input order decides the winner
+        // even though scheduling is nondeterministic.
+        let jobs: Vec<_> = (0..8)
+            .map(|i| move || -> usize { panic!("{i}") })
+            .collect();
+        let payload =
+            catch_unwind(AssertUnwindSafe(|| run_parallel(4, jobs))).expect_err("must panic");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        // the winning panic is whichever recorded slot has the lowest
+        // index; with 4 workers job 0 is always claimed, so it wins
+        assert_eq!(msg, "0");
     }
 }

@@ -1,5 +1,7 @@
 //! Integration tests over the full L3 stack: PJRT runtime + artifacts +
-//! federated engine. Requires `make artifacts` (the tiny preset).
+//! federated engine. Requires `make artifacts` (the tiny preset); on hosts
+//! without compiled HLO artifacts every test here skips with a notice
+//! instead of failing, so tier-1 `cargo test -q` stays green.
 
 use std::sync::Arc;
 
@@ -10,9 +12,12 @@ use droppeft::model::{BaseModel, TrainState};
 use droppeft::runtime::tensor::Value;
 use droppeft::runtime::Runtime;
 
-// The PJRT client is not Send/Sync (Rc internals in the xla crate), so
-// each test thread builds its own Runtime; compiled executables are
-// cached within the thread for the duration of the test.
+mod common;
+use common::require_artifacts;
+
+// Each test thread builds its own Runtime (historically the xla client
+// handles were not shareable; per-thread clients also keep the compile
+// caches isolated per test thread).
 thread_local! {
     static RT: std::cell::OnceCell<Arc<Runtime>> = const { std::cell::OnceCell::new() };
 }
@@ -78,6 +83,7 @@ fn train_inputs(
 
 #[test]
 fn runtime_executes_train_artifact_with_valid_outputs() {
+    require_artifacts!();
     let rt = runtime();
     let spec = rt.model("tiny").unwrap().clone();
     let base = BaseModel::init(&spec, 3);
@@ -96,6 +102,7 @@ fn runtime_executes_train_artifact_with_valid_outputs() {
 
 #[test]
 fn runtime_rejects_bad_shapes_and_unknown_artifacts() {
+    require_artifacts!();
     let rt = runtime();
     let spec = rt.model("tiny").unwrap().clone();
     let base = BaseModel::init(&spec, 3);
@@ -113,6 +120,7 @@ fn runtime_rejects_bad_shapes_and_unknown_artifacts() {
 
 #[test]
 fn repeated_steps_on_one_batch_overfit() {
+    require_artifacts!();
     let rt = runtime();
     let spec = rt.model("tiny").unwrap().clone();
     let base = BaseModel::init(&spec, 5);
@@ -143,6 +151,7 @@ fn repeated_steps_on_one_batch_overfit() {
 
 #[test]
 fn execution_is_deterministic() {
+    require_artifacts!();
     let rt = runtime();
     let spec = rt.model("tiny").unwrap().clone();
     let base = BaseModel::init(&spec, 7);
@@ -156,6 +165,7 @@ fn execution_is_deterministic() {
 
 #[test]
 fn engine_session_droppeft_produces_wellformed_records() {
+    require_artifacts!();
     let cfg = quick_cfg();
     let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
     let mut engine = Engine::new(cfg, runtime(), method).unwrap();
@@ -180,6 +190,7 @@ fn engine_session_droppeft_produces_wellformed_records() {
 
 #[test]
 fn engine_runs_every_method() {
+    require_artifacts!();
     for name in [
         "fedlora",
         "fedadapter",
@@ -203,6 +214,7 @@ fn engine_runs_every_method() {
 
 #[test]
 fn engine_sessions_are_reproducible() {
+    require_artifacts!();
     let mk = || {
         let cfg = quick_cfg();
         let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
@@ -221,6 +233,7 @@ fn engine_sessions_are_reproducible() {
 
 #[test]
 fn stld_reduces_simulated_round_time() {
+    require_artifacts!();
     // fixed dropout 0.6 must produce cheaper rounds than no dropout
     let run = |method_name: &str| {
         let mut cfg = quick_cfg();
@@ -244,6 +257,7 @@ fn stld_reduces_simulated_round_time() {
 
 #[test]
 fn checkpoint_roundtrip_through_engine_state() {
+    require_artifacts!();
     let cfg = quick_cfg();
     let method = methods::by_name("droppeft-lora", cfg.seed, 2).unwrap();
     let mut engine = Engine::new(cfg, runtime(), method).unwrap();
@@ -258,6 +272,7 @@ fn checkpoint_roundtrip_through_engine_state() {
 
 #[test]
 fn hetlora_masks_slow_device_ranks() {
+    require_artifacts!();
     let rt = runtime();
     let spec = rt.model("tiny").unwrap().clone();
     let mut state = TrainState::init(&spec, "lora", 11).unwrap();

@@ -1,0 +1,95 @@
+//! Parallel round executor determinism: the same seed must produce
+//! byte-identical session metrics no matter how many workers execute the
+//! client tasks. Planning and aggregation are sequential in selection
+//! order and every stochastic draw happens during planning, so
+//! `--workers 1` and `--workers 4` must agree bit-for-bit.
+//!
+//! Requires `make artifacts` (the tiny preset); skips with a notice when
+//! the compiled HLO artifacts are absent.
+
+use std::sync::Arc;
+
+use droppeft::fed::{Engine, FedConfig};
+use droppeft::methods;
+use droppeft::metrics::SessionResult;
+use droppeft::runtime::Runtime;
+
+mod common;
+use common::require_artifacts;
+
+fn run_with_workers(method: &str, workers: usize) -> SessionResult {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let runtime = Arc::new(Runtime::new(dir).expect("run `make artifacts` before cargo test"));
+    let mut cfg = FedConfig::quick("tiny", "mnli");
+    cfg.rounds = 4;
+    cfg.n_devices = 10;
+    cfg.devices_per_round = 4;
+    cfg.local_batches = 2;
+    cfg.samples = 400;
+    cfg.eval_every = 2;
+    cfg.eval_batches = 2;
+    cfg.lr = 5e-3;
+    cfg.eval_personalized = true;
+    cfg.workers = workers;
+    let method = methods::by_name(method, cfg.seed, cfg.rounds).unwrap();
+    let mut engine = Engine::new(cfg, runtime, method).unwrap();
+    engine.run().unwrap()
+}
+
+/// Bit-level comparison of two sessions' full `RoundRecord` streams
+/// (loss, traffic, accuracy, clock, energy, memory, arm labels).
+fn assert_identical(a: &SessionResult, b: &SessionResult) {
+    assert_eq!(a.records.len(), b.records.len(), "round count differs");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        let r = ra.round;
+        assert_eq!(ra.round, rb.round);
+        assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits(), "loss @{r}");
+        assert_eq!(ra.sim_secs.to_bits(), rb.sim_secs.to_bits(), "sim @{r}");
+        assert_eq!(ra.clock_secs.to_bits(), rb.clock_secs.to_bits(), "clock @{r}");
+        assert_eq!(
+            ra.active_frac.to_bits(),
+            rb.active_frac.to_bits(),
+            "active @{r}"
+        );
+        assert_eq!(ra.traffic_bytes, rb.traffic_bytes, "traffic @{r}");
+        assert_eq!(
+            ra.energy_j_mean.to_bits(),
+            rb.energy_j_mean.to_bits(),
+            "energy @{r}"
+        );
+        assert_eq!(
+            ra.mem_peak_mean.to_bits(),
+            rb.mem_peak_mean.to_bits(),
+            "mem @{r}"
+        );
+        assert_eq!(
+            ra.global_acc.map(f64::to_bits),
+            rb.global_acc.map(f64::to_bits),
+            "global acc @{r}"
+        );
+        assert_eq!(
+            ra.personalized_acc.map(f64::to_bits),
+            rb.personalized_acc.map(f64::to_bits),
+            "personalized acc @{r}"
+        );
+        assert_eq!(ra.arm, rb.arm, "bandit arm @{r}");
+    }
+}
+
+#[test]
+fn droppeft_workers_1_and_4_produce_identical_records() {
+    require_artifacts!();
+    let serial = run_with_workers("droppeft-lora", 1);
+    let parallel = run_with_workers("droppeft-lora", 4);
+    assert_identical(&serial, &parallel);
+}
+
+#[test]
+fn fedadaopt_workers_1_and_4_produce_identical_records() {
+    // a non-personalized method with frozen-layer resets exercises a
+    // different client-task path than DropPEFT
+    require_artifacts!();
+    let serial = run_with_workers("fedadaopt", 1);
+    let parallel = run_with_workers("fedadaopt", 4);
+    assert_identical(&serial, &parallel);
+}
