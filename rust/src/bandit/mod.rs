@@ -71,11 +71,39 @@ impl Arm {
 #[derive(Clone, Debug)]
 struct ArmState {
     arm: Arm,
-    /// latest observed reward (accuracy gain per second, Eq. 5)
+    /// 0.5/0.5 EMA of observed rewards (accuracy gain per second, Eq. 5)
     reward: f64,
     /// rounds since last evaluation (staleness)
     age: usize,
     evals: usize,
+}
+
+/// One candidate's exported state (session snapshots).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ArmRecord {
+    pub arm: Arm,
+    pub reward: f64,
+    pub age: usize,
+    pub evals: usize,
+}
+
+/// Complete serializable `Configurator` state: candidate pool with
+/// rewards/ages, schedule position, tuning parameters, and the private
+/// RNG stream. Captured by [`Configurator::export_state`] and restored
+/// by [`Configurator::from_state`] so a resumed session replays the
+/// exploration/exploitation schedule exactly.
+#[derive(Clone, Debug)]
+pub struct ConfiguratorState {
+    pub candidates: Vec<ArmRecord>,
+    /// true = Explore (pos = next candidate), false = Exploit (pos =
+    /// rounds left in the streak)
+    pub exploring: bool,
+    pub pos: usize,
+    pub n: usize,
+    pub eps: f64,
+    pub explore_interval: usize,
+    pub window: usize,
+    pub rng: crate::util::rng::RngState,
 }
 
 /// What the configurator tells the engine to run this round.
@@ -169,24 +197,38 @@ impl Configurator {
 
     /// Report the round's measured reward for the planned arm and advance
     /// the explore/exploit schedule.
+    ///
+    /// The reward update is a 0.5/0.5 EMA: recent observations dominate
+    /// (the favourable configuration drifts over the session — Fig. 7)
+    /// but a single noisy round cannot erase an arm's history. If the
+    /// planned arm is no longer in the candidate pool (possible after a
+    /// session resume or a prune that raced the round), it is re-inserted
+    /// with the observed reward — discarding the observation would throw
+    /// away a full round of training signal.
     pub fn feedback(&mut self, plan: &RoundPlan, reward: f64) {
         for c in self.candidates.iter_mut() {
             c.age += 1;
         }
-        if let Some(c) = self
+        match self
             .candidates
             .iter_mut()
             .find(|c| c.arm == plan.arm)
         {
-            // latest observation wins (the favourable config drifts over
-            // the session, so old rewards must not dominate — Fig. 7)
-            c.reward = if c.evals == 0 {
-                reward
-            } else {
-                0.5 * c.reward + 0.5 * reward
-            };
-            c.age = 0;
-            c.evals += 1;
+            Some(c) => {
+                c.reward = if c.evals == 0 {
+                    reward
+                } else {
+                    0.5 * c.reward + 0.5 * reward
+                };
+                c.age = 0;
+                c.evals += 1;
+            }
+            None => self.candidates.push(ArmState {
+                arm: plan.arm,
+                reward,
+                age: 0,
+                evals: 1,
+            }),
         }
 
         self.mode = match self.mode {
@@ -258,6 +300,63 @@ impl Configurator {
 
     pub fn is_exploring(&self) -> bool {
         matches!(self.mode, Mode::Explore { .. })
+    }
+
+    /// Capture the full state machine for a session snapshot.
+    pub fn export_state(&self) -> ConfiguratorState {
+        let (exploring, pos) = match self.mode {
+            Mode::Explore { next_candidate } => (true, next_candidate),
+            Mode::Exploit { rounds_left } => (false, rounds_left),
+        };
+        ConfiguratorState {
+            candidates: self
+                .candidates
+                .iter()
+                .map(|c| ArmRecord {
+                    arm: c.arm,
+                    reward: c.reward,
+                    age: c.age,
+                    evals: c.evals,
+                })
+                .collect(),
+            exploring,
+            pos,
+            n: self.n,
+            eps: self.eps,
+            explore_interval: self.explore_interval,
+            window: self.window,
+            rng: self.rng.export_state(),
+        }
+    }
+
+    /// Rebuild a configurator mid-session from an exported state.
+    pub fn from_state(state: ConfiguratorState) -> Configurator {
+        Configurator {
+            candidates: state
+                .candidates
+                .into_iter()
+                .map(|c| ArmState {
+                    arm: c.arm,
+                    reward: c.reward,
+                    age: c.age,
+                    evals: c.evals,
+                })
+                .collect(),
+            window: state.window,
+            n: state.n,
+            eps: state.eps,
+            explore_interval: state.explore_interval,
+            mode: if state.exploring {
+                Mode::Explore {
+                    next_candidate: state.pos,
+                }
+            } else {
+                Mode::Exploit {
+                    rounds_left: state.pos,
+                }
+            },
+            rng: Rng::from_state(state.rng),
+        }
     }
 }
 
@@ -367,6 +466,49 @@ mod tests {
             c.feedback(&plan, 0.5);
             assert!(c.candidates.len() <= 6);
             assert!(!c.candidates.is_empty());
+        }
+    }
+
+    #[test]
+    fn feedback_reinserts_unknown_arm() {
+        // an arm evicted from the pool (resume, pruning) must not lose
+        // its round's observation — it is re-inserted with the reward
+        let mut c = Configurator::with_params(5, 4, 0.25, 3, 8);
+        let foreign = Arm {
+            rates: [0.9, 0.8, 0.7],
+            shape: RateShape::Incremental,
+        };
+        assert!(c.candidates.iter().all(|s| s.arm != foreign));
+        let plan = RoundPlan {
+            arm: foreign,
+            exploring: true,
+        };
+        c.feedback(&plan, 1.25);
+        let s = c
+            .candidates
+            .iter()
+            .find(|s| s.arm == foreign)
+            .expect("observation dropped instead of re-inserted");
+        assert_eq!(s.reward, 1.25);
+        assert_eq!(s.evals, 1);
+        assert_eq!(s.age, 0);
+    }
+
+    #[test]
+    fn export_import_replays_schedule_exactly() {
+        let mut live = Configurator::with_params(11, 5, 0.34, 4, 10);
+        for _ in 0..17 {
+            let plan = live.plan();
+            live.feedback(&plan, env_reward(&plan.arm));
+        }
+        let mut resumed = Configurator::from_state(live.export_state());
+        for step in 0..40 {
+            let (a, b) = (live.plan(), resumed.plan());
+            assert_eq!(a.arm, b.arm, "arm diverged at step {step}");
+            assert_eq!(a.exploring, b.exploring, "mode diverged at step {step}");
+            let r = env_reward(&a.arm);
+            live.feedback(&a, r);
+            resumed.feedback(&b, r);
         }
     }
 

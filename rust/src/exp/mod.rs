@@ -32,6 +32,18 @@ pub struct Ctx {
     /// worker threads for device-parallel local training (does not affect
     /// results: identical seed => identical sessions at any count)
     pub workers: usize,
+    /// write a session snapshot every N rounds (0 = disabled)
+    pub snapshot_every: usize,
+    /// base directory for session snapshots; each session of a bundle
+    /// gets its own `session-NNN` subdirectory (bundle order is
+    /// deterministic, so a re-run maps sessions to the same subdirs)
+    pub snapshot_dir: Option<String>,
+    /// pending `--resume` snapshot (loaded once), consumed by the first
+    /// session whose method identity matches; every other session in
+    /// the experiment starts fresh
+    resume: std::cell::RefCell<Option<(String, crate::fed::SessionSnapshot)>>,
+    /// per-run session counter driving the snapshot subdirectories
+    session_seq: std::cell::Cell<usize>,
 }
 
 impl Ctx {
@@ -55,6 +67,8 @@ impl Ctx {
         }
         cfg.seed = self.seed;
         cfg.workers = self.workers;
+        cfg.snapshot_every = self.snapshot_every;
+        cfg.snapshot_dir = self.snapshot_dir.clone();
         cfg.eval_every = 2;
         // the tiny/small presets want a larger step than the paper's
         // full-size models (frozen random base, few trainables)
@@ -71,7 +85,7 @@ impl Ctx {
     ) -> Result<SessionResult> {
         let name = method.name();
         let t0 = std::time::Instant::now();
-        let mut engine = Engine::new(cfg, self.runtime.clone(), method)?;
+        let mut engine = self.build_engine(cfg, method)?;
         let r = engine.run()?;
         crate::info!(
             "session {name} done: final {:.1}% in {:.1}s host time",
@@ -79,6 +93,59 @@ impl Ctx {
             t0.elapsed().as_secs_f64()
         );
         Ok(r)
+    }
+
+    /// Start a session fresh, or resume it from `--resume` when the
+    /// pending snapshot matches this session's identity: method name,
+    /// dataset, preset, AND the method's option fingerprint
+    /// (`Method::snapshot_compatible`) — name alone cannot distinguish
+    /// the sessions of an option sweep like fig6a. The snapshot is
+    /// consumed by the first match, so later same-named sessions run
+    /// from round 0; the method itself is rebuilt from the snapshot's
+    /// factory key (`Engine::resume_snapshot`) so schedule-derived state
+    /// follows the snapshot's round count, not this experiment's.
+    fn build_engine(&self, mut cfg: FedConfig, method: Box<dyn Method>) -> Result<Engine> {
+        // one snapshot subdir per session so bundle sessions with the
+        // same method key cannot clobber each other's snapshot files
+        let seq = self.session_seq.get();
+        self.session_seq.set(seq + 1);
+        if cfg.snapshot_every > 0 {
+            let base = cfg
+                .snapshot_dir
+                .as_deref()
+                .unwrap_or(crate::fed::snapshot::DEFAULT_DIR);
+            cfg.snapshot_dir = Some(format!("{base}/session-{seq:03}"));
+        }
+
+        let matches = {
+            let pending = self.resume.borrow();
+            match pending.as_ref() {
+                Some((_, snap)) => {
+                    snap.method_name == method.name()
+                        && snap.cfg.dataset == cfg.dataset
+                        && snap.cfg.preset == cfg.preset
+                        && method.snapshot_compatible(&snap.method_blob)
+                }
+                None => false,
+            }
+        };
+        if matches {
+            let (path, mut snap) = self
+                .resume
+                .borrow_mut()
+                .take()
+                .expect("checked above: a pending snapshot matched");
+            crate::info!(
+                "resuming {} on {} from {path:?} ({} of {} rounds done)",
+                snap.method_name,
+                snap.cfg.dataset,
+                snap.next_round,
+                snap.cfg.rounds
+            );
+            snap.cfg.workers = self.workers.max(1);
+            return Engine::resume_snapshot(snap, self.runtime.clone());
+        }
+        Engine::new(cfg, self.runtime.clone(), method)
     }
 
     /// Persist an experiment report (markdown + optional JSON series).
@@ -100,6 +167,16 @@ pub fn run(args: &Args) -> Result<()> {
         .opt_str("id")
         .or_else(|| args.positionals.first().cloned())
         .unwrap_or_else(|| "all".to_string());
+    // load the --resume snapshot once up front; build_engine hands it to
+    // the first session whose identity matches
+    let resume = match args.opt_str("resume") {
+        Some(path) => {
+            let snap = crate::fed::snapshot::load(&path)
+                .with_context(|| format!("loading --resume snapshot {path:?}"))?;
+            Some((path, snap))
+        }
+        None => None,
+    };
     let ctx = Ctx {
         runtime: Arc::new(Runtime::new(args.str_or("artifacts", "artifacts"))?),
         out_dir: args.str_or("out", "results").into(),
@@ -109,9 +186,26 @@ pub fn run(args: &Args) -> Result<()> {
         workers: args
             .usize_or("workers", crate::util::pool::default_workers())?
             .max(1),
+        snapshot_every: args.usize_or("snapshot-every", 0)?,
+        snapshot_dir: args.opt_str("snapshot-dir"),
+        resume: std::cell::RefCell::new(resume),
+        session_seq: std::cell::Cell::new(0),
     };
     args.finish()?;
-    dispatch(&ctx, &id)
+    let result = dispatch(&ctx, &id);
+    // only meaningful when the experiment actually ran to completion:
+    // an early error may have stopped before the matching session
+    if result.is_ok() {
+        if let Some((path, snap)) = ctx.resume.borrow_mut().take() {
+            crate::info!(
+                "--resume {path:?} ({} on {}) matched no session in this \
+                 experiment; everything ran fresh",
+                snap.method_name,
+                snap.cfg.dataset
+            );
+        }
+    }
+    result
 }
 
 fn dispatch(ctx: &Ctx, id: &str) -> Result<()> {

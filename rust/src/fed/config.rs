@@ -35,6 +35,10 @@ pub struct FedConfig {
     /// memory / traffic are computed for this architecture, with the STLD
     /// active fraction mapped proportionally (semi-emulation, §6.1)
     pub cost_model: Option<String>,
+    /// write a session snapshot every N rounds (0 = disabled)
+    pub snapshot_every: usize,
+    /// directory for session snapshots (default "snapshots")
+    pub snapshot_dir: Option<String>,
 }
 
 impl FedConfig {
@@ -58,6 +62,8 @@ impl FedConfig {
             target_acc: None,
             workers: crate::util::pool::default_workers(),
             cost_model: None,
+            snapshot_every: 0,
+            snapshot_dir: None,
         }
     }
 }

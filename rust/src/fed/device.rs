@@ -17,6 +17,12 @@ pub struct DeviceInfo {
     pub n_samples: usize,
 }
 
+/// Snapshot contract (`fed::snapshot`): `shard`/`profile`/`mode`/
+/// `bandwidth` are static after `build_population` and are rebuilt from
+/// the config seed on resume; `rng`, `personal`, `last_shared`, and
+/// `participations` are the mutable session state a `DPEFTSN2` snapshot
+/// captures and `Engine::resume` patches back in. A new mutable field
+/// here must also be added to `DeviceSnapshot`.
 pub struct DeviceCtx {
     pub id: usize,
     pub shard: Shard,

@@ -10,10 +10,11 @@
 //! (semi-emulation, §6.1) while model quality is real; the same seed
 //! yields bit-identical results at any worker count.
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::data::{batch::eval_batches, gen, Batch, Dataset, TaskSpec};
 use crate::fed::client::{ClientCtx, ClientTask};
@@ -21,6 +22,7 @@ use crate::fed::config::FedConfig;
 use crate::fed::device::{self, DeviceCtx};
 use crate::fed::round::{self, LocalOutcome, RoundPlan};
 use crate::fed::server::{self, Server};
+use crate::fed::snapshot::{self, SessionSnapshot};
 use crate::metrics::{RoundRecord, SessionResult};
 use crate::methods::Method;
 use crate::model::{BaseModel, TrainState};
@@ -40,6 +42,10 @@ pub struct Engine {
     method: Box<dyn Method>,
     server: Server,
     rng: Rng,
+    /// per-round history so far (restored on snapshot resume)
+    records: Vec<RoundRecord>,
+    /// first round the next `run` call executes
+    next_round: usize,
 }
 
 impl Engine {
@@ -78,11 +84,109 @@ impl Engine {
             method,
             server: Server::new(global),
             rng,
+            records: Vec::new(),
+            next_round: 0,
         })
+    }
+
+    /// Rebuild a session mid-flight from a snapshot: all static state
+    /// (datasets, shards, device profiles, base model) is reconstructed
+    /// deterministically from the snapshot's config seed via
+    /// `Engine::new`, then every piece of mutable state is patched in.
+    /// The resumed session produces byte-identical `RoundRecord`s and
+    /// final model to one that never stopped
+    /// (`tests/resume_determinism.rs`).
+    pub fn resume(
+        snap: SessionSnapshot,
+        runtime: Arc<Runtime>,
+        method: Box<dyn Method>,
+    ) -> Result<Engine> {
+        let mut engine = Engine::new(snap.cfg.clone(), runtime, method)?;
+        engine
+            .method
+            .import_round_state(&snap.method_blob)
+            .context("restoring method round state")?;
+        // identity check AFTER the blob import: for methods whose name
+        // depends on restored options (DropPEFT ablation suffixes) the
+        // key rebuilds only the kind and the blob supplies the rest
+        anyhow::ensure!(
+            engine.method.name() == snap.method_name,
+            "snapshot was taken by {:?} but resuming with {:?}",
+            snap.method_name,
+            engine.method.name()
+        );
+        let fresh = engine.server.global();
+        anyhow::ensure!(
+            fresh.kind == snap.global.kind
+                && fresh.q == snap.global.q
+                && fresh.n_layers == snap.global.n_layers
+                && fresh.head.len() == snap.global.head.len(),
+            "snapshot global state ({} {}x{}, head {}) does not match preset {:?} \
+             ({} {}x{}, head {})",
+            snap.global.kind,
+            snap.global.n_layers,
+            snap.global.q,
+            snap.global.head.len(),
+            engine.cfg.preset,
+            fresh.kind,
+            fresh.n_layers,
+            fresh.q,
+            fresh.head.len()
+        );
+        engine.server = Server::resume(snap.global, snap.clock, snap.prev_acc);
+        engine.rng = Rng::from_state(snap.rng);
+        anyhow::ensure!(
+            engine.devices.len() == snap.devices.len(),
+            "snapshot has {} devices, rebuilt population has {}",
+            snap.devices.len(),
+            engine.devices.len()
+        );
+        for (dev, ds) in engine.devices.iter_mut().zip(snap.devices) {
+            anyhow::ensure!(dev.id == ds.id, "device id mismatch on resume");
+            dev.participations = ds.participations;
+            dev.last_shared = ds.last_shared;
+            dev.rng = Rng::from_state(ds.rng);
+            dev.personal = ds.personal;
+        }
+        engine.records = snap.records;
+        engine.next_round = snap.next_round;
+        Ok(engine)
+    }
+
+    /// Resume from an in-memory snapshot, rebuilding the method from the
+    /// stored factory key with the *snapshot's* seed and round count (a
+    /// caller-built method could carry a different session length and
+    /// silently skew schedule-derived state like FedAdaOPT's depth).
+    pub fn resume_snapshot(snap: SessionSnapshot, runtime: Arc<Runtime>) -> Result<Engine> {
+        let method = crate::methods::by_name(&snap.method_key, snap.cfg.seed, snap.cfg.rounds)
+            .with_context(|| {
+                format!("rebuilding method {:?} from snapshot", snap.method_key)
+            })?;
+        Engine::resume(snap, runtime, method)
+    }
+
+    /// Load a snapshot file and resume it. `workers` overrides the
+    /// snapshot's worker count (host-specific; never affects results).
+    pub fn resume_from_path(
+        path: impl AsRef<Path>,
+        runtime: Arc<Runtime>,
+        workers: Option<usize>,
+    ) -> Result<Engine> {
+        let mut snap = snapshot::load(path.as_ref())?;
+        if let Some(w) = workers {
+            snap.cfg.workers = w.max(1);
+        }
+        Engine::resume_snapshot(snap, runtime)
     }
 
     pub fn method_name(&self) -> String {
         self.method.name()
+    }
+
+    /// Rounds already executed (includes rounds restored from a
+    /// snapshot after a resume).
+    pub fn rounds_finished(&self) -> usize {
+        self.next_round
     }
 
     pub fn spec(&self) -> &ModelSpec {
@@ -100,18 +204,15 @@ impl Engine {
         }
     }
 
-    /// Run the full session.
+    /// Run the session (from the start, or from the restored round when
+    /// the engine was resumed from a snapshot).
     pub fn run(&mut self) -> Result<SessionResult> {
-        let mut result = SessionResult {
-            method: self.method.name(),
-            dataset: self.cfg.dataset.clone(),
-            preset: self.cfg.preset.clone(),
-            records: Vec::new(),
-        };
-        for round in 0..self.cfg.rounds {
+        for round in self.next_round..self.cfg.rounds {
             let rec = self.run_round(round)?;
             let acc = rec.personalized_acc.or(rec.global_acc);
-            result.records.push(rec);
+            self.records.push(rec);
+            self.next_round = round + 1;
+            self.maybe_snapshot()?;
             if let (Some(a), Some(t)) = (acc, self.cfg.target_acc) {
                 if a >= t {
                     crate::info!(
@@ -123,7 +224,62 @@ impl Engine {
                 }
             }
         }
-        Ok(result)
+        Ok(self.result())
+    }
+
+    /// The session result accumulated so far (on resume this includes
+    /// the rounds restored from the snapshot).
+    pub fn result(&self) -> SessionResult {
+        SessionResult {
+            method: self.method.name(),
+            dataset: self.cfg.dataset.clone(),
+            preset: self.cfg.preset.clone(),
+            records: self.records.clone(),
+        }
+    }
+
+    /// Persist a snapshot if `--snapshot-every` says this round ends an
+    /// interval. One file per snapshot round
+    /// (`<method-key>-<dataset>-r00006.snap`), each written atomically,
+    /// so a kill mid-save leaves every earlier snapshot intact.
+    fn maybe_snapshot(&self) -> Result<()> {
+        let every = self.cfg.snapshot_every;
+        if every == 0 || self.next_round % every != 0 {
+            return Ok(());
+        }
+        let dir = PathBuf::from(
+            self.cfg
+                .snapshot_dir
+                .as_deref()
+                .unwrap_or(snapshot::DEFAULT_DIR),
+        );
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating snapshot dir {dir:?}"))?;
+        let path = SessionSnapshot::path_in(
+            &dir,
+            &self.method.key(),
+            &self.cfg.dataset,
+            self.next_round,
+        );
+        // borrowed-state save: no deep clone of the global model, device
+        // personal states, or round history on the training hot path
+        snapshot::save_session(
+            &path,
+            &self.cfg,
+            &*self.method,
+            self.next_round,
+            self.server.clock_secs(),
+            self.server.prev_acc(),
+            self.server.global(),
+            &self.rng,
+            &self.devices,
+            &self.records,
+        )?;
+        crate::info!(
+            "snapshot after round {} -> {path:?}",
+            self.next_round
+        );
+        Ok(())
     }
 
     /// One federated round: plan sequentially, execute clients in
@@ -152,8 +308,11 @@ impl Engine {
         if round % self.cfg.eval_every == self.cfg.eval_every - 1 || last {
             rec.global_acc = Some(self.server.eval_global(&self.ctx(), &self.test_batches)?);
             if self.cfg.eval_personalized && self.method.personalized() {
+                // None when no selected device has personalized state
+                // yet — the field is skipped rather than recorded as a
+                // garbage mean over an empty set
                 rec.personalized_acc =
-                    Some(self.server.eval_personalized(&self.ctx(), &self.devices, &selected)?);
+                    self.server.eval_personalized(&self.ctx(), &self.devices, &selected)?;
             }
         }
         rec.host_secs = host_t0.elapsed().as_secs_f64();

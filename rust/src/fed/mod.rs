@@ -7,7 +7,9 @@
 //! - [`server`] — PTLS aggregation, bandit feedback, clock accounting,
 //!   periodic evaluation;
 //! - [`engine`] — the thin orchestrator tying the round loop together
-//!   (real XLA training + simulated wall-clock).
+//!   (real XLA training + simulated wall-clock);
+//! - [`snapshot`] — the versioned `DPEFTSN2` session snapshot format
+//!   behind `--snapshot-every` / `--resume` (kill-and-resume determinism).
 
 pub mod client;
 pub mod config;
@@ -15,6 +17,7 @@ pub mod device;
 pub mod engine;
 pub mod round;
 pub mod server;
+pub mod snapshot;
 
 pub use client::{ClientCtx, ClientTask};
 pub use config::FedConfig;
@@ -22,3 +25,4 @@ pub use device::{DeviceCtx, DeviceInfo};
 pub use engine::Engine;
 pub use round::{DevicePlan, LocalOutcome, RoundPlan};
 pub use server::Server;
+pub use snapshot::SessionSnapshot;

@@ -69,6 +69,16 @@ impl Server {
         }
     }
 
+    /// Rebuild a server mid-session (snapshot resume): restores the
+    /// global model, the simulated clock, and the bandit reward baseline.
+    pub fn resume(global: TrainState, clock: f64, prev_acc: f64) -> Server {
+        Server {
+            global,
+            clock,
+            prev_acc,
+        }
+    }
+
     pub fn global(&self) -> &TrainState {
         &self.global
     }
@@ -76,6 +86,11 @@ impl Server {
     /// Cumulative simulated clock (end of the last finished round).
     pub fn clock_secs(&self) -> f64 {
         self.clock
+    }
+
+    /// Previous round's mean local accuracy (bandit reward baseline).
+    pub fn prev_acc(&self) -> f64 {
+        self.prev_acc
     }
 
     /// Absorb a round's client outcomes: persist device-side session
@@ -151,13 +166,14 @@ impl Server {
         eval_state(ctx, &self.global, test_batches)
     }
 
-    /// Mean personalized accuracy over the given devices' local val sets.
+    /// Mean personalized accuracy over the given devices' local val sets,
+    /// or `None` when no selected device has personalized state yet.
     pub fn eval_personalized(
         &self,
         ctx: &ClientCtx<'_>,
         devices: &[DeviceCtx],
         device_ids: &[usize],
-    ) -> Result<f64> {
+    ) -> Result<Option<f64>> {
         let mut accs = Vec::new();
         for &d in device_ids {
             let dev = &devices[d];
@@ -167,6 +183,50 @@ impl Server {
                 accs.push(eval_state(ctx, state, &batches)?);
             }
         }
-        Ok(stats::mean(&accs))
+        Ok(personalized_mean(&accs))
+    }
+}
+
+/// Aggregate per-device personalized accuracies, skipping the metric
+/// entirely when none were measured: a mean over an empty set would
+/// report garbage into `RoundRecord.personalized_acc` (and, because
+/// personalized accuracy takes precedence over global in
+/// `SessionResult`, silently mask the real global accuracy).
+pub fn personalized_mean(accs: &[f64]) -> Option<f64> {
+    if accs.is_empty() {
+        None
+    } else {
+        Some(stats::mean(accs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_personalized_devices_reports_none_not_garbage() {
+        // first rounds: no device has trained yet — the metric must be
+        // skipped, not recorded as a 0.0/NaN mean over an empty set
+        assert_eq!(personalized_mean(&[]), None);
+        assert_eq!(personalized_mean(&[0.5, 0.7]), Some(0.6));
+    }
+
+    #[test]
+    fn none_personalized_falls_back_to_global_in_session_metrics() {
+        use crate::metrics::{RoundRecord, SessionResult};
+        let rec = RoundRecord {
+            round: 0,
+            global_acc: Some(0.42),
+            personalized_acc: None,
+            ..Default::default()
+        };
+        let s = SessionResult {
+            records: vec![rec],
+            ..Default::default()
+        };
+        // a Some(0.0) here (the old empty-mean bug) would report 0.0
+        assert_eq!(s.final_acc(), 0.42);
+        assert_eq!(s.best_acc(), 0.42);
     }
 }

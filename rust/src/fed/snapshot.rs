@@ -1,0 +1,443 @@
+//! Versioned session snapshot format (`DPEFTSN2`).
+//!
+//! A snapshot captures *everything* a federated session mutates between
+//! rounds, so a killed session can resume byte-identically (see
+//! `tests/resume_determinism.rs`): the full `FedConfig`, the global
+//! `TrainState`, the server clock and bandit reward baseline, every
+//! device's participation count / shared set / personalized state / RNG
+//! stream, the engine's selection RNG, the method's opaque round state
+//! (DropPEFT: the whole configurator state machine), and the accumulated
+//! `RoundRecord` history. Static session state (datasets, shards,
+//! hardware profiles, the frozen base model) is *not* stored — it is
+//! deterministically rebuilt from the config seed on resume and then
+//! patched with the mutable state recorded here.
+//!
+//! Files are written via `model::ckpt::atomic_write` (write `*.tmp`,
+//! fsync, rename), so a crash mid-save never corrupts the previous
+//! snapshot. Loading uses the bounded `model::ckpt::Reader`: corrupt
+//! length fields fail cleanly before any allocation. The legacy
+//! single-state `DPEFTCK1` checkpoint format remains loadable through
+//! `model::ckpt::load`.
+
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::fed::config::FedConfig;
+use crate::fed::device::DeviceCtx;
+use crate::methods::Method;
+use crate::metrics::RoundRecord;
+use crate::model::ckpt::{self, Reader, Writer};
+use crate::model::TrainState;
+use crate::util::rng::{Rng, RngState};
+
+pub const MAGIC: &[u8; 8] = b"DPEFTSN2";
+/// Bump when the section layout changes incompatibly.
+pub const FORMAT_VERSION: u64 = 1;
+/// Snapshot directory when `--snapshot-dir` is not given.
+pub const DEFAULT_DIR: &str = "snapshots";
+
+/// Per-device mutable session state (everything `fed::server` and the
+/// round planner touch on a `DeviceCtx` between rounds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSnapshot {
+    pub id: usize,
+    pub participations: usize,
+    pub last_shared: Vec<usize>,
+    pub rng: RngState,
+    pub personal: Option<TrainState>,
+}
+
+/// Complete mid-session state of a federated engine.
+#[derive(Clone, Debug)]
+pub struct SessionSnapshot {
+    pub cfg: FedConfig,
+    /// factory key (`methods::by_name`) that rebuilds the method
+    pub method_key: String,
+    /// display name, cross-checked against the rebuilt method on resume
+    pub method_name: String,
+    /// the method's opaque cross-round state (`Method::export_round_state`)
+    pub method_blob: Vec<u8>,
+    /// first round the resumed session will execute
+    pub next_round: usize,
+    /// simulated clock at capture time
+    pub clock: f64,
+    /// bandit reward baseline (previous round's mean local accuracy)
+    pub prev_acc: f64,
+    pub global: TrainState,
+    /// the engine's device-selection RNG stream
+    pub rng: RngState,
+    pub devices: Vec<DeviceSnapshot>,
+    /// per-round history accumulated so far
+    pub records: Vec<RoundRecord>,
+}
+
+impl SessionSnapshot {
+    /// Canonical per-round snapshot filename inside a snapshot dir, e.g.
+    /// `droppeft-lora-mnli-r00042.snap` after 42 finished rounds. The
+    /// method key and dataset make single-session (`train`) runs
+    /// self-describing; experiment bundles additionally place each
+    /// session in its own `session-NNN` subdirectory (`exp::Ctx`), since
+    /// an option sweep can repeat the same key and dataset.
+    pub fn file_name(method_key: &str, dataset: &str, rounds_finished: usize) -> String {
+        format!("{method_key}-{dataset}-r{rounds_finished:05}.snap")
+    }
+
+    pub fn path_in(
+        dir: &Path,
+        method_key: &str,
+        dataset: &str,
+        rounds_finished: usize,
+    ) -> PathBuf {
+        dir.join(Self::file_name(method_key, dataset, rounds_finished))
+    }
+}
+
+fn write_config<W: std::io::Write>(w: &mut Writer<W>, cfg: &FedConfig) -> Result<()> {
+    w.string(&cfg.preset)?;
+    w.string(&cfg.dataset)?;
+    w.u64(cfg.n_devices as u64)?;
+    w.u64(cfg.devices_per_round as u64)?;
+    w.u64(cfg.rounds as u64)?;
+    w.u64(cfg.local_batches as u64)?;
+    w.f64(cfg.lr)?;
+    w.f64(cfg.alpha)?;
+    w.u64(cfg.samples as u64)?;
+    w.u64(cfg.seed)?;
+    w.u64(cfg.eval_every as u64)?;
+    w.u64(cfg.eval_batches as u64)?;
+    w.bool(cfg.eval_personalized)?;
+    w.opt_f64(cfg.target_acc)?;
+    w.u64(cfg.workers as u64)?;
+    w.opt_string(cfg.cost_model.as_deref())?;
+    w.u64(cfg.snapshot_every as u64)?;
+    w.opt_string(cfg.snapshot_dir.as_deref())
+}
+
+fn read_config<R: Read>(r: &mut Reader<R>) -> Result<FedConfig> {
+    Ok(FedConfig {
+        preset: r.string()?,
+        dataset: r.string()?,
+        n_devices: r.u64()? as usize,
+        devices_per_round: r.u64()? as usize,
+        rounds: r.u64()? as usize,
+        local_batches: r.u64()? as usize,
+        lr: r.f64()?,
+        alpha: r.f64()?,
+        samples: r.u64()? as usize,
+        seed: r.u64()?,
+        eval_every: r.u64()? as usize,
+        eval_batches: r.u64()? as usize,
+        eval_personalized: r.bool()?,
+        target_acc: r.opt_f64()?,
+        workers: r.u64()? as usize,
+        cost_model: r.opt_string()?,
+        snapshot_every: r.u64()? as usize,
+        snapshot_dir: r.opt_string()?,
+    })
+}
+
+fn write_record<W: std::io::Write>(w: &mut Writer<W>, rec: &RoundRecord) -> Result<()> {
+    w.u64(rec.round as u64)?;
+    w.f64(rec.sim_secs)?;
+    w.f64(rec.clock_secs)?;
+    w.f64(rec.train_loss)?;
+    w.f64(rec.active_frac)?;
+    w.opt_f64(rec.global_acc)?;
+    w.opt_f64(rec.personalized_acc)?;
+    w.u64(rec.traffic_bytes)?;
+    w.f64(rec.energy_j_mean)?;
+    w.f64(rec.mem_peak_mean)?;
+    w.opt_string(rec.arm.as_deref())?;
+    w.f64(rec.host_secs)
+}
+
+fn read_record<R: Read>(r: &mut Reader<R>) -> Result<RoundRecord> {
+    Ok(RoundRecord {
+        round: r.u64()? as usize,
+        sim_secs: r.f64()?,
+        clock_secs: r.f64()?,
+        train_loss: r.f64()?,
+        active_frac: r.f64()?,
+        global_acc: r.opt_f64()?,
+        personalized_acc: r.opt_f64()?,
+        traffic_bytes: r.u64()?,
+        energy_j_mean: r.f64()?,
+        mem_peak_mean: r.f64()?,
+        arm: r.opt_string()?,
+        host_secs: r.f64()?,
+    })
+}
+
+/// Borrowed per-device view: both save paths (owned `SessionSnapshot`
+/// and the engine's live state) funnel through this, so the wire format
+/// has exactly one writer and the hot path never deep-clones model
+/// state.
+struct DeviceFields<'a> {
+    id: usize,
+    participations: usize,
+    last_shared: &'a [usize],
+    rng: RngState,
+    personal: Option<&'a TrainState>,
+}
+
+impl<'a> From<&'a DeviceSnapshot> for DeviceFields<'a> {
+    fn from(d: &'a DeviceSnapshot) -> DeviceFields<'a> {
+        DeviceFields {
+            id: d.id,
+            participations: d.participations,
+            last_shared: &d.last_shared,
+            rng: d.rng,
+            personal: d.personal.as_ref(),
+        }
+    }
+}
+
+impl<'a> From<&'a DeviceCtx> for DeviceFields<'a> {
+    fn from(d: &'a DeviceCtx) -> DeviceFields<'a> {
+        DeviceFields {
+            id: d.id,
+            participations: d.participations,
+            last_shared: &d.last_shared,
+            rng: d.rng.export_state(),
+            personal: d.personal.as_ref(),
+        }
+    }
+}
+
+fn write_device<W: std::io::Write>(w: &mut Writer<W>, d: &DeviceFields<'_>) -> Result<()> {
+    w.u64(d.id as u64)?;
+    w.u64(d.participations as u64)?;
+    let shared: Vec<u64> = d.last_shared.iter().map(|&l| l as u64).collect();
+    w.u64s(&shared)?;
+    ckpt::write_rng_state(w, &d.rng)?;
+    match d.personal {
+        None => w.u8(0),
+        Some(state) => {
+            w.u8(1)?;
+            ckpt::write_train_state(w, state)
+        }
+    }
+}
+
+fn read_device<R: Read>(r: &mut Reader<R>) -> Result<DeviceSnapshot> {
+    let id = r.u64()? as usize;
+    let participations = r.u64()? as usize;
+    let last_shared: Vec<usize> = r.u64s()?.into_iter().map(|l| l as usize).collect();
+    let rng = ckpt::read_rng_state(r)?;
+    let personal = match r.u8()? {
+        0 => None,
+        1 => Some(ckpt::read_train_state(r)?),
+        t => bail!("corrupt snapshot: personal-state tag {t}"),
+    };
+    Ok(DeviceSnapshot {
+        id,
+        participations,
+        last_shared,
+        rng,
+        personal,
+    })
+}
+
+/// Borrowed view of everything a snapshot serializes; the single wire
+/// writer both `save` (owned snapshot) and `save_session` (live engine
+/// state, no clones) drive.
+struct SessionFields<'a> {
+    cfg: &'a FedConfig,
+    method_key: String,
+    method_name: String,
+    method_blob: Vec<u8>,
+    next_round: usize,
+    clock: f64,
+    prev_acc: f64,
+    global: &'a TrainState,
+    rng: RngState,
+    devices: Vec<DeviceFields<'a>>,
+    records: &'a [RoundRecord],
+}
+
+fn write_session(path: &Path, s: &SessionFields<'_>) -> Result<()> {
+    ckpt::atomic_write(path, |w| {
+        w.raw(MAGIC)?;
+        w.u64(FORMAT_VERSION)?;
+        write_config(w, s.cfg)?;
+        w.string(&s.method_key)?;
+        w.string(&s.method_name)?;
+        w.bytes(&s.method_blob)?;
+        w.u64(s.next_round as u64)?;
+        w.f64(s.clock)?;
+        w.f64(s.prev_acc)?;
+        ckpt::write_train_state(w, s.global)?;
+        ckpt::write_rng_state(w, &s.rng)?;
+        w.u64(s.devices.len() as u64)?;
+        for d in &s.devices {
+            write_device(w, d)?;
+        }
+        w.u64(s.records.len() as u64)?;
+        for rec in s.records {
+            write_record(w, rec)?;
+        }
+        Ok(())
+    })
+    .with_context(|| format!("saving session snapshot {path:?}"))
+}
+
+/// Atomically persist an owned session snapshot
+/// (`write tmp → fsync → rename`).
+pub fn save(snap: &SessionSnapshot, path: impl AsRef<Path>) -> Result<()> {
+    write_session(
+        path.as_ref(),
+        &SessionFields {
+            cfg: &snap.cfg,
+            method_key: snap.method_key.clone(),
+            method_name: snap.method_name.clone(),
+            method_blob: snap.method_blob.clone(),
+            next_round: snap.next_round,
+            clock: snap.clock,
+            prev_acc: snap.prev_acc,
+            global: &snap.global,
+            rng: snap.rng,
+            devices: snap.devices.iter().map(DeviceFields::from).collect(),
+            records: &snap.records,
+        },
+    )
+}
+
+/// Hot-path save used by the engine's periodic snapshots: serializes
+/// straight from borrowed session state, so the global model, device
+/// personal states, and round history are never deep-cloned just to be
+/// written to disk.
+#[allow(clippy::too_many_arguments)]
+pub fn save_session(
+    path: &Path,
+    cfg: &FedConfig,
+    method: &dyn Method,
+    next_round: usize,
+    clock: f64,
+    prev_acc: f64,
+    global: &TrainState,
+    rng: &Rng,
+    devices: &[DeviceCtx],
+    records: &[RoundRecord],
+) -> Result<()> {
+    write_session(
+        path,
+        &SessionFields {
+            cfg,
+            method_key: method.key(),
+            method_name: method.name(),
+            method_blob: method.export_round_state(),
+            next_round,
+            clock,
+            prev_acc,
+            global,
+            rng: rng.export_state(),
+            devices: devices.iter().map(DeviceFields::from).collect(),
+            records,
+        },
+    )
+}
+
+/// Load and structurally validate a `DPEFTSN2` session snapshot.
+pub fn load(path: impl AsRef<Path>) -> Result<SessionSnapshot> {
+    let path = path.as_ref();
+    let mut r = ckpt::open_reader(path)?;
+    let mut magic = [0u8; 8];
+    r.raw(&mut magic)?;
+    if &magic == b"DPEFTCK1" {
+        bail!(
+            "{path:?} is a legacy DPEFTCK1 model checkpoint, not a session \
+             snapshot (load it with model::ckpt::load)"
+        );
+    }
+    if &magic != MAGIC {
+        bail!("not a droppeft session snapshot (bad magic)");
+    }
+    let version = r.u64()?;
+    if version != FORMAT_VERSION {
+        bail!("unsupported snapshot format version {version} (expected {FORMAT_VERSION})");
+    }
+    let cfg = read_config(&mut r)?;
+    let method_key = r.string()?;
+    let method_name = r.string()?;
+    let method_blob = r.bytes()?;
+    let next_round = r.u64()? as usize;
+    let clock = r.f64()?;
+    let prev_acc = r.f64()?;
+    let global = ckpt::read_train_state(&mut r)?;
+    let rng = ckpt::read_rng_state(&mut r)?;
+    let n_devices = r.u64()? as usize;
+    if n_devices != cfg.n_devices {
+        bail!(
+            "corrupt snapshot: {n_devices} device sections but config says {}",
+            cfg.n_devices
+        );
+    }
+    let mut devices = Vec::with_capacity(n_devices.min(1 << 20));
+    for i in 0..n_devices {
+        let d = read_device(&mut r)?;
+        if d.id != i {
+            bail!("corrupt snapshot: device section {i} has id {}", d.id);
+        }
+        // geometry checks up front: an out-of-range shared-layer index
+        // or a mismatched personal state would otherwise load cleanly
+        // and panic later inside the round download's row slicing
+        if let Some(&l) = d.last_shared.iter().find(|&&l| l >= global.n_layers) {
+            bail!(
+                "corrupt snapshot: device {i} shared layer {l} out of range \
+                 (model has {} layers)",
+                global.n_layers
+            );
+        }
+        if let Some(p) = &d.personal {
+            if p.q != global.q || p.n_layers != global.n_layers {
+                bail!(
+                    "corrupt snapshot: device {i} personal state {}x{} != global {}x{}",
+                    p.n_layers,
+                    p.q,
+                    global.n_layers,
+                    global.q
+                );
+            }
+            if p.head.len() != global.head.len() {
+                bail!(
+                    "corrupt snapshot: device {i} personal head len {} != global {}",
+                    p.head.len(),
+                    global.head.len()
+                );
+            }
+        }
+        devices.push(d);
+    }
+    let n_records = r.u64()? as usize;
+    if n_records > cfg.rounds.max(next_round) {
+        bail!(
+            "corrupt snapshot: {n_records} round records for a {}-round session",
+            cfg.rounds
+        );
+    }
+    let mut records = Vec::with_capacity(n_records.min(1 << 16));
+    for _ in 0..n_records {
+        records.push(read_record(&mut r)?);
+    }
+    if next_round > cfg.rounds {
+        bail!(
+            "corrupt snapshot: next_round {next_round} beyond session length {}",
+            cfg.rounds
+        );
+    }
+    Ok(SessionSnapshot {
+        cfg,
+        method_key,
+        method_name,
+        method_blob,
+        next_round,
+        clock,
+        prev_acc,
+        global,
+        rng,
+        devices,
+        records,
+    })
+}

@@ -41,9 +41,19 @@ USAGE:
                  [--workers N]   (device-parallel local training;
                                   default: host parallelism; same seed =>
                                   identical results at any N)
+                 [--snapshot-every N] [--snapshot-dir DIR]
+                                 (write an atomic session snapshot every
+                                  N rounds, default DIR: snapshots/)
+                 [--resume PATH] (resume a snapshotted session; session
+                                  settings come from the snapshot, only
+                                  --workers/--artifacts still apply;
+                                  results are byte-identical to an
+                                  uninterrupted run)
   droppeft exp <table1|fig2|fig3|fig6a|fig6b|fig7|table3|fig9|fig10|fig11|
                 fig12|fig13|fig14|fig15|all> [--quick] [--out results]
-                [--workers N]
+                [--workers N] [--snapshot-every N] [--snapshot-dir DIR]
+                [--resume PATH] (resumes the session matching the
+                                 snapshot's method/dataset; others fresh)
   droppeft inspect [--artifacts DIR]
 
 Methods: fedlora fedadapter fedhetlora fedadaopt
@@ -70,27 +80,50 @@ pub fn fed_config_from(args: &Args) -> Result<FedConfig> {
     }
     cfg.cost_model = args.opt_str("cost-model");
     cfg.workers = args.usize_or("workers", cfg.workers)?.max(1);
+    cfg.snapshot_every = args.usize_or("snapshot-every", 0)?;
+    cfg.snapshot_dir = args.opt_str("snapshot-dir");
     Ok(cfg)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // on --resume, session settings come from the snapshot; only the
+    // host-specific --workers (and --artifacts) still apply
+    let resume = args.opt_str("resume");
+    let workers_override = args.opt_usize("workers")?;
     let cfg = fed_config_from(args)?;
     let method_name = args.str_or("method", "droppeft-lora");
     let artifacts = args.str_or("artifacts", "artifacts");
     args.finish()?;
 
     let runtime = Arc::new(Runtime::new(&artifacts)?);
-    let method = methods::by_name(&method_name, cfg.seed, cfg.rounds)?;
-    droppeft::info!(
-        "training {} on {}/{} ({} devices, {} rounds, {} workers)",
-        method.name(),
-        cfg.preset,
-        cfg.dataset,
-        cfg.n_devices,
-        cfg.rounds,
-        cfg.workers
-    );
-    let mut engine = Engine::new(cfg, runtime.clone(), method)?;
+    let mut engine = match resume {
+        Some(path) => {
+            let engine = Engine::resume_from_path(&path, runtime.clone(), workers_override)?;
+            droppeft::info!(
+                "resumed {} on {}/{} from {path:?} ({} of {} rounds done, {} workers)",
+                engine.method_name(),
+                engine.cfg.preset,
+                engine.cfg.dataset,
+                engine.rounds_finished(),
+                engine.cfg.rounds,
+                engine.cfg.workers
+            );
+            engine
+        }
+        None => {
+            let method = methods::by_name(&method_name, cfg.seed, cfg.rounds)?;
+            droppeft::info!(
+                "training {} on {}/{} ({} devices, {} rounds, {} workers)",
+                method.name(),
+                cfg.preset,
+                cfg.dataset,
+                cfg.n_devices,
+                cfg.rounds,
+                cfg.workers
+            );
+            Engine::new(cfg, runtime.clone(), method)?
+        }
+    };
     let result = engine.run()?;
     println!("{}", result.table());
     println!(

@@ -48,6 +48,10 @@ impl Method for FedAdaOpt {
         "FedAdaOPT".into()
     }
 
+    fn key(&self) -> String {
+        "fedadaopt".into()
+    }
+
     fn kind(&self) -> &str {
         "adapter"
     }

@@ -10,9 +10,12 @@
 //! Ablations: `stld=false` => b1 (no dropout), `bandit=false` => b2
 //! (fixed rate), `ptls=false` => b3 (share everything, no personal state).
 
+use anyhow::{Context, Result};
+
 use super::{Method, SharePolicy};
-use crate::bandit::{Configurator, RoundPlan};
+use crate::bandit::{Arm, ArmRecord, Configurator, ConfiguratorState, RoundPlan};
 use crate::fed::device::DeviceInfo;
+use crate::model::ckpt::{read_rng_state, write_rng_state, Reader, Writer};
 use crate::stld::{DropoutConfig, RateShape};
 use crate::util::rng::Rng;
 
@@ -59,6 +62,91 @@ impl DropPeft {
             plan: None,
         }
     }
+
+    /// The option set, encoded as the blob's fixed-size prefix. Also the
+    /// session identity used by `snapshot_compatible`: two DropPEFT
+    /// sessions with the same name/dataset (e.g. a rate sweep of `-b2`
+    /// variants) differ exactly in these bytes.
+    fn encode_opts(&self) -> Result<Vec<u8>> {
+        let mut w = Writer::new(Vec::new());
+        w.bool(self.opts.stld)?;
+        w.bool(self.opts.bandit)?;
+        w.bool(self.opts.ptls)?;
+        w.f64(self.opts.fixed_rate)?;
+        w.u8(self.opts.fixed_shape.code())?;
+        w.f64(self.opts.share_fraction)?;
+        Ok(w.into_inner())
+    }
+
+    /// Serialize the cross-round state: the option set (so a resume via
+    /// the factory key reproduces custom option combinations exactly)
+    /// plus the full configurator state machine.
+    fn encode_round_state(&self) -> Result<Vec<u8>> {
+        let mut w = Writer::new(self.encode_opts()?);
+        let st = self.configurator.export_state();
+        w.u64(st.candidates.len() as u64)?;
+        for c in &st.candidates {
+            for r in c.arm.rates {
+                w.f64(r)?;
+            }
+            w.u8(c.arm.shape.code())?;
+            w.f64(c.reward)?;
+            w.u64(c.age as u64)?;
+            w.u64(c.evals as u64)?;
+        }
+        w.bool(st.exploring)?;
+        w.u64(st.pos as u64)?;
+        w.u64(st.n as u64)?;
+        w.f64(st.eps)?;
+        w.u64(st.explore_interval as u64)?;
+        w.u64(st.window as u64)?;
+        write_rng_state(&mut w, &st.rng)?;
+        Ok(w.into_inner())
+    }
+
+    fn decode_round_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut r = Reader::new(bytes, bytes.len() as u64);
+        self.opts.stld = r.bool()?;
+        self.opts.bandit = r.bool()?;
+        self.opts.ptls = r.bool()?;
+        self.opts.fixed_rate = r.f64()?;
+        self.opts.fixed_shape = RateShape::from_code(r.u8()?)
+            .context("snapshot: unknown rate-shape code")?;
+        self.opts.share_fraction = r.f64()?;
+        let n_candidates = r.u64()? as usize;
+        anyhow::ensure!(
+            (1..=1024).contains(&n_candidates),
+            "snapshot: implausible candidate count {n_candidates}"
+        );
+        let mut candidates = Vec::with_capacity(n_candidates);
+        for _ in 0..n_candidates {
+            let mut rates = [0.0f64; 3];
+            for x in rates.iter_mut() {
+                *x = r.f64()?;
+            }
+            let shape = RateShape::from_code(r.u8()?)
+                .context("snapshot: unknown rate-shape code")?;
+            candidates.push(ArmRecord {
+                arm: Arm { rates, shape },
+                reward: r.f64()?,
+                age: r.u64()? as usize,
+                evals: r.u64()? as usize,
+            });
+        }
+        let st = ConfiguratorState {
+            candidates,
+            exploring: r.bool()?,
+            pos: r.u64()? as usize,
+            n: r.u64()? as usize,
+            eps: r.f64()?,
+            explore_interval: r.u64()? as usize,
+            window: r.u64()? as usize,
+            rng: read_rng_state(&mut r)?,
+        };
+        self.configurator = Configurator::from_state(st);
+        self.plan = None;
+        Ok(())
+    }
 }
 
 impl Method for DropPeft {
@@ -71,6 +159,15 @@ impl Method for DropPeft {
         };
         let kind = if self.kind == "lora" { "LoRA" } else { "Adapter" };
         format!("DropPEFT({kind}){suffix}")
+    }
+
+    /// Key by PEFT kind only: the factory's ablation names (`-b1`..)
+    /// hardcode the lora kind, so keying on them would make adapter-kind
+    /// ablation snapshots unresumable. The ablation flags (and any
+    /// custom option combination) travel in the round-state blob, which
+    /// `import_round_state` applies after the key rebuilds the kind.
+    fn key(&self) -> String {
+        format!("droppeft-{}", self.kind)
     }
 
     fn kind(&self) -> &str {
@@ -135,6 +232,23 @@ impl Method for DropPeft {
             )
         })
     }
+
+    fn export_round_state(&self) -> Vec<u8> {
+        // writing into a Vec cannot fail
+        self.encode_round_state().expect("in-memory encode")
+    }
+
+    fn import_round_state(&mut self, bytes: &[u8]) -> Result<()> {
+        self.decode_round_state(bytes)
+            .context("restoring DropPEFT configurator state")
+    }
+
+    fn snapshot_compatible(&self, blob: &[u8]) -> bool {
+        match self.encode_opts() {
+            Ok(opts) => blob.len() >= opts.len() && blob[..opts.len()] == opts[..],
+            Err(_) => false,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -198,6 +312,113 @@ mod tests {
         );
         assert!(matches!(m.share_policy(12), SharePolicy::All));
         assert!(!m.personalized());
+    }
+
+    #[test]
+    fn round_state_roundtrip_replays_bandit() {
+        let mut live = DropPeft::new("lora", 21, DropPeftOptions::default());
+        let mut rng = Rng::seed_from(5);
+        for round in 0..14 {
+            live.begin_round(round);
+            let _ = live.dropout_for(round, &dev(Tier::Medium), 12, &mut rng);
+            live.end_round(0.1 * round as f64);
+        }
+        let blob = live.export_round_state();
+        // resume path: rebuild from the factory key, then import
+        let mut resumed = DropPeft::new("lora", 21, DropPeftOptions::default());
+        resumed.import_round_state(&blob).unwrap();
+        let mut rng_a = Rng::seed_from(9);
+        let mut rng_b = Rng::seed_from(9);
+        for round in 14..40 {
+            live.begin_round(round);
+            resumed.begin_round(round);
+            assert_eq!(live.arm_label(), resumed.arm_label(), "round {round}");
+            let a = live.dropout_for(round, &dev(Tier::Slow), 12, &mut rng_a);
+            let b = resumed.dropout_for(round, &dev(Tier::Slow), 12, &mut rng_b);
+            assert_eq!(a, b, "round {round}");
+            live.end_round(0.4);
+            resumed.end_round(0.4);
+        }
+    }
+
+    #[test]
+    fn import_rejects_truncated_blob() {
+        let live = DropPeft::new("lora", 3, DropPeftOptions::default());
+        let blob = live.export_round_state();
+        let mut resumed = DropPeft::new("lora", 3, DropPeftOptions::default());
+        for cut in 0..blob.len() {
+            assert!(
+                resumed.import_round_state(&blob[..cut]).is_err(),
+                "truncated blob of {cut} bytes imported"
+            );
+        }
+    }
+
+    #[test]
+    fn custom_options_survive_roundtrip() {
+        // exp-harness sessions use option combos the factory can't build;
+        // the blob must carry them so key-based resume is still exact
+        let opts = DropPeftOptions {
+            bandit: false,
+            fixed_rate: 0.35,
+            fixed_shape: RateShape::Decay,
+            share_fraction: 0.25,
+            ..Default::default()
+        };
+        let live = DropPeft::new("lora", 4, opts);
+        let blob = live.export_round_state();
+        let mut resumed = DropPeft::new("lora", 4, DropPeftOptions::default());
+        resumed.import_round_state(&blob).unwrap();
+        assert!(!resumed.opts.bandit);
+        assert_eq!(resumed.opts.fixed_rate, 0.35);
+        assert_eq!(resumed.opts.fixed_shape, RateShape::Decay);
+        assert_eq!(resumed.opts.share_fraction, 0.25);
+    }
+
+    #[test]
+    fn ablation_key_plus_blob_rebuilds_identity() {
+        // the key rebuilds only the kind; the blob restores the ablation
+        // flags — together they reproduce the exact method, adapter
+        // ablations included (a -b2 key would hardcode lora and fail)
+        for kind in ["lora", "adapter"] {
+            let live = DropPeft::new(
+                kind,
+                5,
+                DropPeftOptions {
+                    bandit: false,
+                    ..Default::default()
+                },
+            );
+            assert_eq!(live.key(), format!("droppeft-{kind}"));
+            let blob = live.export_round_state();
+            let mut rebuilt = DropPeft::new(kind, 5, DropPeftOptions::default());
+            rebuilt.import_round_state(&blob).unwrap();
+            assert_eq!(rebuilt.name(), live.name());
+        }
+    }
+
+    #[test]
+    fn snapshot_compatible_distinguishes_sweep_variants() {
+        // fig6a-style sweep: same name/kind, different fixed_rate — only
+        // the matching variant may claim the snapshot
+        let mk = |rate: f64| {
+            DropPeft::new(
+                "lora",
+                1,
+                DropPeftOptions {
+                    bandit: false,
+                    fixed_rate: rate,
+                    ..Default::default()
+                },
+            )
+        };
+        let snap_owner = mk(0.5);
+        let blob = snap_owner.export_round_state();
+        assert!(mk(0.5).snapshot_compatible(&blob));
+        assert!(!mk(0.0).snapshot_compatible(&blob));
+        assert!(!mk(0.8).snapshot_compatible(&blob));
+        // truncated garbage never matches
+        assert!(!mk(0.5).snapshot_compatible(&blob[..3]));
     }
 
     #[test]

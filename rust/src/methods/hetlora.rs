@@ -74,6 +74,10 @@ impl Method for FedHetLora {
         "FedHetLoRA".into()
     }
 
+    fn key(&self) -> String {
+        "fedhetlora".into()
+    }
+
     fn kind(&self) -> &str {
         "lora"
     }

@@ -42,6 +42,10 @@ pub enum SharePolicy {
 pub trait Method: Send + Sync {
     fn name(&self) -> String;
 
+    /// Canonical factory key (`methods::by_name`) used to rebuild this
+    /// method when a session snapshot is resumed.
+    fn key(&self) -> String;
+
     /// PEFT kind: "lora" | "adapter".
     fn kind(&self) -> &str;
 
@@ -97,6 +101,37 @@ pub trait Method: Send + Sync {
     /// Current bandit arm label for metrics (None when not adaptive).
     fn arm_label(&self) -> Option<String> {
         None
+    }
+
+    /// Opaque adaptive round state for session snapshots (empty =
+    /// stateless between rounds). Captured between rounds, after
+    /// `end_round`; methods whose cross-round state is fully derived
+    /// from the round index (e.g. progressive schedules) need not
+    /// serialize anything.
+    fn export_round_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore state produced by [`Method::export_round_state`] on the
+    /// same method configuration.
+    fn import_round_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            bytes.is_empty(),
+            "{} is stateless but the snapshot carries {} bytes of method state",
+            self.name(),
+            bytes.len()
+        );
+        Ok(())
+    }
+
+    /// Does a snapshot's round-state blob belong to a session configured
+    /// like this method? Name/dataset alone cannot distinguish sessions
+    /// of an experiment sweep that vary only an option (e.g. fig6a's
+    /// fixed-rate `-b2` variants); methods with such options compare
+    /// their encoded-option prefix here. Stateless methods match any
+    /// blob of theirs (which is empty).
+    fn snapshot_compatible(&self, _blob: &[u8]) -> bool {
+        true
     }
 }
 
@@ -164,6 +199,12 @@ mod tests {
             let m = by_name(name, 1, 50).unwrap();
             assert!(!m.name().is_empty());
             assert!(m.kind() == "lora" || m.kind() == "adapter");
+            // the snapshot resume path rebuilds methods from their key:
+            // every key must be a valid factory name of the same PEFT
+            // kind (ablation flags travel in the round-state blob, so
+            // the -b1/-b2/-b3 keys collapse to the kind key)
+            let rebuilt = by_name(&m.key(), 1, 50).unwrap();
+            assert_eq!(rebuilt.kind(), m.kind(), "{name}: key lost the kind");
         }
         assert!(by_name("bogus", 1, 50).is_err());
     }

@@ -28,6 +28,13 @@ impl Method for FedVanilla {
         }
     }
 
+    fn key(&self) -> String {
+        match self.kind.as_str() {
+            "lora" => "fedlora".into(),
+            _ => "fedadapter".into(),
+        }
+    }
+
     fn kind(&self) -> &str {
         &self.kind
     }

@@ -1,6 +1,19 @@
-//! Checkpoint serialization for `TrainState` (simple length-prefixed
-//! binary format; no serde offline). Used by the examples to resume
-//! federated sessions and by tests for round-trip invariants.
+//! Checkpoint / snapshot wire format (simple length-prefixed binary; no
+//! serde offline).
+//!
+//! Two layers live here:
+//!
+//! - [`Writer`] / [`Reader`]: the shared primitives — little-endian
+//!   scalars, length-prefixed strings and vectors, and option tags. The
+//!   reader is *bounded*: every length prefix is validated against the
+//!   bytes actually remaining in the input before anything is allocated,
+//!   so a corrupt length field produces a clean `Err` instead of a
+//!   multi-GiB allocation.
+//! - The legacy single-`TrainState` checkpoint (`DPEFTCK1` magic,
+//!   `save`/`load`), kept byte-compatible. The full-session snapshot
+//!   format (`DPEFTSN2`) in `fed::snapshot` is built from the same
+//!   primitives and embeds `TrainState` sections via
+//!   [`write_train_state`] / [`read_train_state`].
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -11,41 +24,296 @@ use super::store::TrainState;
 
 const MAGIC: &[u8; 8] = b"DPEFTCK1";
 
-fn write_vec(w: &mut impl Write, v: &[f32]) -> Result<()> {
-    w.write_all(&(v.len() as u64).to_le_bytes())?;
-    for x in v {
-        w.write_all(&x.to_le_bytes())?;
+/// Longest accepted string section (kind names, labels, paths).
+pub const MAX_STRING: u64 = 4096;
+
+/// Binary writer over the shared wire primitives.
+pub struct Writer<W: Write> {
+    w: W,
+}
+
+impl<W: Write> Writer<W> {
+    pub fn new(w: W) -> Writer<W> {
+        Writer { w }
     }
+
+    pub fn raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.w.write_all(bytes)?;
+        Ok(())
+    }
+
+    pub fn u8(&mut self, v: u8) -> Result<()> {
+        self.raw(&[v])
+    }
+
+    pub fn bool(&mut self, v: bool) -> Result<()> {
+        self.u8(v as u8)
+    }
+
+    pub fn u64(&mut self, v: u64) -> Result<()> {
+        self.raw(&v.to_le_bytes())
+    }
+
+    pub fn f64(&mut self, v: f64) -> Result<()> {
+        self.raw(&v.to_le_bytes())
+    }
+
+    pub fn opt_f64(&mut self, v: Option<f64>) -> Result<()> {
+        match v {
+            None => self.u8(0),
+            Some(x) => {
+                self.u8(1)?;
+                self.f64(x)
+            }
+        }
+    }
+
+    pub fn string(&mut self, s: &str) -> Result<()> {
+        // mirror the reader's cap: an oversized string must fail fast at
+        // save time, not produce a file that can never be loaded
+        if s.len() as u64 > MAX_STRING {
+            bail!("string section of {} bytes exceeds MAX_STRING", s.len());
+        }
+        self.u64(s.len() as u64)?;
+        self.raw(s.as_bytes())
+    }
+
+    pub fn opt_string(&mut self, s: Option<&str>) -> Result<()> {
+        match s {
+            None => self.u8(0),
+            Some(s) => {
+                self.u8(1)?;
+                self.string(s)
+            }
+        }
+    }
+
+    /// Length-prefixed opaque byte section.
+    pub fn bytes(&mut self, b: &[u8]) -> Result<()> {
+        self.u64(b.len() as u64)?;
+        self.raw(b)
+    }
+
+    pub fn f32s(&mut self, v: &[f32]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        let mut buf = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self.raw(&buf)
+    }
+
+    pub fn u64s(&mut self, v: &[u64]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        for x in v {
+            self.u64(*x)?;
+        }
+        Ok(())
+    }
+
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+}
+
+/// Bounded binary reader: tracks the bytes remaining in the input and
+/// rejects any section whose declared length exceeds them *before*
+/// allocating, so truncated or corrupt files fail cleanly.
+pub struct Reader<R: Read> {
+    r: R,
+    remaining: u64,
+}
+
+impl<R: Read> Reader<R> {
+    /// `total_bytes` is the input size still ahead of `r` (file length,
+    /// or slice length for in-memory sections).
+    pub fn new(r: R, total_bytes: u64) -> Reader<R> {
+        Reader {
+            r,
+            remaining: total_bytes,
+        }
+    }
+
+    pub fn remaining(&self) -> u64 {
+        self.remaining
+    }
+
+    fn claim(&mut self, n: u64) -> Result<()> {
+        if n > self.remaining {
+            bail!(
+                "corrupt file: section of {n} bytes exceeds the {} bytes remaining",
+                self.remaining
+            );
+        }
+        self.remaining -= n;
+        Ok(())
+    }
+
+    pub fn raw(&mut self, out: &mut [u8]) -> Result<()> {
+        self.claim(out.len() as u64)?;
+        self.r.read_exact(out).context("unexpected end of file")?;
+        Ok(())
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.raw(&mut b)?;
+        Ok(b[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            t => bail!("corrupt file: bool tag {t}"),
+        }
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.raw(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        let mut b = [0u8; 8];
+        self.raw(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+
+    pub fn opt_f64(&mut self) -> Result<Option<f64>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64()?)),
+            t => bail!("corrupt file: option tag {t}"),
+        }
+    }
+
+    pub fn string(&mut self) -> Result<String> {
+        let n = self.u64()?;
+        if n > MAX_STRING {
+            bail!("corrupt file: string of {n} bytes");
+        }
+        let mut b = vec![0u8; n as usize];
+        self.raw(&mut b)?;
+        String::from_utf8(b).context("string section not utf-8")
+    }
+
+    pub fn opt_string(&mut self) -> Result<Option<String>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.string()?)),
+            t => bail!("corrupt file: option tag {t}"),
+        }
+    }
+
+    /// Length-prefixed opaque byte section (bounded by remaining input).
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u64()?;
+        self.claim(n)?;
+        let mut b = vec![0u8; n as usize];
+        self.r.read_exact(&mut b).context("unexpected end of file")?;
+        Ok(b)
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()?;
+        self.claim(n.saturating_mul(4))?;
+        let mut bytes = vec![0u8; (n as usize) * 4];
+        self.r
+            .read_exact(&mut bytes)
+            .context("unexpected end of file")?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.u64()?;
+        self.claim(n.saturating_mul(8))?;
+        let mut out = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            let mut b = [0u8; 8];
+            self.r.read_exact(&mut b).context("unexpected end of file")?;
+            out.push(u64::from_le_bytes(b));
+        }
+        Ok(out)
+    }
+}
+
+/// Open a bounded reader over a file (budget = file size on disk).
+pub fn open_reader(path: &Path) -> Result<Reader<std::io::BufReader<std::fs::File>>> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let total = f
+        .metadata()
+        .with_context(|| format!("stat {path:?}"))?
+        .len();
+    Ok(Reader::new(std::io::BufReader::new(f), total))
+}
+
+/// Write `body` to `path.tmp` then atomically rename over `path`, so a
+/// crash mid-save can never corrupt the previous snapshot at `path`.
+pub fn atomic_write(
+    path: &Path,
+    body: impl FnOnce(&mut Writer<std::io::BufWriter<std::fs::File>>) -> Result<()>,
+) -> Result<()> {
+    let tmp = match path.file_name().and_then(|n| n.to_str()) {
+        Some(name) => path.with_file_name(format!("{name}.tmp")),
+        None => bail!("invalid snapshot path {path:?}"),
+    };
+    let write = || -> Result<()> {
+        let f =
+            std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+        let mut w = Writer::new(std::io::BufWriter::new(f));
+        body(&mut w)?;
+        let f = w
+            .into_inner()
+            .into_inner()
+            .map_err(|e| anyhow::anyhow!("flushing {tmp:?}: {e}"))?;
+        f.sync_all().with_context(|| format!("syncing {tmp:?}"))?;
+        Ok(())
+    };
+    if let Err(e) = write() {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {tmp:?} over {path:?}"))?;
     Ok(())
 }
 
-fn read_vec(r: &mut impl Read) -> Result<Vec<f32>> {
-    let mut len8 = [0u8; 8];
-    r.read_exact(&mut len8)?;
-    let n = u64::from_le_bytes(len8) as usize;
-    if n > (1usize << 31) {
-        bail!("checkpoint section too large ({n} elements)");
+/// Serialize an RNG stream state (engine, device, and configurator
+/// streams all use the same section layout).
+pub fn write_rng_state<W: Write>(
+    w: &mut Writer<W>,
+    st: &crate::util::rng::RngState,
+) -> Result<()> {
+    for x in st.s {
+        w.u64(x)?;
     }
-    let mut bytes = vec![0u8; n * 4];
-    r.read_exact(&mut bytes)?;
-    Ok(bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
+    w.opt_f64(st.gauss_spare)
 }
 
-pub fn save(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path.as_ref())
-            .with_context(|| format!("creating {:?}", path.as_ref()))?,
-    );
-    f.write_all(MAGIC)?;
-    let kind = state.kind.as_bytes();
-    f.write_all(&(kind.len() as u64).to_le_bytes())?;
-    f.write_all(kind)?;
-    f.write_all(&(state.q as u64).to_le_bytes())?;
-    f.write_all(&(state.n_layers as u64).to_le_bytes())?;
-    f.write_all(&state.step.to_le_bytes())?;
+/// Deserialize an RNG stream state.
+pub fn read_rng_state<R: Read>(r: &mut Reader<R>) -> Result<crate::util::rng::RngState> {
+    let mut s = [0u64; 4];
+    for x in s.iter_mut() {
+        *x = r.u64()?;
+    }
+    Ok(crate::util::rng::RngState {
+        s,
+        gauss_spare: r.opt_f64()?,
+    })
+}
+
+/// Serialize a `TrainState` section (legacy `DPEFTCK1` body layout; also
+/// embedded by the `DPEFTSN2` session snapshot).
+pub fn write_train_state<W: Write>(w: &mut Writer<W>, state: &TrainState) -> Result<()> {
+    w.string(&state.kind)?;
+    w.u64(state.q as u64)?;
+    w.u64(state.n_layers as u64)?;
+    w.u64(state.step)?;
     for v in [
         &state.peft,
         &state.opt_m,
@@ -54,46 +322,51 @@ pub fn save(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
         &state.head_m,
         &state.head_v,
     ] {
-        write_vec(&mut f, v)?;
+        w.f32s(v)?;
     }
     Ok(())
 }
 
-pub fn load(path: impl AsRef<Path>) -> Result<TrainState> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path.as_ref())
-            .with_context(|| format!("opening {:?}", path.as_ref()))?,
-    );
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("not a droppeft checkpoint (bad magic)");
+/// Deserialize and validate a `TrainState` section: all six vectors must
+/// be mutually consistent (`peft`/`opt_m`/`opt_v` of length `q*L`,
+/// `head_m`/`head_v` matching `head`) — a mismatched optimizer section
+/// would otherwise load silently and corrupt Adam updates downstream.
+pub fn read_train_state<R: Read>(r: &mut Reader<R>) -> Result<TrainState> {
+    let kind = r.string()?;
+    if kind.len() > 64 {
+        bail!("corrupt checkpoint (kind length {})", kind.len());
     }
-    let mut len8 = [0u8; 8];
-    f.read_exact(&mut len8)?;
-    let klen = u64::from_le_bytes(len8) as usize;
-    if klen > 64 {
-        bail!("corrupt checkpoint (kind length {klen})");
+    let q = r.u64()? as usize;
+    let n_layers = r.u64()? as usize;
+    let step = r.u64()?;
+    let peft = r.f32s()?;
+    let opt_m = r.f32s()?;
+    let opt_v = r.f32s()?;
+    let head = r.f32s()?;
+    let head_m = r.f32s()?;
+    let head_v = r.f32s()?;
+    let expect = q
+        .checked_mul(n_layers)
+        .ok_or_else(|| anyhow::anyhow!("corrupt checkpoint: q*L overflows"))?;
+    for (name, len) in [
+        ("peft", peft.len()),
+        ("opt_m", opt_m.len()),
+        ("opt_v", opt_v.len()),
+    ] {
+        if len != expect {
+            bail!("corrupt checkpoint: {name} len {len} != q*L {expect}");
+        }
     }
-    let mut kind = vec![0u8; klen];
-    f.read_exact(&mut kind)?;
-    f.read_exact(&mut len8)?;
-    let q = u64::from_le_bytes(len8) as usize;
-    f.read_exact(&mut len8)?;
-    let n_layers = u64::from_le_bytes(len8) as usize;
-    f.read_exact(&mut len8)?;
-    let step = u64::from_le_bytes(len8);
-    let peft = read_vec(&mut f)?;
-    let opt_m = read_vec(&mut f)?;
-    let opt_v = read_vec(&mut f)?;
-    let head = read_vec(&mut f)?;
-    let head_m = read_vec(&mut f)?;
-    let head_v = read_vec(&mut f)?;
-    if peft.len() != q * n_layers {
-        bail!("corrupt checkpoint: peft len {} != q*L {}", peft.len(), q * n_layers);
+    for (name, len) in [("head_m", head_m.len()), ("head_v", head_v.len())] {
+        if len != head.len() {
+            bail!(
+                "corrupt checkpoint: {name} len {len} != head len {}",
+                head.len()
+            );
+        }
     }
     Ok(TrainState {
-        kind: String::from_utf8(kind).context("kind not utf-8")?,
+        kind,
         q,
         n_layers,
         peft,
@@ -104,6 +377,25 @@ pub fn load(path: impl AsRef<Path>) -> Result<TrainState> {
         head_v,
         step,
     })
+}
+
+/// Save a single `TrainState` in the legacy `DPEFTCK1` format.
+pub fn save(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
+    atomic_write(path.as_ref(), |w| {
+        w.raw(MAGIC)?;
+        write_train_state(w, state)
+    })
+}
+
+/// Load a legacy `DPEFTCK1` checkpoint.
+pub fn load(path: impl AsRef<Path>) -> Result<TrainState> {
+    let mut r = open_reader(path.as_ref())?;
+    let mut magic = [0u8; 8];
+    r.raw(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a droppeft checkpoint (bad magic)");
+    }
+    read_train_state(&mut r)
 }
 
 #[cfg(test)]
@@ -125,11 +417,15 @@ mod tests {
         }
     }
 
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("droppeft_ckpt_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn roundtrip() {
-        let dir = std::env::temp_dir().join("droppeft_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("s.ckpt");
+        let path = tmpdir("rt").join("s.ckpt");
         let s = dummy_state();
         save(&s, &path).unwrap();
         let t = load(&path).unwrap();
@@ -138,10 +434,95 @@ mod tests {
 
     #[test]
     fn rejects_bad_magic() {
-        let dir = std::env::temp_dir().join("droppeft_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.ckpt");
+        let path = tmpdir("magic").join("bad.ckpt");
         std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxx").unwrap();
         assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_mismatched_optimizer_sections() {
+        // every one of the six sections is validated, not just peft
+        let dir = tmpdir("optlen");
+        for (i, field) in ["opt_m", "opt_v", "head_m", "head_v"].iter().enumerate() {
+            let mut s = dummy_state();
+            match *field {
+                "opt_m" => {
+                    s.opt_m.pop();
+                }
+                "opt_v" => s.opt_v.push(0.0),
+                "head_m" => {
+                    s.head_m.pop();
+                }
+                _ => {
+                    s.head_v.pop();
+                }
+            };
+            let path = dir.join(format!("bad{i}.ckpt"));
+            // bypass TrainState invariants: write raw sections directly
+            atomic_write(&path, |w| {
+                w.raw(MAGIC)?;
+                w.string(&s.kind)?;
+                w.u64(s.q as u64)?;
+                w.u64(s.n_layers as u64)?;
+                w.u64(s.step)?;
+                for v in [&s.peft, &s.opt_m, &s.opt_v, &s.head, &s.head_m, &s.head_v] {
+                    w.f32s(v)?;
+                }
+                Ok(())
+            })
+            .unwrap();
+            let err = load(&path).expect_err(field);
+            assert!(
+                err.to_string().contains("corrupt checkpoint"),
+                "{field}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_length_field_fails_before_allocating() {
+        // a corrupt length just under the old 1<<31 guard used to trigger
+        // an ~8 GiB allocation; the bounded reader rejects it against the
+        // actual file size instead
+        let path = tmpdir("huge").join("huge.ckpt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&4u64.to_le_bytes());
+        bytes.extend_from_slice(b"lora");
+        bytes.extend_from_slice(&4u64.to_le_bytes()); // q
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // n_layers
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // step
+        bytes.extend_from_slice(&(((1u64 << 31) - 1).to_le_bytes())); // peft "len"
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn truncated_files_error_cleanly() {
+        let dir = tmpdir("trunc");
+        let path = dir.join("full.ckpt");
+        save(&dummy_state(), &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // every strict prefix must fail with Err, never panic
+        for cut in 0..full.len() {
+            let p = dir.join("cut.ckpt");
+            std::fs::write(&p, &full[..cut]).unwrap();
+            assert!(load(&p).is_err(), "prefix of {cut} bytes loaded");
+        }
+    }
+
+    #[test]
+    fn atomic_write_leaves_no_tmp_and_survives_body_error() {
+        let dir = tmpdir("atomic");
+        let path = dir.join("a.ckpt");
+        save(&dummy_state(), &path).unwrap();
+        assert!(!dir.join("a.ckpt.tmp").exists());
+        // a failing body must not clobber the existing file
+        let before = std::fs::read(&path).unwrap();
+        let r: Result<()> = atomic_write(&path, |_| anyhow::bail!("boom"));
+        assert!(r.is_err());
+        assert!(!dir.join("a.ckpt.tmp").exists());
+        assert_eq!(std::fs::read(&path).unwrap(), before);
     }
 }

@@ -24,6 +24,29 @@ pub enum RateShape {
     Normal,
 }
 
+impl RateShape {
+    /// Stable wire code (session snapshots).
+    pub fn code(self) -> u8 {
+        match self {
+            RateShape::Uniform => 0,
+            RateShape::Decay => 1,
+            RateShape::Incremental => 2,
+            RateShape::Normal => 3,
+        }
+    }
+
+    /// Inverse of [`RateShape::code`]; `None` for unknown codes.
+    pub fn from_code(code: u8) -> Option<RateShape> {
+        match code {
+            0 => Some(RateShape::Uniform),
+            1 => Some(RateShape::Decay),
+            2 => Some(RateShape::Incremental),
+            3 => Some(RateShape::Normal),
+            _ => None,
+        }
+    }
+}
+
 /// Per-layer dropout-rate configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DropoutConfig {
@@ -31,6 +54,46 @@ pub struct DropoutConfig {
 }
 
 pub const MAX_RATE: f64 = 0.95;
+
+/// Clamp every rate into `[0, MAX_RATE]` and redistribute the clamped
+/// mass across the layers that still have headroom, preserving the
+/// configured average. Plain clamping silently loses mass whenever a
+/// shape's peak exceeds `MAX_RATE` (Incremental/Decay with
+/// `avg > MAX_RATE/2` peak at `2*avg`) and *adds* mass when `Normal`
+/// draws below zero — either way the realized average drifts from the
+/// one the configurator chose. Converges because the target sum
+/// `avg * L < MAX_RATE * L` always leaves global headroom.
+fn rebalance(rates: &mut [f64], avg: f64) {
+    if rates.is_empty() {
+        return;
+    }
+    let target: f64 = avg * rates.len() as f64;
+    for _ in 0..32 {
+        for r in rates.iter_mut() {
+            *r = r.clamp(0.0, MAX_RATE);
+        }
+        let deficit = target - rates.iter().sum::<f64>();
+        if deficit.abs() < 1e-12 {
+            return;
+        }
+        let room: Vec<usize> = if deficit > 0.0 {
+            (0..rates.len()).filter(|&i| rates[i] < MAX_RATE).collect()
+        } else {
+            (0..rates.len()).filter(|&i| rates[i] > 0.0).collect()
+        };
+        if room.is_empty() {
+            return;
+        }
+        let shift = deficit / room.len() as f64;
+        for i in room {
+            rates[i] += shift;
+        }
+    }
+    // final pass: the loop budget ran out mid-shift; keep rates legal
+    for r in rates.iter_mut() {
+        *r = r.clamp(0.0, MAX_RATE);
+    }
+}
 
 impl DropoutConfig {
     /// All-zero rates: STLD disabled (conventional PEFT; ablation b1).
@@ -58,9 +121,7 @@ impl DropoutConfig {
                 .collect(),
             RateShape::Normal => (0..n_layers).map(|_| rng.normal(avg, 0.1)).collect(),
         };
-        for r in rates.iter_mut() {
-            *r = r.clamp(0.0, MAX_RATE);
-        }
+        rebalance(&mut rates, avg);
         DropoutConfig { rates }
     }
 
@@ -110,20 +171,48 @@ mod tests {
 
     #[test]
     fn shapes_hit_target_average() {
+        // avg > MAX_RATE/2 makes the Incremental/Decay peak (2*avg)
+        // exceed MAX_RATE: the clamped excess must be redistributed, not
+        // silently lost. Normal additionally clamps at 0 on the low side.
         let mut rng = Rng::seed_from(1);
         for shape in [
             RateShape::Uniform,
             RateShape::Decay,
             RateShape::Incremental,
+            RateShape::Normal,
         ] {
-            for avg in [0.1, 0.3, 0.45] {
+            for avg in [0.1, 0.3, 0.45, 0.6, 0.8] {
                 let c = DropoutConfig::shaped(shape, avg, 24, &mut rng);
                 assert!(
                     (c.avg() - avg).abs() < 0.02,
                     "{shape:?} avg {} != {avg}",
                     c.avg()
                 );
+                assert!(
+                    c.rates.iter().all(|r| (0.0..=MAX_RATE).contains(r)),
+                    "{shape:?} rate out of range: {:?}",
+                    c.rates
+                );
             }
+        }
+    }
+
+    #[test]
+    fn redistribution_keeps_incremental_monotone() {
+        let mut rng = Rng::seed_from(7);
+        for avg in [0.6, 0.8, 0.9] {
+            let c = DropoutConfig::shaped(RateShape::Incremental, avg, 24, &mut rng);
+            assert!(
+                c.rates.windows(2).all(|w| w[0] <= w[1]),
+                "avg {avg}: not monotone {:?}",
+                c.rates
+            );
+            let d = DropoutConfig::shaped(RateShape::Decay, avg, 24, &mut rng);
+            assert!(
+                d.rates.windows(2).all(|w| w[0] >= w[1]),
+                "avg {avg}: decay not monotone {:?}",
+                d.rates
+            );
         }
     }
 

@@ -63,6 +63,19 @@ impl Args {
         self.opt_str(key).unwrap_or_else(|| default.to_string())
     }
 
+    /// Optional integer option: `None` when absent, `Err` on a non-integer
+    /// value (used where "explicitly set" matters, e.g. the `--workers`
+    /// override on `--resume`).
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.opt_str(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .with_context(|| format!("--{key} {s:?} is not an integer")),
+        }
+    }
+
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.opt_str(key) {
             None => Ok(default),
@@ -151,6 +164,15 @@ mod tests {
         assert_eq!(a.subcommand.as_deref(), Some("exp"));
         assert_eq!(a.positionals, ["table1"]);
         assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn opt_usize_distinguishes_absent_from_set() {
+        let a = Args::parse(&argv("train --workers 3")).unwrap();
+        assert_eq!(a.opt_usize("workers").unwrap(), Some(3));
+        assert_eq!(a.opt_usize("rounds").unwrap(), None);
+        let b = Args::parse(&argv("train --workers x")).unwrap();
+        assert!(b.opt_usize("workers").is_err());
     }
 
     #[test]

@@ -7,6 +7,53 @@ pub fn artifacts_present() -> bool {
         .exists()
 }
 
+/// Bit-level comparison of two sessions' full `RoundRecord` streams
+/// (loss, traffic, accuracy, clock, energy, memory, arm labels).
+/// `host_secs` is deliberately not compared: host wall-clock differs
+/// between runs by construction. Shared by the parallel-determinism and
+/// resume-determinism suites (not every test crate uses it).
+#[allow(dead_code)]
+pub fn assert_identical(
+    a: &droppeft::metrics::SessionResult,
+    b: &droppeft::metrics::SessionResult,
+) {
+    assert_eq!(a.records.len(), b.records.len(), "round count differs");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        let r = ra.round;
+        assert_eq!(ra.round, rb.round);
+        assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits(), "loss @{r}");
+        assert_eq!(ra.sim_secs.to_bits(), rb.sim_secs.to_bits(), "sim @{r}");
+        assert_eq!(ra.clock_secs.to_bits(), rb.clock_secs.to_bits(), "clock @{r}");
+        assert_eq!(
+            ra.active_frac.to_bits(),
+            rb.active_frac.to_bits(),
+            "active @{r}"
+        );
+        assert_eq!(ra.traffic_bytes, rb.traffic_bytes, "traffic @{r}");
+        assert_eq!(
+            ra.energy_j_mean.to_bits(),
+            rb.energy_j_mean.to_bits(),
+            "energy @{r}"
+        );
+        assert_eq!(
+            ra.mem_peak_mean.to_bits(),
+            rb.mem_peak_mean.to_bits(),
+            "mem @{r}"
+        );
+        assert_eq!(
+            ra.global_acc.map(f64::to_bits),
+            rb.global_acc.map(f64::to_bits),
+            "global acc @{r}"
+        );
+        assert_eq!(
+            ra.personalized_acc.map(f64::to_bits),
+            rb.personalized_acc.map(f64::to_bits),
+            "personalized acc @{r}"
+        );
+        assert_eq!(ra.arm, rb.arm, "bandit arm @{r}");
+    }
+}
+
 /// Skip (early-return) the calling test with a notice when the compiled
 /// XLA artifacts are absent — hosts without `make artifacts` still get a
 /// passing tier-1 run.

@@ -15,7 +15,7 @@ use droppeft::metrics::SessionResult;
 use droppeft::runtime::Runtime;
 
 mod common;
-use common::require_artifacts;
+use common::{assert_identical, require_artifacts};
 
 fn run_with_workers(method: &str, workers: usize) -> SessionResult {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -34,46 +34,6 @@ fn run_with_workers(method: &str, workers: usize) -> SessionResult {
     let method = methods::by_name(method, cfg.seed, cfg.rounds).unwrap();
     let mut engine = Engine::new(cfg, runtime, method).unwrap();
     engine.run().unwrap()
-}
-
-/// Bit-level comparison of two sessions' full `RoundRecord` streams
-/// (loss, traffic, accuracy, clock, energy, memory, arm labels).
-fn assert_identical(a: &SessionResult, b: &SessionResult) {
-    assert_eq!(a.records.len(), b.records.len(), "round count differs");
-    for (ra, rb) in a.records.iter().zip(&b.records) {
-        let r = ra.round;
-        assert_eq!(ra.round, rb.round);
-        assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits(), "loss @{r}");
-        assert_eq!(ra.sim_secs.to_bits(), rb.sim_secs.to_bits(), "sim @{r}");
-        assert_eq!(ra.clock_secs.to_bits(), rb.clock_secs.to_bits(), "clock @{r}");
-        assert_eq!(
-            ra.active_frac.to_bits(),
-            rb.active_frac.to_bits(),
-            "active @{r}"
-        );
-        assert_eq!(ra.traffic_bytes, rb.traffic_bytes, "traffic @{r}");
-        assert_eq!(
-            ra.energy_j_mean.to_bits(),
-            rb.energy_j_mean.to_bits(),
-            "energy @{r}"
-        );
-        assert_eq!(
-            ra.mem_peak_mean.to_bits(),
-            rb.mem_peak_mean.to_bits(),
-            "mem @{r}"
-        );
-        assert_eq!(
-            ra.global_acc.map(f64::to_bits),
-            rb.global_acc.map(f64::to_bits),
-            "global acc @{r}"
-        );
-        assert_eq!(
-            ra.personalized_acc.map(f64::to_bits),
-            rb.personalized_acc.map(f64::to_bits),
-            "personalized acc @{r}"
-        );
-        assert_eq!(ra.arm, rb.arm, "bandit arm @{r}");
-    }
 }
 
 #[test]

@@ -1,0 +1,141 @@
+//! Kill-and-resume determinism: a session snapshotted at round k and
+//! resumed must produce byte-identical `RoundRecord`s and a
+//! byte-identical final global model to a session that never stopped —
+//! at any worker count. This is the `DPEFTSN2` subsystem's headline
+//! guarantee: every piece of mutable session state (bandit state
+//! machine, RNG streams, device personalization, simulated clock,
+//! reward baseline, round history) round-trips through the snapshot.
+//!
+//! Requires `make artifacts` (the tiny preset); skips with a notice when
+//! the compiled HLO artifacts are absent.
+
+use std::sync::Arc;
+
+use droppeft::fed::{snapshot::SessionSnapshot, Engine, FedConfig};
+use droppeft::methods;
+use droppeft::model::TrainState;
+use droppeft::runtime::Runtime;
+
+mod common;
+use common::{assert_identical, require_artifacts};
+
+const ROUNDS: usize = 6;
+const SNAP_EVERY: usize = 2;
+
+fn runtime() -> Arc<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Arc::new(Runtime::new(dir).expect("run `make artifacts` before cargo test"))
+}
+
+fn cfg(workers: usize, snapshot_dir: &std::path::Path) -> FedConfig {
+    let mut cfg = FedConfig::quick("tiny", "mnli");
+    cfg.rounds = ROUNDS;
+    cfg.n_devices = 10;
+    cfg.devices_per_round = 4;
+    cfg.local_batches = 2;
+    cfg.samples = 400;
+    cfg.eval_every = 2;
+    cfg.eval_batches = 2;
+    cfg.lr = 5e-3;
+    cfg.eval_personalized = true;
+    cfg.workers = workers;
+    cfg.snapshot_every = SNAP_EVERY;
+    cfg.snapshot_dir = Some(snapshot_dir.to_string_lossy().into_owned());
+    cfg
+}
+
+fn fresh_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("droppeft_resume_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_same_model(a: &TrainState, b: &TrainState) {
+    assert_eq!(a.kind, b.kind);
+    assert_eq!(a.step, b.step);
+    let bits = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+    assert_eq!(bits(&a.peft), bits(&b.peft), "peft diverged");
+    assert_eq!(bits(&a.opt_m), bits(&b.opt_m), "opt_m diverged");
+    assert_eq!(bits(&a.opt_v), bits(&b.opt_v), "opt_v diverged");
+    assert_eq!(bits(&a.head), bits(&b.head), "head diverged");
+    assert_eq!(bits(&a.head_m), bits(&b.head_m), "head_m diverged");
+    assert_eq!(bits(&a.head_v), bits(&b.head_v), "head_v diverged");
+}
+
+/// Full uninterrupted run at `full_workers`, then a resume from the
+/// round-k snapshot at `resume_workers`; both must agree bit-for-bit on
+/// every record and on the final global model.
+fn check_kill_and_resume(method: &str, tag: &str, full_workers: usize, resume_workers: usize) {
+    let rt = runtime();
+    let dir = fresh_dir(tag);
+
+    // the uninterrupted reference session (writes snapshots as it goes —
+    // this IS the "killed" session's history up to round k)
+    let m = methods::by_name(method, 42, ROUNDS).unwrap();
+    let mut full = Engine::new(cfg(full_workers, &dir), rt.clone(), m).unwrap();
+    let reference = full.run().unwrap();
+    let reference_model = full.global_state().clone();
+
+    // "kill" at round k: resume from the snapshot written after round k
+    let k = SNAP_EVERY;
+    let snap_path = SessionSnapshot::path_in(&dir, method, "mnli", k);
+    assert!(snap_path.exists(), "expected snapshot at {snap_path:?}");
+    let mut resumed =
+        Engine::resume_from_path(&snap_path, rt, Some(resume_workers)).unwrap();
+    assert_eq!(resumed.rounds_finished(), k);
+    let replayed = resumed.run().unwrap();
+
+    assert_eq!(replayed.records.len(), ROUNDS);
+    assert_identical(&reference, &replayed);
+    assert_same_model(&reference_model, resumed.global_state());
+}
+
+#[test]
+fn droppeft_resume_is_byte_identical_workers_1() {
+    require_artifacts!();
+    check_kill_and_resume("droppeft-lora", "dp_w1", 1, 1);
+}
+
+#[test]
+fn droppeft_resume_is_byte_identical_default_workers() {
+    require_artifacts!();
+    // resume at a different worker count than the original session ran
+    // with: worker count must never leak into results
+    let default = FedConfig::quick("tiny", "mnli").workers;
+    check_kill_and_resume("droppeft-lora", "dp_wd", 1, default.max(2));
+}
+
+#[test]
+fn fedadaopt_resume_is_byte_identical() {
+    // a non-personalized method with a progressive schedule exercises
+    // the stateless-method snapshot path (empty method blob)
+    require_artifacts!();
+    check_kill_and_resume("fedadaopt", "ada", 2, 1);
+}
+
+#[test]
+fn snapshots_are_written_at_every_interval() {
+    require_artifacts!();
+    let rt = runtime();
+    let dir = fresh_dir("intervals");
+    let m = methods::by_name("droppeft-lora", 42, ROUNDS).unwrap();
+    let mut engine = Engine::new(cfg(1, &dir), rt, m).unwrap();
+    engine.run().unwrap();
+    for finished in (SNAP_EVERY..=ROUNDS).step_by(SNAP_EVERY) {
+        let p = SessionSnapshot::path_in(&dir, "droppeft-lora", "mnli", finished);
+        assert!(p.exists(), "missing snapshot {p:?}");
+        // every snapshot on disk must load cleanly and self-describe
+        let snap = droppeft::fed::snapshot::load(&p).unwrap();
+        assert_eq!(snap.next_round, finished);
+        assert_eq!(snap.method_key, "droppeft-lora");
+        assert_eq!(snap.records.len(), finished);
+    }
+    // atomic rename leaves no temp files behind
+    let leftovers: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+        .collect();
+    assert!(leftovers.is_empty(), "stale tmp files: {leftovers:?}");
+}
