@@ -5,30 +5,35 @@
 //! Federated fine-tune of the `small` preset (12 layers, d=128, ~3.1M
 //! params) with DropPEFT(LoRA) vs the FedLoRA baseline on synthetic MNLI:
 //! 100-device population, Dir(1.0) label skew, 40 rounds x 10 devices,
-//! real XLA training steps through the full three-layer stack. Logs the
-//! loss curve and writes `results/e2e.md` — quoted in EXPERIMENTS.md.
+//! real XLA training steps through the full three-layer stack. Sessions
+//! are described as `SessionSpec`s; the loss curve logs through the
+//! console event sink and the report lands in `results/e2e.md` — quoted
+//! in EXPERIMENTS.md.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use droppeft::fed::{Engine, FedConfig};
-use droppeft::methods;
+use droppeft::fed::{ConsoleReporter, SessionSpec};
+use droppeft::methods::MethodSpec;
 use droppeft::runtime::Runtime;
 
-fn session_cfg() -> FedConfig {
-    let mut cfg = FedConfig::quick("small", "mnli");
-    cfg.n_devices = 100;
-    cfg.devices_per_round = 10;
-    cfg.rounds = 40;
-    cfg.local_batches = 2;
-    cfg.samples = 6_000;
-    cfg.lr = 5e-3;
-    cfg.eval_every = 4;
-    cfg.eval_batches = 8;
-    cfg.seed = 7;
-    cfg.cost_model = Some("roberta-large".into());
-    cfg
+fn session_spec(method: &str) -> Result<SessionSpec> {
+    SessionSpec::builder()
+        .preset("small")
+        .dataset("mnli")
+        .method(MethodSpec::parse(method)?)
+        .devices(100)
+        .per_round(10)
+        .rounds(40)
+        .local_batches(2)
+        .samples(6_000)
+        .lr(5e-3)
+        .eval_every(4)
+        .eval_batches(8)
+        .seed(7)
+        .cost_model("roberta-large")
+        .build()
 }
 
 fn main() -> Result<()> {
@@ -38,12 +43,12 @@ fn main() -> Result<()> {
     let mut report = String::from("## End-to-end run (small preset, synthetic MNLI)\n\n");
     let mut summaries = Vec::new();
     for method_name in ["droppeft-lora", "fedlora"] {
-        let cfg = session_cfg();
-        let method = methods::by_name(method_name, cfg.seed, cfg.rounds)?;
-        let name = method.name();
-        println!("\n== e2e session: {name} ==");
-        let mut engine = Engine::new(cfg, runtime.clone(), method)?;
+        let spec = session_spec(method_name)?;
+        println!("\n== e2e session: {} ==", spec.method.name());
+        let mut engine = spec.build_engine(runtime.clone())?;
+        engine.add_sink(Box::new(ConsoleReporter::new()));
         let result = engine.run()?;
+        let name = result.method.clone();
         println!("{}", result.table());
         report.push_str(&format!(
             "### {name}\n\n| round | sim h | train loss | acc |\n|---|---|---|---|\n"
@@ -60,7 +65,7 @@ fn main() -> Result<()> {
             ));
         }
         summaries.push((
-            name.clone(),
+            name,
             result.final_acc(),
             result.total_sim_secs() / 3600.0,
             result

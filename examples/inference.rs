@@ -3,9 +3,10 @@
 //!
 //! Run with: `cargo run --release --example inference`
 //!
-//! Trains a few DropPEFT rounds, saves the global checkpoint, reloads
-//! it, and serves batched classification through the full-depth
-//! `infer_lora` artifact, reporting accuracy and latency percentiles.
+//! Trains a few DropPEFT rounds (session described with the
+//! `SessionSpec` builder), saves the global checkpoint, reloads it, and
+//! serves batched classification through the full-depth `infer_lora`
+//! artifact, reporting accuracy and latency percentiles.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -13,8 +14,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use droppeft::data::{batch::eval_batches, gen, TaskSpec};
-use droppeft::fed::{Engine, FedConfig};
-use droppeft::methods;
+use droppeft::fed::{ConsoleReporter, SessionSpec};
+use droppeft::methods::{MethodSpec, PeftKind};
 use droppeft::model::{ckpt, BaseModel};
 use droppeft::runtime::tensor::Value;
 use droppeft::runtime::Runtime;
@@ -24,14 +25,18 @@ fn main() -> Result<()> {
     let runtime = Arc::new(Runtime::new("artifacts")?);
 
     // quick DropPEFT session to obtain a trained checkpoint
-    let mut cfg = FedConfig::quick("tiny", "agnews");
-    cfg.rounds = 10;
-    cfg.lr = 1e-2;
-    cfg.seed = 21;
-    let seed = cfg.seed;
-    let preset = cfg.preset.clone();
-    let method = methods::by_name("droppeft-lora", seed, cfg.rounds)?;
-    let mut engine = Engine::new(cfg, runtime.clone(), method)?;
+    let spec = SessionSpec::builder()
+        .preset("tiny")
+        .dataset("agnews")
+        .method(MethodSpec::droppeft(PeftKind::Lora))
+        .rounds(10)
+        .lr(1e-2)
+        .seed(21)
+        .build()?;
+    let seed = spec.cfg.seed;
+    let preset = spec.cfg.preset.clone();
+    let mut engine = spec.build_engine(runtime.clone())?;
+    engine.add_sink(Box::new(ConsoleReporter::new()));
     let session = engine.run()?;
     println!(
         "trained: final acc {:.1}% over {} rounds",

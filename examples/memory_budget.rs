@@ -7,10 +7,17 @@
 //!
 //! Pure cost-model demo (no artifacts needed): for each paper-scale
 //! model and device, find the smallest average dropout rate that fits
-//! the device's usable memory, then report the expected speedup.
+//! the device's usable memory, then report the expected speedup — and
+//! turn the fitted configuration into a validated `SessionSpec`, the
+//! exact object a fleet controller would hand to `build_engine`.
 
+use anyhow::Result;
+
+use droppeft::fed::SessionSpec;
 use droppeft::hw::cost;
 use droppeft::hw::{AGX, NX, TX2};
+use droppeft::methods::MethodSpec;
+use droppeft::stld::RateShape;
 use droppeft::util::table::Table;
 
 fn min_rate_to_fit(model: &str, mem_budget: f64) -> Option<f64> {
@@ -26,7 +33,7 @@ fn min_rate_to_fit(model: &str, mem_budget: f64) -> Option<f64> {
     None
 }
 
-fn main() {
+fn main() -> Result<()> {
     // the paper notes only a fraction of device memory is available to
     // the training job without hurting the user experience
     const USABLE: f64 = 0.6;
@@ -72,4 +79,23 @@ fn main() {
          model at all; with STLD it fits once enough layers drop out,\n\
          and every dropped layer buys proportional train-time speedup."
     );
+
+    // From plan to session: a fleet controller would pin the fitted rate
+    // as a fixed-rate DropPEFT spec. The builder validates the whole
+    // configuration before any engine exists.
+    let rate = min_rate_to_fit("roberta-large", NX.mem_bytes as f64 * USABLE)
+        .expect("roberta-large fits an NX at some rate");
+    let spec = SessionSpec::builder()
+        .preset("tiny")
+        .dataset("mnli")
+        .method(MethodSpec::fixed_rate(rate, RateShape::Incremental))
+        .cost_model("roberta-large")
+        .build()?;
+    println!(
+        "\nvalidated session spec for an NX fleet: {} at fixed rate {rate:.2} \
+         (cost model {})",
+        spec.method.name(),
+        spec.cfg.cost_model.as_deref().unwrap_or("-")
+    );
+    Ok(())
 }

@@ -5,43 +5,45 @@
 //!
 //! Two sessions at Dirichlet alpha = 0.1 (strong label skew): DropPEFT
 //! with PTLS (devices keep their most-adapting layers local) vs the b3
-//! ablation (all layers aggregated). Prints global and personalized
-//! accuracies plus each device's shared-layer pattern.
+//! ablation (all layers aggregated). Both sessions come from the same
+//! `SessionSpec` builder chain, differing only in `MethodSpec`.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use droppeft::fed::{Engine, FedConfig};
-use droppeft::methods;
+use droppeft::fed::{ConsoleReporter, SessionSpec};
+use droppeft::methods::MethodSpec;
 use droppeft::runtime::Runtime;
 use droppeft::util::table::Table;
 
-fn cfg() -> FedConfig {
-    let mut c = FedConfig::quick("tiny", "qqp");
-    c.alpha = 0.1; // severe skew
-    c.rounds = 16;
-    c.n_devices = 12;
-    c.devices_per_round = 4;
-    c.local_batches = 3;
-    c.samples = 1_200;
-    c.lr = 1e-2;
-    c.eval_every = 4;
-    c.eval_batches = 8;
-    c.eval_personalized = true;
-    c.seed = 11;
-    c
+fn spec(method: &str) -> Result<SessionSpec> {
+    SessionSpec::builder()
+        .preset("tiny")
+        .dataset("qqp")
+        .method(MethodSpec::parse(method)?)
+        .alpha(0.1) // severe skew
+        .rounds(16)
+        .devices(12)
+        .per_round(4)
+        .local_batches(3)
+        .samples(1_200)
+        .lr(1e-2)
+        .eval_every(4)
+        .eval_batches(8)
+        .personal_eval(true)
+        .seed(11)
+        .build()
 }
 
 fn main() -> Result<()> {
     let runtime = Arc::new(Runtime::new("artifacts")?);
     let mut t = Table::new(&["method", "global acc", "personalized acc"]);
     for name in ["droppeft-lora", "droppeft-b3"] {
-        let c = cfg();
-        let m = methods::by_name(name, c.seed, c.rounds)?;
-        let label = m.name();
-        println!("== session: {label} (alpha = 0.1) ==");
-        let mut engine = Engine::new(c, runtime.clone(), m)?;
+        let spec = spec(name)?;
+        println!("== session: {} (alpha = 0.1) ==", spec.method.name());
+        let mut engine = spec.build_engine(runtime.clone())?;
+        engine.add_sink(Box::new(ConsoleReporter::new()));
         let r = engine.run()?;
         println!("{}\n", r.table());
         let global = r
@@ -52,7 +54,7 @@ fn main() -> Result<()> {
             .unwrap_or(0.0);
         let pers = r.records.iter().rev().find_map(|x| x.personalized_acc);
         t.row(vec![
-            label,
+            r.method.clone(),
             format!("{:.1}%", 100.0 * global),
             pers.map(|a| format!("{:.1}%", 100.0 * a))
                 .unwrap_or_else(|| "- (not personalized)".into()),

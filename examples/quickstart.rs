@@ -1,4 +1,7 @@
-//! Quickstart: the smallest complete DropPEFT federated session.
+//! Quickstart: the smallest complete DropPEFT federated session, driven
+//! entirely through the library-first session API — a typed
+//! `SessionSpec` built with the validating builder, observed through
+//! `EventSink`s, with zero direct `FedConfig` construction.
 //!
 //! Run with: `cargo run --release --example quickstart`
 //! (requires `make artifacts` first).
@@ -12,26 +15,60 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use droppeft::fed::{Engine, FedConfig};
-use droppeft::methods;
+use droppeft::fed::{ConsoleReporter, EngineEvent, EventSink, JsonlWriter, SessionSpec};
+use droppeft::methods::{MethodSpec, PeftKind};
 use droppeft::runtime::Runtime;
+
+/// Sinks are plain trait objects — embedders can stream progress into
+/// anything. This one counts evaluations as they happen.
+struct EvalCounter {
+    evals: usize,
+}
+
+impl EventSink for EvalCounter {
+    fn on_event(&mut self, ev: &EngineEvent) -> Result<()> {
+        match ev {
+            EngineEvent::Evaluated {
+                round, global_acc, ..
+            } => {
+                self.evals += 1;
+                if let Some(a) = global_acc {
+                    println!("  [observer] round {round}: global acc {:.1}%", 100.0 * a);
+                }
+            }
+            EngineEvent::SessionEnded { rounds_run, .. } => {
+                println!(
+                    "  [observer] session over: {} evaluations across {rounds_run} rounds",
+                    self.evals
+                );
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
 
 fn main() -> Result<()> {
     let runtime = Arc::new(Runtime::new("artifacts")?);
 
-    let mut cfg = FedConfig::quick("tiny", "mnli");
-    cfg.rounds = 12;
-    cfg.n_devices = 10;
-    cfg.devices_per_round = 3;
-    cfg.local_batches = 3;
-    cfg.samples = 1_000;
-    cfg.lr = 1e-2;
-    cfg.cost_model = Some("roberta-large".into()); // paper-scale wall-clock
+    let spec = SessionSpec::builder()
+        .preset("tiny")
+        .dataset("mnli")
+        .method(MethodSpec::droppeft(PeftKind::Lora))
+        .rounds(12)
+        .devices(10)
+        .per_round(3)
+        .local_batches(3)
+        .samples(1_000)
+        .lr(1e-2)
+        .cost_model("roberta-large") // paper-scale wall-clock
+        .build()?;
+    println!("== DropPEFT quickstart: {} ==", spec.method.name());
 
-    let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds)?;
-    println!("== DropPEFT quickstart: {} ==", method.name());
-
-    let mut engine = Engine::new(cfg, runtime.clone(), method)?;
+    let mut engine = spec.build_engine(runtime.clone())?;
+    engine.add_sink(Box::new(ConsoleReporter::new()));
+    engine.add_sink(Box::new(JsonlWriter::create("results/quickstart.events.jsonl")?));
+    engine.add_sink(Box::new(EvalCounter { evals: 0 }));
     let result = engine.run()?;
 
     println!("{}", result.table());
@@ -46,5 +83,6 @@ fn main() -> Result<()> {
         result.total_traffic_bytes() as f64 / 1e6,
         result.total_energy_j() / 1e3
     );
+    println!("structured event log: results/quickstart.events.jsonl");
     Ok(())
 }

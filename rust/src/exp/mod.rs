@@ -5,6 +5,14 @@
 //! `droppeft exp <id> [--quick] [--preset tiny] [--out results]`
 //! writes both stdout tables and `results/<id>.md` (+ raw JSON series)
 //! that EXPERIMENTS.md quotes.
+//!
+//! The harness is a thin layer over the session API: each experiment
+//! describes its sessions as `SessionSpec`s (via [`Ctx::base_builder`])
+//! and [`Ctx::run_session`] executes them through a `fed::spec::SweepPlan`
+//! — which assigns per-session snapshot subdirectories and routes a
+//! pending `--resume` snapshot to the first matching session — with the
+//! standard event sinks attached (console reporter, and per-session
+//! JSONL logs under `<out>/events/` when `--events` is given).
 
 mod noniid;
 mod static_costs;
@@ -15,9 +23,9 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::fed::{Engine, FedConfig};
+use crate::fed::spec::{SessionSpec, SessionSpecBuilder, SweepPlan};
+use crate::fed::{ConsoleReporter, JsonlWriter};
 use crate::metrics::SessionResult;
-use crate::methods::Method;
 use crate::runtime::Runtime;
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -34,118 +42,75 @@ pub struct Ctx {
     pub workers: usize,
     /// write a session snapshot every N rounds (0 = disabled)
     pub snapshot_every: usize,
-    /// base directory for session snapshots; each session of a bundle
-    /// gets its own `session-NNN` subdirectory (bundle order is
-    /// deterministic, so a re-run maps sessions to the same subdirs)
+    /// base directory for session snapshots; the sweep plan gives each
+    /// session of a bundle its own `session-NNN` subdirectory
     pub snapshot_dir: Option<String>,
-    /// pending `--resume` snapshot (loaded once), consumed by the first
-    /// session whose method identity matches; every other session in
-    /// the experiment starts fresh
-    resume: std::cell::RefCell<Option<(String, crate::fed::SessionSnapshot)>>,
-    /// per-run session counter driving the snapshot subdirectories
-    session_seq: std::cell::Cell<usize>,
+    /// write a per-session JSONL event log under `<out>/events/`
+    pub events: bool,
+    /// session sequencing: snapshot subdirs + pending `--resume` routing
+    plan: SweepPlan,
 }
 
 impl Ctx {
-    /// Baseline session dimensions for this testbed (shrunk in --quick).
-    pub fn base_cfg(&self, dataset: &str) -> FedConfig {
-        let mut cfg = FedConfig::quick(&self.preset, dataset);
-        if self.quick {
-            cfg.n_devices = 10;
-            cfg.devices_per_round = 3;
-            cfg.rounds = 10;
-            cfg.local_batches = 2;
-            cfg.samples = 800;
-            cfg.eval_batches = 8;
+    /// Baseline session spec for this testbed (shrunk in --quick), ready
+    /// for a `.method(..)` call and any per-experiment overrides.
+    pub fn base_builder(&self, dataset: &str) -> SessionSpecBuilder {
+        let mut b = SessionSpec::builder()
+            .preset(&self.preset)
+            .dataset(dataset)
+            .seed(self.seed)
+            .workers(self.workers)
+            .snapshot_every(self.snapshot_every)
+            .eval_every(2)
+            // the tiny/small presets want a larger step than the paper's
+            // full-size models (frozen random base, few trainables)
+            .lr(5e-3)
+            // Table-3-style wall-clock: simulate at paper scale
+            .cost_model("roberta-large");
+        b = if self.quick {
+            b.devices(10)
+                .per_round(3)
+                .rounds(10)
+                .local_batches(2)
+                .samples(800)
+                .eval_batches(8)
         } else {
-            cfg.n_devices = 20;
-            cfg.devices_per_round = 5;
-            cfg.rounds = 36;
-            cfg.local_batches = 4;
-            cfg.samples = 2_000;
-            cfg.eval_batches = 24;
-        }
-        cfg.seed = self.seed;
-        cfg.workers = self.workers;
-        cfg.snapshot_every = self.snapshot_every;
-        cfg.snapshot_dir = self.snapshot_dir.clone();
-        cfg.eval_every = 2;
-        // the tiny/small presets want a larger step than the paper's
-        // full-size models (frozen random base, few trainables)
-        cfg.lr = 5e-3;
-        // Table-3-style wall-clock: simulate at paper scale
-        cfg.cost_model = Some("roberta-large".to_string());
-        cfg
-    }
-
-    pub fn run_session(
-        &self,
-        cfg: FedConfig,
-        method: Box<dyn Method>,
-    ) -> Result<SessionResult> {
-        let name = method.name();
-        let t0 = std::time::Instant::now();
-        let mut engine = self.build_engine(cfg, method)?;
-        let r = engine.run()?;
-        crate::info!(
-            "session {name} done: final {:.1}% in {:.1}s host time",
-            100.0 * r.final_acc(),
-            t0.elapsed().as_secs_f64()
-        );
-        Ok(r)
-    }
-
-    /// Start a session fresh, or resume it from `--resume` when the
-    /// pending snapshot matches this session's identity: method name,
-    /// dataset, preset, AND the method's option fingerprint
-    /// (`Method::snapshot_compatible`) — name alone cannot distinguish
-    /// the sessions of an option sweep like fig6a. The snapshot is
-    /// consumed by the first match, so later same-named sessions run
-    /// from round 0; the method itself is rebuilt from the snapshot's
-    /// factory key (`Engine::resume_snapshot`) so schedule-derived state
-    /// follows the snapshot's round count, not this experiment's.
-    fn build_engine(&self, mut cfg: FedConfig, method: Box<dyn Method>) -> Result<Engine> {
-        // one snapshot subdir per session so bundle sessions with the
-        // same method key cannot clobber each other's snapshot files
-        let seq = self.session_seq.get();
-        self.session_seq.set(seq + 1);
-        if cfg.snapshot_every > 0 {
-            let base = cfg
-                .snapshot_dir
-                .as_deref()
-                .unwrap_or(crate::fed::snapshot::DEFAULT_DIR);
-            cfg.snapshot_dir = Some(format!("{base}/session-{seq:03}"));
-        }
-
-        let matches = {
-            let pending = self.resume.borrow();
-            match pending.as_ref() {
-                Some((_, snap)) => {
-                    snap.method_name == method.name()
-                        && snap.cfg.dataset == cfg.dataset
-                        && snap.cfg.preset == cfg.preset
-                        && method.snapshot_compatible(&snap.method_blob)
-                }
-                None => false,
-            }
+            b.devices(20)
+                .per_round(5)
+                .rounds(36)
+                .local_batches(4)
+                .samples(2_000)
+                .eval_batches(24)
         };
-        if matches {
-            let (path, mut snap) = self
-                .resume
-                .borrow_mut()
-                .take()
-                .expect("checked above: a pending snapshot matched");
-            crate::info!(
-                "resuming {} on {} from {path:?} ({} of {} rounds done)",
-                snap.method_name,
-                snap.cfg.dataset,
-                snap.next_round,
-                snap.cfg.rounds
-            );
-            snap.cfg.workers = self.workers.max(1);
-            return Engine::resume_snapshot(snap, self.runtime.clone());
+        if let Some(dir) = &self.snapshot_dir {
+            b = b.snapshot_dir(dir.clone());
         }
-        Engine::new(cfg, self.runtime.clone(), method)
+        b
+    }
+
+    /// Run one session of the sweep: fresh, or resumed when the pending
+    /// `--resume` snapshot matches this spec's identity (see
+    /// `SweepPlan::build_engine`).
+    pub fn run_session(&mut self, spec: SessionSpec) -> Result<SessionResult> {
+        let seq = self.plan.sessions_built();
+        let mut engine = self.plan.build_engine(&spec, self.runtime.clone())?;
+        engine.add_sink(Box::new(ConsoleReporter::new()));
+        if self.events {
+            let path = self
+                .out_dir
+                .join("events")
+                .join(format!("session-{seq:03}.jsonl"));
+            // a session resumed from `--resume` continues its event log;
+            // every other session starts a fresh one (truncating logs a
+            // previous sweep run left behind)
+            let sink = if engine.rounds_finished() > 0 {
+                JsonlWriter::append(path)?
+            } else {
+                JsonlWriter::create(path)?
+            };
+            engine.add_sink(Box::new(sink));
+        }
+        engine.run()
     }
 
     /// Persist an experiment report (markdown + optional JSON series).
@@ -162,22 +127,23 @@ impl Ctx {
     }
 }
 
-pub fn run(args: &Args) -> Result<()> {
-    let id = args
-        .opt_str("id")
+/// Resolve the experiment id: positionally (`droppeft exp fig9`) or via
+/// the `--id` alias; `--id` wins when both are given. Defaults to "all".
+pub fn resolve_id(args: &Args) -> String {
+    args.opt_str("id")
         .or_else(|| args.positionals.first().cloned())
-        .unwrap_or_else(|| "all".to_string());
-    // load the --resume snapshot once up front; build_engine hands it to
-    // the first session whose identity matches
-    let resume = match args.opt_str("resume") {
-        Some(path) => {
-            let snap = crate::fed::snapshot::load(&path)
-                .with_context(|| format!("loading --resume snapshot {path:?}"))?;
-            Some((path, snap))
-        }
-        None => None,
-    };
-    let ctx = Ctx {
+        .unwrap_or_else(|| "all".to_string())
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let id = resolve_id(args);
+    // load the --resume snapshot once up front; the sweep plan hands it
+    // to the first session whose identity matches
+    let mut plan = SweepPlan::new();
+    if let Some(path) = args.opt_str("resume") {
+        plan.load_resume(&path)?;
+    }
+    let mut ctx = Ctx {
         runtime: Arc::new(Runtime::new(args.str_or("artifacts", "artifacts"))?),
         out_dir: args.str_or("out", "results").into(),
         quick: args.flag("quick"),
@@ -188,15 +154,15 @@ pub fn run(args: &Args) -> Result<()> {
             .max(1),
         snapshot_every: args.usize_or("snapshot-every", 0)?,
         snapshot_dir: args.opt_str("snapshot-dir"),
-        resume: std::cell::RefCell::new(resume),
-        session_seq: std::cell::Cell::new(0),
+        events: args.flag("events"),
+        plan,
     };
     args.finish()?;
-    let result = dispatch(&ctx, &id);
+    let result = dispatch(&mut ctx, &id);
     // only meaningful when the experiment actually ran to completion:
     // an early error may have stopped before the matching session
     if result.is_ok() {
-        if let Some((path, snap)) = ctx.resume.borrow_mut().take() {
+        if let Some((path, snap)) = ctx.plan.pending_resume() {
             crate::info!(
                 "--resume {path:?} ({} on {}) matched no session in this \
                  experiment; everything ran fresh",
@@ -208,7 +174,7 @@ pub fn run(args: &Args) -> Result<()> {
     result
 }
 
-fn dispatch(ctx: &Ctx, id: &str) -> Result<()> {
+fn dispatch(ctx: &mut Ctx, id: &str) -> Result<()> {
     match id {
         "table1" => static_costs::table1(ctx),
         "fig2" => static_costs::fig2(ctx),
@@ -237,5 +203,27 @@ fn dispatch(ctx: &Ctx, id: &str) -> Result<()> {
         // table3 + fig9 + fig11 + fig12 from one grid run
         "table3-bundle" => table3::bundle(ctx),
         _ => anyhow::bail!("unknown experiment {id:?} (see DESIGN.md index)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn experiment_id_positional_and_flag_both_work() {
+        let a = Args::parse(&argv("exp fig9")).unwrap();
+        assert_eq!(resolve_id(&a), "fig9");
+        let b = Args::parse(&argv("exp --id fig9")).unwrap();
+        assert_eq!(resolve_id(&b), "fig9");
+        // --id wins when both are given (documented in HELP)
+        let c = Args::parse(&argv("exp fig9 --id table3")).unwrap();
+        assert_eq!(resolve_id(&c), "table3");
+        let d = Args::parse(&argv("exp")).unwrap();
+        assert_eq!(resolve_id(&d), "all");
     }
 }

@@ -4,11 +4,11 @@
 use anyhow::Result;
 
 use super::Ctx;
-use crate::methods;
+use crate::methods::MethodSpec;
 use crate::util::json::Json;
 use crate::util::table::Table;
 
-pub fn fig15(ctx: &Ctx) -> Result<()> {
+pub fn fig15(ctx: &mut Ctx) -> Result<()> {
     let alphas = if ctx.quick {
         vec![0.1, 10.0]
     } else {
@@ -19,11 +19,13 @@ pub fn fig15(ctx: &Ctx) -> Result<()> {
     let mut series = Vec::new();
     for &alpha in &alphas {
         for name in method_names {
-            let mut cfg = ctx.base_cfg("qqp");
-            cfg.alpha = alpha;
-            cfg.eval_personalized = true;
-            let m = methods::by_name(name, ctx.seed, cfg.rounds)?;
-            let r = ctx.run_session(cfg, m)?;
+            let spec = ctx
+                .base_builder("qqp")
+                .alpha(alpha)
+                .personal_eval(true)
+                .method(MethodSpec::parse(name)?)
+                .build()?;
+            let r = ctx.run_session(spec)?;
             let pers = r
                 .records
                 .iter()

@@ -7,8 +7,8 @@
 use anyhow::Result;
 
 use super::Ctx;
+use crate::methods::MethodSpec;
 use crate::metrics::SessionResult;
-use crate::methods;
 use crate::util::json::Json;
 use crate::util::table::Table;
 
@@ -29,13 +29,15 @@ fn datasets(ctx: &Ctx) -> Vec<&'static str> {
     }
 }
 
-pub fn grid(ctx: &Ctx) -> Result<Vec<SessionResult>> {
+pub fn grid(ctx: &mut Ctx) -> Result<Vec<SessionResult>> {
     let mut out = Vec::new();
     for ds in datasets(ctx) {
         for m in METHODS {
-            let cfg = ctx.base_cfg(ds);
-            let method = methods::by_name(m, ctx.seed, cfg.rounds)?;
-            out.push(ctx.run_session(cfg, method)?);
+            let spec = ctx
+                .base_builder(ds)
+                .method(MethodSpec::parse(m)?)
+                .build()?;
+            out.push(ctx.run_session(spec)?);
         }
     }
     Ok(out)
@@ -60,7 +62,7 @@ fn targets(runs: &[SessionResult]) -> Vec<(String, f64)> {
     out
 }
 
-pub fn table3(ctx: &Ctx) -> Result<Vec<SessionResult>> {
+pub fn table3(ctx: &mut Ctx) -> Result<Vec<SessionResult>> {
     let runs = grid(ctx)?;
     let tg = targets(&runs);
     let mut t = Table::new(&[
@@ -121,7 +123,7 @@ pub fn table3(ctx: &Ctx) -> Result<Vec<SessionResult>> {
 
 /// Run the grid once and emit table3 + fig9 + fig11 + fig12 (used by
 /// `exp all` to avoid re-running sessions).
-pub fn bundle(ctx: &Ctx) -> Result<()> {
+pub fn bundle(ctx: &mut Ctx) -> Result<()> {
     let runs = table3(ctx)?;
     fig9_from(ctx, &runs)?;
     fig11_from(ctx, &runs)?;
@@ -129,7 +131,7 @@ pub fn bundle(ctx: &Ctx) -> Result<()> {
 }
 
 /// Fig. 9: accuracy-vs-wall-clock timelines for every method.
-pub fn fig9(ctx: &Ctx) -> Result<()> {
+pub fn fig9(ctx: &mut Ctx) -> Result<()> {
     let runs = grid(ctx)?;
     fig9_from(ctx, &runs)
 }
@@ -149,7 +151,7 @@ fn fig9_from(ctx: &Ctx, runs: &[SessionResult]) -> Result<()> {
 }
 
 /// Fig. 11: per-device average energy consumption by method.
-pub fn fig11(ctx: &Ctx) -> Result<()> {
+pub fn fig11(ctx: &mut Ctx) -> Result<()> {
     let runs = grid(ctx)?;
     fig11_from(ctx, &runs)
 }
@@ -174,7 +176,7 @@ fn fig11_from(ctx: &Ctx, runs: &[SessionResult]) -> Result<()> {
 }
 
 /// Fig. 12: total network traffic of all devices.
-pub fn fig12(ctx: &Ctx) -> Result<()> {
+pub fn fig12(ctx: &mut Ctx) -> Result<()> {
     let runs = grid(ctx)?;
     fig12_from(ctx, &runs)
 }

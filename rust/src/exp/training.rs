@@ -5,24 +5,11 @@
 use anyhow::Result;
 
 use super::Ctx;
-use crate::methods::{self, DropPeft, DropPeftOptions};
+use crate::methods::{MethodSpec, PeftKind};
 use crate::metrics::SessionResult;
 use crate::stld::RateShape;
 use crate::util::json::Json;
 use crate::util::table::Table;
-
-fn fixed_rate_method(rate: f64, shape: RateShape, seed: u64) -> Box<DropPeft> {
-    Box::new(DropPeft::new(
-        "lora",
-        seed,
-        DropPeftOptions {
-            bandit: false,
-            fixed_rate: rate,
-            fixed_shape: shape,
-            ..Default::default()
-        },
-    ))
-}
 
 fn timeline_json(r: &SessionResult) -> Json {
     Json::Arr(
@@ -34,7 +21,7 @@ fn timeline_json(r: &SessionResult) -> Json {
 }
 
 /// Fig. 6(a): accuracy trajectory vs uniform dropout-rate degree.
-pub fn fig6a(ctx: &Ctx) -> Result<()> {
+pub fn fig6a(ctx: &mut Ctx) -> Result<()> {
     let rates = if ctx.quick {
         vec![0.0, 0.5, 0.8]
     } else {
@@ -43,8 +30,11 @@ pub fn fig6a(ctx: &Ctx) -> Result<()> {
     let mut t = Table::new(&["avg rate", "final acc", "best acc", "sim h/round"]);
     let mut series = Vec::new();
     for &rate in &rates {
-        let cfg = ctx.base_cfg("mnli");
-        let r = ctx.run_session(cfg, fixed_rate_method(rate, RateShape::Uniform, ctx.seed))?;
+        let spec = ctx
+            .base_builder("mnli")
+            .method(MethodSpec::fixed_rate(rate, RateShape::Uniform))
+            .build()?;
+        let r = ctx.run_session(spec)?;
         t.row(vec![
             format!("{rate:.1}"),
             format!("{:.1}%", 100.0 * r.final_acc()),
@@ -67,7 +57,7 @@ pub fn fig6a(ctx: &Ctx) -> Result<()> {
 }
 
 /// Fig. 6(b): rate *distribution* across layers at fixed average 0.5.
-pub fn fig6b(ctx: &Ctx) -> Result<()> {
+pub fn fig6b(ctx: &mut Ctx) -> Result<()> {
     let shapes = [
         ("uniform", RateShape::Uniform),
         ("decay", RateShape::Decay),
@@ -77,8 +67,11 @@ pub fn fig6b(ctx: &Ctx) -> Result<()> {
     let mut t = Table::new(&["distribution", "final acc", "best acc"]);
     let mut series = Vec::new();
     for (name, shape) in shapes {
-        let cfg = ctx.base_cfg("mnli");
-        let r = ctx.run_session(cfg, fixed_rate_method(0.5, shape, ctx.seed))?;
+        let spec = ctx
+            .base_builder("mnli")
+            .method(MethodSpec::fixed_rate(0.5, shape))
+            .build()?;
+        let r = ctx.run_session(spec)?;
         t.row(vec![
             name.into(),
             format!("{:.1}%", 100.0 * r.final_acc()),
@@ -100,15 +93,15 @@ pub fn fig6b(ctx: &Ctx) -> Result<()> {
 
 /// Fig. 7: speed of accuracy gains per training phase under different
 /// fixed configurations (the favourable config drifts over the session).
-pub fn fig7(ctx: &Ctx) -> Result<()> {
+pub fn fig7(ctx: &mut Ctx) -> Result<()> {
     let rates = [0.2, 0.5, 0.8];
     let mut sessions = Vec::new();
     for &rate in &rates {
-        let cfg = ctx.base_cfg("mnli");
-        sessions.push((
-            rate,
-            ctx.run_session(cfg, fixed_rate_method(rate, RateShape::Incremental, ctx.seed))?,
-        ));
+        let spec = ctx
+            .base_builder("mnli")
+            .method(MethodSpec::fixed_rate(rate, RateShape::Incremental))
+            .build()?;
+        sessions.push((rate, ctx.run_session(spec)?));
     }
     // accuracy gain per simulated hour within each third of the session
     let mut t = Table::new(&["config", "early %/h", "mid %/h", "late %/h"]);
@@ -147,14 +140,16 @@ pub fn fig7(ctx: &Ctx) -> Result<()> {
 }
 
 /// Fig. 13: convergence delay with and without STLD (ablation b1).
-pub fn fig13(ctx: &Ctx) -> Result<()> {
+pub fn fig13(ctx: &mut Ctx) -> Result<()> {
     let names = ["droppeft-lora", "droppeft-b1", "fedlora", "fedadapter"];
     let mut t = Table::new(&["method", "sim h to best-common acc", "final acc"]);
     let mut runs = Vec::new();
     for name in names {
-        let cfg = ctx.base_cfg("mnli");
-        let m = methods::by_name(name, ctx.seed, cfg.rounds)?;
-        runs.push(ctx.run_session(cfg, m)?);
+        let spec = ctx
+            .base_builder("mnli")
+            .method(MethodSpec::parse(name)?)
+            .build()?;
+        runs.push(ctx.run_session(spec)?);
     }
     // common achievable target: min over methods of best acc
     let target = runs
@@ -188,7 +183,7 @@ pub fn fig13(ctx: &Ctx) -> Result<()> {
 }
 
 /// Fig. 14: the adaptive configurator vs every fixed configuration.
-pub fn fig14(ctx: &Ctx) -> Result<()> {
+pub fn fig14(ctx: &mut Ctx) -> Result<()> {
     let fixed: Vec<f64> = if ctx.quick {
         vec![0.1, 0.5, 0.9]
     } else {
@@ -196,14 +191,17 @@ pub fn fig14(ctx: &Ctx) -> Result<()> {
     };
     let mut band = Vec::new();
     for &rate in &fixed {
-        let cfg = ctx.base_cfg("mnli");
-        band.push((
-            rate,
-            ctx.run_session(cfg, fixed_rate_method(rate, RateShape::Incremental, ctx.seed))?,
-        ));
+        let spec = ctx
+            .base_builder("mnli")
+            .method(MethodSpec::fixed_rate(rate, RateShape::Incremental))
+            .build()?;
+        band.push((rate, ctx.run_session(spec)?));
     }
-    let cfg = ctx.base_cfg("mnli");
-    let adaptive = ctx.run_session(cfg, methods::by_name("droppeft-lora", ctx.seed, 0)?)?;
+    let spec = ctx
+        .base_builder("mnli")
+        .method(MethodSpec::droppeft(PeftKind::Lora))
+        .build()?;
+    let adaptive = ctx.run_session(spec)?;
 
     let mut t = Table::new(&["config", "final acc", "best acc", "total sim h"]);
     for (rate, r) in &band {

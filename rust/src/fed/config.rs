@@ -1,6 +1,6 @@
 //! Federated session configuration (paper §6.1 "FL Settings").
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct FedConfig {
     /// compiled model preset ("tiny" | "small" | "base")
     pub preset: String,

@@ -9,6 +9,11 @@
 //! order. Wall-clock is *simulated* from the hw cost model
 //! (semi-emulation, §6.1) while model quality is real; the same seed
 //! yields bit-identical results at any worker count.
+//!
+//! Every sequential barrier emits an [`EngineEvent`] to the attached
+//! [`EventSink`]s ([`Engine::add_sink`]); the engine's own [`Collector`]
+//! sink folds the same stream into the `SessionResult` that
+//! [`Engine::run`] returns. Sinks observe — they never mutate.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -20,6 +25,7 @@ use crate::data::{batch::eval_batches, gen, Batch, Dataset, TaskSpec};
 use crate::fed::client::{ClientCtx, ClientTask};
 use crate::fed::config::FedConfig;
 use crate::fed::device::{self, DeviceCtx};
+use crate::fed::events::{Collector, EngineEvent, EventSink};
 use crate::fed::round::{self, LocalOutcome, RoundPlan};
 use crate::fed::server::{self, Server};
 use crate::fed::snapshot::{self, SessionSnapshot};
@@ -42,8 +48,13 @@ pub struct Engine {
     method: Box<dyn Method>,
     server: Server,
     rng: Rng,
-    /// per-round history so far (restored on snapshot resume)
-    records: Vec<RoundRecord>,
+    /// the engine's own event fold: accumulates the per-round history
+    /// (restored on snapshot resume) and builds `SessionResult`
+    collector: Collector,
+    /// observer pipeline; every sink sees every event, in order
+    sinks: Vec<Box<dyn EventSink>>,
+    /// `SessionStarted` has been emitted
+    announced: bool,
     /// first round the next `run` call executes
     next_round: usize,
 }
@@ -73,6 +84,8 @@ impl Engine {
 
         let base = BaseModel::init(&spec, cfg.seed);
         let global = TrainState::init(&spec, method.kind(), cfg.seed)?;
+        let collector =
+            Collector::with_meta(method.name(), cfg.dataset.clone(), cfg.preset.clone());
         Ok(Engine {
             cfg,
             runtime,
@@ -84,9 +97,29 @@ impl Engine {
             method,
             server: Server::new(global),
             rng,
-            records: Vec::new(),
+            collector,
+            sinks: Vec::new(),
+            announced: false,
             next_round: 0,
         })
+    }
+
+    /// Attach an observer. Sinks are notified at every sequential
+    /// barrier of the round loop, in attachment order, and can never
+    /// influence results (see `fed::events` for the contract).
+    pub fn add_sink(&mut self, sink: Box<dyn EventSink>) {
+        self.sinks.push(sink);
+    }
+
+    /// Deliver one event to the internal collector and every attached
+    /// sink. A sink error aborts the session — silently losing the
+    /// event log would be worse than stopping.
+    fn emit(&mut self, ev: EngineEvent) -> Result<()> {
+        self.collector.on_event(&ev)?;
+        for s in &mut self.sinks {
+            s.on_event(&ev)?;
+        }
+        Ok(())
     }
 
     /// Rebuild a session mid-flight from a snapshot: all static state
@@ -148,7 +181,10 @@ impl Engine {
             dev.rng = Rng::from_state(ds.rng);
             dev.personal = ds.personal;
         }
-        engine.records = snap.records;
+        // re-stamp the method display name: the blob import above can
+        // restore ablation options that change it
+        engine.collector.set_method(engine.method.name());
+        engine.collector.seed_records(snap.records);
         engine.next_round = snap.next_round;
         Ok(engine)
     }
@@ -207,42 +243,65 @@ impl Engine {
     /// Run the session (from the start, or from the restored round when
     /// the engine was resumed from a snapshot).
     pub fn run(&mut self) -> Result<SessionResult> {
+        if !self.announced {
+            self.announced = true;
+            self.emit(EngineEvent::SessionStarted {
+                method: self.method.name(),
+                preset: self.cfg.preset.clone(),
+                dataset: self.cfg.dataset.clone(),
+                rounds: self.cfg.rounds,
+                n_devices: self.cfg.n_devices,
+                devices_per_round: self.cfg.devices_per_round,
+                seed: self.cfg.seed,
+            })?;
+            if self.next_round > 0 {
+                self.emit(EngineEvent::SessionResumed {
+                    from_round: self.next_round,
+                })?;
+            }
+        }
+        let mut early_stop = None;
         for round in self.next_round..self.cfg.rounds {
             let rec = self.run_round(round)?;
             let acc = rec.personalized_acc.or(rec.global_acc);
-            self.records.push(rec);
+            // the collector stores the record; `result()` folds it back
+            self.emit(EngineEvent::RoundFinished { record: rec })?;
             self.next_round = round + 1;
             self.maybe_snapshot()?;
             if let (Some(a), Some(t)) = (acc, self.cfg.target_acc) {
                 if a >= t {
-                    crate::info!(
-                        "{}: target accuracy {:.1}% reached at round {round}",
-                        self.method.name(),
-                        100.0 * t
-                    );
+                    early_stop = Some(round);
                     break;
                 }
             }
         }
-        Ok(self.result())
+        let result = self.result();
+        self.emit(EngineEvent::SessionEnded {
+            rounds_run: result.records.len(),
+            final_acc: result.final_acc(),
+            best_acc: result.best_acc(),
+            total_sim_secs: result.total_sim_secs(),
+            total_traffic_bytes: result.total_traffic_bytes(),
+            early_stop_round: early_stop,
+        })?;
+        for s in &mut self.sinks {
+            s.flush()?;
+        }
+        Ok(result)
     }
 
     /// The session result accumulated so far (on resume this includes
-    /// the rounds restored from the snapshot).
+    /// the rounds restored from the snapshot) — the internal collector
+    /// sink's fold of the event stream.
     pub fn result(&self) -> SessionResult {
-        SessionResult {
-            method: self.method.name(),
-            dataset: self.cfg.dataset.clone(),
-            preset: self.cfg.preset.clone(),
-            records: self.records.clone(),
-        }
+        self.collector.result()
     }
 
     /// Persist a snapshot if `--snapshot-every` says this round ends an
     /// interval. One file per snapshot round
     /// (`<method-key>-<dataset>-r00006.snap`), each written atomically,
     /// so a kill mid-save leaves every earlier snapshot intact.
-    fn maybe_snapshot(&self) -> Result<()> {
+    fn maybe_snapshot(&mut self) -> Result<()> {
         let every = self.cfg.snapshot_every;
         if every == 0 || self.next_round % every != 0 {
             return Ok(());
@@ -273,13 +332,12 @@ impl Engine {
             self.server.global(),
             &self.rng,
             &self.devices,
-            &self.records,
+            self.collector.records(),
         )?;
-        crate::info!(
-            "snapshot after round {} -> {path:?}",
-            self.next_round
-        );
-        Ok(())
+        self.emit(EngineEvent::SnapshotWritten {
+            round: self.next_round,
+            path,
+        })
     }
 
     /// One federated round: plan sequentially, execute clients in
@@ -296,12 +354,37 @@ impl Engine {
             &mut self.rng,
         );
         let selected = plan.selected();
+        self.emit(EngineEvent::RoundPlanned {
+            round,
+            selected: selected.clone(),
+        })?;
         let results = self.run_clients(plan);
         // a failed client must not wipe the finished clients' state
         let outcomes = server::collect_outcomes(results, &mut self.devices)?;
+        // client events fire at the sequential fan-in, in selection
+        // order — never from the worker threads
+        for o in &outcomes {
+            self.emit(EngineEvent::ClientDone {
+                round,
+                device: o.device,
+                local_acc: o.local_acc,
+                mean_loss: o.mean_loss,
+                active_frac: o.active_frac,
+                comp_secs: o.comp_secs,
+                comm_secs: o.comm_secs,
+                traffic_bytes: o.traffic_bytes,
+            })?;
+        }
         let mut rec = self
             .server
             .finish_round(round, outcomes, &mut self.devices, &mut *self.method);
+        self.emit(EngineEvent::RoundAggregated {
+            round,
+            sim_secs: rec.sim_secs,
+            clock_secs: rec.clock_secs,
+            traffic_bytes: rec.traffic_bytes,
+            arm: rec.arm.clone(),
+        })?;
 
         // periodic evaluation
         let last = round + 1 == self.cfg.rounds;
@@ -314,6 +397,11 @@ impl Engine {
                 rec.personalized_acc =
                     self.server.eval_personalized(&self.ctx(), &self.devices, &selected)?;
             }
+            self.emit(EngineEvent::Evaluated {
+                round,
+                global_acc: rec.global_acc,
+                personalized_acc: rec.personalized_acc,
+            })?;
         }
         rec.host_secs = host_t0.elapsed().as_secs_f64();
         Ok(rec)

@@ -1,0 +1,614 @@
+//! Event-driven observer pipeline for federated sessions.
+//!
+//! The engine emits an [`EngineEvent`] at every *sequential* barrier of
+//! the round loop — session start/end, round planned, client done (in
+//! selection order, after the parallel fan-in), aggregation, evaluation,
+//! snapshot written, resume — and delivers each event to every attached
+//! [`EventSink`].
+//!
+//! Sink contract:
+//! - **observe-only** — sinks never feed anything back into training; a
+//!   session's results are byte-identical with zero or ten sinks;
+//! - **sequential** — `on_event` is called from the engine's
+//!   orchestrator thread only, never from client workers, in one
+//!   deterministic order at any `--workers` count;
+//! - **host-free payloads** — events carry no wall-clock timestamps,
+//!   host seconds, or worker counts, so a serialized event stream is
+//!   byte-identical across hosts and worker counts for the same seed
+//!   (`tests/event_log_determinism.rs`).
+//!
+//! Three sinks ship with the crate: [`ConsoleReporter`] (the leveled
+//! progress log the CLI used to hand-roll), [`JsonlWriter`] (append-only
+//! structured event log), and [`Collector`] — the in-memory sink the
+//! engine itself uses to build [`SessionResult`], so the metrics users
+//! read are derived from the same stream they can subscribe to.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::{RoundRecord, SessionResult};
+use crate::util::json::Json;
+
+/// One observable moment of a federated session. Every payload field is
+/// simulation state (deterministic under the session seed) — never host
+/// timing or host configuration.
+#[derive(Clone, Debug)]
+pub enum EngineEvent {
+    /// `Engine::run` entered (fresh or resumed session).
+    SessionStarted {
+        method: String,
+        preset: String,
+        dataset: String,
+        rounds: usize,
+        n_devices: usize,
+        devices_per_round: usize,
+        seed: u64,
+    },
+    /// Emitted right after `SessionStarted` when the engine was rebuilt
+    /// from a snapshot; `from_round` is the first round it will execute.
+    SessionResumed { from_round: usize },
+    /// Sequential planning pass done: devices selected, RNG pre-drawn.
+    RoundPlanned { round: usize, selected: Vec<usize> },
+    /// One device's local round finished (reported after the parallel
+    /// fan-in, in selection order).
+    ClientDone {
+        round: usize,
+        device: usize,
+        local_acc: f64,
+        mean_loss: f64,
+        active_frac: f64,
+        comp_secs: f64,
+        comm_secs: f64,
+        traffic_bytes: u64,
+    },
+    /// Server absorbed the round: PTLS aggregation, clock accounting,
+    /// bandit feedback.
+    RoundAggregated {
+        round: usize,
+        sim_secs: f64,
+        clock_secs: f64,
+        traffic_bytes: u64,
+        arm: Option<String>,
+    },
+    /// Periodic evaluation ran this round.
+    Evaluated {
+        round: usize,
+        global_acc: Option<f64>,
+        personalized_acc: Option<f64>,
+    },
+    /// The round's complete record — the stream [`Collector`] folds into
+    /// a [`SessionResult`].
+    RoundFinished { record: RoundRecord },
+    /// A session snapshot was persisted after `round` finished rounds.
+    SnapshotWritten { round: usize, path: PathBuf },
+    /// `Engine::run` returned; summary over the whole record history
+    /// (including rounds restored from a snapshot).
+    SessionEnded {
+        rounds_run: usize,
+        final_acc: f64,
+        best_acc: f64,
+        total_sim_secs: f64,
+        total_traffic_bytes: u64,
+        /// round at which `target_acc` stopped the session early
+        early_stop_round: Option<usize>,
+    },
+}
+
+impl EngineEvent {
+    /// Structured form for the JSONL log. `RoundFinished` serializes via
+    /// `RoundRecord::to_json`, which deliberately omits `host_secs` —
+    /// the one record field that differs between runs.
+    pub fn to_json(&self) -> Json {
+        let tag = |name: &str| ("event", Json::str(name));
+        match self {
+            EngineEvent::SessionStarted {
+                method,
+                preset,
+                dataset,
+                rounds,
+                n_devices,
+                devices_per_round,
+                seed,
+            } => Json::obj(vec![
+                tag("session_started"),
+                ("method", Json::str(method.clone())),
+                ("preset", Json::str(preset.clone())),
+                ("dataset", Json::str(dataset.clone())),
+                ("rounds", Json::num(*rounds as f64)),
+                ("n_devices", Json::num(*n_devices as f64)),
+                ("devices_per_round", Json::num(*devices_per_round as f64)),
+                ("seed", Json::num(*seed as f64)),
+            ]),
+            EngineEvent::SessionResumed { from_round } => Json::obj(vec![
+                tag("session_resumed"),
+                ("from_round", Json::num(*from_round as f64)),
+            ]),
+            EngineEvent::RoundPlanned { round, selected } => Json::obj(vec![
+                tag("round_planned"),
+                ("round", Json::num(*round as f64)),
+                (
+                    "selected",
+                    Json::Arr(selected.iter().map(|&d| Json::num(d as f64)).collect()),
+                ),
+            ]),
+            EngineEvent::ClientDone {
+                round,
+                device,
+                local_acc,
+                mean_loss,
+                active_frac,
+                comp_secs,
+                comm_secs,
+                traffic_bytes,
+            } => Json::obj(vec![
+                tag("client_done"),
+                ("round", Json::num(*round as f64)),
+                ("device", Json::num(*device as f64)),
+                ("local_acc", Json::num(*local_acc)),
+                ("mean_loss", Json::num(*mean_loss)),
+                ("active_frac", Json::num(*active_frac)),
+                ("comp_secs", Json::num(*comp_secs)),
+                ("comm_secs", Json::num(*comm_secs)),
+                ("traffic_bytes", Json::num(*traffic_bytes as f64)),
+            ]),
+            EngineEvent::RoundAggregated {
+                round,
+                sim_secs,
+                clock_secs,
+                traffic_bytes,
+                arm,
+            } => Json::obj(vec![
+                tag("round_aggregated"),
+                ("round", Json::num(*round as f64)),
+                ("sim_secs", Json::num(*sim_secs)),
+                ("clock_secs", Json::num(*clock_secs)),
+                ("traffic_bytes", Json::num(*traffic_bytes as f64)),
+                (
+                    "arm",
+                    arm.as_ref().map(|a| Json::str(a.clone())).unwrap_or(Json::Null),
+                ),
+            ]),
+            EngineEvent::Evaluated {
+                round,
+                global_acc,
+                personalized_acc,
+            } => Json::obj(vec![
+                tag("evaluated"),
+                ("round", Json::num(*round as f64)),
+                (
+                    "global_acc",
+                    global_acc.map(Json::num).unwrap_or(Json::Null),
+                ),
+                (
+                    "personalized_acc",
+                    personalized_acc.map(Json::num).unwrap_or(Json::Null),
+                ),
+            ]),
+            EngineEvent::RoundFinished { record } => Json::obj(vec![
+                tag("round_finished"),
+                ("record", record.to_json()),
+            ]),
+            // only the file name is serialized: the snapshot filename is
+            // deterministic (`<method-key>-<dataset>-rNNNNN.snap`) while
+            // the directory it lands in is host configuration, which
+            // must not leak into the byte-identical event stream
+            EngineEvent::SnapshotWritten { round, path } => Json::obj(vec![
+                tag("snapshot_written"),
+                ("round", Json::num(*round as f64)),
+                (
+                    "file",
+                    Json::str(
+                        path.file_name()
+                            .unwrap_or(path.as_os_str())
+                            .to_string_lossy()
+                            .into_owned(),
+                    ),
+                ),
+            ]),
+            EngineEvent::SessionEnded {
+                rounds_run,
+                final_acc,
+                best_acc,
+                total_sim_secs,
+                total_traffic_bytes,
+                early_stop_round,
+            } => Json::obj(vec![
+                tag("session_ended"),
+                ("rounds_run", Json::num(*rounds_run as f64)),
+                ("final_acc", Json::num(*final_acc)),
+                ("best_acc", Json::num(*best_acc)),
+                ("total_sim_secs", Json::num(*total_sim_secs)),
+                ("total_traffic_bytes", Json::num(*total_traffic_bytes as f64)),
+                (
+                    "early_stop_round",
+                    early_stop_round
+                        .map(|r| Json::num(r as f64))
+                        .unwrap_or(Json::Null),
+                ),
+            ]),
+        }
+    }
+}
+
+/// An observer of engine events. See the module docs for the contract
+/// (observe-only, sequential, host-free payloads). An `Err` from a sink
+/// aborts the session — losing the event log silently would be worse.
+pub trait EventSink: Send {
+    fn on_event(&mut self, ev: &EngineEvent) -> Result<()>;
+
+    /// Called once after `SessionEnded` — flush buffers, close files.
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Progress log on the leveled logger — the structured replacement for
+/// the ad-hoc `info!`/`println!` lines the CLI and experiment harness
+/// used to scatter. Session milestones log at info, per-round detail at
+/// debug (`DROPPEFT_LOG=debug`).
+#[derive(Default)]
+pub struct ConsoleReporter {
+    /// method display name, captured from `SessionStarted`
+    method: String,
+    /// host start time — sink-local, never part of any event
+    t0: Option<Instant>,
+}
+
+impl ConsoleReporter {
+    pub fn new() -> ConsoleReporter {
+        ConsoleReporter::default()
+    }
+}
+
+impl EventSink for ConsoleReporter {
+    fn on_event(&mut self, ev: &EngineEvent) -> Result<()> {
+        match ev {
+            EngineEvent::SessionStarted {
+                method,
+                preset,
+                dataset,
+                rounds,
+                n_devices,
+                ..
+            } => {
+                self.method = method.clone();
+                self.t0 = Some(Instant::now());
+                crate::info!(
+                    "training {method} on {preset}/{dataset} ({n_devices} devices, {rounds} rounds)"
+                );
+            }
+            EngineEvent::SessionResumed { from_round } => {
+                crate::info!("{}: resumed at round {from_round}", self.method);
+            }
+            EngineEvent::RoundPlanned { round, selected } => {
+                crate::debug!("round {round}: {} devices selected", selected.len());
+            }
+            EngineEvent::ClientDone {
+                round,
+                device,
+                local_acc,
+                mean_loss,
+                ..
+            } => {
+                crate::debug!(
+                    "round {round}: device {device} done (local acc {:.1}%, loss {mean_loss:.4})",
+                    100.0 * local_acc
+                );
+            }
+            EngineEvent::RoundAggregated {
+                round,
+                clock_secs,
+                arm,
+                ..
+            } => {
+                crate::debug!(
+                    "round {round}: aggregated (sim clock {:.2} h{})",
+                    clock_secs / 3600.0,
+                    arm.as_ref()
+                        .map(|a| format!(", arm {a}"))
+                        .unwrap_or_default()
+                );
+            }
+            EngineEvent::Evaluated {
+                round,
+                global_acc,
+                personalized_acc,
+            } => {
+                let fmt = |a: &Option<f64>| {
+                    a.map(|x| format!("{:.1}%", 100.0 * x))
+                        .unwrap_or_else(|| "-".into())
+                };
+                crate::debug!(
+                    "round {round}: eval global {} personalized {}",
+                    fmt(global_acc),
+                    fmt(personalized_acc)
+                );
+            }
+            EngineEvent::RoundFinished { .. } => {}
+            EngineEvent::SnapshotWritten { round, path } => {
+                crate::info!("snapshot after round {round} -> {path:?}");
+            }
+            EngineEvent::SessionEnded {
+                rounds_run,
+                final_acc,
+                best_acc,
+                total_sim_secs,
+                early_stop_round,
+                ..
+            } => {
+                if let Some(r) = early_stop_round {
+                    crate::info!(
+                        "{}: target accuracy reached at round {r}",
+                        self.method
+                    );
+                }
+                let host = self
+                    .t0
+                    .map(|t| format!(" ({:.1}s host)", t.elapsed().as_secs_f64()))
+                    .unwrap_or_default();
+                crate::info!(
+                    "session {} done: {rounds_run} rounds, final {:.1}% best {:.1}%, sim {:.2} h{host}",
+                    self.method,
+                    100.0 * final_acc,
+                    100.0 * best_acc,
+                    total_sim_secs / 3600.0
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// JSONL event log: one event per line, appended and flushed per event
+/// so a killed session leaves every finished round on disk. Payloads
+/// carry no host-specific data, so the log for a given seed is
+/// byte-identical at any `--workers` count. [`JsonlWriter::create`]
+/// starts a fresh log (truncating a stale one from an earlier run);
+/// [`JsonlWriter::append`] continues an existing file — the right mode
+/// when the session itself is a `--resume` continuation.
+pub struct JsonlWriter {
+    path: PathBuf,
+    file: File,
+}
+
+impl JsonlWriter {
+    /// Start a fresh event log for a new session, truncating any file a
+    /// previous run left at `path`.
+    pub fn create(path: impl AsRef<Path>) -> Result<JsonlWriter> {
+        Self::open(path.as_ref(), true)
+    }
+
+    /// Continue an existing event log (resumed sessions), creating it if
+    /// absent.
+    pub fn append(path: impl AsRef<Path>) -> Result<JsonlWriter> {
+        Self::open(path.as_ref(), false)
+    }
+
+    fn open(path: &Path, truncate: bool) -> Result<JsonlWriter> {
+        let path = path.to_path_buf();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating event-log dir {dir:?}"))?;
+            }
+        }
+        let mut opts = OpenOptions::new();
+        opts.create(true);
+        if truncate {
+            opts.write(true).truncate(true);
+        } else {
+            opts.append(true);
+        }
+        let file = opts
+            .open(&path)
+            .with_context(|| format!("opening event log {path:?}"))?;
+        Ok(JsonlWriter { path, file })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl EventSink for JsonlWriter {
+    fn on_event(&mut self, ev: &EngineEvent) -> Result<()> {
+        let mut line = ev.to_json().to_string();
+        line.push('\n');
+        self.file
+            .write_all(line.as_bytes())
+            .with_context(|| format!("appending to event log {:?}", self.path))
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.file
+            .flush()
+            .with_context(|| format!("flushing event log {:?}", self.path))
+    }
+}
+
+/// In-memory sink that folds the event stream into a [`SessionResult`].
+/// The engine owns one internally — `Engine::run`'s return value IS this
+/// sink's fold, so user-visible metrics derive from exactly the stream
+/// any other sink observes.
+#[derive(Clone, Debug, Default)]
+pub struct Collector {
+    method: String,
+    dataset: String,
+    preset: String,
+    records: Vec<RoundRecord>,
+}
+
+impl Collector {
+    pub fn new() -> Collector {
+        Collector::default()
+    }
+
+    pub(crate) fn with_meta(method: String, dataset: String, preset: String) -> Collector {
+        Collector {
+            method,
+            dataset,
+            preset,
+            records: Vec::new(),
+        }
+    }
+
+    /// Patch the method display name (a snapshot resume can restore
+    /// ablation options that change it after construction).
+    pub(crate) fn set_method(&mut self, method: String) {
+        self.method = method;
+    }
+
+    /// Pre-seed the record history (snapshot resume).
+    pub(crate) fn seed_records(&mut self, records: Vec<RoundRecord>) {
+        self.records = records;
+    }
+
+    /// Per-round history accumulated so far.
+    pub fn records(&self) -> &[RoundRecord] {
+        &self.records
+    }
+
+    /// The session result folded from the stream so far.
+    pub fn result(&self) -> SessionResult {
+        SessionResult {
+            method: self.method.clone(),
+            dataset: self.dataset.clone(),
+            preset: self.preset.clone(),
+            records: self.records.clone(),
+        }
+    }
+}
+
+impl EventSink for Collector {
+    fn on_event(&mut self, ev: &EngineEvent) -> Result<()> {
+        match ev {
+            EngineEvent::SessionStarted {
+                method,
+                dataset,
+                preset,
+                ..
+            } => {
+                self.method = method.clone();
+                self.dataset = dataset.clone();
+                self.preset = preset.clone();
+            }
+            EngineEvent::RoundFinished { record } => self.records.push(record.clone()),
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn started() -> EngineEvent {
+        EngineEvent::SessionStarted {
+            method: "DropPEFT(LoRA)".into(),
+            preset: "tiny".into(),
+            dataset: "mnli".into(),
+            rounds: 4,
+            n_devices: 10,
+            devices_per_round: 3,
+            seed: 42,
+        }
+    }
+
+    fn finished(round: usize, acc: Option<f64>) -> EngineEvent {
+        EngineEvent::RoundFinished {
+            record: RoundRecord {
+                round,
+                global_acc: acc,
+                host_secs: 1234.5, // must never reach serialized output
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn collector_folds_stream_into_session_result() {
+        let mut c = Collector::new();
+        c.on_event(&started()).unwrap();
+        c.on_event(&finished(0, None)).unwrap();
+        c.on_event(&finished(1, Some(0.5))).unwrap();
+        let r = c.result();
+        assert_eq!(r.method, "DropPEFT(LoRA)");
+        assert_eq!(r.dataset, "mnli");
+        assert_eq!(r.records.len(), 2);
+        assert_eq!(r.final_acc(), 0.5);
+    }
+
+    #[test]
+    fn serialized_events_parse_and_omit_host_data() {
+        for ev in [
+            started(),
+            EngineEvent::SessionResumed { from_round: 2 },
+            EngineEvent::RoundPlanned {
+                round: 0,
+                selected: vec![3, 1, 4],
+            },
+            finished(0, Some(0.25)),
+            EngineEvent::SessionEnded {
+                rounds_run: 4,
+                final_acc: 0.5,
+                best_acc: 0.6,
+                total_sim_secs: 120.0,
+                total_traffic_bytes: 1_000,
+                early_stop_round: None,
+            },
+        ] {
+            let line = ev.to_json().to_string();
+            assert!(!line.contains("host"), "host data leaked: {line}");
+            let parsed = Json::parse(&line).unwrap();
+            assert!(parsed.get("event").unwrap().as_str().is_ok());
+        }
+    }
+
+    #[test]
+    fn snapshot_event_serializes_only_the_deterministic_file_name() {
+        let ev = EngineEvent::SnapshotWritten {
+            round: 2,
+            path: PathBuf::from("/home/alice/snaps/droppeft-lora-mnli-r00002.snap"),
+        };
+        let line = ev.to_json().to_string();
+        // the host-specific directory must not leak into the event
+        // stream; the file name alone is deterministic
+        assert!(!line.contains("alice"), "host path leaked: {line}");
+        assert!(line.contains("droppeft-lora-mnli-r00002.snap"));
+    }
+
+    #[test]
+    fn jsonl_writer_appends_one_line_per_event() {
+        let dir = std::env::temp_dir().join("droppeft_events_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("events.jsonl");
+        let mut w = JsonlWriter::create(&path).unwrap();
+        w.on_event(&started()).unwrap();
+        w.on_event(&finished(0, None)).unwrap();
+        w.flush().unwrap();
+        // a resumed session continues the same log via append mode
+        let mut w2 = JsonlWriter::append(&path).unwrap();
+        w2.on_event(&EngineEvent::SessionResumed { from_round: 1 })
+            .unwrap();
+        w2.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for l in &lines {
+            Json::parse(l).unwrap();
+        }
+        assert!(lines[2].contains("session_resumed"));
+        // a FRESH session must not concatenate onto the stale log
+        let mut w3 = JsonlWriter::create(&path).unwrap();
+        w3.on_event(&started()).unwrap();
+        w3.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 1, "create() must truncate");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

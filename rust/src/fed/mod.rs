@@ -9,20 +9,30 @@
 //! - [`engine`] — the thin orchestrator tying the round loop together
 //!   (real XLA training + simulated wall-clock);
 //! - [`snapshot`] — the versioned `DPEFTSN2` session snapshot format
-//!   behind `--snapshot-every` / `--resume` (kill-and-resume determinism).
+//!   behind `--snapshot-every` / `--resume` (kill-and-resume determinism);
+//! - [`spec`] — the typed `SessionSpec` builder and `SweepPlan`, the
+//!   library-first way to describe sessions (the CLI is a thin
+//!   translator into these);
+//! - [`events`] — the `EngineEvent` stream and `EventSink` observers
+//!   (console reporter, JSONL log, in-memory collector) emitted at the
+//!   engine's sequential barriers.
 
 pub mod client;
 pub mod config;
 pub mod device;
 pub mod engine;
+pub mod events;
 pub mod round;
 pub mod server;
 pub mod snapshot;
+pub mod spec;
 
 pub use client::{ClientCtx, ClientTask};
 pub use config::FedConfig;
 pub use device::{DeviceCtx, DeviceInfo};
 pub use engine::Engine;
+pub use events::{Collector, ConsoleReporter, EngineEvent, EventSink, JsonlWriter};
 pub use round::{DevicePlan, LocalOutcome, RoundPlan};
 pub use server::Server;
 pub use snapshot::SessionSnapshot;
+pub use spec::{SessionSpec, SessionSpecBuilder, SweepPlan};

@@ -78,7 +78,7 @@ impl SessionSnapshot {
     /// `droppeft-lora-mnli-r00042.snap` after 42 finished rounds. The
     /// method key and dataset make single-session (`train`) runs
     /// self-describing; experiment bundles additionally place each
-    /// session in its own `session-NNN` subdirectory (`exp::Ctx`), since
+    /// session in its own `session-NNN` subdirectory (`SweepPlan`), since
     /// an option sweep can repeat the same key and dataset.
     pub fn file_name(method_key: &str, dataset: &str, rounds_finished: usize) -> String {
         format!("{method_key}-{dataset}-r{rounds_finished:05}.snap")

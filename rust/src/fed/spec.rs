@@ -1,0 +1,422 @@
+//! Typed session specification — the library-first entry point.
+//!
+//! A [`SessionSpec`] is a validated, self-contained description of one
+//! federated fine-tuning session: the full [`FedConfig`] plus a typed
+//! [`MethodSpec`]. Specs are built through [`SessionSpec::builder`],
+//! which validates every field combination (`devices_per_round` vs the
+//! population, known datasets, positive learning rates, ...) before a
+//! session can exist, and turn into a running [`Engine`] via
+//! [`SessionSpec::build_engine`].
+//!
+//! The CLI (`droppeft train`) and the experiment harness (`droppeft exp`)
+//! are thin translators into specs: [`from_args`] maps `--flag` options
+//! onto builder calls one-to-one (`tests/spec_api.rs` pins the golden
+//! equivalence), and [`SweepPlan`] sequences many specs — assigning
+//! per-session snapshot subdirectories and handing a pending `--resume`
+//! snapshot to the first session whose identity matches.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::fed::config::FedConfig;
+use crate::fed::engine::Engine;
+use crate::fed::snapshot::{self, SessionSnapshot};
+use crate::methods::{Method, MethodSpec};
+use crate::runtime::Runtime;
+use crate::util::cli::Args;
+
+/// A complete, validated description of one federated session.
+///
+/// Fields are public so harness code can inspect a spec, but mutating
+/// them bypasses the builder's validation — [`SessionSpec::build_engine`]
+/// re-validates, so an invalid hand-edited spec still fails before any
+/// training starts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionSpec {
+    pub cfg: FedConfig,
+    pub method: MethodSpec,
+}
+
+impl SessionSpec {
+    /// Start building a spec from the testbed defaults
+    /// (`FedConfig::quick("tiny", "mnli")` + DropPEFT(LoRA)).
+    pub fn builder() -> SessionSpecBuilder {
+        SessionSpecBuilder {
+            spec: SessionSpec {
+                cfg: FedConfig::quick("tiny", "mnli"),
+                method: MethodSpec::default(),
+            },
+        }
+    }
+
+    /// Check every invariant the engine assumes. Called by the builder
+    /// and again by [`SessionSpec::build_engine`].
+    pub fn validate(&self) -> Result<()> {
+        let c = &self.cfg;
+        if c.preset.is_empty() {
+            bail!("spec: preset must not be empty");
+        }
+        if !matches!(c.dataset.as_str(), "mnli" | "qqp" | "agnews") {
+            bail!(
+                "spec: unknown dataset {:?} (mnli|qqp|agnews)",
+                c.dataset
+            );
+        }
+        if c.rounds == 0 {
+            bail!("spec: rounds must be >= 1");
+        }
+        if c.n_devices == 0 {
+            bail!("spec: device population must be >= 1");
+        }
+        if c.devices_per_round == 0 || c.devices_per_round > c.n_devices {
+            bail!(
+                "spec: devices_per_round must be in 1..={} (got {})",
+                c.n_devices,
+                c.devices_per_round
+            );
+        }
+        if c.local_batches == 0 {
+            bail!("spec: local_batches must be >= 1");
+        }
+        if c.samples == 0 {
+            bail!("spec: samples must be >= 1");
+        }
+        if !(c.lr.is_finite() && c.lr > 0.0) {
+            bail!("spec: lr must be a positive finite number (got {})", c.lr);
+        }
+        if !(c.alpha.is_finite() && c.alpha > 0.0) {
+            bail!(
+                "spec: Dirichlet alpha must be a positive finite number (got {})",
+                c.alpha
+            );
+        }
+        if c.eval_every == 0 {
+            bail!("spec: eval_every must be >= 1");
+        }
+        if c.eval_batches == 0 {
+            bail!("spec: eval_batches must be >= 1");
+        }
+        if let Some(t) = c.target_acc {
+            if !(t > 0.0 && t <= 1.0) {
+                bail!("spec: target_acc must be in (0, 1] (got {t})");
+            }
+        }
+        Ok(())
+    }
+
+    /// Instantiate the spec's method strategy (the typed replacement for
+    /// `methods::by_name` at session-construction time).
+    pub fn build_method(&self) -> Box<dyn Method> {
+        self.method.build(self.cfg.seed, self.cfg.rounds)
+    }
+
+    /// Validate and construct a ready-to-run engine. Attach observers
+    /// with [`Engine::add_sink`] before calling [`Engine::run`].
+    pub fn build_engine(&self, runtime: Arc<Runtime>) -> Result<Engine> {
+        self.validate()?;
+        Engine::new(self.cfg.clone(), runtime, self.build_method())
+    }
+}
+
+/// Validating builder for [`SessionSpec`]. Every setter mirrors one
+/// `droppeft train` flag; `build()` rejects inconsistent combinations.
+#[derive(Clone, Debug)]
+pub struct SessionSpecBuilder {
+    spec: SessionSpec,
+}
+
+impl SessionSpecBuilder {
+    pub fn preset(mut self, preset: impl Into<String>) -> Self {
+        self.spec.cfg.preset = preset.into();
+        self
+    }
+
+    pub fn dataset(mut self, dataset: impl Into<String>) -> Self {
+        self.spec.cfg.dataset = dataset.into();
+        self
+    }
+
+    pub fn method(mut self, method: MethodSpec) -> Self {
+        self.spec.method = method;
+        self
+    }
+
+    pub fn rounds(mut self, rounds: usize) -> Self {
+        self.spec.cfg.rounds = rounds;
+        self
+    }
+
+    /// Total device population (`--devices`).
+    pub fn devices(mut self, n: usize) -> Self {
+        self.spec.cfg.n_devices = n;
+        self
+    }
+
+    /// Devices sampled per round (`--per-round`).
+    pub fn per_round(mut self, n: usize) -> Self {
+        self.spec.cfg.devices_per_round = n;
+        self
+    }
+
+    pub fn local_batches(mut self, n: usize) -> Self {
+        self.spec.cfg.local_batches = n;
+        self
+    }
+
+    /// Dirichlet non-IIDness (`--alpha`).
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        self.spec.cfg.alpha = alpha;
+        self
+    }
+
+    /// Total dataset size before partitioning (`--samples`).
+    pub fn samples(mut self, n: usize) -> Self {
+        self.spec.cfg.samples = n;
+        self
+    }
+
+    pub fn lr(mut self, lr: f64) -> Self {
+        self.spec.cfg.lr = lr;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.spec.cfg.seed = seed;
+        self
+    }
+
+    pub fn eval_every(mut self, n: usize) -> Self {
+        self.spec.cfg.eval_every = n;
+        self
+    }
+
+    pub fn eval_batches(mut self, n: usize) -> Self {
+        self.spec.cfg.eval_batches = n;
+        self
+    }
+
+    /// Also evaluate per-device personalized accuracy (`--personal-eval`).
+    pub fn personal_eval(mut self, on: bool) -> Self {
+        self.spec.cfg.eval_personalized = on;
+        self
+    }
+
+    /// Stop early once accuracy reaches this target (`--target-acc`).
+    pub fn target_acc(mut self, target: f64) -> Self {
+        self.spec.cfg.target_acc = Some(target);
+        self
+    }
+
+    /// Simulate wall-clock/memory/traffic at a paper-scale architecture
+    /// (`--cost-model`, e.g. "roberta-large"); training quality still
+    /// comes from the compiled preset (semi-emulation, §6.1).
+    pub fn cost_model(mut self, model: impl Into<String>) -> Self {
+        self.spec.cfg.cost_model = Some(model.into());
+        self
+    }
+
+    /// Worker threads for device-parallel local training. Host-specific:
+    /// never changes results. Clamped to >= 1 like the CLI.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.spec.cfg.workers = n.max(1);
+        self
+    }
+
+    /// Write a session snapshot every N rounds (0 = disabled).
+    pub fn snapshot_every(mut self, n: usize) -> Self {
+        self.spec.cfg.snapshot_every = n;
+        self
+    }
+
+    pub fn snapshot_dir(mut self, dir: impl Into<String>) -> Self {
+        self.spec.cfg.snapshot_dir = Some(dir.into());
+        self
+    }
+
+    pub fn build(self) -> Result<SessionSpec> {
+        self.spec.validate()?;
+        Ok(self.spec)
+    }
+}
+
+/// Translate `droppeft train` CLI flags into a [`SessionSpec`] — the
+/// whole mapping, one builder call per flag. `tests/spec_api.rs` asserts
+/// this stays equivalent to driving the builder directly.
+pub fn from_args(args: &Args) -> Result<SessionSpec> {
+    builder_from_args(args)?.build()
+}
+
+/// The translation half of [`from_args`]: parse and type-check every
+/// `train` flag into a builder *without* cross-field validation. The
+/// `--resume` path needs this split — its session settings come from the
+/// snapshot, so the ignored flags must still be consumed (unknown-flag
+/// detection) and type-checked, but not validated as a combination.
+pub fn builder_from_args(args: &Args) -> Result<SessionSpecBuilder> {
+    let d = FedConfig::quick("tiny", "mnli");
+    let mut b = SessionSpec::builder()
+        .preset(args.str_or("preset", &d.preset))
+        .dataset(args.str_or("dataset", &d.dataset))
+        .method(MethodSpec::parse(&args.str_or("method", "droppeft-lora"))?)
+        .rounds(args.usize_or("rounds", d.rounds)?)
+        .devices(args.usize_or("devices", d.n_devices)?)
+        .per_round(args.usize_or("per-round", d.devices_per_round)?)
+        .local_batches(args.usize_or("local-batches", d.local_batches)?)
+        .alpha(args.f64_or("alpha", d.alpha)?)
+        .samples(args.usize_or("samples", d.samples)?)
+        .lr(args.f64_or("lr", d.lr)?)
+        .seed(args.u64_or("seed", d.seed)?)
+        .eval_every(args.usize_or("eval-every", d.eval_every)?)
+        .eval_batches(args.usize_or("eval-batches", d.eval_batches)?)
+        .personal_eval(args.flag("personal-eval"))
+        .workers(args.usize_or("workers", d.workers)?)
+        .snapshot_every(args.usize_or("snapshot-every", 0)?);
+    if let Some(t) = args.opt_str("target-acc") {
+        b = b.target_acc(
+            t.parse()
+                .with_context(|| format!("--target-acc {t:?} is not a number"))?,
+        );
+    }
+    if let Some(m) = args.opt_str("cost-model") {
+        b = b.cost_model(m);
+    }
+    if let Some(dir) = args.opt_str("snapshot-dir") {
+        b = b.snapshot_dir(dir);
+    }
+    Ok(b)
+}
+
+/// Sequences the sessions of a sweep (an experiment bundle, an ablation
+/// grid): assigns each session a deterministic `session-NNN` snapshot
+/// subdirectory and routes a pending `--resume` snapshot to the first
+/// session whose identity matches. Plain `&mut` state — this replaces
+/// the `RefCell`/`Cell` plumbing the experiment harness used to carry.
+#[derive(Default)]
+pub struct SweepPlan {
+    /// pending `--resume` snapshot (path it was loaded from, for
+    /// reporting), consumed by the first matching session
+    pending: Option<(String, SessionSnapshot)>,
+    /// sessions built so far; drives the `session-NNN` subdirectories
+    /// (sweep order is deterministic, so a re-run maps sessions to the
+    /// same subdirs)
+    seq: usize,
+}
+
+impl SweepPlan {
+    pub fn new() -> SweepPlan {
+        SweepPlan::default()
+    }
+
+    /// Load a `--resume` snapshot up front; [`SweepPlan::build_engine`]
+    /// hands it to the first session whose identity matches.
+    pub fn load_resume(&mut self, path: &str) -> Result<()> {
+        let snap = snapshot::load(path)
+            .with_context(|| format!("loading --resume snapshot {path:?}"))?;
+        self.pending = Some((path.to_string(), snap));
+        Ok(())
+    }
+
+    /// Number of sessions built so far (the next session's index).
+    pub fn sessions_built(&self) -> usize {
+        self.seq
+    }
+
+    /// The still-unconsumed `--resume` snapshot, if any — callers report
+    /// when a sweep finished without a matching session.
+    pub fn pending_resume(&self) -> Option<(&str, &SessionSnapshot)> {
+        self.pending.as_ref().map(|(p, s)| (p.as_str(), s))
+    }
+
+    /// Build the sweep's next engine: fresh from `spec`, or resumed when
+    /// the pending snapshot matches this session's identity — method
+    /// name, dataset, preset, AND the method's option fingerprint
+    /// (`Method::snapshot_compatible`; name alone cannot distinguish the
+    /// sessions of an option sweep like fig6a). The snapshot is consumed
+    /// by the first match, so later same-named sessions run from round
+    /// 0; the method is rebuilt from the snapshot's factory key
+    /// (`Engine::resume_snapshot`) so schedule-derived state follows the
+    /// snapshot's round count, not this sweep's.
+    pub fn build_engine(&mut self, spec: &SessionSpec, runtime: Arc<Runtime>) -> Result<Engine> {
+        spec.validate()?;
+        let mut cfg = spec.cfg.clone();
+        // one snapshot subdir per session so sweep sessions with the
+        // same method key cannot clobber each other's snapshot files
+        let seq = self.seq;
+        self.seq += 1;
+        if cfg.snapshot_every > 0 {
+            let base = cfg
+                .snapshot_dir
+                .as_deref()
+                .unwrap_or(snapshot::DEFAULT_DIR);
+            cfg.snapshot_dir = Some(format!("{base}/session-{seq:03}"));
+        }
+
+        let method = spec.build_method();
+        let matches = self.pending.as_ref().is_some_and(|(_, snap)| {
+            snap.method_name == method.name()
+                && snap.cfg.dataset == cfg.dataset
+                && snap.cfg.preset == cfg.preset
+                && method.snapshot_compatible(&snap.method_blob)
+        });
+        if matches {
+            let (path, mut snap) = self
+                .pending
+                .take()
+                .expect("checked above: a pending snapshot matched");
+            crate::info!(
+                "resuming {} on {} from {path:?} ({} of {} rounds done)",
+                snap.method_name,
+                snap.cfg.dataset,
+                snap.next_round,
+                snap.cfg.rounds
+            );
+            snap.cfg.workers = cfg.workers.max(1);
+            return Engine::resume_snapshot(snap, runtime);
+        }
+        Engine::new(cfg, runtime, method)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::PeftKind;
+
+    #[test]
+    fn builder_defaults_are_valid() {
+        let spec = SessionSpec::builder().build().unwrap();
+        assert_eq!(spec.cfg.preset, "tiny");
+        assert_eq!(spec.cfg.dataset, "mnli");
+        assert_eq!(spec.method, MethodSpec::droppeft(PeftKind::Lora));
+    }
+
+    #[test]
+    fn builder_rejects_inconsistent_specs() {
+        assert!(SessionSpec::builder().rounds(0).build().is_err());
+        assert!(SessionSpec::builder().dataset("imagenet").build().is_err());
+        assert!(SessionSpec::builder()
+            .devices(4)
+            .per_round(8)
+            .build()
+            .is_err());
+        assert!(SessionSpec::builder().lr(0.0).build().is_err());
+        assert!(SessionSpec::builder().lr(f64::NAN).build().is_err());
+        assert!(SessionSpec::builder().alpha(-1.0).build().is_err());
+        assert!(SessionSpec::builder().target_acc(1.5).build().is_err());
+        assert!(SessionSpec::builder().samples(0).build().is_err());
+        assert!(SessionSpec::builder().eval_every(0).build().is_err());
+    }
+
+    #[test]
+    fn workers_clamp_matches_cli() {
+        let spec = SessionSpec::builder().workers(0).build().unwrap();
+        assert_eq!(spec.cfg.workers, 1);
+    }
+
+    #[test]
+    fn hand_mutated_spec_fails_validation_at_engine_build() {
+        let mut spec = SessionSpec::builder().build().unwrap();
+        spec.cfg.devices_per_round = spec.cfg.n_devices + 1;
+        assert!(spec.validate().is_err());
+    }
+}

@@ -5,13 +5,19 @@
 //!   exp <id>   regenerate a paper table/figure (table1, fig2, ..., all)
 //!   inspect    print manifest + artifact statistics
 //!   help
+//!
+//! The CLI is a thin translator into the library-first session API:
+//! `fed::spec::from_args` maps `train` flags onto the `SessionSpec`
+//! builder one-to-one, and progress/metrics flow through the
+//! `fed::events` observer pipeline (console reporter + optional JSONL
+//! event log) rather than ad-hoc prints.
 
+use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use droppeft::fed::{Engine, FedConfig};
-use droppeft::methods;
+use droppeft::fed::{spec, ConsoleReporter, Engine, JsonlWriter};
 use droppeft::runtime::Runtime;
 use droppeft::util::cli::Args;
 
@@ -36,11 +42,19 @@ USAGE:
   droppeft train [--method droppeft-lora] [--preset tiny] [--dataset mnli]
                  [--rounds 20] [--devices 20] [--per-round 4]
                  [--local-batches 4] [--alpha 1.0] [--samples 2000]
-                 [--lr 5e-4] [--seed 42] [--eval-every 2]
+                 [--lr 5e-4] [--seed 42] [--eval-every 2] [--eval-batches 4]
                  [--target-acc 0.9] [--personal-eval] [--artifacts DIR]
+                 [--cost-model MODEL]
+                                 (simulate wall-clock/memory/traffic at a
+                                  paper-scale architecture, e.g.
+                                  roberta-large; training quality still
+                                  comes from the compiled preset)
                  [--workers N]   (device-parallel local training;
                                   default: host parallelism; same seed =>
                                   identical results at any N)
+                 [--out DIR]     (write a structured JSONL event log to
+                                  DIR/events.jsonl — byte-identical at any
+                                  --workers; a --resume run appends to it)
                  [--snapshot-every N] [--snapshot-dir DIR]
                                  (write an atomic session snapshot every
                                   N rounds, default DIR: snapshots/)
@@ -51,79 +65,47 @@ USAGE:
                                   uninterrupted run)
   droppeft exp <table1|fig2|fig3|fig6a|fig6b|fig7|table3|fig9|fig10|fig11|
                 fig12|fig13|fig14|fig15|all> [--quick] [--out results]
+                [--events]      (per-session JSONL event logs under
+                                 <out>/events/)
                 [--workers N] [--snapshot-every N] [--snapshot-dir DIR]
                 [--resume PATH] (resumes the session matching the
                                  snapshot's method/dataset; others fresh)
+                The experiment id is positional; `--id <id>` is accepted
+                as an alias (and wins when both are given).
   droppeft inspect [--artifacts DIR]
 
 Methods: fedlora fedadapter fedhetlora fedadaopt
          droppeft-lora droppeft-adapter droppeft-b1 droppeft-b2 droppeft-b3
 ";
 
-pub fn fed_config_from(args: &Args) -> Result<FedConfig> {
-    let mut cfg = FedConfig::quick(
-        &args.str_or("preset", "tiny"),
-        &args.str_or("dataset", "mnli"),
-    );
-    cfg.rounds = args.usize_or("rounds", cfg.rounds)?;
-    cfg.n_devices = args.usize_or("devices", cfg.n_devices)?;
-    cfg.devices_per_round = args.usize_or("per-round", cfg.devices_per_round)?;
-    cfg.local_batches = args.usize_or("local-batches", cfg.local_batches)?;
-    cfg.alpha = args.f64_or("alpha", cfg.alpha)?;
-    cfg.samples = args.usize_or("samples", cfg.samples)?;
-    cfg.lr = args.f64_or("lr", cfg.lr)?;
-    cfg.seed = args.u64_or("seed", cfg.seed)?;
-    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
-    cfg.eval_personalized = args.flag("personal-eval");
-    if let Some(t) = args.opt_str("target-acc") {
-        cfg.target_acc = Some(t.parse()?);
-    }
-    cfg.cost_model = args.opt_str("cost-model");
-    cfg.workers = args.usize_or("workers", cfg.workers)?.max(1);
-    cfg.snapshot_every = args.usize_or("snapshot-every", 0)?;
-    cfg.snapshot_dir = args.opt_str("snapshot-dir");
-    Ok(cfg)
-}
-
 fn cmd_train(args: &Args) -> Result<()> {
     // on --resume, session settings come from the snapshot; only the
-    // host-specific --workers (and --artifacts) still apply
+    // host-specific --workers (and --artifacts) still apply. The other
+    // flags are still parsed (type checks, unknown-flag detection) but
+    // never validated as a combination, since they are discarded.
     let resume = args.opt_str("resume");
     let workers_override = args.opt_usize("workers")?;
-    let cfg = fed_config_from(args)?;
-    let method_name = args.str_or("method", "droppeft-lora");
+    let builder = spec::builder_from_args(args)?;
     let artifacts = args.str_or("artifacts", "artifacts");
+    let out_dir = args.opt_str("out");
     args.finish()?;
 
     let runtime = Arc::new(Runtime::new(&artifacts)?);
     let mut engine = match resume {
-        Some(path) => {
-            let engine = Engine::resume_from_path(&path, runtime.clone(), workers_override)?;
-            droppeft::info!(
-                "resumed {} on {}/{} from {path:?} ({} of {} rounds done, {} workers)",
-                engine.method_name(),
-                engine.cfg.preset,
-                engine.cfg.dataset,
-                engine.rounds_finished(),
-                engine.cfg.rounds,
-                engine.cfg.workers
-            );
-            engine
-        }
-        None => {
-            let method = methods::by_name(&method_name, cfg.seed, cfg.rounds)?;
-            droppeft::info!(
-                "training {} on {}/{} ({} devices, {} rounds, {} workers)",
-                method.name(),
-                cfg.preset,
-                cfg.dataset,
-                cfg.n_devices,
-                cfg.rounds,
-                cfg.workers
-            );
-            Engine::new(cfg, runtime.clone(), method)?
-        }
+        Some(path) => Engine::resume_from_path(&path, runtime.clone(), workers_override)?,
+        None => builder.build()?.build_engine(runtime.clone())?,
     };
+    engine.add_sink(Box::new(ConsoleReporter::new()));
+    if let Some(dir) = out_dir {
+        let path = Path::new(&dir).join("events.jsonl");
+        // a resumed session continues its log; a fresh one starts over
+        let sink = if engine.rounds_finished() > 0 {
+            JsonlWriter::append(path)?
+        } else {
+            JsonlWriter::create(path)?
+        };
+        engine.add_sink(Box::new(sink));
+    }
     let result = engine.run()?;
     println!("{}", result.table());
     println!(

@@ -19,7 +19,7 @@ use crate::model::ckpt::{read_rng_state, write_rng_state, Reader, Writer};
 use crate::stld::{DropoutConfig, RateShape};
 use crate::util::rng::Rng;
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DropPeftOptions {
     pub stld: bool,
     pub bandit: bool,

@@ -19,7 +19,7 @@ pub use vanilla::FedVanilla;
 
 use crate::fed::device::DeviceInfo;
 use crate::runtime::manifest::ModelSpec;
-use crate::stld::DropoutConfig;
+use crate::stld::{DropoutConfig, RateShape};
 use crate::util::rng::Rng;
 
 /// Which PEFT layer rows a device uploads each round.
@@ -135,53 +135,197 @@ pub trait Method: Send + Sync {
     }
 }
 
-/// Construct any method by its experiment name.
-pub fn by_name(name: &str, seed: u64, total_rounds: usize) -> anyhow::Result<Box<dyn Method>> {
-    let m: Box<dyn Method> = match name {
-        "fedlora" => Box::new(FedVanilla::new("lora")),
-        "fedadapter" => Box::new(FedVanilla::new("adapter")),
-        "fedhetlora" => Box::new(FedHetLora::new()),
-        "fedadaopt" => Box::new(FedAdaOpt::new(total_rounds)),
-        "droppeft-lora" => Box::new(DropPeft::new("lora", seed, DropPeftOptions::default())),
-        "droppeft-adapter" => {
-            Box::new(DropPeft::new("adapter", seed, DropPeftOptions::default()))
+/// PEFT module family a method trains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeftKind {
+    Lora,
+    Adapter,
+}
+
+impl PeftKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PeftKind::Lora => "lora",
+            PeftKind::Adapter => "adapter",
         }
-        "droppeft-b1" => Box::new(DropPeft::new(
-            "lora",
-            seed,
-            DropPeftOptions {
-                stld: false,
-                ..DropPeftOptions::default()
-            },
-        )),
-        "droppeft-b2" => Box::new(DropPeft::new(
-            "lora",
-            seed,
-            DropPeftOptions {
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<PeftKind> {
+        match s {
+            "lora" => Ok(PeftKind::Lora),
+            "adapter" => Ok(PeftKind::Adapter),
+            _ => anyhow::bail!("unknown PEFT kind {s:?} (lora|adapter)"),
+        }
+    }
+}
+
+/// Typed method selection — the structured form behind the stringly
+/// factory names. A `MethodSpec` travels inside `fed::spec::SessionSpec`
+/// and instantiates the strategy with [`MethodSpec::build`]; the legacy
+/// [`by_name`] factory is now `MethodSpec::parse(name)?.build(..)`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MethodSpec {
+    /// FedAvg over PEFT modules ("fedlora" / "fedadapter")
+    Vanilla(PeftKind),
+    /// HetLoRA rank self-pruning ("fedhetlora")
+    HetLora,
+    /// FedAdaOPT progressive-depth schedule ("fedadaopt")
+    AdaOpt,
+    /// The paper's system, with its full option surface — named presets
+    /// cover the defaults and the b1/b2/b3 ablations; arbitrary option
+    /// combinations (fixed-rate sweeps, share-fraction studies) are
+    /// expressed directly.
+    DropPeft {
+        kind: PeftKind,
+        opts: DropPeftOptions,
+    },
+}
+
+impl Default for MethodSpec {
+    fn default() -> Self {
+        MethodSpec::droppeft(PeftKind::Lora)
+    }
+}
+
+impl MethodSpec {
+    /// Full DropPEFT stack (STLD + bandit configurator + PTLS).
+    pub fn droppeft(kind: PeftKind) -> MethodSpec {
+        MethodSpec::DropPeft {
+            kind,
+            opts: DropPeftOptions::default(),
+        }
+    }
+
+    /// DropPEFT with the bandit disabled and a fixed dropout-rate
+    /// configuration — the workhorse of the fig6/fig7/fig14 sweeps.
+    pub fn fixed_rate(rate: f64, shape: RateShape) -> MethodSpec {
+        MethodSpec::DropPeft {
+            kind: PeftKind::Lora,
+            opts: DropPeftOptions {
                 bandit: false,
-                fixed_rate: 0.5,
+                fixed_rate: rate,
+                fixed_shape: shape,
                 ..DropPeftOptions::default()
             },
-        )),
-        "droppeft-b3" => Box::new(DropPeft::new(
-            "lora",
-            seed,
-            DropPeftOptions {
-                ptls: false,
-                ..DropPeftOptions::default()
+        }
+    }
+
+    /// Parse an experiment name (the CLI `--method` vocabulary).
+    pub fn parse(name: &str) -> anyhow::Result<MethodSpec> {
+        let d = DropPeftOptions::default;
+        Ok(match name {
+            "fedlora" => MethodSpec::Vanilla(PeftKind::Lora),
+            "fedadapter" => MethodSpec::Vanilla(PeftKind::Adapter),
+            "fedhetlora" => MethodSpec::HetLora,
+            "fedadaopt" => MethodSpec::AdaOpt,
+            "droppeft-lora" => MethodSpec::droppeft(PeftKind::Lora),
+            "droppeft-adapter" => MethodSpec::droppeft(PeftKind::Adapter),
+            "droppeft-b1" => MethodSpec::DropPeft {
+                kind: PeftKind::Lora,
+                opts: DropPeftOptions { stld: false, ..d() },
             },
-        )),
-        _ => anyhow::bail!(
-            "unknown method {name:?} (fedlora|fedadapter|fedhetlora|fedadaopt|\
-             droppeft-lora|droppeft-adapter|droppeft-b1|droppeft-b2|droppeft-b3)"
-        ),
-    };
-    Ok(m)
+            "droppeft-b2" => MethodSpec::DropPeft {
+                kind: PeftKind::Lora,
+                opts: DropPeftOptions {
+                    bandit: false,
+                    fixed_rate: 0.5,
+                    ..d()
+                },
+            },
+            "droppeft-b3" => MethodSpec::DropPeft {
+                kind: PeftKind::Lora,
+                opts: DropPeftOptions { ptls: false, ..d() },
+            },
+            _ => anyhow::bail!(
+                "unknown method {name:?} (fedlora|fedadapter|fedhetlora|fedadaopt|\
+                 droppeft-lora|droppeft-adapter|droppeft-b1|droppeft-b2|droppeft-b3)"
+            ),
+        })
+    }
+
+    /// Canonical experiment name: the inverse of [`MethodSpec::parse`]
+    /// for named presets. DropPeft option combinations without a named
+    /// preset map to their kind's base name (ablation options travel in
+    /// the snapshot blob, mirroring `Method::key`).
+    pub fn name(&self) -> String {
+        match self {
+            MethodSpec::Vanilla(PeftKind::Lora) => "fedlora".into(),
+            MethodSpec::Vanilla(PeftKind::Adapter) => "fedadapter".into(),
+            MethodSpec::HetLora => "fedhetlora".into(),
+            MethodSpec::AdaOpt => "fedadaopt".into(),
+            MethodSpec::DropPeft { kind, opts } => {
+                let d = DropPeftOptions::default();
+                let base = match kind {
+                    PeftKind::Lora => "droppeft-lora",
+                    PeftKind::Adapter => "droppeft-adapter",
+                };
+                if *kind == PeftKind::Lora {
+                    if *opts == (DropPeftOptions { stld: false, ..d }) {
+                        return "droppeft-b1".into();
+                    }
+                    if *opts
+                        == (DropPeftOptions {
+                            bandit: false,
+                            fixed_rate: 0.5,
+                            ..d
+                        })
+                    {
+                        return "droppeft-b2".into();
+                    }
+                    if *opts == (DropPeftOptions { ptls: false, ..d }) {
+                        return "droppeft-b3".into();
+                    }
+                }
+                base.into()
+            }
+        }
+    }
+
+    /// Instantiate the strategy. `seed` feeds adaptive-method RNG;
+    /// `total_rounds` parameterizes schedule-derived methods (FedAdaOPT).
+    pub fn build(&self, seed: u64, total_rounds: usize) -> Box<dyn Method> {
+        match self {
+            MethodSpec::Vanilla(kind) => Box::new(FedVanilla::new(kind.as_str())),
+            MethodSpec::HetLora => Box::new(FedHetLora::new()),
+            MethodSpec::AdaOpt => Box::new(FedAdaOpt::new(total_rounds)),
+            MethodSpec::DropPeft { kind, opts } => {
+                Box::new(DropPeft::new(kind.as_str(), seed, *opts))
+            }
+        }
+    }
+}
+
+/// Construct any method by its experiment name (the stringly facade over
+/// [`MethodSpec`]; snapshot resume rebuilds methods through this).
+pub fn by_name(name: &str, seed: u64, total_rounds: usize) -> anyhow::Result<Box<dyn Method>> {
+    Ok(MethodSpec::parse(name)?.build(seed, total_rounds))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn method_spec_parse_name_roundtrip() {
+        for name in [
+            "fedlora",
+            "fedadapter",
+            "fedhetlora",
+            "fedadaopt",
+            "droppeft-lora",
+            "droppeft-adapter",
+            "droppeft-b1",
+            "droppeft-b2",
+            "droppeft-b3",
+        ] {
+            let spec = MethodSpec::parse(name).unwrap();
+            assert_eq!(spec.name(), name, "parse→name lost the preset");
+        }
+        assert!(MethodSpec::parse("bogus").is_err());
+        // an unnamed option combination falls back to the kind's base name
+        let custom = MethodSpec::fixed_rate(0.3, RateShape::Uniform);
+        assert_eq!(custom.name(), "droppeft-lora");
+    }
 
     #[test]
     fn factory_covers_all_methods() {

@@ -30,6 +30,40 @@ pub struct RoundRecord {
     pub host_secs: f64,
 }
 
+impl RoundRecord {
+    /// Structured form shared by results files and the JSONL event log.
+    /// `host_secs` is deliberately omitted: it differs between otherwise
+    /// identical runs, and serialized record streams must stay
+    /// byte-identical at any worker count.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", Json::num(self.round as f64)),
+            ("sim_secs", Json::num(self.sim_secs)),
+            ("clock_secs", Json::num(self.clock_secs)),
+            ("train_loss", Json::num(self.train_loss)),
+            ("active_frac", Json::num(self.active_frac)),
+            (
+                "global_acc",
+                self.global_acc.map(Json::num).unwrap_or(Json::Null),
+            ),
+            (
+                "personalized_acc",
+                self.personalized_acc.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("traffic_bytes", Json::num(self.traffic_bytes as f64)),
+            ("energy_j_mean", Json::num(self.energy_j_mean)),
+            ("mem_peak_mean", Json::num(self.mem_peak_mean)),
+            (
+                "arm",
+                self.arm
+                    .as_ref()
+                    .map(|a| Json::str(a.clone()))
+                    .unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct SessionResult {
     pub method: String,
@@ -102,37 +136,7 @@ impl SessionResult {
     }
 
     pub fn to_json(&self) -> Json {
-        let rounds: Vec<Json> = self
-            .records
-            .iter()
-            .map(|r| {
-                Json::obj(vec![
-                    ("round", Json::num(r.round as f64)),
-                    ("sim_secs", Json::num(r.sim_secs)),
-                    ("clock_secs", Json::num(r.clock_secs)),
-                    ("train_loss", Json::num(r.train_loss)),
-                    ("active_frac", Json::num(r.active_frac)),
-                    (
-                        "global_acc",
-                        r.global_acc.map(Json::num).unwrap_or(Json::Null),
-                    ),
-                    (
-                        "personalized_acc",
-                        r.personalized_acc.map(Json::num).unwrap_or(Json::Null),
-                    ),
-                    ("traffic_bytes", Json::num(r.traffic_bytes as f64)),
-                    ("energy_j_mean", Json::num(r.energy_j_mean)),
-                    ("mem_peak_mean", Json::num(r.mem_peak_mean)),
-                    (
-                        "arm",
-                        r.arm
-                            .as_ref()
-                            .map(|a| Json::str(a.clone()))
-                            .unwrap_or(Json::Null),
-                    ),
-                ])
-            })
-            .collect();
+        let rounds: Vec<Json> = self.records.iter().map(RoundRecord::to_json).collect();
         Json::obj(vec![
             ("method", Json::str(self.method.clone())),
             ("dataset", Json::str(self.dataset.clone())),

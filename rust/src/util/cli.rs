@@ -2,6 +2,12 @@
 //!
 //! Grammar: `droppeft <subcommand> [--flag] [--key value] [--key=value]`.
 //! Typed accessors with defaults; unknown-flag detection via `finish()`.
+//!
+//! This layer only tokenizes and type-checks. Session *semantics* live
+//! in the typed spec API: `fed::spec::from_args` translates `train`
+//! flags into a validated `SessionSpec` (one builder call per flag —
+//! golden-tested in `tests/spec_api.rs`), and `exp::resolve_id` handles
+//! the experiment-id positional/`--id` duality.
 
 use std::collections::BTreeMap;
 

@@ -1,0 +1,99 @@
+//! Event-pipeline determinism: the JSONL event log must be
+//! **byte-identical** across worker counts for the same seed. Events are
+//! emitted only at the engine's sequential barriers and carry no
+//! host-specific payload (no wall-clock, no host seconds, no worker
+//! count), so `--workers 1` and `--workers 4` must write the same bytes
+//! — and attaching sinks must not perturb the session results at all.
+//!
+//! Requires `make artifacts` (the tiny preset); skips with a notice when
+//! the compiled HLO artifacts are absent.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use droppeft::fed::{JsonlWriter, SessionSpec};
+use droppeft::methods::{MethodSpec, PeftKind};
+use droppeft::metrics::SessionResult;
+use droppeft::runtime::Runtime;
+
+mod common;
+use common::{assert_identical, require_artifacts};
+
+fn runtime() -> Arc<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Arc::new(Runtime::new(dir).expect("run `make artifacts` before cargo test"))
+}
+
+fn spec(workers: usize) -> SessionSpec {
+    SessionSpec::builder()
+        .preset("tiny")
+        .dataset("mnli")
+        .method(MethodSpec::droppeft(PeftKind::Lora))
+        .rounds(4)
+        .devices(10)
+        .per_round(4)
+        .local_batches(2)
+        .samples(400)
+        .eval_every(2)
+        .eval_batches(2)
+        .lr(5e-3)
+        .personal_eval(true)
+        .workers(workers)
+        .build()
+        .unwrap()
+}
+
+fn run_logged(workers: usize, log_path: &Path) -> SessionResult {
+    let mut engine = spec(workers).build_engine(runtime()).unwrap();
+    engine.add_sink(Box::new(JsonlWriter::create(log_path).unwrap()));
+    engine.run().unwrap()
+}
+
+#[test]
+fn event_log_is_byte_identical_across_worker_counts() {
+    require_artifacts!();
+    let dir = std::env::temp_dir().join("droppeft_event_determinism");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let p1 = dir.join("workers1.jsonl");
+    let p4 = dir.join("workers4.jsonl");
+    let r1 = run_logged(1, &p1);
+    let r4 = run_logged(4, &p4);
+
+    // sinks observe, never mutate: results stay bit-identical too
+    assert_identical(&r1, &r4);
+
+    let b1 = std::fs::read(&p1).unwrap();
+    let b4 = std::fs::read(&p4).unwrap();
+    assert!(!b1.is_empty(), "event log is empty");
+    assert_eq!(
+        b1, b4,
+        "JSONL event log differs between --workers 1 and --workers 4"
+    );
+
+    // sanity: the log is line-delimited JSON bracketed by session events
+    let text = String::from_utf8(b1).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines[0].contains("session_started"));
+    assert!(lines.last().unwrap().contains("session_ended"));
+    for l in &lines {
+        droppeft::util::json::Json::parse(l).unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn attaching_sinks_does_not_change_results() {
+    require_artifacts!();
+    let dir = std::env::temp_dir().join("droppeft_event_observe_only");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // bare engine (collector only) vs fully-instrumented engine
+    let mut bare = spec(2).build_engine(runtime()).unwrap();
+    let r_bare = bare.run().unwrap();
+    let r_logged = run_logged(2, &dir.join("events.jsonl"));
+    assert_identical(&r_bare, &r_logged);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,122 @@
+//! Golden tests for the session API: the CLI is a *thin translator* into
+//! `SessionSpec`, so driving `fed::spec::from_args` with `train` flags
+//! and driving the builder directly must produce identical specs — for
+//! every flag `train` accepts. No artifacts needed.
+
+use droppeft::fed::spec::{self, SessionSpec};
+use droppeft::fed::FedConfig;
+use droppeft::methods::{Method, MethodSpec, PeftKind};
+use droppeft::util::cli::Args;
+
+fn argv(s: &str) -> Vec<String> {
+    s.split_whitespace().map(|t| t.to_string()).collect()
+}
+
+fn parse(s: &str) -> Args {
+    Args::parse(&argv(s)).unwrap()
+}
+
+#[test]
+fn every_train_flag_translates_to_the_matching_builder_call() {
+    let args = parse(
+        "train --method droppeft-adapter --preset small --dataset qqp \
+         --rounds 9 --devices 30 --per-round 6 --local-batches 5 \
+         --alpha 0.3 --samples 1234 --lr 0.002 --seed 7 --eval-every 3 \
+         --eval-batches 9 --personal-eval --target-acc 0.8 \
+         --cost-model roberta-large --workers 3 --snapshot-every 2 \
+         --snapshot-dir snaps",
+    );
+    let from_cli = spec::from_args(&args).unwrap();
+    let built = SessionSpec::builder()
+        .method(MethodSpec::droppeft(PeftKind::Adapter))
+        .preset("small")
+        .dataset("qqp")
+        .rounds(9)
+        .devices(30)
+        .per_round(6)
+        .local_batches(5)
+        .alpha(0.3)
+        .samples(1234)
+        .lr(0.002)
+        .seed(7)
+        .eval_every(3)
+        .eval_batches(9)
+        .personal_eval(true)
+        .target_acc(0.8)
+        .cost_model("roberta-large")
+        .workers(3)
+        .snapshot_every(2)
+        .snapshot_dir("snaps")
+        .build()
+        .unwrap();
+    assert_eq!(from_cli, built);
+}
+
+#[test]
+fn bare_train_equals_builder_defaults() {
+    let from_cli = spec::from_args(&parse("train")).unwrap();
+    let built = SessionSpec::builder().build().unwrap();
+    assert_eq!(from_cli, built);
+    // and both mirror the legacy FedConfig::quick defaults
+    assert_eq!(from_cli.cfg, FedConfig::quick("tiny", "mnli"));
+}
+
+#[test]
+fn every_method_name_translates() {
+    for name in [
+        "fedlora",
+        "fedadapter",
+        "fedhetlora",
+        "fedadaopt",
+        "droppeft-lora",
+        "droppeft-adapter",
+        "droppeft-b1",
+        "droppeft-b2",
+        "droppeft-b3",
+    ] {
+        let from_cli = spec::from_args(&parse(&format!("train --method {name}"))).unwrap();
+        let built = SessionSpec::builder()
+            .method(MethodSpec::parse(name).unwrap())
+            .build()
+            .unwrap();
+        assert_eq!(from_cli, built, "--method {name} diverged from builder");
+        assert_eq!(from_cli.method.name(), name);
+    }
+}
+
+#[test]
+fn cli_translation_validates_like_the_builder() {
+    // invalid combinations are rejected at translation time, before any
+    // engine exists
+    assert!(spec::from_args(&parse("train --rounds 0")).is_err());
+    assert!(spec::from_args(&parse("train --devices 4 --per-round 9")).is_err());
+    assert!(spec::from_args(&parse("train --dataset imagenet")).is_err());
+    assert!(spec::from_args(&parse("train --method bogus")).is_err());
+    assert!(spec::from_args(&parse("train --target-acc 1.5")).is_err());
+    assert!(spec::from_args(&parse("train --lr abc")).is_err());
+}
+
+#[test]
+fn workers_zero_clamps_identically() {
+    let from_cli = spec::from_args(&parse("train --workers 0")).unwrap();
+    let built = SessionSpec::builder().workers(0).build().unwrap();
+    assert_eq!(from_cli, built);
+    assert_eq!(from_cli.cfg.workers, 1);
+}
+
+#[test]
+fn spec_build_method_matches_legacy_factory() {
+    // the spec path and the legacy stringly factory construct the same
+    // strategies (same display name, kind, and snapshot factory key)
+    for name in ["fedadaopt", "droppeft-b2", "droppeft-adapter"] {
+        let spec = SessionSpec::builder()
+            .method(MethodSpec::parse(name).unwrap())
+            .build()
+            .unwrap();
+        let via_spec = spec.build_method();
+        let via_factory = droppeft::methods::by_name(name, spec.cfg.seed, spec.cfg.rounds).unwrap();
+        assert_eq!(via_spec.name(), via_factory.name());
+        assert_eq!(via_spec.kind(), via_factory.kind());
+        assert_eq!(via_spec.key(), via_factory.key());
+    }
+}
