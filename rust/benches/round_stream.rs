@@ -1,0 +1,145 @@
+//! Eager vs streaming round execution: peak live state (a peak-RSS
+//! proxy counted in per-device state buffers) and wall time. The eager
+//! shape materializes one state per cohort member up front — what
+//! `plan_round` did before the streaming executor — while the streaming
+//! shape materializes inside the worker under
+//! `util::pool::run_parallel_streaming`'s bounded window. Payloads are
+//! synthetic `TrainState`-sized buffers, so the bench runs without
+//! compiled XLA artifacts. Emits machine-readable
+//! `BENCH_round_stream.json`.
+//!
+//! Run with `cargo bench` (part of `make bench`).
+
+use droppeft::benchkit::{Bench, Suite};
+use droppeft::testkit::Gauge;
+use droppeft::util::json::Json;
+use droppeft::util::pool::{run_parallel, run_parallel_streaming};
+
+/// paper-scale cohort (devices_per_round in the hundreds)
+const COHORT: usize = 256;
+/// f32s per synthetic device state (~tiny-preset TrainState)
+const STATE_F32S: usize = 64 * 1024;
+const WORKERS: usize = 4;
+
+fn materialize(gauge: &Gauge, seed: usize) -> Vec<f32> {
+    gauge.inc();
+    (0..STATE_F32S).map(|i| ((seed + i) % 97) as f32).collect()
+}
+
+/// Simulated local training: touch every element of the state.
+fn train(state: &[f32]) -> f64 {
+    state.iter().map(|&x| x as f64).sum()
+}
+
+/// The pre-streaming executor's shape: every download materialized
+/// during planning, released only as each job finishes.
+fn eager_round(gauge: &Gauge) -> f64 {
+    let states: Vec<Vec<f32>> = (0..COHORT).map(|d| materialize(gauge, d)).collect();
+    let jobs: Vec<_> = states
+        .into_iter()
+        .map(|s| {
+            move || {
+                let sum = train(&s);
+                drop(s);
+                gauge.dec();
+                sum
+            }
+        })
+        .collect();
+    run_parallel(WORKERS, jobs).into_iter().sum()
+}
+
+/// The streaming executor's shape: each worker materializes its own
+/// state; the in-order consumer releases it (like the server fan-in
+/// persisting a personalized state).
+fn streaming_round(gauge: &Gauge) -> f64 {
+    let jobs: Vec<_> = (0..COHORT)
+        .map(|d| {
+            move || {
+                let s = materialize(gauge, d);
+                let sum = train(&s);
+                (s, sum)
+            }
+        })
+        .collect();
+    let mut total = 0.0;
+    run_parallel_streaming(WORKERS, jobs, |_, (s, sum)| {
+        total += sum;
+        drop(s);
+        gauge.dec();
+    });
+    total
+}
+
+fn main() {
+    let gauge = Gauge::new();
+    let mut suite = Suite::new();
+
+    // correctness cross-check before timing anything
+    let a = eager_round(&gauge);
+    let b = streaming_round(&gauge);
+    assert!(
+        (a - b).abs() <= 1e-6 * a.abs().max(1.0),
+        "eager and streaming rounds disagree: {a} vs {b}"
+    );
+
+    gauge.reset();
+    let eager = suite.results.len();
+    suite.add(
+        Bench::new(format!("round/eager {COHORT} devices x{WORKERS}w"))
+            .warmup(1)
+            .iters(5, 50)
+            .target_secs(1.0)
+            .run(|| eager_round(&gauge)),
+    );
+    let eager_peak = gauge.peak();
+    let eager_ns = suite.results[eager].mean_ns;
+
+    gauge.reset();
+    let streaming = suite.results.len();
+    suite.add(
+        Bench::new(format!("round/streaming {COHORT} devices x{WORKERS}w"))
+            .warmup(1)
+            .iters(5, 50)
+            .target_secs(1.0)
+            .run(|| streaming_round(&gauge)),
+    );
+    let stream_peak = gauge.peak();
+    let stream_ns = suite.results[streaming].mean_ns;
+
+    let state_bytes = STATE_F32S * std::mem::size_of::<f32>();
+    println!(
+        "\nround-stream: cohort {COHORT}, workers {WORKERS}, state {state_bytes} B  \
+         eager peak {eager_peak} states ({} MB)  streaming peak {stream_peak} states ({} MB)",
+        eager_peak as usize * state_bytes / (1024 * 1024),
+        stream_peak as usize * state_bytes / (1024 * 1024),
+    );
+    println!("{}", suite.markdown("Eager vs streaming round executor"));
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("round_stream".to_string())),
+        ("cohort", Json::num(COHORT as f64)),
+        ("workers", Json::num(WORKERS as f64)),
+        ("state_bytes", Json::num(state_bytes as f64)),
+        ("eager_peak_states", Json::num(eager_peak as f64)),
+        (
+            "eager_peak_bytes",
+            Json::num((eager_peak as usize * state_bytes) as f64),
+        ),
+        ("eager_mean_ns", Json::num(eager_ns)),
+        ("streaming_peak_states", Json::num(stream_peak as f64)),
+        (
+            "streaming_peak_bytes",
+            Json::num((stream_peak as usize * state_bytes) as f64),
+        ),
+        ("streaming_mean_ns", Json::num(stream_ns)),
+        (
+            "peak_reduction",
+            Json::num(eager_peak as f64 / (stream_peak.max(1)) as f64),
+        ),
+    ]);
+    match std::fs::write("BENCH_round_stream.json", j.to_string()) {
+        Ok(()) => println!("wrote BENCH_round_stream.json"),
+        Err(e) => eprintln!("could not write BENCH_round_stream.json: {e}"),
+    }
+}

@@ -2,7 +2,9 @@
 //!
 //! Batches are fixed-size (the compiled artifacts have a static batch
 //! dimension); shards smaller than a batch sample with replacement, which
-//! matches how the FedPETuning benchmark pads tiny non-IID shards.
+//! matches how the FedPETuning benchmark pads tiny non-IID shards. Every
+//! batch carries its distinct-sample count (`Batch::unique`) so that
+//! evaluation can weight accuracy by real samples instead of padding.
 
 use crate::runtime::tensor::Value;
 use crate::util::rng::Rng;
@@ -14,10 +16,20 @@ use super::gen::Dataset;
 pub struct Batch {
     pub tokens: Value,
     pub labels: Value,
+    /// slots in the batch (the artifacts' static batch dimension)
     pub size: usize,
+    /// distinct underlying samples — `< size` when a shard smaller than
+    /// one batch was tiled (exact) or replacement-sampled (upper bound)
+    /// to fill the static dimension. Evaluation weights accuracy by
+    /// this, never by the padding (`fed::client::eval_state`).
+    pub unique: usize,
 }
 
-/// Assemble a batch from explicit sample indices.
+/// Assemble a batch from explicit sample indices. Assumes the indices
+/// are distinct (shard slices are) and stamps `unique = size`; the
+/// duplicate-producing call sites below (tiling, replacement sampling)
+/// override `unique` themselves, keeping this hot path allocation-free
+/// beyond the batch buffers.
 pub fn batch_from_indices(ds: &Dataset, idx: &[usize], batch: usize, seq: usize) -> Batch {
     assert_eq!(idx.len(), batch);
     let mut tokens = Vec::with_capacity(batch * seq);
@@ -30,6 +42,7 @@ pub fn batch_from_indices(ds: &Dataset, idx: &[usize], batch: usize, seq: usize)
         tokens: Value::i32(tokens, vec![batch, seq]),
         labels: Value::i32(labels, vec![batch]),
         size: batch,
+        unique: batch,
     }
 }
 
@@ -76,11 +89,14 @@ impl BatchSampler {
             self.cursor += batch;
             batch_from_indices(ds, &idx, batch, seq)
         } else {
-            // replacement sampling for tiny shards
+            // replacement sampling for tiny shards: at most the whole
+            // shard is distinct
             let idx: Vec<usize> = (0..batch)
                 .map(|_| self.shard[self.rng.below(self.shard.len())])
                 .collect();
-            batch_from_indices(ds, &idx, batch, seq)
+            let mut b = batch_from_indices(ds, &idx, batch, seq);
+            b.unique = self.shard.len().min(batch);
+            b
         }
     }
 }
@@ -94,9 +110,12 @@ pub fn eval_batches(ds: &Dataset, shard: &[usize], batch: usize, max_batches: us
         i += batch;
     }
     if out.is_empty() && !shard.is_empty() {
-        // tiny shard: tile it up to one batch
+        // tiny shard: tile it up to one batch, recording how many real
+        // samples it holds so eval can discount the duplicates
         let idx: Vec<usize> = (0..batch).map(|j| shard[j % shard.len()]).collect();
-        out.push(batch_from_indices(ds, &idx, batch, ds.seq));
+        let mut b = batch_from_indices(ds, &idx, batch, ds.seq);
+        b.unique = shard.len().min(batch);
+        out.push(b);
     }
     out
 }
@@ -159,5 +178,21 @@ mod tests {
         let b = eval_batches(&ds, &shard, 8, 2);
         assert_eq!(b.len(), 1);
         assert_eq!(b[0].size, 8);
+        // the tiled batch reports its true sample count so eval can
+        // discount the padding duplicates
+        assert_eq!(b[0].unique, 2);
+    }
+
+    #[test]
+    fn unique_counts_distinct_samples() {
+        let ds = small_ds();
+        // distinct indices: unique == size, no extra bookkeeping
+        let full = batch_from_indices(&ds, &(0..8).collect::<Vec<_>>(), 8, 16);
+        assert_eq!(full.unique, 8);
+        // replacement sampling caps unique at the shard size
+        let mut s = BatchSampler::new(vec![1, 2, 3], Rng::seed_from(9));
+        let b = s.next_batch(&ds, 8);
+        assert_eq!(b.size, 8);
+        assert_eq!(b.unique, 3);
     }
 }

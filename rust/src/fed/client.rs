@@ -1,12 +1,16 @@
 //! Client-side local round execution.
 //!
 //! A `ClientTask` is a self-contained worker that runs one device's local
-//! STLD fine-tuning round from an immutable `DevicePlan`: gather active
-//! rows → execute the K-layer train artifact → scatter back, then
-//! importance accounting, share-set selection, upload packaging, and
-//! simulated cost accounting. It borrows only read-only session context
-//! (`Runtime`, `ModelSpec`, `BaseModel`, `Dataset`, config, the method's
-//! `&self` hooks) so many tasks can run concurrently on worker threads.
+//! STLD fine-tuning round from an immutable `DevicePlan`: materialize the
+//! download from `&global`, gather active rows → execute the K-layer
+//! train artifact → scatter back, then importance accounting, share-set
+//! selection, upload packaging, and simulated cost accounting. It borrows
+//! only read-only session context (`Runtime`, `ModelSpec`, `BaseModel`,
+//! `Dataset`, config, the global `TrainState`, the method's `&self`
+//! hooks) so many tasks can run concurrently on worker threads.
+//! Materializing the download *here* — instead of during planning — is
+//! what bounds per-round live state at O(workers) under the streaming
+//! executor.
 
 use anyhow::{Context, Result};
 
@@ -32,20 +36,28 @@ pub struct ClientCtx<'a> {
 }
 
 /// One round's local-training worker. `run` consumes a `DevicePlan` and
-/// never needs `&mut` access to any engine state.
+/// never needs `&mut` access to any engine state; `global` is the shared
+/// read-only model every worker materializes its download from.
 pub struct ClientTask<'a> {
     ctx: ClientCtx<'a>,
     method: &'a dyn Method,
+    global: &'a TrainState,
     round: usize,
     kind: String,
     personalized: bool,
 }
 
 impl<'a> ClientTask<'a> {
-    pub fn new(ctx: ClientCtx<'a>, method: &'a dyn Method, plan: &RoundPlan) -> ClientTask<'a> {
+    pub fn new(
+        ctx: ClientCtx<'a>,
+        method: &'a dyn Method,
+        plan: &RoundPlan,
+        global: &'a TrainState,
+    ) -> ClientTask<'a> {
         ClientTask {
             ctx,
             method,
+            global,
             round: plan.round,
             kind: plan.kind.clone(),
             personalized: plan.personalized,
@@ -59,7 +71,7 @@ impl<'a> ClientTask<'a> {
             device,
             info,
             dropout,
-            start_state,
+            download,
             shard_train,
             shard_val,
             sampler_rng,
@@ -73,18 +85,20 @@ impl<'a> ClientTask<'a> {
         let mcfg = &self.ctx.spec.config;
         let n_layers = mcfg.n_layers;
 
-        let mut state = start_state;
+        // the simulated "download" is assembled here, on the worker, so
+        // live TrainState copies track the executor window (O(workers)),
+        // never the cohort size
+        let mut state = download.materialize(self.global);
         let snapshot_peft = state.peft.clone(); // for frozen-layer reset
 
         // ---- local STLD fine-tuning ----
-        let epoch_batches = (shard_train.len() / mcfg.batch).max(1);
+        // the sampler is the single source of truth for epoch length:
+        // the FLOPs extrapolation below must describe the same epoch the
+        // sampler would actually run (`local_batches` is validated >= 1
+        // by the spec builder; the max(1) guards hand-built configs)
         let mut sampler = BatchSampler::new(shard_train, sampler_rng);
-        let n_batches = self
-            .ctx
-            .cfg
-            .local_batches
-            .min(sampler.batches_per_epoch(mcfg.batch).max(1))
-            .max(1);
+        let epoch_batches = sampler.batches_per_epoch(mcfg.batch);
+        let n_batches = self.ctx.cfg.local_batches.max(1).min(epoch_batches);
 
         // cost accounting runs at paper scale when configured (§6.1
         // semi-emulation): map the STLD active fraction onto the paper
@@ -155,6 +169,17 @@ impl<'a> ClientTask<'a> {
             head: state.head.clone(),
         };
 
+        let final_state = if self.personalized {
+            // stays live until the server's fan-in persists it onto the
+            // device (which releases the DOWNLOADS count)
+            Some(state)
+        } else {
+            // the download's round-trip ends here
+            drop(state);
+            crate::testkit::DOWNLOADS.dec();
+            None
+        };
+
         // ---- simulated cost accounting ----
         let shared_scaled =
             ((upload.layers.len() as f64 / n_layers as f64) * ccfg.n_layers as f64).round()
@@ -167,7 +192,7 @@ impl<'a> ClientTask<'a> {
         Ok(LocalOutcome {
             device,
             upload,
-            final_state: if self.personalized { Some(state) } else { None },
+            final_state,
             local_acc,
             mean_loss: loss_sum / n_batches as f64,
             active_frac: active_total as f64 / (n_batches * n_layers) as f64,
@@ -231,7 +256,9 @@ impl<'a> ClientTask<'a> {
 }
 
 /// Accuracy of a state on the given batches (full-depth eval). Shared by
-/// client local validation and the server's periodic evaluation.
+/// client local validation and the server's periodic evaluation. Tiled
+/// batches (shards smaller than the static batch dimension) count their
+/// distinct samples, not the padding — see `fold_batch_acc` below.
 pub fn eval_state(ctx: &ClientCtx<'_>, state: &TrainState, batches: &[Batch]) -> Result<f64> {
     let base = ctx.base;
     let mut correct = 0.0;
@@ -247,8 +274,66 @@ pub fn eval_state(ctx: &ClientCtx<'_>, state: &TrainState, batches: &[Batch]) ->
         ];
         let artifact = format!("eval_{}", state.kind);
         let outs = ctx.runtime.execute(&ctx.cfg.preset, &artifact, &inputs)?;
-        correct += outs[1].scalar()? as f64;
-        total += ctx.spec.config.batch as f64;
+        fold_batch_acc(
+            &mut correct,
+            &mut total,
+            outs[1].scalar()? as f64,
+            b.size,
+            b.unique,
+        );
     }
     Ok(if total > 0.0 { correct / total } else { 0.0 })
+}
+
+/// Fold one batch's correct-count into a running `(correct, total)`
+/// accumulator. The eval artifact scores every slot of the static batch
+/// dimension, so a tiled batch (a shard smaller than one batch, repeated
+/// to fill it) reports correctness over duplicates; counting those
+/// duplicates would weight local validation accuracy — the bandit reward
+/// signal, Eq. 5 — by the padding. A tiled batch therefore contributes
+/// its *accuracy* re-weighted by its distinct-sample count. Full batches
+/// keep the raw count (bit-identical to the historical accounting).
+pub(crate) fn fold_batch_acc(
+    correct: &mut f64,
+    total: &mut f64,
+    batch_correct: f64,
+    size: usize,
+    unique: usize,
+) {
+    if unique >= size {
+        *correct += batch_correct;
+        *total += size as f64;
+    } else {
+        *correct += batch_correct * (unique as f64 / size as f64);
+        *total += unique as f64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_batches_count_raw_correct() {
+        let (mut c, mut t) = (0.0, 0.0);
+        fold_batch_acc(&mut c, &mut t, 6.0, 8, 8);
+        fold_batch_acc(&mut c, &mut t, 4.0, 8, 8);
+        assert_eq!(c, 10.0);
+        assert_eq!(t, 16.0);
+    }
+
+    #[test]
+    fn tiled_batches_weight_by_distinct_samples() {
+        // regression: a 2-sample shard tiled x4 into one batch of 8 used
+        // to count 8 samples, so tiny shards were weighted by duplicates
+        let (mut c, mut t) = (0.0, 0.0);
+        fold_batch_acc(&mut c, &mut t, 4.0, 8, 2); // 50% accurate, 2 real samples
+        assert_eq!(t, 2.0);
+        assert!((c - 1.0).abs() < 1e-12);
+        // mixed with a perfect full batch the tiny shard carries weight
+        // 2, not 8: overall accuracy (1 + 8) / (2 + 8)
+        fold_batch_acc(&mut c, &mut t, 8.0, 8, 8);
+        assert_eq!(t, 10.0);
+        assert!((c / t - 0.9).abs() < 1e-12);
+    }
 }

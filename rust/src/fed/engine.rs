@@ -2,13 +2,17 @@
 //! thin orchestrator over the server/client split.
 //!
 //! Per round: `fed::round::plan_round` runs the sequential planning pass
-//! (method strategy + RNG pre-draws + downloads), `ClientTask`s execute
-//! the per-device plans — fanned out over `util::pool::run_parallel` with
-//! `cfg.workers` threads — and `fed::server::Server` absorbs the outcomes
-//! (PTLS aggregation, bandit feedback, clock accounting) in selection
-//! order. Wall-clock is *simulated* from the hw cost model
-//! (semi-emulation, §6.1) while model quality is real; the same seed
-//! yields bit-identical results at any worker count.
+//! (method strategy + RNG pre-draws + download specs), `ClientTask`s
+//! execute the per-device plans — streamed over
+//! `util::pool::run_parallel_streaming` with `cfg.workers` threads, each
+//! worker materializing its own download from `&global` — and the
+//! outcomes are absorbed into `fed::server`'s streaming `RoundAccum` at
+//! the sequential fan-in, in selection order, as they arrive. At most
+//! O(workers) `TrainState` copies are therefore live per round,
+//! regardless of `devices_per_round` (`tests/round_streaming.rs`).
+//! Wall-clock is *simulated* from the hw cost model (semi-emulation,
+//! §6.1) while model quality is real; the same seed yields bit-identical
+//! results at any worker count.
 //!
 //! Every sequential barrier emits an [`EngineEvent`] to the attached
 //! [`EventSink`]s ([`Engine::add_sink`]); the engine's own [`Collector`]
@@ -26,7 +30,7 @@ use crate::fed::client::{ClientCtx, ClientTask};
 use crate::fed::config::FedConfig;
 use crate::fed::device::{self, DeviceCtx};
 use crate::fed::events::{Collector, EngineEvent, EventSink};
-use crate::fed::round::{self, LocalOutcome, RoundPlan};
+use crate::fed::round;
 use crate::fed::server::{self, Server};
 use crate::fed::snapshot::{self, SessionSnapshot};
 use crate::metrics::{RoundRecord, SessionResult};
@@ -115,11 +119,7 @@ impl Engine {
     /// sink. A sink error aborts the session — silently losing the
     /// event log would be worse than stopping.
     fn emit(&mut self, ev: EngineEvent) -> Result<()> {
-        self.collector.on_event(&ev)?;
-        for s in &mut self.sinks {
-            s.on_event(&ev)?;
-        }
-        Ok(())
+        deliver(&mut self.collector, &mut self.sinks, &ev)
     }
 
     /// Rebuild a session mid-flight from a snapshot: all static state
@@ -340,8 +340,9 @@ impl Engine {
         })
     }
 
-    /// One federated round: plan sequentially, execute clients in
-    /// parallel, finish sequentially.
+    /// One federated round: plan sequentially, stream clients through
+    /// the bounded executor (absorbing each outcome at the sequential
+    /// fan-in, in selection order), finish sequentially.
     pub fn run_round(&mut self, round: usize) -> Result<RoundRecord> {
         let host_t0 = Instant::now();
         let plan = round::plan_round(
@@ -350,7 +351,6 @@ impl Engine {
             &self.spec,
             &mut *self.method,
             &mut self.devices,
-            self.server.global(),
             &mut self.rng,
         );
         let selected = plan.selected();
@@ -358,26 +358,79 @@ impl Engine {
             round,
             selected: selected.clone(),
         })?;
-        let results = self.run_clients(plan);
-        // a failed client must not wipe the finished clients' state
-        let outcomes = server::collect_outcomes(results, &mut self.devices)?;
-        // client events fire at the sequential fan-in, in selection
-        // order — never from the worker threads
-        for o in &outcomes {
-            self.emit(EngineEvent::ClientDone {
-                round,
-                device: o.device,
-                local_acc: o.local_acc,
-                mean_loss: o.mean_loss,
-                active_frac: o.active_frac,
-                comp_secs: o.comp_secs,
-                comm_secs: o.comm_secs,
-                traffic_bytes: o.traffic_bytes,
-            })?;
+
+        // ---- streaming fan-out / sequential fan-in ----
+        // Field-disjoint borrows: the client tasks read runtime / cfg /
+        // spec / base / dataset / method / server.global(), while the
+        // fan-in consumer mutates devices and drives collector + sinks.
+        // Workers materialize their own downloads from &global, and the
+        // consumer releases each outcome as it is absorbed, so at most
+        // O(workers) TrainState copies are ever live.
+        let mut accum = self.server.begin_round(round);
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut sink_err: Option<anyhow::Error> = None;
+        {
+            let ctx = ClientCtx {
+                runtime: &*self.runtime,
+                cfg: &self.cfg,
+                spec: &self.spec,
+                base: &*self.base,
+                dataset: &self.dataset,
+            };
+            let task = ClientTask::new(ctx, &*self.method, &plan, self.server.global());
+            let task = &task;
+            let devices = &mut self.devices;
+            let collector = &mut self.collector;
+            let sinks = &mut self.sinks;
+            let jobs: Vec<_> = plan
+                .devices
+                .into_iter()
+                .map(|dp| move || task.run(dp))
+                .collect();
+            pool::run_parallel_streaming(self.cfg.workers.max(1), jobs, |_, res| match res {
+                Ok(mut out) => {
+                    if first_err.is_some() || sink_err.is_some() {
+                        // the round already failed: keep the finished
+                        // client's device-side state (the serial engine
+                        // persisted each device as it completed), but
+                        // skip aggregation and events
+                        server::persist_only(&mut out, devices);
+                        return;
+                    }
+                    // client events fire here, at the sequential
+                    // fan-in, in selection order — never from the
+                    // worker threads
+                    let ev = EngineEvent::ClientDone {
+                        round,
+                        device: out.device,
+                        local_acc: out.local_acc,
+                        mean_loss: out.mean_loss,
+                        active_frac: out.active_frac,
+                        comp_secs: out.comp_secs,
+                        comm_secs: out.comm_secs,
+                        traffic_bytes: out.traffic_bytes,
+                    };
+                    accum.absorb(out, devices);
+                    if let Err(e) = deliver(collector, sinks, &ev) {
+                        sink_err = Some(e);
+                    }
+                }
+                // surface the first failure in selection order
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            });
         }
-        let mut rec = self
-            .server
-            .finish_round(round, outcomes, &mut self.devices, &mut *self.method);
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if let Some(e) = sink_err {
+            return Err(e);
+        }
+
+        let mut rec = self.server.finish_round(accum, &mut *self.method);
         self.emit(EngineEvent::RoundAggregated {
             round,
             sim_secs: rec.sim_secs,
@@ -407,19 +460,6 @@ impl Engine {
         Ok(rec)
     }
 
-    /// Fan the plan's device jobs out over the worker pool; results come
-    /// back in selection order regardless of scheduling.
-    fn run_clients(&self, plan: RoundPlan) -> Vec<Result<LocalOutcome>> {
-        let task = ClientTask::new(self.ctx(), &*self.method, &plan);
-        let task = &task;
-        let jobs: Vec<_> = plan
-            .devices
-            .into_iter()
-            .map(|dp| move || task.run(dp))
-            .collect();
-        pool::run_parallel(self.cfg.workers.max(1), jobs)
-    }
-
     /// Global-model accuracy on the held-out test set.
     pub fn eval_global(&self) -> Result<f64> {
         self.server.eval_global(&self.ctx(), &self.test_batches)
@@ -433,4 +473,20 @@ impl Engine {
     pub fn runtime(&self) -> &Runtime {
         &self.runtime
     }
+}
+
+/// Deliver one event to the collector and every sink — the free-function
+/// form of [`Engine::emit`], callable from the round fan-in while other
+/// engine fields are borrowed by the client tasks. A sink error aborts
+/// the session; silently losing the event log would be worse.
+fn deliver(
+    collector: &mut Collector,
+    sinks: &mut [Box<dyn EventSink>],
+    ev: &EngineEvent,
+) -> Result<()> {
+    collector.on_event(ev)?;
+    for s in sinks.iter_mut() {
+        s.on_event(ev)?;
+    }
+    Ok(())
 }

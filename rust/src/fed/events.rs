@@ -2,8 +2,9 @@
 //!
 //! The engine emits an [`EngineEvent`] at every *sequential* barrier of
 //! the round loop — session start/end, round planned, client done (in
-//! selection order, after the parallel fan-in), aggregation, evaluation,
-//! snapshot written, resume — and delivers each event to every attached
+//! selection order, as each result crosses the streaming executor's
+//! fan-in on the orchestrator thread), aggregation, evaluation, snapshot
+//! written, resume — and delivers each event to every attached
 //! [`EventSink`].
 //!
 //! Sink contract:
@@ -53,8 +54,12 @@ pub enum EngineEvent {
     SessionResumed { from_round: usize },
     /// Sequential planning pass done: devices selected, RNG pre-drawn.
     RoundPlanned { round: usize, selected: Vec<usize> },
-    /// One device's local round finished (reported after the parallel
-    /// fan-in, in selection order).
+    /// One device's local round finished. Reported from the streaming
+    /// executor's sequential fan-in as each result is delivered —
+    /// always in selection order and always from the orchestrator
+    /// thread, so the stream is identical at any worker count even
+    /// though results are absorbed (and their memory released) as they
+    /// arrive.
     ClientDone {
         round: usize,
         device: usize,

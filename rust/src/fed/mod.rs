@@ -1,11 +1,14 @@
 //! Federated fine-tuning engine, layered server/client style:
 //!
-//! - [`round`] — the sequential planning pass (`RoundPlan` / `DevicePlan`)
-//!   and per-device results (`LocalOutcome`);
+//! - [`round`] — the sequential planning pass (`RoundPlan` / `DevicePlan`
+//!   carrying a lightweight `DownloadSpec`, never materialized state) and
+//!   per-device results (`LocalOutcome`);
 //! - [`client`] — `ClientTask`, the self-contained local-round worker that
-//!   runs on pool threads;
-//! - [`server`] — PTLS aggregation, bandit feedback, clock accounting,
-//!   periodic evaluation;
+//!   runs on pool threads and materializes its own download from
+//!   `&global`;
+//! - [`server`] — streaming round absorption (`RoundAccum`), PTLS
+//!   aggregation, bandit feedback, clock accounting, periodic
+//!   evaluation;
 //! - [`engine`] — the thin orchestrator tying the round loop together
 //!   (real XLA training + simulated wall-clock);
 //! - [`snapshot`] — the versioned `DPEFTSN2` session snapshot format
@@ -32,7 +35,7 @@ pub use config::FedConfig;
 pub use device::{DeviceCtx, DeviceInfo};
 pub use engine::Engine;
 pub use events::{Collector, ConsoleReporter, EngineEvent, EventSink, JsonlWriter};
-pub use round::{DevicePlan, LocalOutcome, RoundPlan};
-pub use server::Server;
+pub use round::{DevicePlan, DownloadSpec, LocalOutcome, RoundPlan};
+pub use server::{RoundAccum, Server};
 pub use snapshot::SessionSnapshot;
 pub use spec::{SessionSpec, SessionSpecBuilder, SweepPlan};

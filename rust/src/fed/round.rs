@@ -8,6 +8,16 @@
 //! sequence the old serial engine used. A `DevicePlan` is therefore a
 //! self-contained job description and the number of workers executing the
 //! plans cannot change any result.
+//!
+//! Memory contract: planning never copies model state. A `DevicePlan`
+//! carries a [`DownloadSpec`] — the moved-out personalized state (if
+//! any), the device's last shared set, and the personalization flag —
+//! and the *worker* materializes the actual download from `&global`
+//! inside `ClientTask::run`. Combined with the bounded streaming
+//! executor (`util::pool::run_parallel_streaming`), at most O(workers)
+//! downloaded `TrainState`s are ever live per round, regardless of
+//! `devices_per_round` (`tests/round_streaming.rs` asserts the bound via
+//! `testkit::DOWNLOADS`).
 
 use crate::fed::config::FedConfig;
 use crate::fed::device::{DeviceCtx, DeviceInfo};
@@ -18,23 +28,86 @@ use crate::runtime::manifest::ModelSpec;
 use crate::stld::DropoutConfig;
 use crate::util::rng::Rng;
 
+/// What a client worker needs to assemble one device's round-start state
+/// (the simulated "download") on its own thread. Deliberately tiny: the
+/// personalized state is *moved* out of the device (it returns via
+/// `LocalOutcome::final_state` at the fan-in), so building a spec never
+/// clones a `TrainState` — only [`DownloadSpec::materialize`] does, and
+/// that runs inside the worker.
+pub struct DownloadSpec {
+    /// the device's persistent personalized state, moved out for the
+    /// round (`None` for non-personalized methods and cold starts)
+    pub personal: Option<TrainState>,
+    /// layers the device shared last round (refreshed from the global
+    /// model at download time)
+    pub last_shared: Vec<usize>,
+    /// method keeps persistent per-device state between rounds?
+    pub personalized: bool,
+}
+
+impl DownloadSpec {
+    /// Capture a device's download inputs during planning. Moves the
+    /// personalized state out of the device; copies nothing.
+    fn for_device(dev: &mut DeviceCtx, personalized: bool) -> DownloadSpec {
+        DownloadSpec {
+            personal: if personalized { dev.personal.take() } else { None },
+            last_shared: dev.last_shared.clone(),
+            personalized,
+        }
+    }
+
+    /// Materialize the round-start `TrainState`: personalized methods
+    /// refresh previously-shared rows (and the head) from the global
+    /// model; everyone else — including a personalized device's *first*
+    /// round — starts from a fresh global clone with cold optimizer
+    /// moments. Runs on the client worker, so live copies are bounded by
+    /// the executor's window, not the cohort (counted by
+    /// `testkit::DOWNLOADS`).
+    pub fn materialize(self, global: &TrainState) -> TrainState {
+        crate::testkit::DOWNLOADS.inc();
+        match (self.personalized, self.personal) {
+            (true, Some(mut s)) => {
+                let q = s.q;
+                for &l in &self.last_shared {
+                    s.peft[l * q..(l + 1) * q]
+                        .copy_from_slice(&global.peft[l * q..(l + 1) * q]);
+                    s.opt_m[l * q..(l + 1) * q].fill(0.0);
+                    s.opt_v[l * q..(l + 1) * q].fill(0.0);
+                }
+                s.head.copy_from_slice(&global.head);
+                s
+            }
+            _ => cold_start(global),
+        }
+    }
+}
+
+/// Fresh download: clone the global weights with ALL four optimizer
+/// moment buffers cold. A cold-starting personalized device must not
+/// inherit the global head moments either — the old personalized branch
+/// reset only `opt_m`/`opt_v` and silently carried `head_m`/`head_v`
+/// over (see `tests::cold_start_resets_all_four_moment_buffers`).
+fn cold_start(global: &TrainState) -> TrainState {
+    let mut s = global.clone();
+    s.opt_m.fill(0.0);
+    s.opt_v.fill(0.0);
+    s.head_m.fill(0.0);
+    s.head_v.fill(0.0);
+    s
+}
+
 /// Everything one client worker needs to run one device's local round.
-/// Owns its inputs (state snapshot, shard indices, forked RNG streams);
-/// borrows nothing mutable from the engine.
-///
-/// Memory trade-off: the plan holds one downloaded `TrainState` per
-/// selected device up front (the serial engine materialized one at a
-/// time), so peak state copies scale with `devices_per_round` rather
-/// than the worker count. Acceptable at testbed scale; revisit if
-/// `devices_per_round` grows into the hundreds.
+/// Owns its inputs (download spec, shard indices, forked RNG streams);
+/// borrows nothing mutable from the engine and holds **no materialized
+/// model state** — the worker assembles its own download from `&global`.
 pub struct DevicePlan {
     /// index into the engine's device population
     pub device: usize,
     pub info: DeviceInfo,
     /// STLD dropout-rate configuration chosen by the method
     pub dropout: DropoutConfig,
-    /// this round's starting state (the simulated "download")
-    pub start_state: TrainState,
+    /// inputs for this round's starting state (the simulated "download")
+    pub download: DownloadSpec,
     /// training-sample indices of the device's shard
     pub shard_train: Vec<usize>,
     /// local validation indices (bandit reward signal)
@@ -92,16 +165,16 @@ pub struct LocalOutcome {
 }
 
 /// Plan one round: device selection, per-device dropout configuration,
-/// download assembly, and RNG pre-draws. Runs sequentially (the method is
-/// `&mut`, devices mutate their RNG streams and surrender personal state)
-/// so the plan is reproducible regardless of later execution order.
+/// download-spec capture, and RNG pre-draws. Runs sequentially (the
+/// method is `&mut`, devices mutate their RNG streams and surrender
+/// personal state) so the plan is reproducible regardless of later
+/// execution order.
 pub fn plan_round(
     round: usize,
     cfg: &FedConfig,
     spec: &ModelSpec,
     method: &mut dyn Method,
     devices: &mut [DeviceCtx],
-    global: &TrainState,
     rng: &mut Rng,
 ) -> RoundPlan {
     method.begin_round(round);
@@ -118,14 +191,14 @@ pub fn plan_round(
         // dropout fork, sampler fork, mask fork, bandwidth jitter
         let mut drng = dev.rng.fork(round as u64);
         let dropout = method.dropout_for(round, &info, n_layers, &mut drng);
-        let start_state = download(dev, global, personalized);
+        let download = DownloadSpec::for_device(dev, personalized);
         let sampler_rng = dev.rng.fork(0x10CA1 ^ round as u64);
         let mask_rng = dev.rng.fork(0x5eed ^ round as u64);
         let bps = dev.bandwidth.round_bps(&mut dev.rng);
         plans.push(DevicePlan {
             device: d,
             dropout,
-            start_state,
+            download,
             shard_train: dev.shard.train.clone(),
             shard_val: dev.shard.val.clone(),
             sampler_rng,
@@ -146,37 +219,79 @@ pub fn plan_round(
     }
 }
 
-/// Assemble a device's starting state for the round (the "download"):
-/// personalized methods refresh previously-shared rows from the global
-/// model; everyone else starts from a fresh global clone with cold
-/// optimizer moments.
-fn download(dev: &mut DeviceCtx, global: &TrainState, personalized: bool) -> TrainState {
-    if personalized {
-        match dev.personal.take() {
-            Some(mut s) => {
-                let q = s.q;
-                for &l in &dev.last_shared {
-                    s.peft[l * q..(l + 1) * q]
-                        .copy_from_slice(&global.peft[l * q..(l + 1) * q]);
-                    s.opt_m[l * q..(l + 1) * q].fill(0.0);
-                    s.opt_v[l * q..(l + 1) * q].fill(0.0);
-                }
-                s.head.copy_from_slice(&global.head);
-                s
-            }
-            None => {
-                let mut s = global.clone();
-                s.opt_m.fill(0.0);
-                s.opt_v.fill(0.0);
-                s
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(q: usize, l: usize, h: usize, fill: f32) -> TrainState {
+        TrainState {
+            kind: "lora".into(),
+            q,
+            n_layers: l,
+            peft: vec![fill; l * q],
+            opt_m: vec![fill; l * q],
+            opt_v: vec![fill; l * q],
+            head: vec![fill; h],
+            head_m: vec![fill; h],
+            head_v: vec![fill; h],
+            step: 7,
+        }
+    }
+
+    #[test]
+    fn cold_start_resets_all_four_moment_buffers() {
+        // regression: the personalized cold-start branch used to inherit
+        // the global head moments (only the non-personalized branch
+        // reset head_m/head_v), so a device's very first round trained
+        // the head with stale AdamW state
+        let global = state(2, 3, 4, 0.5);
+        for personalized in [false, true] {
+            let spec = DownloadSpec {
+                personal: None,
+                last_shared: vec![],
+                personalized,
+            };
+            let s = spec.materialize(&global);
+            crate::testkit::DOWNLOADS.dec();
+            assert_eq!(s.peft, global.peft, "weights downloaded verbatim");
+            assert_eq!(s.head, global.head);
+            for (name, buf) in [
+                ("opt_m", &s.opt_m),
+                ("opt_v", &s.opt_v),
+                ("head_m", &s.head_m),
+                ("head_v", &s.head_v),
+            ] {
+                assert!(
+                    buf.iter().all(|&x| x == 0.0),
+                    "{name} not cold (personalized={personalized})"
+                );
             }
         }
-    } else {
-        let mut s = global.clone();
-        s.opt_m.fill(0.0);
-        s.opt_v.fill(0.0);
-        s.head_m.fill(0.0);
-        s.head_v.fill(0.0);
-        s
+    }
+
+    #[test]
+    fn personalized_refresh_updates_shared_rows_only() {
+        let global = state(2, 3, 4, 1.0);
+        let personal = state(2, 3, 4, 9.0);
+        let spec = DownloadSpec {
+            personal: Some(personal),
+            last_shared: vec![1],
+            personalized: true,
+        };
+        let s = spec.materialize(&global);
+        crate::testkit::DOWNLOADS.dec();
+        // shared layer 1: refreshed from global, moments cleared
+        assert_eq!(&s.peft[2..4], &[1.0, 1.0]);
+        assert_eq!(&s.opt_m[2..4], &[0.0, 0.0]);
+        assert_eq!(&s.opt_v[2..4], &[0.0, 0.0]);
+        // personalized layers 0 and 2 keep local values and moments
+        assert_eq!(&s.peft[0..2], &[9.0, 9.0]);
+        assert_eq!(&s.opt_m[0..2], &[9.0, 9.0]);
+        assert_eq!(&s.peft[4..6], &[9.0, 9.0]);
+        // head always downloaded; the device's own head moments persist
+        // (this is the device's live optimizer state, not a cold start)
+        assert_eq!(s.head, vec![1.0; 4]);
+        assert_eq!(s.head_m, vec![9.0; 4]);
+        assert_eq!(s.head_v, vec![9.0; 4]);
     }
 }

@@ -3,6 +3,15 @@
 //! bandit feedback (Eq. 5), device-session mutations, and periodic
 //! evaluation. All of it is sequential and runs in selection order, so
 //! results are independent of how the client tasks were scheduled.
+//!
+//! Rounds are absorbed **streamed**: the engine feeds one `LocalOutcome`
+//! at a time (in selection order, from the streaming executor's fan-in)
+//! into a [`RoundAccum`], which persists the device, folds the upload
+//! into a `ptls::AggAccum`, folds the round statistics, and drops the
+//! outcome — so a round never buffers O(cohort) uploads or personalized
+//! states. The accumulated aggregation is applied to the global model in
+//! [`Server::finish_round`], after the fan-out released its `&global`
+//! borrow.
 
 use anyhow::Result;
 
@@ -13,7 +22,7 @@ use crate::fed::round::LocalOutcome;
 use crate::methods::Method;
 use crate::metrics::RoundRecord;
 use crate::model::TrainState;
-use crate::ptls::{self, Upload};
+use crate::ptls::AggAccum;
 use crate::util::stats;
 
 /// The federated server: owns the global model, the simulated clock, and
@@ -24,40 +33,62 @@ pub struct Server {
     prev_acc: f64,
 }
 
-/// Persist device-side session results (participation count, shared set,
-/// personalized state) in selection order.
-pub fn persist_outcomes(outcomes: &mut [LocalOutcome], devices: &mut [DeviceCtx]) {
-    for out in outcomes.iter_mut() {
-        let dev = &mut devices[out.device];
-        dev.participations += 1;
-        dev.last_shared = out.upload.layers.clone();
-        if let Some(state) = out.final_state.take() {
-            dev.personal = Some(state);
-        }
+/// Persist one finished client's device-side session state (participation
+/// count, shared set, personalized state). Used by [`RoundAccum::absorb`]
+/// and directly by the engine when a round has already failed — a failed
+/// client must not wipe the survivors' progress.
+pub fn persist_only(out: &mut LocalOutcome, devices: &mut [DeviceCtx]) {
+    let dev = &mut devices[out.device];
+    dev.participations += 1;
+    dev.last_shared = out.upload.layers.clone();
+    if let Some(state) = out.final_state.take() {
+        dev.personal = Some(state);
+        // the round-start download's round-trip ends on the device
+        crate::testkit::DOWNLOADS.dec();
     }
 }
 
-/// Unwrap a round's per-client results. On any failure, first persist the
-/// clients that did finish — the serial engine persisted each device as it
-/// completed, so a failed round must not wipe the survivors' personalized
-/// state — then surface the first error in selection order.
-pub fn collect_outcomes(
-    results: Vec<Result<LocalOutcome>>,
-    devices: &mut [DeviceCtx],
-) -> Result<Vec<LocalOutcome>> {
-    if results.iter().all(|r| r.is_ok()) {
-        return Ok(results.into_iter().filter_map(Result::ok).collect());
+/// Streaming per-round absorber: one client outcome at a time, in
+/// selection order, dropped after folding. Created by
+/// [`Server::begin_round`]; finished by [`Server::finish_round`].
+pub struct RoundAccum {
+    round: usize,
+    agg: AggAccum,
+    n: usize,
+    /// synchronous FedAvg: round time = slowest participant
+    round_secs: f64,
+    sum_secs: f64,
+    traffic: u64,
+    sum_energy: f64,
+    sum_mem: f64,
+    sum_loss: f64,
+    sum_active: f64,
+    sum_local_acc: f64,
+}
+
+impl RoundAccum {
+    /// Absorb one outcome: persist the device's session state, fold the
+    /// upload into the aggregation accumulator, fold the round
+    /// statistics. The outcome dies here.
+    pub fn absorb(&mut self, mut out: LocalOutcome, devices: &mut [DeviceCtx]) {
+        persist_only(&mut out, devices);
+        self.agg.absorb(&out.upload);
+        self.n += 1;
+        let t = out.comp_secs + out.comm_secs;
+        self.round_secs = self.round_secs.max(t);
+        self.sum_secs += t;
+        self.traffic += out.traffic_bytes;
+        self.sum_energy += out.energy_j;
+        self.sum_mem += out.mem_peak;
+        self.sum_loss += out.mean_loss;
+        self.sum_active += out.active_frac;
+        self.sum_local_acc += out.local_acc;
     }
-    let mut finished: Vec<LocalOutcome> = Vec::new();
-    let mut first_err = None;
-    for r in results {
-        match r {
-            Ok(out) => finished.push(out),
-            Err(e) => first_err = first_err.or(Some(e)),
-        }
+
+    /// Outcomes absorbed so far.
+    pub fn absorbed(&self) -> usize {
+        self.n
     }
-    persist_outcomes(&mut finished, devices);
-    Err(first_err.expect("checked above: at least one client failed"))
 }
 
 impl Server {
@@ -93,53 +124,61 @@ impl Server {
         self.prev_acc
     }
 
-    /// Absorb a round's client outcomes: persist device-side session
-    /// state, aggregate uploads into the global model, advance the
-    /// simulated clock, and feed the bandit. Outcomes must arrive in
-    /// selection order (the parallel pool preserves input order).
-    /// Returns a `RoundRecord` with the evaluation fields unset.
-    pub fn finish_round(
-        &mut self,
-        round: usize,
-        mut outcomes: Vec<LocalOutcome>,
-        devices: &mut [DeviceCtx],
-        method: &mut dyn Method,
-    ) -> RoundRecord {
-        // device-side session mutations, in selection order
-        persist_outcomes(&mut outcomes, devices);
+    /// Start a streaming round: the returned accumulator absorbs
+    /// outcomes one at a time while the client workers still hold
+    /// `&global` (aggregation touches the global model only in
+    /// [`Server::finish_round`], after the fan-out ends).
+    pub fn begin_round(&self, round: usize) -> RoundAccum {
+        RoundAccum {
+            round,
+            agg: AggAccum::new(
+                self.global.n_layers,
+                self.global.q,
+                self.global.head.len(),
+            ),
+            n: 0,
+            round_secs: 0.0,
+            sum_secs: 0.0,
+            traffic: 0,
+            sum_energy: 0.0,
+            sum_mem: 0.0,
+            sum_loss: 0.0,
+            sum_active: 0.0,
+            sum_local_acc: 0.0,
+        }
+    }
+
+    /// Finish a streamed round: apply the accumulated aggregation to the
+    /// global model, advance the simulated clock, and feed the bandit.
+    /// Outcomes must have been absorbed in selection order (the
+    /// streaming executor delivers them that way). Returns a
+    /// `RoundRecord` with the evaluation fields unset.
+    pub fn finish_round(&mut self, accum: RoundAccum, method: &mut dyn Method) -> RoundRecord {
+        let RoundAccum {
+            round,
+            agg,
+            n,
+            round_secs,
+            sum_secs,
+            traffic,
+            sum_energy,
+            sum_mem,
+            sum_loss,
+            sum_active,
+            sum_local_acc,
+        } = accum;
 
         // heterogeneous aggregation (Fig. 8)
-        let uploads: Vec<Upload> = outcomes.iter().map(|o| o.upload.clone()).collect();
-        ptls::aggregate(
-            &mut self.global.peft,
-            &mut self.global.head,
-            self.global.q,
-            &uploads,
-        );
+        agg.apply(&mut self.global.peft, &mut self.global.head);
 
         // round accounting: synchronous FedAvg => round time is the
         // slowest participant
-        let round_secs = outcomes
-            .iter()
-            .map(|o| o.comp_secs + o.comm_secs)
-            .fold(0.0, f64::max);
         self.clock += round_secs;
-        let traffic: u64 = outcomes.iter().map(|o| o.traffic_bytes).sum();
-        let energy = stats::mean(&outcomes.iter().map(|o| o.energy_j).collect::<Vec<_>>());
-        let mem = stats::mean(&outcomes.iter().map(|o| o.mem_peak).collect::<Vec<_>>());
-        let loss = stats::mean(&outcomes.iter().map(|o| o.mean_loss).collect::<Vec<_>>());
-        let active = stats::mean(&outcomes.iter().map(|o| o.active_frac).collect::<Vec<_>>());
+        let nf = n.max(1) as f64; // sums are all 0.0 when n == 0
 
         // bandit reward: mean accuracy gain per simulated second (Eq. 5)
-        let mean_local_acc =
-            stats::mean(&outcomes.iter().map(|o| o.local_acc).collect::<Vec<_>>());
-        let mean_t = stats::mean(
-            &outcomes
-                .iter()
-                .map(|o| o.comp_secs + o.comm_secs)
-                .collect::<Vec<_>>(),
-        )
-        .max(1e-6);
+        let mean_local_acc = sum_local_acc / nf;
+        let mean_t = (sum_secs / nf).max(1e-6);
         let reward = (mean_local_acc - self.prev_acc) / mean_t;
         self.prev_acc = mean_local_acc;
         let arm = method.arm_label();
@@ -149,13 +188,13 @@ impl Server {
             round,
             sim_secs: round_secs,
             clock_secs: self.clock,
-            train_loss: loss,
-            active_frac: active,
+            train_loss: sum_loss / nf,
+            active_frac: sum_active / nf,
             global_acc: None,
             personalized_acc: None,
             traffic_bytes: traffic,
-            energy_j_mean: energy,
-            mem_peak_mean: mem,
+            energy_j_mean: sum_energy / nf,
+            mem_peak_mean: sum_mem / nf,
             arm,
             host_secs: 0.0,
         }
@@ -203,6 +242,96 @@ pub fn personalized_mean(accs: &[f64]) -> Option<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hw::{sample_device, Bandwidth};
+    use crate::ptls::Upload;
+    use crate::util::rng::Rng;
+
+    fn ts(q: usize, l: usize, h: usize, fill: f32) -> TrainState {
+        TrainState {
+            kind: "lora".into(),
+            q,
+            n_layers: l,
+            peft: vec![fill; l * q],
+            opt_m: vec![fill; l * q],
+            opt_v: vec![fill; l * q],
+            head: vec![fill; h],
+            head_m: vec![fill; h],
+            head_v: vec![fill; h],
+            step: 0,
+        }
+    }
+
+    #[test]
+    fn streamed_round_persists_devices_and_accumulates_stats() {
+        let (q, l, h) = (2, 3, 2);
+        let mut server = Server::new(ts(q, l, h, 0.0));
+        let mut rng = Rng::seed_from(1);
+        let mut devices: Vec<DeviceCtx> = (0..2)
+            .map(|id| {
+                let (profile, mode) = sample_device(&mut rng);
+                DeviceCtx {
+                    id,
+                    shard: crate::data::split_shard((0..10).collect(), 0.2, &mut rng),
+                    profile,
+                    mode,
+                    bandwidth: Bandwidth::sample_base(&mut rng),
+                    rng: rng.fork(id as u64),
+                    personal: None,
+                    last_shared: Vec::new(),
+                    participations: 0,
+                }
+            })
+            .collect();
+
+        let outcome = |device: usize, acc: f64, t: f64| {
+            // balance the gauge: absorbing a personalized state dec()s it
+            crate::testkit::DOWNLOADS.inc();
+            LocalOutcome {
+                device,
+                upload: Upload {
+                    device,
+                    layers: vec![0],
+                    rows: vec![1.0, 1.0],
+                    weight: 1.0,
+                    head: vec![2.0, 2.0],
+                },
+                final_state: Some(ts(q, l, h, 9.0)),
+                local_acc: acc,
+                mean_loss: 1.0,
+                active_frac: 0.5,
+                comp_secs: t,
+                comm_secs: 0.0,
+                energy_j: 3.0,
+                mem_peak: 7.0,
+                traffic_bytes: 100,
+            }
+        };
+
+        let mut accum = server.begin_round(4);
+        accum.absorb(outcome(0, 0.2, 1.0), &mut devices);
+        accum.absorb(outcome(1, 0.6, 3.0), &mut devices);
+        assert_eq!(accum.absorbed(), 2);
+        // devices persisted at absorption time, one outcome at a time
+        assert_eq!(devices[0].participations, 1);
+        assert_eq!(devices[0].last_shared, vec![0]);
+        assert!(devices[1].personal.is_some(), "personalized state kept");
+        // the global model is untouched while the round is in flight
+        assert!(server.global().peft.iter().all(|&x| x == 0.0));
+
+        let mut method = crate::methods::by_name("fedlora", 1, 10).unwrap();
+        let rec = server.finish_round(accum, &mut *method);
+        assert_eq!(rec.round, 4);
+        assert_eq!(rec.sim_secs, 3.0, "round time = slowest participant");
+        assert_eq!(rec.clock_secs, 3.0);
+        assert_eq!(rec.traffic_bytes, 200);
+        assert_eq!(rec.energy_j_mean, 3.0);
+        assert_eq!(rec.mem_peak_mean, 7.0);
+        // aggregation applied to the global model only at finish time
+        assert_eq!(&server.global().peft[0..2], &[1.0, 1.0]);
+        assert_eq!(server.global().head, vec![2.0, 2.0]);
+        // bandit baseline updated to the round's mean local accuracy
+        assert!((server.prev_acc() - 0.4).abs() < 1e-12);
+    }
 
     #[test]
     fn no_personalized_devices_reports_none_not_garbage() {

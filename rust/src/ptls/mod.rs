@@ -80,57 +80,110 @@ pub struct Upload {
     pub head: Vec<f32>,
 }
 
+/// Streaming form of heterogeneous aggregation: absorb uploads one at a
+/// time (in selection order) without retaining them, then apply the
+/// weighted averages to the global state once the round's fan-out ends.
+/// The streaming round executor feeds this from the sequential fan-in so
+/// a round never buffers O(cohort) uploads; [`aggregate`] is implemented
+/// on top of it, so both paths share one set of accumulation semantics
+/// (absorption order decides the floating-point sum order — identical as
+/// long as uploads arrive in selection order).
+#[derive(Clone, Debug)]
+pub struct AggAccum {
+    q: usize,
+    contributors: Vec<usize>,
+    layer_weight: Vec<f64>,
+    layer_acc: Vec<f64>,
+    head_wsum: f64,
+    head_acc: Vec<f64>,
+    n_uploads: usize,
+}
+
+impl AggAccum {
+    pub fn new(n_layers: usize, q: usize, head_len: usize) -> AggAccum {
+        AggAccum {
+            q,
+            contributors: vec![0; n_layers],
+            layer_weight: vec![0.0; n_layers],
+            layer_acc: vec![0.0; n_layers * q],
+            head_wsum: 0.0,
+            head_acc: vec![0.0; head_len],
+            n_uploads: 0,
+        }
+    }
+
+    /// Fold one upload into the accumulator; nothing is retained, so the
+    /// upload can be dropped immediately afterwards.
+    pub fn absorb(&mut self, up: &Upload) {
+        let n_layers = self.contributors.len();
+        let q = self.q;
+        assert_eq!(up.rows.len(), up.layers.len() * q, "upload row size");
+        assert_eq!(up.head.len(), self.head_acc.len(), "upload head size");
+        for (j, &l) in up.layers.iter().enumerate() {
+            assert!(l < n_layers, "layer index {l} out of range");
+            self.contributors[l] += 1;
+            self.layer_weight[l] += up.weight;
+            let src = &up.rows[j * q..(j + 1) * q];
+            let dst = &mut self.layer_acc[l * q..(l + 1) * q];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += up.weight * s as f64;
+            }
+        }
+        // head: every upload contributes
+        self.head_wsum += up.weight;
+        for (d, &h) in self.head_acc.iter_mut().zip(&up.head) {
+            *d += up.weight * h as f64;
+        }
+        self.n_uploads += 1;
+    }
+
+    /// Uploads absorbed so far.
+    pub fn absorbed(&self) -> usize {
+        self.n_uploads
+    }
+
+    /// Weighted-average the absorbed uploads into the global state:
+    /// contributed rows are replaced, untouched rows keep their previous
+    /// value, the head averages across every upload. Returns per-layer
+    /// contributor counts (for tests/metrics).
+    pub fn apply(self, global_peft: &mut [f32], global_head: &mut [f32]) -> Vec<usize> {
+        let q = self.q;
+        let n_layers = self.contributors.len();
+        assert_eq!(global_peft.len(), n_layers * q, "global peft size");
+        assert_eq!(global_head.len(), self.head_acc.len(), "global head size");
+        for l in 0..n_layers {
+            if self.contributors[l] > 0 {
+                let w = self.layer_weight[l].max(f64::MIN_POSITIVE);
+                for i in l * q..(l + 1) * q {
+                    global_peft[i] = (self.layer_acc[i] / w) as f32;
+                }
+            }
+        }
+        if self.n_uploads > 0 && self.head_wsum > 0.0 {
+            for (g, &acc) in global_head.iter_mut().zip(&self.head_acc) {
+                *g = (acc / self.head_wsum) as f32;
+            }
+        }
+        self.contributors
+    }
+}
+
 /// Heterogeneous layer aggregation (Fig. 8): weighted-average overlapping
 /// rows into `global_peft` ([L*q]); untouched rows stay as they were.
 /// Head is weighted-averaged across all uploads. Returns per-layer
-/// contributor counts (for tests/metrics).
+/// contributor counts (for tests/metrics). Batch facade over
+/// [`AggAccum`].
 pub fn aggregate(
     global_peft: &mut [f32],
     global_head: &mut [f32],
     q: usize,
     uploads: &[Upload],
 ) -> Vec<usize> {
-    let n_layers = global_peft.len() / q;
-    let mut contributors = vec![0usize; n_layers];
-    let mut layer_weight = vec![0.0f64; n_layers];
-    let mut layer_acc = vec![0.0f64; global_peft.len()];
-
+    let mut acc = AggAccum::new(global_peft.len() / q, q, global_head.len());
     for up in uploads {
-        assert_eq!(up.rows.len(), up.layers.len() * q, "upload row size");
-        for (j, &l) in up.layers.iter().enumerate() {
-            assert!(l < n_layers, "layer index {l} out of range");
-            contributors[l] += 1;
-            layer_weight[l] += up.weight;
-            let src = &up.rows[j * q..(j + 1) * q];
-            let dst = &mut layer_acc[l * q..(l + 1) * q];
-            for (d, &s) in dst.iter_mut().zip(src) {
-                *d += up.weight * s as f64;
-            }
-        }
+        acc.absorb(up);
     }
-    for l in 0..n_layers {
-        if contributors[l] > 0 {
-            let w = layer_weight[l].max(f64::MIN_POSITIVE);
-            for i in l * q..(l + 1) * q {
-                global_peft[i] = (layer_acc[i] / w) as f32;
-            }
-        }
-    }
-
-    // head: every upload contributes
-    if !uploads.is_empty() {
-        let wsum: f64 = uploads.iter().map(|u| u.weight).sum();
-        if wsum > 0.0 {
-            for (i, g) in global_head.iter_mut().enumerate() {
-                let acc: f64 = uploads
-                    .iter()
-                    .map(|u| u.weight * u.head[i] as f64)
-                    .sum();
-                *g = (acc / wsum) as f32;
-            }
-        }
-    }
-    contributors
+    acc.apply(global_peft, global_head)
 }
 
 /// Convenience for tests: a random upload sharing `layers`.
@@ -257,6 +310,46 @@ mod tests {
             aggregate(&mut global, &mut ghead, q, &ups);
             for (a, b) in global.iter().zip(&rows) {
                 prop_assert!((a - b).abs() < 1e-5, "changed identical rows");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn streaming_accumulator_matches_batch_aggregate_bitwise() {
+        // the engine's streaming fan-in absorbs uploads one at a time;
+        // absorbing in selection order must reproduce the batch result
+        // bit-for-bit (same floating-point sum order)
+        proptest("agg streaming == batch", 30, |rng| {
+            let q = 1 + rng.below(4);
+            let l = 2 + rng.below(5);
+            let h = 1 + rng.below(4);
+            let base: Vec<f32> = (0..l * q).map(|_| rng.f32()).collect();
+            let base_head: Vec<f32> = (0..h).map(|_| rng.f32()).collect();
+            let ups: Vec<Upload> = (0..1 + rng.below(6))
+                .map(|d| {
+                    let layers: Vec<usize> = (0..l).filter(|_| rng.bernoulli(0.6)).collect();
+                    random_upload(d, layers, q, h, 0.5 + rng.f64() * 4.0, rng)
+                })
+                .collect();
+
+            let (mut batch_peft, mut batch_head) = (base.clone(), base_head.clone());
+            let batch_contrib = aggregate(&mut batch_peft, &mut batch_head, q, &ups);
+
+            let (mut str_peft, mut str_head) = (base, base_head);
+            let mut acc = AggAccum::new(l, q, h);
+            for up in &ups {
+                acc.absorb(up);
+            }
+            prop_assert!(acc.absorbed() == ups.len(), "absorbed count");
+            let str_contrib = acc.apply(&mut str_peft, &mut str_head);
+
+            prop_assert!(batch_contrib == str_contrib, "contributor counts differ");
+            for (a, b) in batch_peft.iter().zip(&str_peft) {
+                prop_assert!(a.to_bits() == b.to_bits(), "peft bits differ: {a} vs {b}");
+            }
+            for (a, b) in batch_head.iter().zip(&str_head) {
+                prop_assert!(a.to_bits() == b.to_bits(), "head bits differ: {a} vs {b}");
             }
             Ok(())
         });

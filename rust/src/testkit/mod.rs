@@ -1,7 +1,9 @@
 //! Mini property-testing framework (proptest is not in the offline
 //! registry). Seeded generators + case iteration + first-failure seed
 //! reporting; coordinator invariants (aggregation, partitioning, bandit,
-//! STLD sampling, pack round-trips) are checked through this.
+//! STLD sampling, pack round-trips) are checked through this. Also home
+//! to [`Gauge`], the live/peak instrument behind resource-bound
+//! assertions (streaming round executor memory).
 //!
 //! Usage:
 //! ```ignore
@@ -12,9 +14,77 @@
 //! });
 //! ```
 
+use std::sync::atomic::{AtomicIsize, Ordering};
+
 use crate::util::rng::Rng;
 
 pub type PropResult = Result<(), String>;
+
+/// Cross-thread live/peak gauge used to *prove* resource bounds in tests
+/// and benches — e.g. the streaming round executor's O(workers) bound on
+/// live `TrainState` downloads (`fed::round::DownloadSpec`). Two SeqCst
+/// atomics — the cross-thread peak assertions depend on sequentially
+/// consistent inc/dec — still cheap enough (a few ops per device-round)
+/// to stay compiled into release builds.
+///
+/// The gauge is advisory instrumentation, not accounting: an error path
+/// that drops a counted resource without calling [`Gauge::dec`] leaks a
+/// count, so measuring tests must [`Gauge::reset`] first and serialize
+/// against other users of the same static.
+pub struct Gauge {
+    live: AtomicIsize,
+    peak: AtomicIsize,
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge {
+            live: AtomicIsize::new(0),
+            peak: AtomicIsize::new(0),
+        }
+    }
+
+    /// Count one resource as live; updates the high-water mark.
+    pub fn inc(&self) {
+        let now = self.live.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    /// Count one resource as released.
+    pub fn dec(&self) {
+        self.live.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Currently live count.
+    pub fn live(&self) -> isize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark since the last [`Gauge::reset`].
+    pub fn peak(&self) -> isize {
+        self.peak.load(Ordering::SeqCst)
+    }
+
+    /// Zero both counters (call before the measured section).
+    pub fn reset(&self) {
+        self.live.store(0, Ordering::SeqCst);
+        self.peak.store(0, Ordering::SeqCst);
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge::new()
+    }
+}
+
+/// Live materialized round-start `TrainState`s: incremented by
+/// `fed::round::DownloadSpec::materialize` on the worker, decremented
+/// when the download's round-trip ends (upload packaged for
+/// non-personalized methods; state persisted at the server fan-in for
+/// personalized ones). `tests/round_streaming.rs` asserts its peak never
+/// exceeds the worker count.
+pub static DOWNLOADS: Gauge = Gauge::new();
 
 /// Run `cases` iterations of `prop`, each with an independent seeded RNG.
 /// Panics with the failing case's seed so it can be replayed exactly.
@@ -87,6 +157,38 @@ mod tests {
             prop_assert!(rng.f64() < 0.5, "value too large");
             Ok(())
         });
+    }
+
+    #[test]
+    fn gauge_tracks_live_and_peak() {
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.dec();
+        g.inc();
+        assert_eq!(g.live(), 2);
+        assert_eq!(g.peak(), 2);
+        g.dec();
+        g.dec();
+        assert_eq!(g.live(), 0);
+        assert_eq!(g.peak(), 2, "peak is a high-water mark");
+        g.reset();
+        assert_eq!(g.peak(), 0);
+
+        // concurrent increments never lose a peak update
+        let g = Gauge::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        g.inc();
+                        g.dec();
+                    }
+                });
+            }
+        });
+        assert_eq!(g.live(), 0);
+        assert!(g.peak() >= 1 && g.peak() <= 4);
     }
 
     #[test]

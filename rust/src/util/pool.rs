@@ -6,9 +6,21 @@
 //! count. A panicking job never hangs or poisons the pool: workers catch
 //! the unwind, remaining jobs are cancelled, and the first panic (by input
 //! order) is re-raised on the calling thread.
+//!
+//! Two execution shapes:
+//!
+//! - [`run_parallel`] — collect every result into a `Vec` (fine when
+//!   results are small);
+//! - [`run_parallel_streaming`] — deliver each result to a consumer on
+//!   the **calling thread**, in input order, as soon as it and all of
+//!   its predecessors are done, with a bounded claim window so at most
+//!   `workers` results are ever claimed-but-unconsumed. This is what
+//!   bounds the round executor's live `TrainState` copies at
+//!   O(workers) instead of O(devices_per_round).
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
 
 /// Run `jobs` across `workers` threads, returning results in input order.
 pub fn run_parallel<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
@@ -74,6 +86,137 @@ where
             _ => unreachable!("pool job skipped without a recorded panic"),
         })
         .collect()
+}
+
+/// Shared scheduler state of one [`run_parallel_streaming`] call.
+struct StreamState<T> {
+    /// next unclaimed job index (claims are strictly sequential)
+    next: usize,
+    /// results fully handed to (and returned from) the consumer
+    delivered: usize,
+    /// jobs claimed but not yet recorded in `done`
+    inflight: usize,
+    /// a job or the consumer panicked; stop claiming new work
+    panicked: bool,
+    /// completed results awaiting in-order delivery; at most `window`
+    /// slots are ever `Some`
+    done: Vec<Option<std::thread::Result<T>>>,
+}
+
+/// Run `jobs` across `workers` threads, delivering each result to
+/// `consume(index, result)` on the **calling thread**, in input order,
+/// as results become available.
+///
+/// Memory contract: a worker may only claim job `j` once fewer than
+/// `workers` jobs are claimed-but-unconsumed, so at most `workers`
+/// results (executing, buffered for reordering, or inside `consume`)
+/// are live at any moment — the job count never matters. The window
+/// opens only after `consume` returns, so a value being absorbed still
+/// counts against it.
+///
+/// Panic contract: a panicking job cancels the unclaimed tail and is
+/// re-raised on the calling thread once delivery reaches it (results
+/// before it, by input order, have already been consumed — that is
+/// inherent to streaming). A panicking consumer likewise cancels
+/// remaining work and re-raises.
+pub fn run_parallel_streaming<T, F, C>(workers: usize, jobs: Vec<F>, mut consume: C)
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+    C: FnMut(usize, T),
+{
+    let n = jobs.len();
+    let workers = workers.clamp(1, n.max(1));
+    if workers <= 1 || n <= 1 {
+        // strictly sequential: materialize -> consume one job at a time
+        for (i, job) in jobs.into_iter().enumerate() {
+            consume(i, job());
+        }
+        return;
+    }
+
+    let window = workers;
+    let jobs: Vec<Mutex<Option<F>>> =
+        jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let state = Mutex::new(StreamState {
+        next: 0,
+        delivered: 0,
+        inflight: 0,
+        panicked: false,
+        done: (0..n).map(|_| None).collect(),
+    });
+    let cv = Condvar::new();
+
+    let mut payload: Option<Box<dyn std::any::Any + Send>> = None;
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let mut st = state.lock().unwrap();
+                loop {
+                    if st.panicked || st.next >= n {
+                        return;
+                    }
+                    if st.next < st.delivered + window {
+                        break;
+                    }
+                    st = cv.wait(st).unwrap();
+                }
+                let i = st.next;
+                st.next += 1;
+                st.inflight += 1;
+                drop(st);
+                let job = jobs[i].lock().unwrap().take().unwrap();
+                let out = catch_unwind(AssertUnwindSafe(job));
+                let mut st = state.lock().unwrap();
+                st.inflight -= 1;
+                if out.is_err() {
+                    st.panicked = true;
+                }
+                st.done[i] = Some(out);
+                cv.notify_all();
+            });
+        }
+
+        // in-order delivery on the calling thread
+        'deliver: for i in 0..n {
+            let slot = {
+                let mut st = state.lock().unwrap();
+                loop {
+                    if let Some(s) = st.done[i].take() {
+                        break s;
+                    }
+                    // after a panic the unclaimed tail never runs: once
+                    // the in-flight jobs drain, this slot cannot fill
+                    if st.panicked && st.inflight == 0 && st.next <= i {
+                        break 'deliver;
+                    }
+                    st = cv.wait(st).unwrap();
+                }
+            };
+            match slot {
+                Ok(v) => {
+                    if let Err(p) = catch_unwind(AssertUnwindSafe(|| consume(i, v))) {
+                        state.lock().unwrap().panicked = true;
+                        cv.notify_all();
+                        payload = Some(p);
+                        break 'deliver;
+                    }
+                    // open the window only after the consumer released
+                    // the value, so claimed-but-unconsumed results never
+                    // exceed `window`
+                    state.lock().unwrap().delivered = i + 1;
+                    cv.notify_all();
+                }
+                Err(p) => {
+                    payload = Some(p);
+                    break 'deliver;
+                }
+            }
+        }
+    });
+    if let Some(p) = payload {
+        resume_unwind(p);
+    }
 }
 
 /// Default worker count for this host.
@@ -142,6 +285,112 @@ mod tests {
     fn panic_propagates_on_single_worker_path_too() {
         let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![Box::new(|| panic!("solo"))];
         assert!(catch_unwind(AssertUnwindSafe(|| run_parallel(1, jobs))).is_err());
+    }
+
+    #[test]
+    fn streaming_delivers_in_input_order() {
+        let jobs: Vec<_> = (0..48usize)
+            .map(|i| {
+                move || {
+                    // stagger completion so reordering actually happens
+                    std::thread::sleep(std::time::Duration::from_micros(
+                        ((i * 7) % 5) as u64 * 100,
+                    ));
+                    i * 3
+                }
+            })
+            .collect();
+        let mut seen = Vec::new();
+        run_parallel_streaming(4, jobs, |idx, v| seen.push((idx, v)));
+        assert_eq!(seen.len(), 48);
+        for (pos, (idx, v)) in seen.iter().enumerate() {
+            assert_eq!(*idx, pos, "delivery out of input order");
+            assert_eq!(*v, pos * 3);
+        }
+    }
+
+    #[test]
+    fn streaming_bounds_live_results_at_worker_count() {
+        use std::sync::atomic::AtomicIsize;
+        let live = AtomicIsize::new(0);
+        let peak = AtomicIsize::new(0);
+        let workers = 3usize;
+        let jobs: Vec<_> = (0..64usize)
+            .map(|i| {
+                let live = &live;
+                let peak = &peak;
+                move || {
+                    // the "materialized state" becomes live inside the job
+                    let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_micros(
+                        ((i % 3) as u64 + 1) * 200,
+                    ));
+                    i
+                }
+            })
+            .collect();
+        let mut sum = 0usize;
+        run_parallel_streaming(workers, jobs, |_, v| {
+            // slow consumer: buffered results must still respect the bound
+            std::thread::sleep(std::time::Duration::from_micros(100));
+            live.fetch_sub(1, Ordering::SeqCst);
+            sum += v;
+        });
+        assert_eq!(sum, (0..64).sum::<usize>());
+        let p = peak.load(Ordering::SeqCst);
+        assert!(
+            p as usize <= workers,
+            "live results peaked at {p}, exceeding {workers} workers"
+        );
+        assert_eq!(live.load(Ordering::SeqCst), 0, "consumer missed a release");
+    }
+
+    #[test]
+    fn streaming_serial_and_empty_paths() {
+        let mut seen = Vec::new();
+        let jobs: Vec<_> = (0..5).map(|i| move || i + 1).collect();
+        run_parallel_streaming(1, jobs, |i, v| seen.push((i, v)));
+        assert_eq!(seen, vec![(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        let none: Vec<Box<dyn FnOnce() -> u32 + Send>> = vec![];
+        run_parallel_streaming(4, none, |_, _| panic!("no jobs to deliver"));
+    }
+
+    #[test]
+    fn streaming_job_panic_consumes_prefix_then_reraises() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..16)
+            .map(|i| -> Box<dyn FnOnce() -> usize + Send> {
+                if i == 5 {
+                    Box::new(|| panic!("stream boom"))
+                } else {
+                    Box::new(move || i)
+                }
+            })
+            .collect();
+        let mut delivered = Vec::new();
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            run_parallel_streaming(4, jobs, |_, v| delivered.push(v))
+        }));
+        let payload = res.expect_err("job panic must propagate to the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "stream boom");
+        // in-order delivery: exactly the prefix before the panicking job
+        assert_eq!(delivered, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn streaming_consumer_panic_does_not_deadlock() {
+        let jobs: Vec<_> = (0..32usize).map(|i| move || i).collect();
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            run_parallel_streaming(4, jobs, |i, _| {
+                if i == 3 {
+                    panic!("consumer boom");
+                }
+            })
+        }));
+        let payload = res.expect_err("consumer panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "consumer boom");
     }
 
     #[test]

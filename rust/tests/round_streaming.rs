@@ -1,0 +1,113 @@
+//! Streaming round executor: per-round memory must be bounded by the
+//! worker count — O(workers) live `TrainState` downloads, never
+//! O(devices_per_round) — and a paper-scale cohort (devices_per_round ==
+//! population) must produce byte-identical results and event logs at any
+//! worker count.
+//!
+//! Requires `make artifacts` (the tiny preset); skips with a notice when
+//! the compiled HLO artifacts are absent.
+
+use std::path::Path;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use droppeft::fed::{Engine, FedConfig, JsonlWriter};
+use droppeft::methods;
+use droppeft::metrics::SessionResult;
+use droppeft::runtime::Runtime;
+use droppeft::testkit::DOWNLOADS;
+
+mod common;
+use common::{assert_identical, require_artifacts};
+
+/// The DOWNLOADS gauge is process-global, so engines running on parallel
+/// test threads would pollute each other's peaks: every test in this
+/// file serializes through this lock.
+static GAUGE: Mutex<()> = Mutex::new(());
+
+fn gauge_lock() -> MutexGuard<'static, ()> {
+    GAUGE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn runtime() -> Arc<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Arc::new(Runtime::new(dir).expect("run `make artifacts` before cargo test"))
+}
+
+/// Large cohort on purpose: every device participates every round
+/// (devices_per_round == population), the paper-scale shape the eager
+/// executor materialized all at once.
+fn cohort_cfg(workers: usize) -> FedConfig {
+    let mut cfg = FedConfig::quick("tiny", "mnli");
+    cfg.rounds = 3;
+    cfg.n_devices = 12;
+    cfg.devices_per_round = 12;
+    cfg.local_batches = 2;
+    cfg.samples = 600;
+    cfg.eval_every = 2;
+    cfg.eval_batches = 2;
+    cfg.eval_personalized = true;
+    cfg.workers = workers;
+    cfg
+}
+
+fn run(cfg: FedConfig, log: Option<&Path>) -> SessionResult {
+    // droppeft-lora is personalized: final states ride back through the
+    // fan-in, the worst case for outcome buffering
+    let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
+    let mut engine = Engine::new(cfg, runtime(), method).unwrap();
+    if let Some(p) = log {
+        engine.add_sink(Box::new(JsonlWriter::create(p).unwrap()));
+    }
+    engine.run().unwrap()
+}
+
+#[test]
+fn live_train_state_downloads_never_exceed_worker_count() {
+    require_artifacts!();
+    let _g = gauge_lock();
+    const WORKERS: usize = 2;
+    DOWNLOADS.reset();
+    run(cohort_cfg(WORKERS), None);
+    let peak = DOWNLOADS.peak();
+    assert!(
+        peak >= 1,
+        "gauge never saw a download — instrumentation broken?"
+    );
+    assert!(
+        peak <= WORKERS as isize,
+        "peak live TrainState downloads {peak} exceeded --workers {WORKERS} \
+         on a devices_per_round=12 cohort"
+    );
+    assert_eq!(
+        DOWNLOADS.live(),
+        0,
+        "every download must be released by session end"
+    );
+}
+
+#[test]
+fn large_cohort_results_and_event_log_match_serial_execution() {
+    require_artifacts!();
+    let _g = gauge_lock();
+    let dir = std::env::temp_dir().join("droppeft_round_streaming");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let p1 = dir.join("w1.jsonl");
+    let p4 = dir.join("w4.jsonl");
+    // workers=1 is the strictly sequential path — materialize, train,
+    // absorb one device at a time: the old eager executor's observable
+    // semantics
+    let r1 = run(cohort_cfg(1), Some(&p1));
+    let r4 = run(cohort_cfg(4), Some(&p4));
+    assert_identical(&r1, &r4);
+
+    let b1 = std::fs::read(&p1).unwrap();
+    let b4 = std::fs::read(&p4).unwrap();
+    assert!(!b1.is_empty(), "event log is empty");
+    assert_eq!(
+        b1, b4,
+        "JSONL event log differs between workers 1 and 4 on a \
+         full-population cohort"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
