@@ -10,13 +10,11 @@
 //! console event sink and the report lands in `results/e2e.md` — quoted
 //! in EXPERIMENTS.md.
 
-use std::sync::Arc;
-
 use anyhow::Result;
 
 use droppeft::fed::{ConsoleReporter, SessionSpec};
 use droppeft::methods::MethodSpec;
-use droppeft::runtime::Runtime;
+use droppeft::runtime::{create_backend, BackendKind};
 
 fn session_spec(method: &str) -> Result<SessionSpec> {
     SessionSpec::builder()
@@ -37,7 +35,10 @@ fn session_spec(method: &str) -> Result<SessionSpec> {
 }
 
 fn main() -> Result<()> {
-    let runtime = Arc::new(Runtime::new("artifacts")?);
+    // XLA when `make artifacts` has been run, the pure-rust native
+    // backend otherwise — the driver works on any host
+    let runtime = create_backend(BackendKind::Auto, "artifacts")?;
+    println!("execution backend: {}", runtime.name());
     let t0 = std::time::Instant::now();
 
     let mut report = String::from("## End-to-end run (small preset, synthetic MNLI)\n\n");

@@ -8,7 +8,6 @@
 //! serves batched classification through the full-depth `infer_lora`
 //! artifact, reporting accuracy and latency percentiles.
 
-use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -18,11 +17,13 @@ use droppeft::fed::{ConsoleReporter, SessionSpec};
 use droppeft::methods::{MethodSpec, PeftKind};
 use droppeft::model::{ckpt, BaseModel};
 use droppeft::runtime::tensor::Value;
-use droppeft::runtime::Runtime;
+use droppeft::runtime::{create_backend, BackendKind};
 use droppeft::util::stats;
 
 fn main() -> Result<()> {
-    let runtime = Arc::new(Runtime::new("artifacts")?);
+    // artifact-free on the native backend; XLA when artifacts exist
+    let runtime = create_backend(BackendKind::Auto, "artifacts")?;
+    println!("execution backend: {}", runtime.name());
 
     // quick DropPEFT session to obtain a trained checkpoint
     let spec = SessionSpec::builder()

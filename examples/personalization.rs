@@ -8,13 +8,11 @@
 //! ablation (all layers aggregated). Both sessions come from the same
 //! `SessionSpec` builder chain, differing only in `MethodSpec`.
 
-use std::sync::Arc;
-
 use anyhow::Result;
 
 use droppeft::fed::{ConsoleReporter, SessionSpec};
 use droppeft::methods::MethodSpec;
-use droppeft::runtime::Runtime;
+use droppeft::runtime::{create_backend, BackendKind};
 use droppeft::util::table::Table;
 
 fn spec(method: &str) -> Result<SessionSpec> {
@@ -37,7 +35,9 @@ fn spec(method: &str) -> Result<SessionSpec> {
 }
 
 fn main() -> Result<()> {
-    let runtime = Arc::new(Runtime::new("artifacts")?);
+    // artifact-free on the native backend; XLA when artifacts exist
+    let runtime = create_backend(BackendKind::Auto, "artifacts")?;
+    println!("execution backend: {}", runtime.name());
     let mut t = Table::new(&["method", "global acc", "personalized acc"]);
     for name in ["droppeft-lora", "droppeft-b3"] {
         let spec = spec(name)?;

@@ -4,20 +4,19 @@
 //! `EventSink`s, with zero direct `FedConfig` construction.
 //!
 //! Run with: `cargo run --release --example quickstart`
-//! (requires `make artifacts` first).
+//! (zero setup: without compiled artifacts the session runs on the
+//! pure-rust native backend; after `make artifacts` it auto-selects the
+//! XLA runtime).
 //!
 //! Ten simulated Jetson-class devices fine-tune the `tiny` preset on the
 //! synthetic MNLI analog with the full DropPEFT stack — STLD layer
 //! dropout, the bandit dropout-rate configurator, and PTLS personalized
 //! layer sharing — and print the accuracy/time trajectory.
 
-use std::sync::Arc;
-
 use anyhow::Result;
 
 use droppeft::fed::{ConsoleReporter, EngineEvent, EventSink, JsonlWriter, SessionSpec};
 use droppeft::methods::{MethodSpec, PeftKind};
-use droppeft::runtime::Runtime;
 
 /// Sinks are plain trait objects — embedders can stream progress into
 /// anything. This one counts evaluations as they happen.
@@ -49,8 +48,6 @@ impl EventSink for EvalCounter {
 }
 
 fn main() -> Result<()> {
-    let runtime = Arc::new(Runtime::new("artifacts")?);
-
     let spec = SessionSpec::builder()
         .preset("tiny")
         .dataset("mnli")
@@ -65,6 +62,10 @@ fn main() -> Result<()> {
         .build()?;
     println!("== DropPEFT quickstart: {} ==", spec.method.name());
 
+    // the spec picks its own backend: XLA iff compiled artifacts exist
+    // under "artifacts", the pure-rust native backend otherwise
+    let runtime = spec.create_backend("artifacts")?;
+    println!("execution backend: {}", runtime.name());
     let mut engine = spec.build_engine(runtime.clone())?;
     engine.add_sink(Box::new(ConsoleReporter::new()));
     engine.add_sink(Box::new(JsonlWriter::create("results/quickstart.events.jsonl")?));

@@ -1,0 +1,140 @@
+//! Native-backend train/eval step latency on the built-in `tiny` preset
+//! — the artifact-free bench smoke. Times `train_lora_k{K}` for K = 1,
+//! L/2, L (the Eq. 4 compute-scales-with-K check on the pure-Rust
+//! executor), the full-depth eval step, and one full federated round,
+//! then emits machine-readable `BENCH_native_train.json`. Runs on any
+//! host: no compiled XLA artifacts, no Python toolchain.
+//!
+//! Run with `cargo bench --bench native_train`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use droppeft::benchkit::{Bench, Suite};
+use droppeft::data::{gen, TaskSpec};
+use droppeft::fed::{Engine, FedConfig};
+use droppeft::model::{BaseModel, TrainState};
+use droppeft::runtime::tensor::Value;
+use droppeft::runtime::{Backend, NativeBackend};
+use droppeft::util::json::Json;
+
+fn main() {
+    let rt: Arc<dyn Backend> = Arc::new(NativeBackend::new());
+    let preset = "tiny";
+    let spec = rt.model(preset).unwrap().clone();
+    let mcfg = spec.config.clone();
+    let base = BaseModel::init(&spec, 1);
+    let state = TrainState::init(&spec, "lora", 1).unwrap();
+    let ds = gen::generate(
+        &TaskSpec::by_name("mnli", mcfg.batch),
+        mcfg.seq,
+        mcfg.vocab,
+        5,
+    );
+    let idx: Vec<usize> = (0..mcfg.batch).collect();
+    let batch = droppeft::data::batch::batch_from_indices(&ds, &idx, mcfg.batch, mcfg.seq);
+
+    let mut suite = Suite::new();
+    let l = mcfg.n_layers;
+    let ks: Vec<usize> = [1, l / 2, l].into_iter().filter(|&k| k >= 1).collect();
+    let mut k_means = Vec::new();
+    for &k in &ks {
+        let active: Vec<usize> = (0..k).collect();
+        let (peft, m, v) = state.gather_peft(&active);
+        let inputs = vec![
+            Value::f32(base.gather(&active), vec![k, base.p]),
+            Value::f32(peft, vec![k, state.q]),
+            Value::f32(m, vec![k, state.q]),
+            Value::f32(v, vec![k, state.q]),
+            Value::f32(base.globals.clone(), vec![base.globals.len()]),
+            Value::f32(state.head.clone(), vec![state.head.len()]),
+            Value::f32(state.head_m.clone(), vec![state.head_m.len()]),
+            Value::f32(state.head_v.clone(), vec![state.head_v.len()]),
+            batch.tokens.clone(),
+            batch.labels.clone(),
+            Value::scalar_f32(1.0),
+            Value::scalar_f32(0.001),
+        ];
+        let name = format!("train_lora_k{k}");
+        let r = Bench::new(format!("native/{preset}/train step K={k}/{l}"))
+            .warmup(2)
+            .iters(5, 200)
+            .target_secs(1.0)
+            .run(|| rt.execute(preset, &name, &inputs).unwrap());
+        k_means.push((k, r.mean_ns));
+        suite.add(r);
+    }
+    if k_means.len() == 3 {
+        let half = k_means[1].1;
+        let full = k_means[2].1;
+        println!(
+            "  -> Eq.4 scaling on native/{preset}: K=L/2 costs {:.0}% of K=L",
+            100.0 * half / full
+        );
+    }
+
+    let eval_inputs = vec![
+        Value::f32(base.layers.clone(), vec![l, base.p]),
+        Value::f32(state.peft.clone(), vec![l, state.q]),
+        Value::f32(base.globals.clone(), vec![base.globals.len()]),
+        Value::f32(state.head.clone(), vec![state.head.len()]),
+        batch.tokens.clone(),
+        batch.labels.clone(),
+    ];
+    let eval_idx = suite.results.len();
+    suite.add(
+        Bench::new(format!("native/{preset}/eval step (full depth)"))
+            .warmup(2)
+            .iters(5, 200)
+            .target_secs(1.0)
+            .run(|| rt.execute(preset, "eval_lora", &eval_inputs).unwrap()),
+    );
+    let eval_ns = suite.results[eval_idx].mean_ns;
+
+    println!("\n{}", suite.markdown("Native step latency vs active depth"));
+
+    // one full federated round, engine end to end (droppeft-lora)
+    let round_secs = {
+        let mut cfg = FedConfig::quick("tiny", "mnli");
+        cfg.rounds = 1000;
+        cfg.n_devices = 8;
+        cfg.devices_per_round = 4;
+        cfg.local_batches = 2;
+        cfg.samples = 400;
+        cfg.eval_every = 1000; // keep periodic eval out of the timing
+        cfg.eval_batches = 2;
+        let method = droppeft::methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
+        let mut engine = Engine::new(cfg, rt.clone(), method).unwrap();
+        engine.run_round(0).unwrap(); // warm round
+        let t0 = Instant::now();
+        for round in 1..=3 {
+            engine.run_round(round).unwrap();
+        }
+        t0.elapsed().as_secs_f64() / 3.0
+    };
+    println!("native round (4 devices, 2 batches): {round_secs:.3}s");
+
+    let mut fields = vec![
+        ("bench", Json::str("native_train".to_string())),
+        ("preset", Json::str(preset.to_string())),
+        ("n_layers", Json::num(l as f64)),
+        ("eval_mean_ns", Json::num(eval_ns)),
+        ("round_secs", Json::num(round_secs)),
+    ];
+    for (k, ns) in &k_means {
+        // fixed key set: k1 / k_half / k_full
+        let key = if *k == 1 {
+            "train_k1_mean_ns"
+        } else if *k == l {
+            "train_kfull_mean_ns"
+        } else {
+            "train_khalf_mean_ns"
+        };
+        fields.push((key, Json::num(*ns)));
+    }
+    let j = Json::obj(fields);
+    match std::fs::write("BENCH_native_train.json", j.to_string()) {
+        Ok(()) => println!("wrote BENCH_native_train.json"),
+        Err(e) => eprintln!("could not write BENCH_native_train.json: {e}"),
+    }
+}

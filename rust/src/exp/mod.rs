@@ -26,13 +26,13 @@ use anyhow::{Context, Result};
 use crate::fed::spec::{SessionSpec, SessionSpecBuilder, SweepPlan};
 use crate::fed::{ConsoleReporter, JsonlWriter};
 use crate::metrics::SessionResult;
-use crate::runtime::Runtime;
+use crate::runtime::{self, Backend, BackendKind};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
 /// Shared experiment context.
 pub struct Ctx {
-    pub runtime: Arc<Runtime>,
+    pub runtime: Arc<dyn Backend>,
     pub out_dir: std::path::PathBuf,
     pub quick: bool,
     pub preset: String,
@@ -144,7 +144,10 @@ pub fn run(args: &Args) -> Result<()> {
         plan.load_resume(&path)?;
     }
     let mut ctx = Ctx {
-        runtime: Arc::new(Runtime::new(args.str_or("artifacts", "artifacts"))?),
+        runtime: runtime::create_backend(
+            BackendKind::parse(&args.str_or("backend", "auto"))?,
+            args.str_or("artifacts", "artifacts"),
+        )?,
         out_dir: args.str_or("out", "results").into(),
         quick: args.flag("quick"),
         preset: args.str_or("preset", "tiny"),

@@ -5,7 +5,7 @@
 //! download from `&global`, gather active rows → execute the K-layer
 //! train artifact → scatter back, then importance accounting, share-set
 //! selection, upload packaging, and simulated cost accounting. It borrows
-//! only read-only session context (`Runtime`, `ModelSpec`, `BaseModel`,
+//! only read-only session context (the `Backend`, `ModelSpec`, `BaseModel`,
 //! `Dataset`, config, the global `TrainState`, the method's `&self`
 //! hooks) so many tasks can run concurrently on worker threads.
 //! Materializing the download *here* — instead of during planning — is
@@ -23,12 +23,12 @@ use crate::model::{gather_rows, BaseModel, TrainState};
 use crate::ptls::{self, ImportanceAccum, Upload};
 use crate::runtime::manifest::ModelSpec;
 use crate::runtime::tensor::Value;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 
 /// Read-only session context shared by client workers and server eval.
 #[derive(Clone, Copy)]
 pub struct ClientCtx<'a> {
-    pub runtime: &'a Runtime,
+    pub runtime: &'a dyn Backend,
     pub cfg: &'a FedConfig,
     pub spec: &'a ModelSpec,
     pub base: &'a BaseModel,
@@ -118,14 +118,26 @@ impl<'a> ClientTask<'a> {
         let mut flops_total = 0.0;
         let mut mem_peak: f64 = 0.0;
         let mut active_total = 0usize;
+        // training accuracy over the executed batches (the train
+        // artifact's `correct` output, weighted by distinct samples like
+        // every other accuracy in the system)
+        let mut train_correct = 0.0;
+        let mut train_total = 0.0;
 
         for _ in 0..n_batches {
             let active = dropout.sample_active(&mut mask_rng);
             let k = active.len();
             active_total += k;
             let batch = sampler.next_batch(self.ctx.dataset, mcfg.batch);
-            let (loss, grad_norms) = self.train_batch(&mut state, &active, &batch)?;
+            let (loss, correct, grad_norms) = self.train_batch(&mut state, &active, &batch)?;
             loss_sum += loss;
+            fold_batch_acc(
+                &mut train_correct,
+                &mut train_total,
+                correct,
+                batch.size,
+                batch.unique,
+            );
             importance.record(&active, &grad_norms);
 
             flops_total += cost::train_flops(&ccfg, scale_k(k), &self.kind, false);
@@ -194,6 +206,7 @@ impl<'a> ClientTask<'a> {
             upload,
             final_state,
             local_acc,
+            train_acc: train_correct / train_total,
             mean_loss: loss_sum / n_batches as f64,
             active_frac: active_total as f64 / (n_batches * n_layers) as f64,
             comp_secs,
@@ -205,12 +218,13 @@ impl<'a> ClientTask<'a> {
     }
 
     /// Execute one STLD mini-batch through the K-active-layer artifact.
+    /// Returns (mean loss, #correct in the batch, per-layer grad norms).
     fn train_batch(
         &self,
         state: &mut TrainState,
         active: &[usize],
         batch: &Batch,
-    ) -> Result<(f64, Vec<f32>)> {
+    ) -> Result<(f64, f64, Vec<f32>)> {
         let k = active.len();
         let base = self.ctx.base;
         let p = base.p;
@@ -248,10 +262,10 @@ impl<'a> ClientTask<'a> {
         state.head_m = it.next().unwrap().into_f32()?;
         state.head_v = it.next().unwrap().into_f32()?;
         let loss = it.next().unwrap().scalar()? as f64;
-        let _correct = it.next().unwrap().scalar()?;
+        let correct = it.next().unwrap().scalar()? as f64;
         let gn = it.next().unwrap().into_f32()?;
         anyhow::ensure!(loss.is_finite(), "non-finite training loss");
-        Ok((loss, gn))
+        Ok((loss, correct, gn))
     }
 }
 
@@ -259,7 +273,18 @@ impl<'a> ClientTask<'a> {
 /// client local validation and the server's periodic evaluation. Tiled
 /// batches (shards smaller than the static batch dimension) count their
 /// distinct samples, not the padding — see `fold_batch_acc` below.
+///
+/// An empty batch list is an error: the old behaviour silently reported
+/// `0.0` accuracy, which would poison the bandit reward baseline (and
+/// any record it flowed into) instead of surfacing the broken eval set —
+/// the same class of bug as the PR-2 `eval_personalized` empty-mean fix.
+/// Every legitimate caller evaluates a non-empty shard (`eval_batches`
+/// tiles shards smaller than one batch rather than returning none).
 pub fn eval_state(ctx: &ClientCtx<'_>, state: &TrainState, batches: &[Batch]) -> Result<f64> {
+    anyhow::ensure!(
+        !batches.is_empty(),
+        "eval_state: no batches to evaluate (empty eval set)"
+    );
     let base = ctx.base;
     let mut correct = 0.0;
     let mut total = 0.0;
@@ -282,7 +307,7 @@ pub fn eval_state(ctx: &ClientCtx<'_>, state: &TrainState, batches: &[Batch]) ->
             b.unique,
         );
     }
-    Ok(if total > 0.0 { correct / total } else { 0.0 })
+    Ok(correct / total)
 }
 
 /// Fold one batch's correct-count into a running `(correct, total)`

@@ -37,13 +37,13 @@ use crate::metrics::{RoundRecord, SessionResult};
 use crate::methods::Method;
 use crate::model::{BaseModel, TrainState};
 use crate::runtime::manifest::ModelSpec;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::util::pool;
 use crate::util::rng::Rng;
 
 pub struct Engine {
     pub cfg: FedConfig,
-    runtime: Arc<Runtime>,
+    runtime: Arc<dyn Backend>,
     spec: ModelSpec,
     base: Arc<BaseModel>,
     dataset: Dataset,
@@ -64,7 +64,11 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(cfg: FedConfig, runtime: Arc<Runtime>, method: Box<dyn Method>) -> Result<Engine> {
+    pub fn new(
+        cfg: FedConfig,
+        runtime: Arc<dyn Backend>,
+        method: Box<dyn Method>,
+    ) -> Result<Engine> {
         let spec = runtime.model(&cfg.preset)?.clone();
         let mcfg = &spec.config;
         let mut rng = Rng::seed_from(cfg.seed);
@@ -131,7 +135,7 @@ impl Engine {
     /// (`tests/resume_determinism.rs`).
     pub fn resume(
         snap: SessionSnapshot,
-        runtime: Arc<Runtime>,
+        runtime: Arc<dyn Backend>,
         method: Box<dyn Method>,
     ) -> Result<Engine> {
         let mut engine = Engine::new(snap.cfg.clone(), runtime, method)?;
@@ -193,7 +197,7 @@ impl Engine {
     /// stored factory key with the *snapshot's* seed and round count (a
     /// caller-built method could carry a different session length and
     /// silently skew schedule-derived state like FedAdaOPT's depth).
-    pub fn resume_snapshot(snap: SessionSnapshot, runtime: Arc<Runtime>) -> Result<Engine> {
+    pub fn resume_snapshot(snap: SessionSnapshot, runtime: Arc<dyn Backend>) -> Result<Engine> {
         let method = crate::methods::by_name(&snap.method_key, snap.cfg.seed, snap.cfg.rounds)
             .with_context(|| {
                 format!("rebuilding method {:?} from snapshot", snap.method_key)
@@ -205,7 +209,7 @@ impl Engine {
     /// snapshot's worker count (host-specific; never affects results).
     pub fn resume_from_path(
         path: impl AsRef<Path>,
-        runtime: Arc<Runtime>,
+        runtime: Arc<dyn Backend>,
         workers: Option<usize>,
     ) -> Result<Engine> {
         let mut snap = snapshot::load(path.as_ref())?;
@@ -404,6 +408,7 @@ impl Engine {
                         round,
                         device: out.device,
                         local_acc: out.local_acc,
+                        train_acc: out.train_acc,
                         mean_loss: out.mean_loss,
                         active_frac: out.active_frac,
                         comp_secs: out.comp_secs,
@@ -470,8 +475,9 @@ impl Engine {
         self.server.global()
     }
 
-    pub fn runtime(&self) -> &Runtime {
-        &self.runtime
+    /// The execution backend this session runs on.
+    pub fn runtime(&self) -> &dyn Backend {
+        &*self.runtime
     }
 }
 

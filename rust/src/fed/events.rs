@@ -64,6 +64,8 @@ pub enum EngineEvent {
         round: usize,
         device: usize,
         local_acc: f64,
+        /// training accuracy over the executed local batches
+        train_acc: f64,
         mean_loss: f64,
         active_frac: f64,
         comp_secs: f64,
@@ -144,6 +146,7 @@ impl EngineEvent {
                 round,
                 device,
                 local_acc,
+                train_acc,
                 mean_loss,
                 active_frac,
                 comp_secs,
@@ -154,6 +157,7 @@ impl EngineEvent {
                 ("round", Json::num(*round as f64)),
                 ("device", Json::num(*device as f64)),
                 ("local_acc", Json::num(*local_acc)),
+                ("train_acc", Json::num(*train_acc)),
                 ("mean_loss", Json::num(*mean_loss)),
                 ("active_frac", Json::num(*active_frac)),
                 ("comp_secs", Json::num(*comp_secs)),

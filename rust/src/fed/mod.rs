@@ -10,7 +10,8 @@
 //!   aggregation, bandit feedback, clock accounting, periodic
 //!   evaluation;
 //! - [`engine`] — the thin orchestrator tying the round loop together
-//!   (real XLA training + simulated wall-clock);
+//!   (real training steps through a pluggable `runtime::Backend` +
+//!   simulated wall-clock);
 //! - [`snapshot`] — the versioned `DPEFTSN2` session snapshot format
 //!   behind `--snapshot-every` / `--resume` (kill-and-resume determinism);
 //! - [`spec`] — the typed `SessionSpec` builder and `SweepPlan`, the

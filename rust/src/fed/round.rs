@@ -154,6 +154,9 @@ pub struct LocalOutcome {
     pub final_state: Option<TrainState>,
     /// local validation accuracy (bandit reward signal)
     pub local_acc: f64,
+    /// training accuracy over the executed local batches (the train
+    /// artifact's `correct` output, distinct-sample weighted)
+    pub train_acc: f64,
     pub mean_loss: f64,
     /// mean STLD-active layer fraction across local batches
     pub active_frac: f64,

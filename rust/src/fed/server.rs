@@ -64,6 +64,7 @@ pub struct RoundAccum {
     sum_loss: f64,
     sum_active: f64,
     sum_local_acc: f64,
+    sum_train_acc: f64,
 }
 
 impl RoundAccum {
@@ -83,6 +84,7 @@ impl RoundAccum {
         self.sum_loss += out.mean_loss;
         self.sum_active += out.active_frac;
         self.sum_local_acc += out.local_acc;
+        self.sum_train_acc += out.train_acc;
     }
 
     /// Outcomes absorbed so far.
@@ -145,6 +147,7 @@ impl Server {
             sum_loss: 0.0,
             sum_active: 0.0,
             sum_local_acc: 0.0,
+            sum_train_acc: 0.0,
         }
     }
 
@@ -166,6 +169,7 @@ impl Server {
             sum_loss,
             sum_active,
             sum_local_acc,
+            sum_train_acc,
         } = accum;
 
         // heterogeneous aggregation (Fig. 8)
@@ -189,6 +193,7 @@ impl Server {
             sim_secs: round_secs,
             clock_secs: self.clock,
             train_loss: sum_loss / nf,
+            train_acc: sum_train_acc / nf,
             active_frac: sum_active / nf,
             global_acc: None,
             personalized_acc: None,
@@ -297,6 +302,7 @@ mod tests {
                 },
                 final_state: Some(ts(q, l, h, 9.0)),
                 local_acc: acc,
+                train_acc: 0.25,
                 mean_loss: 1.0,
                 active_frac: 0.5,
                 comp_secs: t,
@@ -326,6 +332,7 @@ mod tests {
         assert_eq!(rec.traffic_bytes, 200);
         assert_eq!(rec.energy_j_mean, 3.0);
         assert_eq!(rec.mem_peak_mean, 7.0);
+        assert_eq!(rec.train_acc, 0.25, "mean per-client training accuracy");
         // aggregation applied to the global model only at finish time
         assert_eq!(&server.global().peft[0..2], &[1.0, 1.0]);
         assert_eq!(server.global().head, vec![2.0, 2.0]);

@@ -34,7 +34,8 @@ use crate::util::rng::{Rng, RngState};
 
 pub const MAGIC: &[u8; 8] = b"DPEFTSN2";
 /// Bump when the section layout changes incompatibly.
-pub const FORMAT_VERSION: u64 = 1;
+/// v2: `RoundRecord` gained `train_acc`.
+pub const FORMAT_VERSION: u64 = 2;
 /// Snapshot directory when `--snapshot-dir` is not given.
 pub const DEFAULT_DIR: &str = "snapshots";
 
@@ -143,6 +144,7 @@ fn write_record<W: std::io::Write>(w: &mut Writer<W>, rec: &RoundRecord) -> Resu
     w.f64(rec.sim_secs)?;
     w.f64(rec.clock_secs)?;
     w.f64(rec.train_loss)?;
+    w.f64(rec.train_acc)?;
     w.f64(rec.active_frac)?;
     w.opt_f64(rec.global_acc)?;
     w.opt_f64(rec.personalized_acc)?;
@@ -159,6 +161,7 @@ fn read_record<R: Read>(r: &mut Reader<R>) -> Result<RoundRecord> {
         sim_secs: r.f64()?,
         clock_secs: r.f64()?,
         train_loss: r.f64()?,
+        train_acc: r.f64()?,
         active_frac: r.f64()?,
         global_acc: r.opt_f64()?,
         personalized_acc: r.opt_f64()?,

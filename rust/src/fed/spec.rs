@@ -23,7 +23,7 @@ use crate::fed::config::FedConfig;
 use crate::fed::engine::Engine;
 use crate::fed::snapshot::{self, SessionSnapshot};
 use crate::methods::{Method, MethodSpec};
-use crate::runtime::Runtime;
+use crate::runtime::{self, Backend, BackendKind};
 use crate::util::cli::Args;
 
 /// A complete, validated description of one federated session.
@@ -36,18 +36,34 @@ use crate::util::cli::Args;
 pub struct SessionSpec {
     pub cfg: FedConfig,
     pub method: MethodSpec,
+    /// Which execution backend to run on (`--backend`). Host
+    /// configuration, like `cfg.workers`: never serialized into
+    /// snapshots and never affects simulated results beyond floating
+    /// point differences between executors.
+    pub backend: BackendKind,
 }
 
 impl SessionSpec {
     /// Start building a spec from the testbed defaults
-    /// (`FedConfig::quick("tiny", "mnli")` + DropPEFT(LoRA)).
+    /// (`FedConfig::quick("tiny", "mnli")` + DropPEFT(LoRA) on the
+    /// auto-selected backend).
     pub fn builder() -> SessionSpecBuilder {
         SessionSpecBuilder {
             spec: SessionSpec {
                 cfg: FedConfig::quick("tiny", "mnli"),
                 method: MethodSpec::default(),
+                backend: BackendKind::Auto,
             },
         }
+    }
+
+    /// Instantiate this spec's execution backend (`Auto` = XLA iff
+    /// compiled artifacts exist under `artifacts_dir`, else native).
+    pub fn create_backend(
+        &self,
+        artifacts_dir: impl AsRef<std::path::Path>,
+    ) -> Result<Arc<dyn Backend>> {
+        runtime::create_backend(self.backend, artifacts_dir)
     }
 
     /// Check every invariant the engine assumes. Called by the builder
@@ -113,7 +129,7 @@ impl SessionSpec {
 
     /// Validate and construct a ready-to-run engine. Attach observers
     /// with [`Engine::add_sink`] before calling [`Engine::run`].
-    pub fn build_engine(&self, runtime: Arc<Runtime>) -> Result<Engine> {
+    pub fn build_engine(&self, runtime: Arc<dyn Backend>) -> Result<Engine> {
         self.validate()?;
         Engine::new(self.cfg.clone(), runtime, self.build_method())
     }
@@ -234,6 +250,13 @@ impl SessionSpecBuilder {
         self
     }
 
+    /// Execution backend (`--backend auto|xla|native`). Host-specific;
+    /// auto selects XLA exactly when compiled artifacts are present.
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.spec.backend = kind;
+        self
+    }
+
     pub fn build(self) -> Result<SessionSpec> {
         self.spec.validate()?;
         Ok(self.spec)
@@ -270,6 +293,7 @@ pub fn builder_from_args(args: &Args) -> Result<SessionSpecBuilder> {
         .eval_batches(args.usize_or("eval-batches", d.eval_batches)?)
         .personal_eval(args.flag("personal-eval"))
         .workers(args.usize_or("workers", d.workers)?)
+        .backend(BackendKind::parse(&args.str_or("backend", "auto"))?)
         .snapshot_every(args.usize_or("snapshot-every", 0)?);
     if let Some(t) = args.opt_str("target-acc") {
         b = b.target_acc(
@@ -336,7 +360,11 @@ impl SweepPlan {
     /// 0; the method is rebuilt from the snapshot's factory key
     /// (`Engine::resume_snapshot`) so schedule-derived state follows the
     /// snapshot's round count, not this sweep's.
-    pub fn build_engine(&mut self, spec: &SessionSpec, runtime: Arc<Runtime>) -> Result<Engine> {
+    pub fn build_engine(
+        &mut self,
+        spec: &SessionSpec,
+        runtime: Arc<dyn Backend>,
+    ) -> Result<Engine> {
         spec.validate()?;
         let mut cfg = spec.cfg.clone();
         // one snapshot subdir per session so sweep sessions with the

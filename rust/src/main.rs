@@ -13,12 +13,11 @@
 //! event log) rather than ad-hoc prints.
 
 use std::path::Path;
-use std::sync::Arc;
 
 use anyhow::Result;
 
 use droppeft::fed::{spec, ConsoleReporter, Engine, JsonlWriter};
-use droppeft::runtime::Runtime;
+use droppeft::runtime::{self, BackendKind};
 use droppeft::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -44,6 +43,11 @@ USAGE:
                  [--local-batches 4] [--alpha 1.0] [--samples 2000]
                  [--lr 5e-4] [--seed 42] [--eval-every 2] [--eval-batches 4]
                  [--target-acc 0.9] [--personal-eval] [--artifacts DIR]
+                 [--backend auto|xla|native]
+                                 (execution backend; auto = XLA when
+                                  compiled artifacts are present, else
+                                  the pure-rust native backend — the
+                                  whole stack runs artifact-free)
                  [--cost-model MODEL]
                                  (simulate wall-clock/memory/traffic at a
                                   paper-scale architecture, e.g.
@@ -60,19 +64,20 @@ USAGE:
                                   N rounds, default DIR: snapshots/)
                  [--resume PATH] (resume a snapshotted session; session
                                   settings come from the snapshot, only
-                                  --workers/--artifacts still apply;
-                                  results are byte-identical to an
-                                  uninterrupted run)
+                                  the host-specific --workers/--artifacts/
+                                  --backend still apply; results are
+                                  byte-identical to an uninterrupted run)
   droppeft exp <table1|fig2|fig3|fig6a|fig6b|fig7|table3|fig9|fig10|fig11|
                 fig12|fig13|fig14|fig15|all> [--quick] [--out results]
                 [--events]      (per-session JSONL event logs under
                                  <out>/events/)
                 [--workers N] [--snapshot-every N] [--snapshot-dir DIR]
+                [--backend auto|xla|native]
                 [--resume PATH] (resumes the session matching the
                                  snapshot's method/dataset; others fresh)
                 The experiment id is positional; `--id <id>` is accepted
                 as an alias (and wins when both are given).
-  droppeft inspect [--artifacts DIR]
+  droppeft inspect [--artifacts DIR] [--backend auto|xla|native]
 
 Methods: fedlora fedadapter fedhetlora fedadaopt
          droppeft-lora droppeft-adapter droppeft-b1 droppeft-b2 droppeft-b3
@@ -87,10 +92,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     let workers_override = args.opt_usize("workers")?;
     let builder = spec::builder_from_args(args)?;
     let artifacts = args.str_or("artifacts", "artifacts");
+    let backend = BackendKind::parse(&args.str_or("backend", "auto"))?;
     let out_dir = args.opt_str("out");
     args.finish()?;
 
-    let runtime = Arc::new(Runtime::new(&artifacts)?);
+    let runtime = runtime::create_backend(backend, &artifacts)?;
     let mut engine = match resume {
         Some(path) => Engine::resume_from_path(&path, runtime.clone(), workers_override)?,
         None => builder.build()?.build_engine(runtime.clone())?,
@@ -121,9 +127,12 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_inspect(args: &Args) -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
+    let backend = BackendKind::parse(&args.str_or("backend", "auto"))?;
     args.finish()?;
-    let rt = Runtime::new(&artifacts)?;
-    for (name, spec) in &rt.manifest.models {
+    let rt = runtime::create_backend(backend, &artifacts)?;
+    println!("backend: {}", rt.name());
+    for name in rt.presets() {
+        let spec = rt.model(&name)?;
         let c = &spec.config;
         println!(
             "preset {name}: L={} d={} heads={} ff={} vocab={} seq={} batch={}",

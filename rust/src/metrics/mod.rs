@@ -12,6 +12,9 @@ pub struct RoundRecord {
     /// cumulative simulated clock at the END of this round
     pub clock_secs: f64,
     pub train_loss: f64,
+    /// mean per-participant training accuracy over the executed local
+    /// batches (the train artifact's `correct` output)
+    pub train_acc: f64,
     /// mean STLD-active layer fraction across local batches
     pub active_frac: f64,
     /// global model accuracy on the held-out test set (eval rounds only)
@@ -41,6 +44,7 @@ impl RoundRecord {
             ("sim_secs", Json::num(self.sim_secs)),
             ("clock_secs", Json::num(self.clock_secs)),
             ("train_loss", Json::num(self.train_loss)),
+            ("train_acc", Json::num(self.train_acc)),
             ("active_frac", Json::num(self.active_frac)),
             (
                 "global_acc",
@@ -148,13 +152,14 @@ impl SessionResult {
     /// Round-by-round text table (examples / debugging).
     pub fn table(&self) -> String {
         let mut t = Table::new(&[
-            "round", "clock", "loss", "act%", "acc", "traffic", "arm",
+            "round", "clock", "loss", "tracc", "act%", "acc", "traffic", "arm",
         ]);
         for r in &self.records {
             t.row(vec![
                 r.round.to_string(),
                 format!("{:.2}h", r.clock_secs / 3600.0),
                 format!("{:.4}", r.train_loss),
+                format!("{:.0}%", 100.0 * r.train_acc),
                 format!("{:.0}%", 100.0 * r.active_frac),
                 r.personalized_acc
                     .or(r.global_acc)

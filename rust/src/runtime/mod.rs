@@ -1,24 +1,37 @@
-//! L3 runtime: loads AOT HLO-text artifacts and executes them on the PJRT
-//! CPU client. This is the only module that touches the `xla` crate; the
-//! rest of the coordinator sees `Value`s and artifact names.
+//! L3 execution layer: pluggable [`Backend`]s behind one artifact-name
+//! contract.
 //!
-//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`, with
-//! HLO **text** as the interchange format (serialized jax≥0.5 protos are
-//! rejected by xla_extension 0.5.1).
+//! The coordinator never talks to an accelerator directly — it asks a
+//! [`Backend`] to run named executables (`train_{kind}_k{K}`,
+//! `eval_{kind}`, `infer_{kind}`) over host [`Value`]s, with I/O
+//! signatures described by a [`manifest::ModelSpec`]. Two backends ship:
+//!
+//! - [`Runtime`] — the AOT HLO-text / PJRT CPU path (the original
+//!   executor; requires compiled artifacts from `python -m compile.aot`);
+//! - [`native::NativeBackend`] — a pure-Rust f32 reference
+//!   implementation of the same contract with built-in `tiny`/`small`
+//!   presets, so the full federated stack runs on any host with zero
+//!   compiled artifacts.
+//!
+//! [`create_backend`] picks one from a [`BackendKind`] (`--backend
+//! auto|xla|native`; auto = XLA iff `artifacts/manifest.json` exists).
 
 pub mod manifest;
+pub mod native;
 pub mod tensor;
+pub mod xla;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::path::Path;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Result};
 
-use manifest::{ArtifactSpec, Manifest, ModelSpec};
+use manifest::ModelSpec;
 use tensor::Value;
+
+pub use native::NativeBackend;
+pub use self::xla::Runtime;
 
 /// Cumulative execution statistics per artifact (perf pass input).
 #[derive(Clone, Debug, Default)]
@@ -29,195 +42,72 @@ pub struct ExecStats {
     pub marshal_secs: f64,
 }
 
-struct Compiled {
-    exe: xla::PjRtLoadedExecutable,
-    spec: ArtifactSpec,
+/// Snapshot a backend's mutex-guarded per-artifact stats map, sorted by
+/// total execution time — the one implementation both backends share.
+/// `total_cmp` is total even over NaN, so a pathological entry (e.g.
+/// zero-call artifacts with poisoned timings) cannot panic the sort.
+pub(crate) fn snapshot_stats(
+    stats: &Mutex<HashMap<String, ExecStats>>,
+) -> Vec<(String, ExecStats)> {
+    let mut v: Vec<_> = stats
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, s)| (k.clone(), s.clone()))
+        .collect();
+    v.sort_by(|a, b| b.1.total_secs.total_cmp(&a.1.total_secs));
+    v
 }
 
-// SAFETY: the PJRT C API itself is thread-safe for execution, and on our
-// side `Compiled` values are shared via `Arc<Compiled>` (the Arc is
-// cloned, never the inner executable) with only `&self` methods invoked
-// from worker threads. Caveat: the `xla` binding's own handle plumbing is
-// not auditable from this repo — if a binding version performs internal
-// non-atomic refcount traffic inside `execute`, concurrent execution is
-// unsound for it; `DROPPEFT_SERIAL_EXEC=1` / `set_serialize_exec(true)`
-// restores the old fully-serialized behavior as the escape hatch.
-unsafe impl Send for Compiled {}
-unsafe impl Sync for Compiled {}
-
-/// PJRT-backed executor with lazy per-artifact compilation and caching.
+/// An executor of named model artifacts — the contract between the
+/// federated coordinator and whatever actually runs the math.
 ///
-/// Concurrency model: `execute` may be called from many threads at once —
-/// the per-artifact `cache`/`stats` maps are mutex-guarded, compilation is
-/// serialized behind `compile_lock`, and execution runs lock-free unless
-/// the opt-in serialization mode is on (`set_serialize_exec`, or the
-/// `DROPPEFT_SERIAL_EXEC` env var) for single-core hosts or debugging.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<Compiled>>>,
-    stats: Mutex<HashMap<String, ExecStats>>,
-    /// taken around `execute` only when `serialize_exec` is on
-    exec_lock: Mutex<()>,
-    serialize_exec: AtomicBool,
-    /// lazy compilation stays serialized: PJRT compiles are heavyweight
-    /// and concurrent compiles of one artifact would duplicate work
-    compile_lock: Mutex<()>,
-}
+/// Contract:
+/// - **Artifact-name protocol.** `train_{kind}_k{K}` runs one mini-batch
+///   over K active layers and returns the 9-output tuple
+///   `(peft', m', v', head', head_m', head_v', loss, correct,
+///   grad_norms)`; `eval_{kind}` returns `(loss, correct)` at full
+///   depth; `infer_{kind}` returns full-depth logits. Inputs/outputs are
+///   described by the preset's [`ModelSpec`] and validated on every
+///   call.
+/// - **Determinism.** For identical inputs a backend must return
+///   identical outputs, including across concurrent `execute` calls —
+///   the engine's byte-identical-at-any-`--workers` guarantee depends
+///   on it.
+/// - **Thread safety.** `execute` may be called from many worker
+///   threads at once (`Send + Sync`).
+pub trait Backend: Send + Sync {
+    /// Short backend identifier ("xla" | "native").
+    fn name(&self) -> &'static str;
 
-// SAFETY: `client` is only touched inside `compiled()` while holding
-// `compile_lock`; every other shared field is a Mutex or an atomic. See
-// the `Compiled` safety note for why executables may cross threads.
-unsafe impl Send for Runtime {}
-unsafe impl Sync for Runtime {}
+    /// Model presets this backend can serve.
+    fn presets(&self) -> Vec<String>;
 
-impl Runtime {
-    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let serial = std::env::var("DROPPEFT_SERIAL_EXEC")
-            .map(|v| v != "0")
-            .unwrap_or(false);
-        Ok(Runtime {
-            client,
-            manifest,
-            cache: Mutex::new(HashMap::new()),
-            stats: Mutex::new(HashMap::new()),
-            exec_lock: Mutex::new(()),
-            serialize_exec: AtomicBool::new(serial),
-            compile_lock: Mutex::new(()),
-        })
-    }
+    /// Spec (config, layouts, artifact signatures) of one preset.
+    fn model(&self, preset: &str) -> Result<&ModelSpec>;
 
-    pub fn model(&self, preset: &str) -> Result<&ModelSpec> {
-        self.manifest.model(preset)
-    }
-
-    /// Opt into (or out of) globally serialized artifact execution.
-    pub fn set_serialize_exec(&self, on: bool) {
-        self.serialize_exec.store(on, Ordering::Relaxed);
-    }
-
-    pub fn serialize_exec(&self) -> bool {
-        self.serialize_exec.load(Ordering::Relaxed)
-    }
-
-    fn compiled(&self, preset: &str, artifact: &str) -> Result<Arc<Compiled>> {
-        let key = format!("{preset}/{artifact}");
-        if let Some(c) = self.cache.lock().unwrap().get(&key) {
-            return Ok(c.clone());
-        }
-        // serialize compilation; double-check the cache once we hold the
-        // lock so racing callers compile each artifact exactly once
-        let _compiling = self.compile_lock.lock().unwrap();
-        if let Some(c) = self.cache.lock().unwrap().get(&key) {
-            return Ok(c.clone());
-        }
-        let spec = self.manifest.model(preset)?.artifact(artifact)?.clone();
-        let t0 = Instant::now();
-        let path = spec
-            .file
-            .to_str()
-            .context("artifact path is not valid utf-8")?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("XLA compile of {artifact}"))?;
-        let dt = t0.elapsed().as_secs_f64();
-        crate::debug!("compiled {key} in {dt:.2}s");
-        self.stats
-            .lock()
-            .unwrap()
-            .entry(key.clone())
-            .or_default()
-            .compile_secs += dt;
-        let c = Arc::new(Compiled { exe, spec });
-        self.cache.lock().unwrap().insert(key, c.clone());
-        Ok(c)
-    }
-
-    /// Pre-compile an artifact (used by examples to front-load latency).
-    pub fn warm(&self, preset: &str, artifact: &str) -> Result<()> {
-        self.compiled(preset, artifact).map(|_| ())
-    }
-
-    /// Execute an artifact: inputs are validated against the manifest
+    /// Execute an artifact: inputs are validated against the spec
     /// signature; outputs come back as typed host `Value`s.
-    pub fn execute(&self, preset: &str, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>> {
-        let c = self.compiled(preset, artifact)?;
-        anyhow::ensure!(
-            inputs.len() == c.spec.inputs.len(),
-            "{artifact}: got {} inputs, manifest wants {}",
-            inputs.len(),
-            c.spec.inputs.len()
-        );
-        let tm = Instant::now();
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (v, spec) in inputs.iter().zip(&c.spec.inputs) {
-            v.check(spec)
-                .with_context(|| format!("artifact {artifact}"))?;
-            lits.push(v.to_literal()?);
-        }
-        let marshal_in = tm.elapsed().as_secs_f64();
+    fn execute(&self, preset: &str, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>>;
 
-        let t0 = Instant::now();
-        let result = {
-            let _g = self
-                .serialize_exec
-                .load(Ordering::Relaxed)
-                .then(|| self.exec_lock.lock().unwrap());
-            c.exe
-                .execute::<xla::Literal>(&lits)
-                .with_context(|| format!("executing {artifact}"))?
-        };
-        let exec_secs = t0.elapsed().as_secs_f64();
-
-        let tm2 = Instant::now();
-        // lowered with return_tuple=True → single tuple literal
-        let tuple = result[0][0]
-            .to_literal_sync()?
-            .to_tuple()
-            .context("artifact did not return a tuple")?;
-        anyhow::ensure!(
-            tuple.len() == c.spec.outputs.len(),
-            "{artifact}: got {} outputs, manifest says {}",
-            tuple.len(),
-            c.spec.outputs.len()
-        );
-        let outs = tuple
-            .iter()
-            .zip(&c.spec.outputs)
-            .map(|(l, s)| Value::from_literal(l, s))
-            .collect::<Result<Vec<_>>>()?;
-        let marshal_out = tm2.elapsed().as_secs_f64();
-
-        let mut st = self.stats.lock().unwrap();
-        let e = st.entry(format!("{preset}/{artifact}")).or_default();
-        e.calls += 1;
-        e.total_secs += exec_secs;
-        e.marshal_secs += marshal_in + marshal_out;
-        Ok(outs)
+    /// Pre-compile / pre-warm an artifact (front-loads latency where the
+    /// backend compiles lazily; a no-op for backends with nothing to
+    /// warm).
+    fn warm(&self, _preset: &str, _artifact: &str) -> Result<()> {
+        Ok(())
     }
 
-    /// Snapshot of per-artifact execution statistics.
-    pub fn stats(&self) -> Vec<(String, ExecStats)> {
-        let mut v: Vec<_> = self
-            .stats
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|(k, s)| (k.clone(), s.clone()))
-            .collect();
-        // total_cmp is total even over NaN, so a pathological entry (e.g.
-        // zero-call artifacts with poisoned timings) cannot panic the sort
-        v.sort_by(|a, b| b.1.total_secs.total_cmp(&a.1.total_secs));
-        v
-    }
+    /// Opt into (or out of) globally serialized artifact execution
+    /// (debugging escape hatch; meaningful only for backends whose
+    /// concurrency is outside this crate's control).
+    fn set_serialize_exec(&self, _on: bool) {}
 
-    pub fn stats_report(&self) -> String {
+    /// Snapshot of per-artifact execution statistics, sorted by total
+    /// execution time.
+    fn stats(&self) -> Vec<(String, ExecStats)>;
+
+    /// Human-readable statistics table.
+    fn stats_report(&self) -> String {
         let mut t = crate::util::table::Table::new(&[
             "artifact", "calls", "exec total", "exec/call", "marshal", "compile",
         ]);
@@ -232,5 +122,94 @@ impl Runtime {
             ]);
         }
         t.text()
+    }
+}
+
+/// Which execution backend a session should use.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// XLA when compiled artifacts are present, native otherwise.
+    #[default]
+    Auto,
+    /// The AOT HLO / PJRT runtime (requires `make artifacts`).
+    Xla,
+    /// The pure-Rust reference backend (always available).
+    Native,
+}
+
+impl BackendKind {
+    /// Parse a `--backend` value.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "xla" => Ok(BackendKind::Xla),
+            "native" => Ok(BackendKind::Native),
+            other => bail!("unknown backend {other:?} (auto|xla|native)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Xla => "xla",
+            BackendKind::Native => "native",
+        }
+    }
+}
+
+/// True when compiled XLA artifacts exist under `artifacts_dir`.
+pub fn artifacts_present(artifacts_dir: impl AsRef<Path>) -> bool {
+    artifacts_dir.as_ref().join("manifest.json").exists()
+}
+
+/// Instantiate the requested backend. `Auto` resolves to XLA iff the
+/// artifacts directory holds a manifest, so hosts without `make
+/// artifacts` transparently fall back to the native reference backend.
+pub fn create_backend(
+    kind: BackendKind,
+    artifacts_dir: impl AsRef<Path>,
+) -> Result<Arc<dyn Backend>> {
+    let dir = artifacts_dir.as_ref();
+    match kind {
+        BackendKind::Xla => Ok(Arc::new(Runtime::new(dir)?)),
+        BackendKind::Native => Ok(Arc::new(NativeBackend::new())),
+        BackendKind::Auto => {
+            if artifacts_present(dir) {
+                Ok(Arc::new(Runtime::new(dir)?))
+            } else {
+                crate::debug!(
+                    "no compiled artifacts under {dir:?}; using the native backend"
+                );
+                Ok(Arc::new(NativeBackend::new()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert!(BackendKind::parse("tpu").is_err());
+        for k in [BackendKind::Auto, BackendKind::Xla, BackendKind::Native] {
+            assert_eq!(BackendKind::parse(k.as_str()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn auto_without_artifacts_selects_native() {
+        let dir = std::env::temp_dir().join("droppeft_no_artifacts_here");
+        let _ = std::fs::remove_dir_all(&dir);
+        let b = create_backend(BackendKind::Auto, &dir).unwrap();
+        assert_eq!(b.name(), "native");
+        // explicit native always works too
+        assert_eq!(create_backend(BackendKind::Native, &dir).unwrap().name(), "native");
+        // explicit xla must fail loudly without artifacts, never fall back
+        assert!(create_backend(BackendKind::Xla, &dir).is_err());
     }
 }

@@ -1,0 +1,233 @@
+//! XLA backend: loads AOT HLO-text artifacts and executes them on the
+//! PJRT CPU client. This is the only module that touches the `xla`
+//! crate; the rest of the coordinator sees `Value`s and artifact names
+//! through the [`Backend`] trait.
+//!
+//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`, with
+//! HLO **text** as the interchange format (serialized jax≥0.5 protos are
+//! rejected by xla_extension 0.5.1).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest, ModelSpec};
+use super::tensor::Value;
+use super::{Backend, ExecStats};
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+// SAFETY: the PJRT C API itself is thread-safe for execution, and on our
+// side `Compiled` values are shared via `Arc<Compiled>` (the Arc is
+// cloned, never the inner executable) with only `&self` methods invoked
+// from worker threads. Caveat: the `xla` binding's own handle plumbing is
+// not auditable from this repo — if a binding version performs internal
+// non-atomic refcount traffic inside `execute`, concurrent execution is
+// unsound for it; `DROPPEFT_SERIAL_EXEC=1` / `set_serialize_exec(true)`
+// restores the old fully-serialized behavior as the escape hatch.
+unsafe impl Send for Compiled {}
+unsafe impl Sync for Compiled {}
+
+/// PJRT-backed executor with lazy per-artifact compilation and caching.
+///
+/// Concurrency model: `execute` may be called from many threads at once —
+/// the per-artifact `cache`/`stats` maps are mutex-guarded, compilation is
+/// serialized behind `compile_lock`, and execution runs lock-free unless
+/// the opt-in serialization mode is on (`set_serialize_exec`, or the
+/// `DROPPEFT_SERIAL_EXEC` env var) for single-core hosts or debugging.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Compiled>>>,
+    stats: Mutex<HashMap<String, ExecStats>>,
+    /// taken around `execute` only when `serialize_exec` is on
+    exec_lock: Mutex<()>,
+    serialize_exec: AtomicBool,
+    /// lazy compilation stays serialized: PJRT compiles are heavyweight
+    /// and concurrent compiles of one artifact would duplicate work
+    compile_lock: Mutex<()>,
+}
+
+// SAFETY: `client` is only touched inside `compiled()` while holding
+// `compile_lock`; every other shared field is a Mutex or an atomic. See
+// the `Compiled` safety note for why executables may cross threads.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let serial = std::env::var("DROPPEFT_SERIAL_EXEC")
+            .map(|v| v != "0")
+            .unwrap_or(false);
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+            exec_lock: Mutex::new(()),
+            serialize_exec: AtomicBool::new(serial),
+            compile_lock: Mutex::new(()),
+        })
+    }
+
+    pub fn model(&self, preset: &str) -> Result<&ModelSpec> {
+        self.manifest.model(preset)
+    }
+
+    /// Opt into (or out of) globally serialized artifact execution.
+    pub fn set_serialize_exec(&self, on: bool) {
+        self.serialize_exec.store(on, Ordering::Relaxed);
+    }
+
+    pub fn serialize_exec(&self) -> bool {
+        self.serialize_exec.load(Ordering::Relaxed)
+    }
+
+    fn compiled(&self, preset: &str, artifact: &str) -> Result<Arc<Compiled>> {
+        let key = format!("{preset}/{artifact}");
+        if let Some(c) = self.cache.lock().unwrap().get(&key) {
+            return Ok(c.clone());
+        }
+        // serialize compilation; double-check the cache once we hold the
+        // lock so racing callers compile each artifact exactly once
+        let _compiling = self.compile_lock.lock().unwrap();
+        if let Some(c) = self.cache.lock().unwrap().get(&key) {
+            return Ok(c.clone());
+        }
+        let spec = self.manifest.model(preset)?.artifact(artifact)?.clone();
+        let t0 = Instant::now();
+        let path = spec
+            .file
+            .to_str()
+            .context("artifact path is not valid utf-8")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {artifact}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        crate::debug!("compiled {key} in {dt:.2}s");
+        self.stats
+            .lock()
+            .unwrap()
+            .entry(key.clone())
+            .or_default()
+            .compile_secs += dt;
+        let c = Arc::new(Compiled { exe, spec });
+        self.cache.lock().unwrap().insert(key, c.clone());
+        Ok(c)
+    }
+
+    /// Pre-compile an artifact (used by examples to front-load latency).
+    pub fn warm(&self, preset: &str, artifact: &str) -> Result<()> {
+        self.compiled(preset, artifact).map(|_| ())
+    }
+
+    /// Execute an artifact: inputs are validated against the manifest
+    /// signature; outputs come back as typed host `Value`s.
+    pub fn execute(&self, preset: &str, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let c = self.compiled(preset, artifact)?;
+        anyhow::ensure!(
+            inputs.len() == c.spec.inputs.len(),
+            "{artifact}: got {} inputs, manifest wants {}",
+            inputs.len(),
+            c.spec.inputs.len()
+        );
+        let tm = Instant::now();
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (v, spec) in inputs.iter().zip(&c.spec.inputs) {
+            v.check(spec)
+                .with_context(|| format!("artifact {artifact}"))?;
+            lits.push(v.to_literal()?);
+        }
+        let marshal_in = tm.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let result = {
+            let _g = self
+                .serialize_exec
+                .load(Ordering::Relaxed)
+                .then(|| self.exec_lock.lock().unwrap());
+            c.exe
+                .execute::<xla::Literal>(&lits)
+                .with_context(|| format!("executing {artifact}"))?
+        };
+        let exec_secs = t0.elapsed().as_secs_f64();
+
+        let tm2 = Instant::now();
+        // lowered with return_tuple=True → single tuple literal
+        let tuple = result[0][0]
+            .to_literal_sync()?
+            .to_tuple()
+            .context("artifact did not return a tuple")?;
+        anyhow::ensure!(
+            tuple.len() == c.spec.outputs.len(),
+            "{artifact}: got {} outputs, manifest says {}",
+            tuple.len(),
+            c.spec.outputs.len()
+        );
+        let outs = tuple
+            .iter()
+            .zip(&c.spec.outputs)
+            .map(|(l, s)| Value::from_literal(l, s))
+            .collect::<Result<Vec<_>>>()?;
+        let marshal_out = tm2.elapsed().as_secs_f64();
+
+        let mut st = self.stats.lock().unwrap();
+        let e = st.entry(format!("{preset}/{artifact}")).or_default();
+        e.calls += 1;
+        e.total_secs += exec_secs;
+        e.marshal_secs += marshal_in + marshal_out;
+        Ok(outs)
+    }
+
+    /// Snapshot of per-artifact execution statistics.
+    pub fn stats(&self) -> Vec<(String, ExecStats)> {
+        super::snapshot_stats(&self.stats)
+    }
+
+    pub fn stats_report(&self) -> String {
+        Backend::stats_report(self)
+    }
+}
+
+impl Backend for Runtime {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn presets(&self) -> Vec<String> {
+        self.manifest.models.keys().cloned().collect()
+    }
+
+    fn model(&self, preset: &str) -> Result<&ModelSpec> {
+        Runtime::model(self, preset)
+    }
+
+    fn execute(&self, preset: &str, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        Runtime::execute(self, preset, artifact, inputs)
+    }
+
+    fn warm(&self, preset: &str, artifact: &str) -> Result<()> {
+        Runtime::warm(self, preset, artifact)
+    }
+
+    fn set_serialize_exec(&self, on: bool) {
+        Runtime::set_serialize_exec(self, on)
+    }
+
+    fn stats(&self) -> Vec<(String, ExecStats)> {
+        Runtime::stats(self)
+    }
+}

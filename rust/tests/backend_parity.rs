@@ -1,0 +1,180 @@
+//! Backend parity: the native reference backend and the XLA runtime
+//! implement one artifact contract. When compiled artifacts are present
+//! the two backends are run on identical inputs and must agree — exact
+//! output shapes/dtypes, loss and accuracy within floating-point
+//! tolerance (the executors sum in different orders, so bitwise equality
+//! is not expected *across* backends; each backend is bitwise
+//! deterministic against itself). The native determinism test runs
+//! unconditionally.
+
+use droppeft::data::{gen, TaskSpec};
+use droppeft::fed::{Engine, FedConfig};
+use droppeft::methods;
+use droppeft::model::{BaseModel, TrainState};
+use droppeft::runtime::manifest::ModelSpec;
+use droppeft::runtime::tensor::Value;
+
+mod common;
+use common::{assert_identical, native_backend, require_artifacts, xla_backend};
+
+/// Train-step inputs on the smallest preset, deterministic from `seed`.
+fn train_inputs(spec: &ModelSpec, active: &[usize], seed: u64) -> Vec<Value> {
+    let mcfg = &spec.config;
+    let base = BaseModel::init(spec, seed);
+    let state = TrainState::init(spec, "lora", seed).unwrap();
+    let ds = gen::generate(
+        &TaskSpec::by_name("mnli", mcfg.batch),
+        mcfg.seq,
+        mcfg.vocab,
+        seed,
+    );
+    let idx: Vec<usize> = (0..mcfg.batch).collect();
+    let batch = droppeft::data::batch::batch_from_indices(&ds, &idx, mcfg.batch, mcfg.seq);
+    let k = active.len();
+    let (peft, m, v) = state.gather_peft(active);
+    vec![
+        Value::f32(base.gather(active), vec![k, base.p]),
+        Value::f32(peft, vec![k, state.q]),
+        Value::f32(m, vec![k, state.q]),
+        Value::f32(v, vec![k, state.q]),
+        Value::f32(base.globals.clone(), vec![base.globals.len()]),
+        Value::f32(state.head.clone(), vec![state.head.len()]),
+        Value::f32(state.head_m.clone(), vec![state.head_m.len()]),
+        Value::f32(state.head_v.clone(), vec![state.head_v.len()]),
+        batch.tokens,
+        batch.labels,
+        Value::scalar_f32(1.0),
+        Value::scalar_f32(5e-3),
+    ]
+}
+
+#[test]
+fn native_and_xla_presets_describe_the_same_model() {
+    require_artifacts!();
+    let native = native_backend();
+    let xla = xla_backend();
+    let ns = native.model("tiny").unwrap();
+    let xs = xla.model("tiny").unwrap();
+    // both backends must mirror python/compile/packing.py exactly: the
+    // engine gathers/scatters rows by these offsets, so any divergence
+    // here corrupts state silently
+    for (name, a, b) in [
+        ("layer", &ns.layer_layout, &xs.layer_layout),
+        ("lora", &ns.lora_layout, &xs.lora_layout),
+        ("adapter", &ns.adapter_layout, &xs.adapter_layout),
+        ("globals", &ns.globals_layout, &xs.globals_layout),
+        ("head", &ns.head_layout, &xs.head_layout),
+    ] {
+        assert_eq!(a.size, b.size, "{name} pack size");
+        assert_eq!(a.entries.len(), b.entries.len(), "{name} entry count");
+        for (ea, eb) in a.entries.iter().zip(&b.entries) {
+            assert_eq!(ea.name, eb.name, "{name} entry order");
+            assert_eq!(ea.shape, eb.shape, "{name}/{} shape", ea.name);
+            assert_eq!(ea.offset, eb.offset, "{name}/{} offset", ea.name);
+        }
+    }
+    assert_eq!(ns.config.n_layers, xs.config.n_layers);
+    assert_eq!(ns.config.batch, xs.config.batch);
+    assert_eq!(ns.config.seq, xs.config.seq);
+    assert_eq!(ns.config.vocab, xs.config.vocab);
+}
+
+#[test]
+fn train_step_agrees_across_backends_within_tolerance() {
+    require_artifacts!();
+    let native = native_backend();
+    let xla = xla_backend();
+    let spec = native.model("tiny").unwrap().clone();
+    let active = vec![0, 2];
+    let inputs = train_inputs(&spec, &active, 17);
+    let art = format!("train_lora_k{}", active.len());
+    let n_out = native.execute("tiny", &art, &inputs).unwrap();
+    let x_out = xla.execute("tiny", &art, &inputs).unwrap();
+    assert_eq!(n_out.len(), x_out.len(), "output arity");
+    for (i, (n, x)) in n_out.iter().zip(&x_out).enumerate() {
+        assert_eq!(n.shape(), x.shape(), "output {i} shape");
+        assert_eq!(n.dtype(), x.dtype(), "output {i} dtype");
+    }
+    let (n_loss, x_loss) = (n_out[6].scalar().unwrap(), x_out[6].scalar().unwrap());
+    assert!(
+        (n_loss - x_loss).abs() <= 5e-3 + 1e-3 * x_loss.abs(),
+        "loss diverged: native {n_loss} vs xla {x_loss}"
+    );
+    let (n_corr, x_corr) = (n_out[7].scalar().unwrap(), x_out[7].scalar().unwrap());
+    assert!(
+        (n_corr - x_corr).abs() <= 1.0,
+        "batch correct-count diverged: native {n_corr} vs xla {x_corr}"
+    );
+    let n_gn = n_out[8].as_f32().unwrap();
+    let x_gn = x_out[8].as_f32().unwrap();
+    for (i, (a, b)) in n_gn.iter().zip(x_gn).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 + 0.1 * b.abs(),
+            "grad norm {i} diverged: native {a} vs xla {b}"
+        );
+    }
+}
+
+#[test]
+fn eval_step_agrees_across_backends_within_tolerance() {
+    require_artifacts!();
+    let native = native_backend();
+    let xla = xla_backend();
+    let spec = native.model("tiny").unwrap().clone();
+    let mcfg = spec.config.clone();
+    let base = BaseModel::init(&spec, 23);
+    let state = TrainState::init(&spec, "lora", 23).unwrap();
+    let ds = gen::generate(
+        &TaskSpec::by_name("qqp", mcfg.batch),
+        mcfg.seq,
+        mcfg.vocab,
+        23,
+    );
+    let idx: Vec<usize> = (0..mcfg.batch).collect();
+    let batch = droppeft::data::batch::batch_from_indices(&ds, &idx, mcfg.batch, mcfg.seq);
+    let inputs = vec![
+        Value::f32(base.layers.clone(), vec![base.n_layers, base.p]),
+        Value::f32(state.peft.clone(), vec![state.n_layers, state.q]),
+        Value::f32(base.globals.clone(), vec![base.globals.len()]),
+        Value::f32(state.head.clone(), vec![state.head.len()]),
+        batch.tokens,
+        batch.labels,
+    ];
+    let n_out = native.execute("tiny", "eval_lora", &inputs).unwrap();
+    let x_out = xla.execute("tiny", "eval_lora", &inputs).unwrap();
+    let (n_loss, x_loss) = (n_out[0].scalar().unwrap(), x_out[0].scalar().unwrap());
+    assert!(
+        (n_loss - x_loss).abs() <= 5e-3 + 1e-3 * x_loss.abs(),
+        "eval loss diverged: native {n_loss} vs xla {x_loss}"
+    );
+    let (n_corr, x_corr) = (n_out[1].scalar().unwrap(), x_out[1].scalar().unwrap());
+    assert!(
+        (n_corr - x_corr).abs() <= 1.0,
+        "eval correct-count diverged: native {n_corr} vs xla {x_corr}"
+    );
+}
+
+/// Native-backend determinism at the session level: same seed must be
+/// byte-identical at `--workers 1` and the host default. Unconditional —
+/// this is the backbone of the artifact-free tier-1 guarantee.
+#[test]
+fn native_sessions_are_byte_identical_at_any_worker_count() {
+    let run = |workers: usize| {
+        let mut cfg = FedConfig::quick("tiny", "mnli");
+        cfg.rounds = 3;
+        cfg.n_devices = 8;
+        cfg.devices_per_round = 3;
+        cfg.local_batches = 2;
+        cfg.samples = 400;
+        cfg.eval_every = 2;
+        cfg.eval_batches = 2;
+        cfg.lr = 5e-3;
+        cfg.workers = workers;
+        let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
+        let mut engine = Engine::new(cfg, native_backend(), method).unwrap();
+        engine.run().unwrap()
+    };
+    let serial = run(1);
+    let default = run(FedConfig::quick("tiny", "mnli").workers.max(2));
+    assert_identical(&serial, &default);
+}

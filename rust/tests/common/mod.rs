@@ -1,4 +1,13 @@
-//! Shared helpers for artifact-dependent integration tests.
+//! Shared helpers for the end-to-end test suites.
+//!
+//! Every e2e suite runs unconditionally on the pure-Rust
+//! [`native_backend`] (zero compiled artifacts needed) and additionally
+//! on the XLA/PJRT runtime when `artifacts/manifest.json` exists
+//! ([`xla_backend`] + the `require_artifacts!` gate).
+
+use std::sync::Arc;
+
+use droppeft::runtime::{Backend, NativeBackend, Runtime};
 
 /// True when the compiled XLA artifacts are present.
 pub fn artifacts_present() -> bool {
@@ -7,11 +16,25 @@ pub fn artifacts_present() -> bool {
         .exists()
 }
 
+/// The always-available pure-Rust reference backend.
+#[allow(dead_code)]
+pub fn native_backend() -> Arc<dyn Backend> {
+    Arc::new(NativeBackend::new())
+}
+
+/// The XLA/PJRT runtime over the repo's compiled artifacts. Callers must
+/// gate on [`artifacts_present`] (via `require_artifacts!`) first.
+#[allow(dead_code)]
+pub fn xla_backend() -> Arc<dyn Backend> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Arc::new(Runtime::new(dir).expect("run `make artifacts` before cargo test"))
+}
+
 /// Bit-level comparison of two sessions' full `RoundRecord` streams
-/// (loss, traffic, accuracy, clock, energy, memory, arm labels).
-/// `host_secs` is deliberately not compared: host wall-clock differs
-/// between runs by construction. Shared by the parallel-determinism and
-/// resume-determinism suites (not every test crate uses it).
+/// (loss, training/eval accuracy, traffic, clock, energy, memory, arm
+/// labels). `host_secs` is deliberately not compared: host wall-clock
+/// differs between runs by construction. Shared by the determinism
+/// suites (not every test crate uses it).
 #[allow(dead_code)]
 pub fn assert_identical(
     a: &droppeft::metrics::SessionResult,
@@ -22,6 +45,11 @@ pub fn assert_identical(
         let r = ra.round;
         assert_eq!(ra.round, rb.round);
         assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits(), "loss @{r}");
+        assert_eq!(
+            ra.train_acc.to_bits(),
+            rb.train_acc.to_bits(),
+            "train acc @{r}"
+        );
         assert_eq!(ra.sim_secs.to_bits(), rb.sim_secs.to_bits(), "sim @{r}");
         assert_eq!(ra.clock_secs.to_bits(), rb.clock_secs.to_bits(), "clock @{r}");
         assert_eq!(
@@ -55,8 +83,8 @@ pub fn assert_identical(
 }
 
 /// Skip (early-return) the calling test with a notice when the compiled
-/// XLA artifacts are absent — hosts without `make artifacts` still get a
-/// passing tier-1 run.
+/// XLA artifacts are absent — used by the artifact-gated XLA variants of
+/// the e2e suites; the native variants never skip.
 macro_rules! require_artifacts {
     () => {
         if !$crate::common::artifacts_present() {
@@ -65,4 +93,5 @@ macro_rules! require_artifacts {
         }
     };
 }
+#[allow(unused_imports)] // not every test crate has artifact-gated variants
 pub(crate) use require_artifacts;

@@ -5,8 +5,9 @@
 //! count), so `--workers 1` and `--workers 4` must write the same bytes
 //! — and attaching sinks must not perturb the session results at all.
 //!
-//! Requires `make artifacts` (the tiny preset); skips with a notice when
-//! the compiled HLO artifacts are absent.
+//! Runs unconditionally on the native backend (no artifacts needed);
+//! the XLA variant skips with a notice when compiled HLO artifacts are
+//! absent.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -14,15 +15,10 @@ use std::sync::Arc;
 use droppeft::fed::{JsonlWriter, SessionSpec};
 use droppeft::methods::{MethodSpec, PeftKind};
 use droppeft::metrics::SessionResult;
-use droppeft::runtime::Runtime;
+use droppeft::runtime::Backend;
 
 mod common;
-use common::{assert_identical, require_artifacts};
-
-fn runtime() -> Arc<Runtime> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Arc::new(Runtime::new(dir).expect("run `make artifacts` before cargo test"))
-}
+use common::{assert_identical, native_backend, require_artifacts, xla_backend};
 
 fn spec(workers: usize) -> SessionSpec {
     SessionSpec::builder()
@@ -43,23 +39,21 @@ fn spec(workers: usize) -> SessionSpec {
         .unwrap()
 }
 
-fn run_logged(workers: usize, log_path: &Path) -> SessionResult {
-    let mut engine = spec(workers).build_engine(runtime()).unwrap();
+fn run_logged(rt: Arc<dyn Backend>, workers: usize, log_path: &Path) -> SessionResult {
+    let mut engine = spec(workers).build_engine(rt).unwrap();
     engine.add_sink(Box::new(JsonlWriter::create(log_path).unwrap()));
     engine.run().unwrap()
 }
 
-#[test]
-fn event_log_is_byte_identical_across_worker_counts() {
-    require_artifacts!();
-    let dir = std::env::temp_dir().join("droppeft_event_determinism");
+fn check_byte_identical_log(backend: fn() -> Arc<dyn Backend>, tag: &str) {
+    let dir = std::env::temp_dir().join(format!("droppeft_event_determinism_{tag}"));
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
 
     let p1 = dir.join("workers1.jsonl");
     let p4 = dir.join("workers4.jsonl");
-    let r1 = run_logged(1, &p1);
-    let r4 = run_logged(4, &p4);
+    let r1 = run_logged(backend(), 1, &p1);
+    let r4 = run_logged(backend(), 4, &p4);
 
     // sinks observe, never mutate: results stay bit-identical too
     assert_identical(&r1, &r4);
@@ -77,6 +71,11 @@ fn event_log_is_byte_identical_across_worker_counts() {
     let lines: Vec<&str> = text.lines().collect();
     assert!(lines[0].contains("session_started"));
     assert!(lines.last().unwrap().contains("session_ended"));
+    // per-client training accuracy is part of the deterministic stream
+    assert!(
+        lines.iter().any(|l| l.contains("train_acc")),
+        "client_done events must carry train_acc"
+    );
     for l in &lines {
         droppeft::util::json::Json::parse(l).unwrap();
     }
@@ -84,16 +83,26 @@ fn event_log_is_byte_identical_across_worker_counts() {
 }
 
 #[test]
-fn attaching_sinks_does_not_change_results() {
+fn native_event_log_is_byte_identical_across_worker_counts() {
+    check_byte_identical_log(native_backend, "native");
+}
+
+#[test]
+fn xla_event_log_is_byte_identical_across_worker_counts() {
     require_artifacts!();
+    check_byte_identical_log(xla_backend, "xla");
+}
+
+#[test]
+fn attaching_sinks_does_not_change_results() {
     let dir = std::env::temp_dir().join("droppeft_event_observe_only");
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
 
     // bare engine (collector only) vs fully-instrumented engine
-    let mut bare = spec(2).build_engine(runtime()).unwrap();
+    let mut bare = spec(2).build_engine(native_backend()).unwrap();
     let r_bare = bare.run().unwrap();
-    let r_logged = run_logged(2, &dir.join("events.jsonl"));
+    let r_logged = run_logged(native_backend(), 2, &dir.join("events.jsonl"));
     assert_identical(&r_bare, &r_logged);
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,7 +1,9 @@
-//! Integration tests over the full L3 stack: PJRT runtime + artifacts +
-//! federated engine. Requires `make artifacts` (the tiny preset); on hosts
-//! without compiled HLO artifacts every test here skips with a notice
-//! instead of failing, so tier-1 `cargo test -q` stays green.
+//! Integration tests over the full L3 stack: execution backend +
+//! federated engine. Every test runs unconditionally on the pure-Rust
+//! native backend (zero compiled artifacts needed) and additionally on
+//! the XLA/PJRT runtime when `make artifacts` has been run (the tiny
+//! preset) — so tier-1 `cargo test -q` exercises the whole engine
+//! end-to-end on any host.
 
 use std::sync::Arc;
 
@@ -10,19 +12,19 @@ use droppeft::fed::{Engine, FedConfig};
 use droppeft::methods;
 use droppeft::model::{BaseModel, TrainState};
 use droppeft::runtime::tensor::Value;
-use droppeft::runtime::Runtime;
+use droppeft::runtime::{Backend, Runtime};
 
 mod common;
-use common::require_artifacts;
+use common::native_backend;
 
-// Each test thread builds its own Runtime (historically the xla client
-// handles were not shareable; per-thread clients also keep the compile
-// caches isolated per test thread).
+// Each test thread builds its own XLA Runtime (historically the xla
+// client handles were not shareable; per-thread clients also keep the
+// compile caches isolated per test thread).
 thread_local! {
     static RT: std::cell::OnceCell<Arc<Runtime>> = const { std::cell::OnceCell::new() };
 }
 
-fn runtime() -> Arc<Runtime> {
+fn xla_runtime() -> Arc<Runtime> {
     RT.with(|c| {
         c.get_or_init(|| {
             let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -30,6 +32,17 @@ fn runtime() -> Arc<Runtime> {
         })
         .clone()
     })
+}
+
+/// The native backend always; the XLA runtime too when artifacts exist.
+fn backends() -> Vec<Arc<dyn Backend>> {
+    let mut v: Vec<Arc<dyn Backend>> = vec![native_backend()];
+    if common::artifacts_present() {
+        v.push(xla_runtime());
+    } else {
+        eprintln!("XLA artifacts not built: running on the native backend only");
+    }
+    v
 }
 
 fn quick_cfg() -> FedConfig {
@@ -45,9 +58,9 @@ fn quick_cfg() -> FedConfig {
     cfg
 }
 
-/// Build train-step inputs for a direct runtime call.
+/// Build train-step inputs for a direct backend call.
 fn train_inputs(
-    rt: &Runtime,
+    rt: &dyn Backend,
     base: &BaseModel,
     state: &TrainState,
     active: &[usize],
@@ -82,217 +95,231 @@ fn train_inputs(
 }
 
 #[test]
-fn runtime_executes_train_artifact_with_valid_outputs() {
-    require_artifacts!();
-    let rt = runtime();
-    let spec = rt.model("tiny").unwrap().clone();
-    let base = BaseModel::init(&spec, 3);
-    let state = TrainState::init(&spec, "lora", 3).unwrap();
-    let active = vec![0, 2];
-    let inputs = train_inputs(&rt, &base, &state, &active, 1.0);
-    let outs = rt.execute("tiny", "train_lora_k2", &inputs).unwrap();
-    assert_eq!(outs.len(), 9);
-    let loss = outs[6].scalar().unwrap();
-    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
-    let gn = outs[8].as_f32().unwrap();
-    assert_eq!(gn.len(), 2);
-    // updated peft differs from input (something trained)
-    assert_ne!(outs[0].as_f32().unwrap(), inputs[1].as_f32().unwrap());
+fn backend_executes_train_artifact_with_valid_outputs() {
+    for rt in backends() {
+        let spec = rt.model("tiny").unwrap().clone();
+        let base = BaseModel::init(&spec, 3);
+        let state = TrainState::init(&spec, "lora", 3).unwrap();
+        let active = vec![0, 2];
+        let inputs = train_inputs(&*rt, &base, &state, &active, 1.0);
+        let outs = rt.execute("tiny", "train_lora_k2", &inputs).unwrap();
+        assert_eq!(outs.len(), 9, "{}", rt.name());
+        let loss = outs[6].scalar().unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "{}: loss {loss}", rt.name());
+        let gn = outs[8].as_f32().unwrap();
+        assert_eq!(gn.len(), 2, "{}", rt.name());
+        // updated peft differs from input (something trained)
+        assert_ne!(
+            outs[0].as_f32().unwrap(),
+            inputs[1].as_f32().unwrap(),
+            "{}",
+            rt.name()
+        );
+    }
 }
 
 #[test]
-fn runtime_rejects_bad_shapes_and_unknown_artifacts() {
-    require_artifacts!();
-    let rt = runtime();
-    let spec = rt.model("tiny").unwrap().clone();
-    let base = BaseModel::init(&spec, 3);
-    let state = TrainState::init(&spec, "lora", 3).unwrap();
-    let mut inputs = train_inputs(&rt, &base, &state, &[0, 2], 1.0);
-    // wrong K for this artifact
-    assert!(rt.execute("tiny", "train_lora_k3", &inputs).is_err());
-    // wrong dtype
-    inputs[10] = Value::scalar_i32(1);
-    assert!(rt.execute("tiny", "train_lora_k2", &inputs).is_err());
-    // unknown artifact / preset
-    assert!(rt.execute("tiny", "nope", &[]).is_err());
-    assert!(rt.execute("nope", "train_lora_k2", &[]).is_err());
+fn backend_rejects_bad_shapes_and_unknown_artifacts() {
+    for rt in backends() {
+        let spec = rt.model("tiny").unwrap().clone();
+        let base = BaseModel::init(&spec, 3);
+        let state = TrainState::init(&spec, "lora", 3).unwrap();
+        let mut inputs = train_inputs(&*rt, &base, &state, &[0, 2], 1.0);
+        // wrong K for this artifact
+        assert!(rt.execute("tiny", "train_lora_k3", &inputs).is_err());
+        // wrong dtype
+        inputs[10] = Value::scalar_i32(1);
+        assert!(rt.execute("tiny", "train_lora_k2", &inputs).is_err());
+        // unknown artifact / preset
+        assert!(rt.execute("tiny", "nope", &[]).is_err());
+        assert!(rt.execute("nope", "train_lora_k2", &[]).is_err());
+    }
 }
 
 #[test]
 fn repeated_steps_on_one_batch_overfit() {
-    require_artifacts!();
-    let rt = runtime();
-    let spec = rt.model("tiny").unwrap().clone();
-    let base = BaseModel::init(&spec, 5);
-    let mut state = TrainState::init(&spec, "lora", 5).unwrap();
-    let active: Vec<usize> = (0..spec.config.n_layers).collect();
-    let mut losses = Vec::new();
-    for step in 1..=10 {
-        let inputs = train_inputs(&rt, &base, &state, &active, step as f32);
-        let outs = rt
-            .execute("tiny", &format!("train_lora_k{}", active.len()), &inputs)
-            .unwrap();
-        state.scatter_peft(
-            &active,
-            outs[0].as_f32().unwrap(),
-            outs[1].as_f32().unwrap(),
-            outs[2].as_f32().unwrap(),
+    for rt in backends() {
+        let spec = rt.model("tiny").unwrap().clone();
+        let base = BaseModel::init(&spec, 5);
+        let mut state = TrainState::init(&spec, "lora", 5).unwrap();
+        let active: Vec<usize> = (0..spec.config.n_layers).collect();
+        let mut losses = Vec::new();
+        for step in 1..=10 {
+            let inputs = train_inputs(&*rt, &base, &state, &active, step as f32);
+            let outs = rt
+                .execute("tiny", &format!("train_lora_k{}", active.len()), &inputs)
+                .unwrap();
+            state.scatter_peft(
+                &active,
+                outs[0].as_f32().unwrap(),
+                outs[1].as_f32().unwrap(),
+                outs[2].as_f32().unwrap(),
+            );
+            state.head = outs[3].as_f32().unwrap().to_vec();
+            state.head_m = outs[4].as_f32().unwrap().to_vec();
+            state.head_v = outs[5].as_f32().unwrap().to_vec();
+            losses.push(outs[6].scalar().unwrap());
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] - 0.05),
+            "{}: no overfitting: {losses:?}",
+            rt.name()
         );
-        state.head = outs[3].as_f32().unwrap().to_vec();
-        state.head_m = outs[4].as_f32().unwrap().to_vec();
-        state.head_v = outs[5].as_f32().unwrap().to_vec();
-        losses.push(outs[6].scalar().unwrap());
     }
-    assert!(
-        losses.last().unwrap() < &(losses[0] - 0.05),
-        "no overfitting: {losses:?}"
-    );
 }
 
 #[test]
 fn execution_is_deterministic() {
-    require_artifacts!();
-    let rt = runtime();
-    let spec = rt.model("tiny").unwrap().clone();
-    let base = BaseModel::init(&spec, 7);
-    let state = TrainState::init(&spec, "lora", 7).unwrap();
-    let inputs = train_inputs(&rt, &base, &state, &[1, 3], 1.0);
-    let a = rt.execute("tiny", "train_lora_k2", &inputs).unwrap();
-    let b = rt.execute("tiny", "train_lora_k2", &inputs).unwrap();
-    assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
-    assert_eq!(a[6].scalar().unwrap(), b[6].scalar().unwrap());
+    for rt in backends() {
+        let spec = rt.model("tiny").unwrap().clone();
+        let base = BaseModel::init(&spec, 7);
+        let state = TrainState::init(&spec, "lora", 7).unwrap();
+        let inputs = train_inputs(&*rt, &base, &state, &[1, 3], 1.0);
+        let a = rt.execute("tiny", "train_lora_k2", &inputs).unwrap();
+        let b = rt.execute("tiny", "train_lora_k2", &inputs).unwrap();
+        assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+        assert_eq!(a[6].scalar().unwrap(), b[6].scalar().unwrap());
+    }
 }
 
 #[test]
 fn engine_session_droppeft_produces_wellformed_records() {
-    require_artifacts!();
-    let cfg = quick_cfg();
-    let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
-    let mut engine = Engine::new(cfg, runtime(), method).unwrap();
-    let r = engine.run().unwrap();
-    assert_eq!(r.records.len(), 4);
-    let mut prev_clock = 0.0;
-    for rec in &r.records {
-        assert!(rec.train_loss.is_finite() && rec.train_loss > 0.0);
-        assert!(rec.clock_secs > prev_clock);
-        prev_clock = rec.clock_secs;
-        assert!((0.0..=1.0).contains(&rec.active_frac));
-        assert!(rec.traffic_bytes > 0);
-        if let Some(a) = rec.global_acc {
-            assert!((0.0..=1.0).contains(&a));
+    for rt in backends() {
+        let cfg = quick_cfg();
+        let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
+        let mut engine = Engine::new(cfg, rt.clone(), method).unwrap();
+        let r = engine.run().unwrap();
+        assert_eq!(r.records.len(), 4);
+        let mut prev_clock = 0.0;
+        for rec in &r.records {
+            assert!(rec.train_loss.is_finite() && rec.train_loss > 0.0);
+            assert!((0.0..=1.0).contains(&rec.train_acc), "{}", rt.name());
+            assert!(rec.clock_secs > prev_clock);
+            prev_clock = rec.clock_secs;
+            assert!((0.0..=1.0).contains(&rec.active_frac));
+            assert!(rec.traffic_bytes > 0);
+            if let Some(a) = rec.global_acc {
+                assert!((0.0..=1.0).contains(&a));
+            }
         }
+        // eval happened on schedule (rounds 1 and 3)
+        assert!(r.records[1].global_acc.is_some());
+        assert!(r.records[3].global_acc.is_some());
+        assert!(r.records[0].global_acc.is_none());
     }
-    // eval happened on schedule (rounds 1 and 3)
-    assert!(r.records[1].global_acc.is_some());
-    assert!(r.records[3].global_acc.is_some());
-    assert!(r.records[0].global_acc.is_none());
 }
 
 #[test]
 fn engine_runs_every_method() {
-    require_artifacts!();
-    for name in [
-        "fedlora",
-        "fedadapter",
-        "fedhetlora",
-        "fedadaopt",
-        "droppeft-adapter",
-        "droppeft-b1",
-        "droppeft-b2",
-        "droppeft-b3",
-    ] {
-        let mut cfg = quick_cfg();
-        cfg.rounds = 2;
-        cfg.eval_every = 2;
-        let method = methods::by_name(name, cfg.seed, cfg.rounds).unwrap();
-        let mut engine = Engine::new(cfg, runtime(), method).unwrap();
-        let r = engine.run().unwrap_or_else(|e| panic!("{name}: {e:?}"));
-        assert_eq!(r.records.len(), 2, "{name}");
-        assert!(r.records[1].global_acc.is_some(), "{name}");
+    for rt in backends() {
+        for name in [
+            "fedlora",
+            "fedadapter",
+            "fedhetlora",
+            "fedadaopt",
+            "droppeft-adapter",
+            "droppeft-b1",
+            "droppeft-b2",
+            "droppeft-b3",
+        ] {
+            let mut cfg = quick_cfg();
+            cfg.rounds = 2;
+            cfg.eval_every = 2;
+            let method = methods::by_name(name, cfg.seed, cfg.rounds).unwrap();
+            let mut engine = Engine::new(cfg, rt.clone(), method).unwrap();
+            let r = engine
+                .run()
+                .unwrap_or_else(|e| panic!("{}/{name}: {e:?}", rt.name()));
+            assert_eq!(r.records.len(), 2, "{}/{name}", rt.name());
+            assert!(r.records[1].global_acc.is_some(), "{}/{name}", rt.name());
+        }
     }
 }
 
 #[test]
 fn engine_sessions_are_reproducible() {
-    require_artifacts!();
-    let mk = || {
-        let cfg = quick_cfg();
-        let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
-        let mut engine = Engine::new(cfg, runtime(), method).unwrap();
-        engine.run().unwrap()
-    };
-    let a = mk();
-    let b = mk();
-    for (ra, rb) in a.records.iter().zip(&b.records) {
-        assert_eq!(ra.train_loss, rb.train_loss);
-        assert_eq!(ra.global_acc, rb.global_acc);
-        assert_eq!(ra.clock_secs, rb.clock_secs);
-        assert_eq!(ra.traffic_bytes, rb.traffic_bytes);
+    for rt in backends() {
+        let mk = || {
+            let cfg = quick_cfg();
+            let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
+            let mut engine = Engine::new(cfg, rt.clone(), method).unwrap();
+            engine.run().unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.train_loss, rb.train_loss);
+            assert_eq!(ra.train_acc, rb.train_acc);
+            assert_eq!(ra.global_acc, rb.global_acc);
+            assert_eq!(ra.clock_secs, rb.clock_secs);
+            assert_eq!(ra.traffic_bytes, rb.traffic_bytes);
+        }
     }
 }
 
 #[test]
 fn stld_reduces_simulated_round_time() {
-    require_artifacts!();
-    // fixed dropout 0.6 must produce cheaper rounds than no dropout
-    let run = |method_name: &str| {
-        let mut cfg = quick_cfg();
-        cfg.rounds = 3;
-        cfg.cost_model = Some("roberta-large".into());
-        let method = methods::by_name(method_name, cfg.seed, cfg.rounds).unwrap();
-        let mut engine = Engine::new(cfg, runtime(), method).unwrap();
-        engine.run().unwrap()
-    };
-    let plain = run("fedlora");
-    let dropped = run("droppeft-b2"); // fixed rate 0.5, PTLS on
-    assert!(
-        dropped.total_sim_secs() < plain.total_sim_secs() * 0.8,
-        "dropout {:.1}s vs plain {:.1}s",
-        dropped.total_sim_secs(),
-        plain.total_sim_secs()
-    );
-    // and less traffic (PTLS shares half the layers)
-    assert!(dropped.total_traffic_bytes() < plain.total_traffic_bytes());
+    for rt in backends() {
+        // fixed dropout 0.6 must produce cheaper rounds than no dropout
+        let run = |method_name: &str| {
+            let mut cfg = quick_cfg();
+            cfg.rounds = 3;
+            cfg.cost_model = Some("roberta-large".into());
+            let method = methods::by_name(method_name, cfg.seed, cfg.rounds).unwrap();
+            let mut engine = Engine::new(cfg, rt.clone(), method).unwrap();
+            engine.run().unwrap()
+        };
+        let plain = run("fedlora");
+        let dropped = run("droppeft-b2"); // fixed rate 0.5, PTLS on
+        assert!(
+            dropped.total_sim_secs() < plain.total_sim_secs() * 0.8,
+            "{}: dropout {:.1}s vs plain {:.1}s",
+            rt.name(),
+            dropped.total_sim_secs(),
+            plain.total_sim_secs()
+        );
+        // and less traffic (PTLS shares half the layers)
+        assert!(dropped.total_traffic_bytes() < plain.total_traffic_bytes());
+    }
 }
 
 #[test]
 fn checkpoint_roundtrip_through_engine_state() {
-    require_artifacts!();
-    let cfg = quick_cfg();
-    let method = methods::by_name("droppeft-lora", cfg.seed, 2).unwrap();
-    let mut engine = Engine::new(cfg, runtime(), method).unwrap();
-    engine.run_round(0).unwrap();
-    let dir = std::env::temp_dir().join("droppeft_it_ckpt");
-    std::fs::create_dir_all(&dir).unwrap();
-    let path = dir.join("global.ckpt");
-    droppeft::model::ckpt::save(engine.global_state(), &path).unwrap();
-    let loaded = droppeft::model::ckpt::load(&path).unwrap();
-    assert_eq!(&loaded, engine.global_state());
+    for rt in backends() {
+        let cfg = quick_cfg();
+        let method = methods::by_name("droppeft-lora", cfg.seed, 2).unwrap();
+        let mut engine = Engine::new(cfg, rt.clone(), method).unwrap();
+        engine.run_round(0).unwrap();
+        let dir = std::env::temp_dir().join(format!("droppeft_it_ckpt_{}", rt.name()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("global.ckpt");
+        droppeft::model::ckpt::save(engine.global_state(), &path).unwrap();
+        let loaded = droppeft::model::ckpt::load(&path).unwrap();
+        assert_eq!(&loaded, engine.global_state());
+    }
 }
 
 #[test]
 fn hetlora_masks_slow_device_ranks() {
-    require_artifacts!();
-    let rt = runtime();
-    let spec = rt.model("tiny").unwrap().clone();
-    let mut state = TrainState::init(&spec, "lora", 11).unwrap();
-    // fill with nonzero
-    for x in state.peft.iter_mut() {
-        *x = 1.0;
-    }
-    droppeft::methods::mask_rank(&mut state, &spec, 1);
-    let layout = spec.peft_layout("lora").unwrap();
-    let q = layout.size;
-    let (off, _) = layout.slice("q_a").unwrap();
-    let r = spec.config.lora_rank;
-    // column 0 kept, columns >= 1 zeroed for every row of q_a
-    let qa = &state.peft[off..off + spec.config.d_model * r];
-    for (i, &v) in qa.iter().enumerate() {
-        if i % r == 0 {
-            assert_eq!(v, 1.0);
-        } else {
-            assert_eq!(v, 0.0);
+    for rt in backends() {
+        let spec = rt.model("tiny").unwrap().clone();
+        let mut state = TrainState::init(&spec, "lora", 11).unwrap();
+        // fill with nonzero
+        for x in state.peft.iter_mut() {
+            *x = 1.0;
+        }
+        droppeft::methods::mask_rank(&mut state, &spec, 1);
+        let layout = spec.peft_layout("lora").unwrap();
+        let (off, _) = layout.slice("q_a").unwrap();
+        let r = spec.config.lora_rank;
+        // column 0 kept, columns >= 1 zeroed for every row of q_a
+        let qa = &state.peft[off..off + spec.config.d_model * r];
+        for (i, &v) in qa.iter().enumerate() {
+            if i % r == 0 {
+                assert_eq!(v, 1.0);
+            } else {
+                assert_eq!(v, 0.0);
+            }
         }
     }
-    let _ = q;
 }

@@ -4,22 +4,21 @@
 //! order and every stochastic draw happens during planning, so
 //! `--workers 1` and `--workers 4` must agree bit-for-bit.
 //!
-//! Requires `make artifacts` (the tiny preset); skips with a notice when
-//! the compiled HLO artifacts are absent.
+//! Runs unconditionally on the native backend (no artifacts needed);
+//! the XLA variants skip with a notice when compiled HLO artifacts are
+//! absent.
 
 use std::sync::Arc;
 
 use droppeft::fed::{Engine, FedConfig};
 use droppeft::methods;
 use droppeft::metrics::SessionResult;
-use droppeft::runtime::Runtime;
+use droppeft::runtime::Backend;
 
 mod common;
-use common::{assert_identical, require_artifacts};
+use common::{assert_identical, native_backend, require_artifacts, xla_backend};
 
-fn run_with_workers(method: &str, workers: usize) -> SessionResult {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let runtime = Arc::new(Runtime::new(dir).expect("run `make artifacts` before cargo test"));
+fn run_with_workers(backend: Arc<dyn Backend>, method: &str, workers: usize) -> SessionResult {
     let mut cfg = FedConfig::quick("tiny", "mnli");
     cfg.rounds = 4;
     cfg.n_devices = 10;
@@ -32,24 +31,36 @@ fn run_with_workers(method: &str, workers: usize) -> SessionResult {
     cfg.eval_personalized = true;
     cfg.workers = workers;
     let method = methods::by_name(method, cfg.seed, cfg.rounds).unwrap();
-    let mut engine = Engine::new(cfg, runtime, method).unwrap();
+    let mut engine = Engine::new(cfg, backend, method).unwrap();
     engine.run().unwrap()
 }
 
-#[test]
-fn droppeft_workers_1_and_4_produce_identical_records() {
-    require_artifacts!();
-    let serial = run_with_workers("droppeft-lora", 1);
-    let parallel = run_with_workers("droppeft-lora", 4);
+fn check(backend: fn() -> Arc<dyn Backend>, method: &str) {
+    let serial = run_with_workers(backend(), method, 1);
+    let parallel = run_with_workers(backend(), method, 4);
     assert_identical(&serial, &parallel);
 }
 
 #[test]
-fn fedadaopt_workers_1_and_4_produce_identical_records() {
+fn native_droppeft_workers_1_and_4_produce_identical_records() {
+    check(native_backend, "droppeft-lora");
+}
+
+#[test]
+fn native_fedadaopt_workers_1_and_4_produce_identical_records() {
     // a non-personalized method with frozen-layer resets exercises a
     // different client-task path than DropPEFT
+    check(native_backend, "fedadaopt");
+}
+
+#[test]
+fn xla_droppeft_workers_1_and_4_produce_identical_records() {
     require_artifacts!();
-    let serial = run_with_workers("fedadaopt", 1);
-    let parallel = run_with_workers("fedadaopt", 4);
-    assert_identical(&serial, &parallel);
+    check(xla_backend, "droppeft-lora");
+}
+
+#[test]
+fn xla_fedadaopt_workers_1_and_4_produce_identical_records() {
+    require_artifacts!();
+    check(xla_backend, "fedadaopt");
 }

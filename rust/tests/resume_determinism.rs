@@ -1,31 +1,27 @@
 //! Kill-and-resume determinism: a session snapshotted at round k and
 //! resumed must produce byte-identical `RoundRecord`s and a
 //! byte-identical final global model to a session that never stopped —
-//! at any worker count. This is the `DPEFTSN2` subsystem's headline
-//! guarantee: every piece of mutable session state (bandit state
-//! machine, RNG streams, device personalization, simulated clock,
+//! at any worker count. This is the session-snapshot subsystem's
+//! headline guarantee: every piece of mutable session state (bandit
+//! state machine, RNG streams, device personalization, simulated clock,
 //! reward baseline, round history) round-trips through the snapshot.
 //!
-//! Requires `make artifacts` (the tiny preset); skips with a notice when
-//! the compiled HLO artifacts are absent.
+//! Runs unconditionally on the native backend (no artifacts needed);
+//! the XLA variant skips with a notice when compiled HLO artifacts are
+//! absent.
 
 use std::sync::Arc;
 
 use droppeft::fed::{snapshot::SessionSnapshot, Engine, FedConfig};
 use droppeft::methods;
 use droppeft::model::TrainState;
-use droppeft::runtime::Runtime;
+use droppeft::runtime::Backend;
 
 mod common;
-use common::{assert_identical, require_artifacts};
+use common::{assert_identical, native_backend, require_artifacts, xla_backend};
 
 const ROUNDS: usize = 6;
 const SNAP_EVERY: usize = 2;
-
-fn runtime() -> Arc<Runtime> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Arc::new(Runtime::new(dir).expect("run `make artifacts` before cargo test"))
-}
 
 fn cfg(workers: usize, snapshot_dir: &std::path::Path) -> FedConfig {
     let mut cfg = FedConfig::quick("tiny", "mnli");
@@ -66,8 +62,13 @@ fn assert_same_model(a: &TrainState, b: &TrainState) {
 /// Full uninterrupted run at `full_workers`, then a resume from the
 /// round-k snapshot at `resume_workers`; both must agree bit-for-bit on
 /// every record and on the final global model.
-fn check_kill_and_resume(method: &str, tag: &str, full_workers: usize, resume_workers: usize) {
-    let rt = runtime();
+fn check_kill_and_resume(
+    rt: Arc<dyn Backend>,
+    method: &str,
+    tag: &str,
+    full_workers: usize,
+    resume_workers: usize,
+) {
     let dir = fresh_dir(tag);
 
     // the uninterrupted reference session (writes snapshots as it goes —
@@ -92,32 +93,40 @@ fn check_kill_and_resume(method: &str, tag: &str, full_workers: usize, resume_wo
 }
 
 #[test]
-fn droppeft_resume_is_byte_identical_workers_1() {
-    require_artifacts!();
-    check_kill_and_resume("droppeft-lora", "dp_w1", 1, 1);
+fn native_droppeft_resume_is_byte_identical_workers_1() {
+    check_kill_and_resume(native_backend(), "droppeft-lora", "nat_dp_w1", 1, 1);
 }
 
 #[test]
-fn droppeft_resume_is_byte_identical_default_workers() {
-    require_artifacts!();
+fn native_droppeft_resume_is_byte_identical_default_workers() {
     // resume at a different worker count than the original session ran
     // with: worker count must never leak into results
     let default = FedConfig::quick("tiny", "mnli").workers;
-    check_kill_and_resume("droppeft-lora", "dp_wd", 1, default.max(2));
+    check_kill_and_resume(
+        native_backend(),
+        "droppeft-lora",
+        "nat_dp_wd",
+        1,
+        default.max(2),
+    );
 }
 
 #[test]
-fn fedadaopt_resume_is_byte_identical() {
+fn native_fedadaopt_resume_is_byte_identical() {
     // a non-personalized method with a progressive schedule exercises
     // the stateless-method snapshot path (empty method blob)
+    check_kill_and_resume(native_backend(), "fedadaopt", "nat_ada", 2, 1);
+}
+
+#[test]
+fn xla_droppeft_resume_is_byte_identical() {
     require_artifacts!();
-    check_kill_and_resume("fedadaopt", "ada", 2, 1);
+    check_kill_and_resume(xla_backend(), "droppeft-lora", "xla_dp", 1, 2);
 }
 
 #[test]
 fn snapshots_are_written_at_every_interval() {
-    require_artifacts!();
-    let rt = runtime();
+    let rt = native_backend();
     let dir = fresh_dir("intervals");
     let m = methods::by_name("droppeft-lora", 42, ROUNDS).unwrap();
     let mut engine = Engine::new(cfg(1, &dir), rt, m).unwrap();

@@ -4,8 +4,9 @@
 //! population) must produce byte-identical results and event logs at any
 //! worker count.
 //!
-//! Requires `make artifacts` (the tiny preset); skips with a notice when
-//! the compiled HLO artifacts are absent.
+//! Runs unconditionally on the native backend (no artifacts needed);
+//! the XLA variants skip with a notice when compiled HLO artifacts are
+//! absent.
 
 use std::path::Path;
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -13,11 +14,11 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use droppeft::fed::{Engine, FedConfig, JsonlWriter};
 use droppeft::methods;
 use droppeft::metrics::SessionResult;
-use droppeft::runtime::Runtime;
+use droppeft::runtime::Backend;
 use droppeft::testkit::DOWNLOADS;
 
 mod common;
-use common::{assert_identical, require_artifacts};
+use common::{assert_identical, native_backend, require_artifacts, xla_backend};
 
 /// The DOWNLOADS gauge is process-global, so engines running on parallel
 /// test threads would pollute each other's peaks: every test in this
@@ -26,11 +27,6 @@ static GAUGE: Mutex<()> = Mutex::new(());
 
 fn gauge_lock() -> MutexGuard<'static, ()> {
     GAUGE.lock().unwrap_or_else(|e| e.into_inner())
-}
-
-fn runtime() -> Arc<Runtime> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Arc::new(Runtime::new(dir).expect("run `make artifacts` before cargo test"))
 }
 
 /// Large cohort on purpose: every device participates every round
@@ -50,24 +46,22 @@ fn cohort_cfg(workers: usize) -> FedConfig {
     cfg
 }
 
-fn run(cfg: FedConfig, log: Option<&Path>) -> SessionResult {
+fn run(rt: Arc<dyn Backend>, cfg: FedConfig, log: Option<&Path>) -> SessionResult {
     // droppeft-lora is personalized: final states ride back through the
     // fan-in, the worst case for outcome buffering
     let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
-    let mut engine = Engine::new(cfg, runtime(), method).unwrap();
+    let mut engine = Engine::new(cfg, rt, method).unwrap();
     if let Some(p) = log {
         engine.add_sink(Box::new(JsonlWriter::create(p).unwrap()));
     }
     engine.run().unwrap()
 }
 
-#[test]
-fn live_train_state_downloads_never_exceed_worker_count() {
-    require_artifacts!();
+fn check_download_bound(backend: fn() -> Arc<dyn Backend>) {
     let _g = gauge_lock();
     const WORKERS: usize = 2;
     DOWNLOADS.reset();
-    run(cohort_cfg(WORKERS), None);
+    run(backend(), cohort_cfg(WORKERS), None);
     let peak = DOWNLOADS.peak();
     assert!(
         peak >= 1,
@@ -85,11 +79,9 @@ fn live_train_state_downloads_never_exceed_worker_count() {
     );
 }
 
-#[test]
-fn large_cohort_results_and_event_log_match_serial_execution() {
-    require_artifacts!();
+fn check_cohort_matches_serial(backend: fn() -> Arc<dyn Backend>, tag: &str) {
     let _g = gauge_lock();
-    let dir = std::env::temp_dir().join("droppeft_round_streaming");
+    let dir = std::env::temp_dir().join(format!("droppeft_round_streaming_{tag}"));
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
     let p1 = dir.join("w1.jsonl");
@@ -97,8 +89,8 @@ fn large_cohort_results_and_event_log_match_serial_execution() {
     // workers=1 is the strictly sequential path — materialize, train,
     // absorb one device at a time: the old eager executor's observable
     // semantics
-    let r1 = run(cohort_cfg(1), Some(&p1));
-    let r4 = run(cohort_cfg(4), Some(&p4));
+    let r1 = run(backend(), cohort_cfg(1), Some(&p1));
+    let r4 = run(backend(), cohort_cfg(4), Some(&p4));
     assert_identical(&r1, &r4);
 
     let b1 = std::fs::read(&p1).unwrap();
@@ -110,4 +102,26 @@ fn large_cohort_results_and_event_log_match_serial_execution() {
          full-population cohort"
     );
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn native_live_train_state_downloads_never_exceed_worker_count() {
+    check_download_bound(native_backend);
+}
+
+#[test]
+fn native_large_cohort_results_and_event_log_match_serial_execution() {
+    check_cohort_matches_serial(native_backend, "native");
+}
+
+#[test]
+fn xla_live_train_state_downloads_never_exceed_worker_count() {
+    require_artifacts!();
+    check_download_bound(xla_backend);
+}
+
+#[test]
+fn xla_large_cohort_results_and_event_log_match_serial_execution() {
+    require_artifacts!();
+    check_cohort_matches_serial(xla_backend, "xla");
 }

@@ -52,6 +52,7 @@ fn dummy_snapshot() -> SessionSnapshot {
             sim_secs: 3.5 + round as f64,
             clock_secs: 10.0 * round as f64,
             train_loss: 1.2,
+            train_acc: 0.35,
             active_frac: 0.6,
             global_acc: if round % 2 == 1 { Some(0.4) } else { None },
             personalized_acc: None,
@@ -98,6 +99,7 @@ fn assert_roundtrip_eq(a: &SessionSnapshot, b: &SessionSnapshot) {
         assert_eq!(x.round, y.round);
         assert_eq!(x.sim_secs.to_bits(), y.sim_secs.to_bits());
         assert_eq!(x.clock_secs.to_bits(), y.clock_secs.to_bits());
+        assert_eq!(x.train_acc.to_bits(), y.train_acc.to_bits());
         assert_eq!(x.global_acc.map(f64::to_bits), y.global_acc.map(f64::to_bits));
         assert_eq!(x.traffic_bytes, y.traffic_bytes);
         assert_eq!(x.arm, y.arm);

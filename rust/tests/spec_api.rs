@@ -6,6 +6,7 @@
 use droppeft::fed::spec::{self, SessionSpec};
 use droppeft::fed::FedConfig;
 use droppeft::methods::{Method, MethodSpec, PeftKind};
+use droppeft::runtime::BackendKind;
 use droppeft::util::cli::Args;
 
 fn argv(s: &str) -> Vec<String> {
@@ -94,6 +95,23 @@ fn cli_translation_validates_like_the_builder() {
     assert!(spec::from_args(&parse("train --method bogus")).is_err());
     assert!(spec::from_args(&parse("train --target-acc 1.5")).is_err());
     assert!(spec::from_args(&parse("train --lr abc")).is_err());
+}
+
+#[test]
+fn backend_flag_translates_and_defaults_to_auto() {
+    let default = spec::from_args(&parse("train")).unwrap();
+    assert_eq!(default.backend, BackendKind::Auto);
+    for (flag, kind) in [
+        ("auto", BackendKind::Auto),
+        ("xla", BackendKind::Xla),
+        ("native", BackendKind::Native),
+    ] {
+        let from_cli = spec::from_args(&parse(&format!("train --backend {flag}"))).unwrap();
+        let built = SessionSpec::builder().backend(kind).build().unwrap();
+        assert_eq!(from_cli, built, "--backend {flag}");
+        assert_eq!(from_cli.backend, kind);
+    }
+    assert!(spec::from_args(&parse("train --backend tpu")).is_err());
 }
 
 #[test]
