@@ -116,6 +116,54 @@ fn main() {
         );
     }
 
+    // native kernel layer: blocked/packed matmul vs the naive reference
+    // (bitwise-identical outputs; the gap is pure blocking/packing win)
+    {
+        use droppeft::runtime::native::{kernels, reference};
+        let mut r = rng.fork(4);
+        let (m, k, n) = (256, 256, 256);
+        let a: Vec<f32> = (0..m * k).map(|_| (r.gauss() * 0.1) as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| (r.gauss() * 0.1) as f32).collect();
+        let gflop = 2.0 * (m * k * n) as f64 / 1e9;
+        suite.add(
+            Bench::new("kernels/matmul naive 256^3")
+                .target_secs(0.5)
+                .throughput(gflop, "GFLOP/s")
+                .run(|| reference::matmul(&a, &b, m, k, n)),
+        );
+        {
+            let mut out = vec![0.0f32; m * n];
+            suite.add(
+                Bench::new("kernels/matmul blocked 256^3")
+                    .target_secs(0.5)
+                    .throughput(gflop, "GFLOP/s")
+                    .run(|| {
+                        kernels::matmul(&mut out, &a, &b, m, k, n, kernels::Accum::Store);
+                        out[0]
+                    }),
+            );
+        }
+        suite.add(
+            Bench::new("kernels/matmul_bt naive 256^3")
+                .target_secs(0.5)
+                .throughput(gflop, "GFLOP/s")
+                .run(|| reference::matmul_bt(&a, &b, m, k, n)),
+        );
+        {
+            let mut out = vec![0.0f32; m * n];
+            let mut pack = Vec::new();
+            suite.add(
+                Bench::new("kernels/matmul_bt packed 256^3")
+                    .target_secs(0.5)
+                    .throughput(gflop, "GFLOP/s")
+                    .run(|| {
+                        kernels::matmul_bt(&mut out, &a, &b, m, k, n, &mut pack, kernels::Accum::Store);
+                        out[0]
+                    }),
+            );
+        }
+    }
+
     // worker-pool fan-out overhead (per round: one job per selected
     // device; measures thread scope + slot plumbing, not the payload)
     {

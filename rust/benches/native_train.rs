@@ -1,25 +1,39 @@
 //! Native-backend train/eval step latency on the built-in `tiny` preset
 //! — the artifact-free bench smoke. Times `train_lora_k{K}` for K = 1,
 //! L/2, L (the Eq. 4 compute-scales-with-K check on the pure-Rust
-//! executor), the full-depth eval step, and one full federated round,
-//! then emits machine-readable `BENCH_native_train.json`. Runs on any
-//! host: no compiled XLA artifacts, no Python toolchain.
+//! executor) on both the blocked-kernel path and the naive reference
+//! path (the two are bitwise identical, so the speedup is free), the
+//! full-depth eval step, and one full federated round, then diffs the
+//! numbers against the committed `BENCH_native_train.json` baseline
+//! (warn-only) before overwriting it. GFLOP/s figures use the same FLOP
+//! model as `python/compile/kernels/roofline.py`. Runs on any host: no
+//! compiled XLA artifacts, no Python toolchain.
 //!
 //! Run with `cargo bench --bench native_train`.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use droppeft::benchkit::{Bench, Suite};
+use droppeft::benchkit::{trajectory, Bench, Suite};
 use droppeft::data::{gen, TaskSpec};
 use droppeft::fed::{Engine, FedConfig};
 use droppeft::model::{BaseModel, TrainState};
+use droppeft::runtime::native::{flops, NativeOptions};
 use droppeft::runtime::tensor::Value;
 use droppeft::runtime::{Backend, NativeBackend};
 use droppeft::util::json::Json;
 
+const BASELINE: &str = "BENCH_native_train.json";
+
 fn main() {
-    let rt: Arc<dyn Backend> = Arc::new(NativeBackend::new());
+    let rt: Arc<dyn Backend> = Arc::new(NativeBackend::with_options(NativeOptions {
+        threads: 1,
+        reference: false,
+    }));
+    let rt_ref: Arc<dyn Backend> = Arc::new(NativeBackend::with_options(NativeOptions {
+        threads: 1,
+        reference: true,
+    }));
     let preset = "tiny";
     let spec = rt.model(preset).unwrap().clone();
     let mcfg = spec.config.clone();
@@ -37,6 +51,7 @@ fn main() {
     let mut suite = Suite::new();
     let l = mcfg.n_layers;
     let ks: Vec<usize> = [1, l / 2, l].into_iter().filter(|&k| k >= 1).collect();
+    // (k, optimized mean ns, reference mean ns)
     let mut k_means = Vec::new();
     for &k in &ks {
         let active: Vec<usize> = (0..k).collect();
@@ -56,13 +71,25 @@ fn main() {
             Value::scalar_f32(0.001),
         ];
         let name = format!("train_lora_k{k}");
+        let gflop = flops::train_step_flops(&mcfg, "lora", k) as f64 / 1e9;
         let r = Bench::new(format!("native/{preset}/train step K={k}/{l}"))
             .warmup(2)
             .iters(5, 200)
             .target_secs(1.0)
+            .throughput(gflop, "GFLOP/s")
             .run(|| rt.execute(preset, &name, &inputs).unwrap());
-        k_means.push((k, r.mean_ns));
+        let rr = Bench::new(format!("native/{preset}/train step K={k}/{l} (reference)"))
+            .warmup(2)
+            .iters(5, 200)
+            .target_secs(1.0)
+            .throughput(gflop, "GFLOP/s")
+            .run(|| rt_ref.execute(preset, &name, &inputs).unwrap());
+        k_means.push((k, r.mean_ns, rr.mean_ns));
         suite.add(r);
+        suite.add(rr);
+    }
+    for (k, opt, rf) in &k_means {
+        println!("  -> K={k}: blocked kernels are {:.2}x the reference", rf / opt);
     }
     if k_means.len() == 3 {
         let half = k_means[1].1;
@@ -81,15 +108,26 @@ fn main() {
         batch.tokens.clone(),
         batch.labels.clone(),
     ];
+    let eval_gflop = flops::eval_step_flops(&mcfg, "lora") as f64 / 1e9;
     let eval_idx = suite.results.len();
     suite.add(
         Bench::new(format!("native/{preset}/eval step (full depth)"))
             .warmup(2)
             .iters(5, 200)
             .target_secs(1.0)
+            .throughput(eval_gflop, "GFLOP/s")
             .run(|| rt.execute(preset, "eval_lora", &eval_inputs).unwrap()),
     );
+    suite.add(
+        Bench::new(format!("native/{preset}/eval step (reference)"))
+            .warmup(2)
+            .iters(5, 200)
+            .target_secs(1.0)
+            .throughput(eval_gflop, "GFLOP/s")
+            .run(|| rt_ref.execute(preset, "eval_lora", &eval_inputs).unwrap()),
+    );
     let eval_ns = suite.results[eval_idx].mean_ns;
+    let eval_ref_ns = suite.results[eval_idx + 1].mean_ns;
 
     println!("\n{}", suite.markdown("Native step latency vs active depth"));
 
@@ -114,27 +152,68 @@ fn main() {
     };
     println!("native round (4 devices, 2 batches): {round_secs:.3}s");
 
+    // geometric-mean train-step speedup across the measured K points
+    let speedup = (k_means
+        .iter()
+        .map(|(_, opt, rf)| (rf / opt).ln())
+        .sum::<f64>()
+        / k_means.len() as f64)
+        .exp();
+    let kfull_gflops = {
+        let (_, opt, _) = k_means[k_means.len() - 1];
+        flops::train_step_flops(&mcfg, "lora", l) as f64 / opt
+    };
+    println!(
+        "train-step speedup (geomean over K): {speedup:.2}x; K=L sustained {kfull_gflops:.2} GFLOP/s"
+    );
+
     let mut fields = vec![
         ("bench", Json::str("native_train".to_string())),
         ("preset", Json::str(preset.to_string())),
+        ("provenance", Json::str("measured".to_string())),
         ("n_layers", Json::num(l as f64)),
+        ("threads", Json::num(1.0)),
         ("eval_mean_ns", Json::num(eval_ns)),
+        ("eval_ref_mean_ns", Json::num(eval_ref_ns)),
+        ("eval_speedup", Json::num(eval_ref_ns / eval_ns)),
         ("round_secs", Json::num(round_secs)),
+        ("train_step_speedup", Json::num(speedup)),
+        ("train_kfull_gflops", Json::num(kfull_gflops)),
     ];
-    for (k, ns) in &k_means {
+    for (k, ns, ref_ns) in &k_means {
         // fixed key set: k1 / k_half / k_full
-        let key = if *k == 1 {
-            "train_k1_mean_ns"
+        let (key, ref_key, sp_key) = if *k == 1 {
+            ("train_k1_mean_ns", "train_k1_ref_mean_ns", "train_k1_speedup")
         } else if *k == l {
-            "train_kfull_mean_ns"
+            (
+                "train_kfull_mean_ns",
+                "train_kfull_ref_mean_ns",
+                "train_kfull_speedup",
+            )
         } else {
-            "train_khalf_mean_ns"
+            (
+                "train_khalf_mean_ns",
+                "train_khalf_ref_mean_ns",
+                "train_khalf_speedup",
+            )
         };
         fields.push((key, Json::num(*ns)));
+        fields.push((ref_key, Json::num(*ref_ns)));
+        fields.push((sp_key, Json::num(ref_ns / ns)));
     }
     let j = Json::obj(fields);
-    match std::fs::write("BENCH_native_train.json", j.to_string()) {
-        Ok(()) => println!("wrote BENCH_native_train.json"),
-        Err(e) => eprintln!("could not write BENCH_native_train.json: {e}"),
+
+    // diff against the committed baseline before clobbering it (warn-only)
+    match trajectory::load_baseline(BASELINE) {
+        Some(baseline) => {
+            let cmp = trajectory::compare(&baseline, &j);
+            print!("{}", cmp.report(BASELINE));
+        }
+        None => println!("no committed {BASELINE} baseline to diff against"),
+    }
+
+    match std::fs::write(BASELINE, j.to_string()) {
+        Ok(()) => println!("wrote {BASELINE}"),
+        Err(e) => eprintln!("could not write {BASELINE}: {e}"),
     }
 }

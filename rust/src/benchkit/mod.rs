@@ -5,6 +5,8 @@
 //! `cargo bench` runs the `[[bench]]` targets (harness = false) which call
 //! into this module.
 
+pub mod trajectory;
+
 use std::time::Instant;
 
 use crate::util::stats;

@@ -1,0 +1,198 @@
+//! Bench trajectory: diff a fresh run against the committed
+//! `BENCH_*.json` baseline so perf regressions surface at bench time
+//! instead of months later in a git archaeology session.
+//!
+//! Warn-only by design — bench hosts differ wildly (laptops, CI
+//! containers, bare metal), so a delta is a prompt to look, not a
+//! failure. The benches call [`load_baseline`] + [`compare`] before
+//! overwriting the JSON with the new numbers; deltas inside the ±5%
+//! noise floor are reported as stable.
+
+use crate::util::json::Json;
+
+/// Relative change below which a metric is considered unchanged.
+pub const NOISE_FLOOR: f64 = 0.05;
+
+/// One metric diffed between the committed baseline and a fresh run.
+pub struct MetricDelta {
+    pub name: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// current / baseline (1.0 = unchanged)
+    pub ratio: f64,
+    /// true when lower values are better for this metric
+    pub lower_is_better: bool,
+}
+
+impl MetricDelta {
+    /// Outside the noise floor, in the bad direction.
+    pub fn regressed(&self) -> bool {
+        if self.lower_is_better {
+            self.ratio > 1.0 + NOISE_FLOOR
+        } else {
+            self.ratio < 1.0 - NOISE_FLOOR
+        }
+    }
+
+    /// Outside the noise floor, in the good direction.
+    pub fn improved(&self) -> bool {
+        if self.lower_is_better {
+            self.ratio < 1.0 - NOISE_FLOOR
+        } else {
+            self.ratio > 1.0 + NOISE_FLOOR
+        }
+    }
+
+    pub fn line(&self) -> String {
+        let verdict = if self.regressed() {
+            "WARN regressed"
+        } else if self.improved() {
+            "improved"
+        } else {
+            "stable"
+        };
+        format!(
+            "  {:<28} {:>14.1} -> {:>14.1}  ({:+.1}%)  {verdict}",
+            self.name,
+            self.baseline,
+            self.current,
+            (self.ratio - 1.0) * 100.0
+        )
+    }
+}
+
+/// Timing/size metrics shrink to improve; rates and ratios grow.
+fn lower_is_better(name: &str) -> bool {
+    !(name.ends_with("_gflops")
+        || name.ends_with("_speedup")
+        || name.ends_with("_per_sec")
+        || name.ends_with("_throughput"))
+}
+
+/// Result of diffing one fresh bench run against its baseline.
+#[derive(Default)]
+pub struct Comparison {
+    pub deltas: Vec<MetricDelta>,
+    /// numeric keys present in only one of the two runs (schema drift)
+    pub only_in_baseline: Vec<String>,
+    pub only_in_current: Vec<String>,
+}
+
+impl Comparison {
+    pub fn regressions(&self) -> usize {
+        self.deltas.iter().filter(|d| d.regressed()).count()
+    }
+
+    /// Human-readable, warn-only report block.
+    pub fn report(&self, title: &str) -> String {
+        let mut out = format!("trajectory vs committed baseline ({title}):\n");
+        for d in &self.deltas {
+            out.push_str(&d.line());
+            out.push('\n');
+        }
+        for k in &self.only_in_baseline {
+            out.push_str(&format!("  {k:<28} dropped from this run\n"));
+        }
+        for k in &self.only_in_current {
+            out.push_str(&format!("  {k:<28} new metric (no baseline)\n"));
+        }
+        let n = self.regressions();
+        if n > 0 {
+            out.push_str(&format!(
+                "  WARN: {n} metric(s) regressed past the {:.0}% noise floor (warn-only)\n",
+                NOISE_FLOOR * 100.0
+            ));
+        }
+        out
+    }
+}
+
+/// Diff every shared numeric top-level field of two bench JSON objects.
+/// Non-numeric fields (provenance strings etc.) are ignored; zero-valued
+/// baselines (unmeasured seeds) are skipped rather than divided by.
+pub fn compare(baseline: &Json, current: &Json) -> Comparison {
+    let mut cmp = Comparison::default();
+    let (Ok(base), Ok(cur)) = (baseline.as_obj(), current.as_obj()) else {
+        return cmp;
+    };
+    let num = |j: &Json| j.as_f64().ok();
+    for (k, v) in cur {
+        let Some(c) = num(v) else { continue };
+        match base.iter().find(|(bk, _)| bk == k).and_then(|(_, bv)| num(bv)) {
+            Some(b) if b != 0.0 => cmp.deltas.push(MetricDelta {
+                name: k.clone(),
+                baseline: b,
+                current: c,
+                ratio: c / b,
+                lower_is_better: lower_is_better(k),
+            }),
+            Some(_) => {} // unmeasured seed baseline: nothing to diff
+            None => cmp.only_in_current.push(k.clone()),
+        }
+    }
+    for (k, v) in base {
+        if num(v).is_some() && !cur.iter().any(|(ck, _)| ck == k) {
+            cmp.only_in_baseline.push(k.clone());
+        }
+    }
+    cmp
+}
+
+/// Read a committed `BENCH_*.json` baseline, if present and parseable.
+pub fn load_baseline(path: &str) -> Option<Json> {
+    let text = std::fs::read_to_string(path).ok()?;
+    Json::parse(&text).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(ns: f64, gflops: f64) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("t")),
+            ("train_k1_mean_ns", Json::num(ns)),
+            ("train_gflops", Json::num(gflops)),
+        ])
+    }
+
+    #[test]
+    fn detects_direction_aware_regressions() {
+        // latency up 50%, throughput down 50%: both regress
+        let cmp = compare(&run(100.0, 10.0), &run(150.0, 5.0));
+        assert_eq!(cmp.deltas.len(), 2);
+        assert!(cmp.deltas.iter().all(|d| d.regressed()));
+        // latency down, throughput up: both improve
+        let cmp = compare(&run(100.0, 10.0), &run(50.0, 20.0));
+        assert!(cmp.deltas.iter().all(|d| d.improved() && !d.regressed()));
+        assert_eq!(cmp.regressions(), 0);
+    }
+
+    #[test]
+    fn noise_floor_reads_as_stable() {
+        let cmp = compare(&run(100.0, 10.0), &run(103.0, 9.8));
+        assert_eq!(cmp.regressions(), 0);
+        assert!(cmp.deltas.iter().all(|d| !d.improved()));
+        assert!(cmp.report("x").contains("stable"));
+    }
+
+    #[test]
+    fn schema_drift_and_zero_baselines_are_reported_not_fatal() {
+        let base = Json::obj(vec![
+            ("old_metric", Json::num(5.0)),
+            ("train_k1_mean_ns", Json::num(0.0)), // unmeasured seed
+        ]);
+        let cur = run(100.0, 10.0);
+        let cmp = compare(&base, &cur);
+        assert!(cmp.deltas.is_empty());
+        assert_eq!(cmp.only_in_baseline, vec!["old_metric".to_string()]);
+        assert_eq!(cmp.only_in_current, vec!["train_gflops".to_string()]);
+        let rep = cmp.report("seed");
+        assert!(rep.contains("old_metric") && rep.contains("train_gflops"));
+    }
+
+    #[test]
+    fn missing_baseline_file_is_none() {
+        assert!(load_baseline("/nonexistent/BENCH_x.json").is_none());
+    }
+}

@@ -1,0 +1,139 @@
+//! Analytic FLOP model for the native steps.
+//!
+//! Mirrors `python/compile/kernels/roofline.py` so the Rust benches and
+//! the Python roofline report agree on the work a step performs:
+//!
+//! - matmul `[m,k] @ [k,n]`: `2*m*k*n` (multiply + add per MAC);
+//! - layernorm over `rows` rows of width `d`: `rows * d * 8`
+//!   (mean, variance, normalize, affine — ~8 flops/element);
+//! - attention over `bh` (batch*heads) blocks of seq `s`, head dim
+//!   `dh`: `bh * (2*s*s*dh * 2)` — the `q@k^T` and `p@v` matmuls
+//!   (softmax is bandwidth-bound and ignored, as in roofline.py).
+//!
+//! Element-wise work (GELU, bias adds, residuals, the optimizer) is
+//! deliberately excluded on both sides: it is memory-bound and would
+//! only blur the GFLOP/s number the benches report against the matmul
+//! roofline. The backward estimates count each matmul's two gradient
+//! products; everything routed through the same formulas.
+
+use crate::runtime::manifest::ModelCfg;
+
+/// `2*m*k*n` — one fused multiply-add per output element per k.
+pub fn matmul_flops(m: usize, k: usize, n: usize) -> u64 {
+    2 * m as u64 * k as u64 * n as u64
+}
+
+/// roofline.py `layernorm_estimate`: ~8 flops per element.
+pub fn layernorm_flops(rows: usize, d: usize) -> u64 {
+    rows as u64 * d as u64 * 8
+}
+
+/// roofline.py `attention_estimate`: the two `[s,s]`-shaped matmuls per
+/// (batch, head) block.
+pub fn attention_flops(bh: usize, s: usize, dh: usize) -> u64 {
+    bh as u64 * (2 * s as u64 * s as u64 * dh as u64 * 2)
+}
+
+/// Forward flops of one transformer layer (N = batch*seq rows).
+fn layer_fwd_flops(cfg: &ModelCfg, kind: &str) -> u64 {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let n = cfg.batch * cfg.seq;
+    let bh = cfg.batch * cfg.n_heads;
+    let dh = d / cfg.n_heads;
+    // Q/K/V + output projections
+    let mut fl = 4 * matmul_flops(n, d, d);
+    // LoRA branches on Q and V
+    if kind == "lora" {
+        let r = cfg.lora_rank;
+        fl += 2 * (matmul_flops(n, d, r) + matmul_flops(n, r, d));
+    }
+    fl += attention_flops(bh, cfg.seq, dh);
+    // two layernorms (fused with the residual adds)
+    fl += 2 * layernorm_flops(n, d);
+    // FFN
+    fl += matmul_flops(n, d, f) + matmul_flops(n, f, d);
+    // serial adapter after the FFN
+    if kind == "adapter" {
+        let a = cfg.adapter_dim;
+        fl += matmul_flops(n, d, a) + matmul_flops(n, a, d);
+    }
+    fl
+}
+
+/// Backward flops of one active layer: each forward matmul contributes
+/// an input-gradient product, and each *trainable* matmul additionally a
+/// weight-gradient product. Attention backward recomputes the forward
+/// scores plus four gradient matmuls (≈ 2.5× the forward pair).
+fn layer_bwd_flops(cfg: &ModelCfg, kind: &str) -> u64 {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let n = cfg.batch * cfg.seq;
+    let bh = cfg.batch * cfg.n_heads;
+    let dh = d / cfg.n_heads;
+    let mut fl = 2 * layernorm_flops(n, d);
+    // FFN input-gradients (frozen weights: no weight-gradient products)
+    fl += matmul_flops(n, f, d) + matmul_flops(n, d, f);
+    // output-projection and Q/K/V through-paths
+    fl += 4 * matmul_flops(n, d, d);
+    // score recompute (1x) + dV, dP, dQ, dK (4x of one s*s*dh matmul)
+    fl += attention_flops(bh, cfg.seq, dh) * 5 / 2;
+    match kind {
+        "lora" => {
+            let r = cfg.lora_rank;
+            // through-path (dxa, dx) + weight grads (g_b, g_a), per Q and V
+            fl += 2 * (2 * (matmul_flops(n, d, r) + matmul_flops(n, r, d)));
+        }
+        _ => {
+            let a = cfg.adapter_dim;
+            fl += 2 * (matmul_flops(n, d, a) + matmul_flops(n, a, d));
+        }
+    }
+    fl
+}
+
+/// Head flops: final layernorm, pooled classifier forward, and (for
+/// training) its weight/input gradient products.
+fn head_flops(cfg: &ModelCfg, train: bool) -> u64 {
+    let n = cfg.batch * cfg.seq;
+    let mut fl = layernorm_flops(n, cfg.d_model);
+    let fwd = matmul_flops(cfg.batch, cfg.d_model, cfg.n_classes);
+    fl += fwd;
+    if train {
+        fl += 2 * fwd + layernorm_flops(n, cfg.d_model);
+    }
+    fl
+}
+
+/// Total flops of one `train_{kind}_k{K}` step.
+pub fn train_step_flops(cfg: &ModelCfg, kind: &str, k: usize) -> u64 {
+    let per_layer = layer_fwd_flops(cfg, kind) + layer_bwd_flops(cfg, kind);
+    k as u64 * per_layer + head_flops(cfg, true)
+}
+
+/// Total flops of one `eval_{kind}` / `infer_{kind}` forward pass.
+pub fn eval_step_flops(cfg: &ModelCfg, kind: &str) -> u64 {
+    cfg.n_layers as u64 * layer_fwd_flops(cfg, kind) + head_flops(cfg, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flop_model_scales_linearly_in_k() {
+        let cfg = crate::runtime::native::preset_cfg("tiny").unwrap();
+        let f1 = train_step_flops(&cfg, "lora", 1);
+        let f2 = train_step_flops(&cfg, "lora", 2);
+        let f4 = train_step_flops(&cfg, "lora", 4);
+        // Eq. 4: per-layer cost is constant, so increments match exactly
+        assert_eq!(f2 - f1, f4 - f2 - (f4 - f2) / 2);
+        assert_eq!(f4 - f1, 3 * (f2 - f1));
+        assert!(f1 > 0);
+        // eval runs all L layers forward-only: cheaper than full-K train
+        assert!(eval_step_flops(&cfg, "lora") < train_step_flops(&cfg, "lora", 4));
+        // adapters and lora differ only in the PEFT branch terms
+        assert_ne!(
+            train_step_flops(&cfg, "lora", 2),
+            train_step_flops(&cfg, "adapter", 2)
+        );
+    }
+}

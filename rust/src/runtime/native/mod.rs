@@ -1,0 +1,872 @@
+//! Native backend: a pure-Rust f32 implementation of the artifact
+//! contract, so the full federated stack runs with zero compiled XLA
+//! artifacts.
+//!
+//! [`NativeBackend`] serves the same artifact-name protocol as the PJRT
+//! runtime — `train_{kind}_k{K}` (K-active-layer transformer forward,
+//! PEFT/head backward, AdamW update, returning the 9-output tuple
+//! `fed::client::ClientTask::train_batch` consumes), `eval_{kind}`, and
+//! `infer_{kind}` — over built-in `tiny`/`small` [`ModelCfg`] presets
+//! whose packed-parameter layouts mirror `python/compile/packing.py`
+//! exactly.
+//!
+//! The compute core is split into submodules:
+//!
+//! - [`kernels`] — blocked/packed matmul and fused element/row passes,
+//!   each bitwise identical to its naive counterpart;
+//! - [`step`] — the optimized train/eval step built on those kernels
+//!   and a per-thread scratch arena ([`scratch`]), with opt-in
+//!   intra-client parallelism over attention heads and per-layer
+//!   PEFT-gradient reductions;
+//! - [`reference`] — the original naive implementation, kept verbatim
+//!   as the independent oracle, the bench baseline, and a runtime
+//!   fallback (`DROPPEFT_NATIVE_REF=1`);
+//! - [`flops`] — the analytic FLOP model shared with
+//!   `python/compile/kernels/roofline.py`, used by the benches to
+//!   report GFLOP/s.
+//!
+//! Only the PEFT rows and the head are trainable; the frozen base gets
+//! no gradients (the backward pass still flows *through* every active
+//! layer so earlier layers' PEFT parameters see the full chain). Both
+//! paths produce bit-identical outputs for identical inputs — at any
+//! `DROPPEFT_NATIVE_THREADS` setting — including across concurrent
+//! `execute` calls, which share no mutable state beyond the stats map.
+
+pub mod flops;
+pub mod kernels;
+pub mod reference;
+mod scratch;
+mod step;
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::manifest::{ArtifactSpec, Dtype, Layout, LayoutEntry, ModelCfg, ModelSpec, TensorSpec};
+use super::tensor::Value;
+use super::{Backend, ExecStats};
+
+// ---------------------------------------------------------------------------
+// Presets and layouts (mirror of python/compile/packing.py)
+// ---------------------------------------------------------------------------
+
+/// Built-in preset names, smallest first.
+pub const PRESETS: &[&str] = &["tiny", "small"];
+
+fn preset_cfg(name: &str) -> Option<ModelCfg> {
+    match name {
+        "tiny" => Some(ModelCfg {
+            name: "tiny".into(),
+            vocab: 512,
+            seq: 32,
+            d_model: 32,
+            n_heads: 2,
+            d_ff: 128,
+            n_layers: 4,
+            n_classes: 4,
+            lora_rank: 4,
+            lora_alpha: 16.0,
+            adapter_dim: 8,
+            batch: 8,
+        }),
+        "small" => Some(ModelCfg {
+            name: "small".into(),
+            vocab: 4096,
+            seq: 64,
+            d_model: 128,
+            n_heads: 4,
+            d_ff: 512,
+            n_layers: 12,
+            n_classes: 4,
+            lora_rank: 8,
+            lora_alpha: 16.0,
+            adapter_dim: 16,
+            batch: 16,
+        }),
+        _ => None,
+    }
+}
+
+struct LayoutBuilder {
+    entries: Vec<LayoutEntry>,
+    size: usize,
+}
+
+impl LayoutBuilder {
+    fn new() -> LayoutBuilder {
+        LayoutBuilder {
+            entries: Vec::new(),
+            size: 0,
+        }
+    }
+
+    fn add(mut self, name: &str, shape: &[usize]) -> LayoutBuilder {
+        let n = shape.iter().product::<usize>().max(1);
+        self.entries.push(LayoutEntry {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            offset: self.size,
+        });
+        self.size += n;
+        self
+    }
+
+    fn build(self) -> Layout {
+        Layout {
+            size: self.size,
+            entries: self.entries,
+        }
+    }
+}
+
+fn layer_layout(cfg: &ModelCfg) -> Layout {
+    let (d, ff) = (cfg.d_model, cfg.d_ff);
+    let mut b = LayoutBuilder::new();
+    for proj in ["wq", "wk", "wv", "wo"] {
+        b = b.add(proj, &[d, d]).add(&format!("{proj}_b"), &[d]);
+    }
+    b.add("ln1_g", &[d])
+        .add("ln1_b", &[d])
+        .add("w1", &[d, ff])
+        .add("w1_b", &[ff])
+        .add("w2", &[ff, d])
+        .add("w2_b", &[d])
+        .add("ln2_g", &[d])
+        .add("ln2_b", &[d])
+        .build()
+}
+
+fn lora_layout(cfg: &ModelCfg) -> Layout {
+    let (d, r) = (cfg.d_model, cfg.lora_rank);
+    LayoutBuilder::new()
+        .add("q_a", &[d, r])
+        .add("q_b", &[r, d])
+        .add("v_a", &[d, r])
+        .add("v_b", &[r, d])
+        .build()
+}
+
+fn adapter_layout(cfg: &ModelCfg) -> Layout {
+    let (d, a) = (cfg.d_model, cfg.adapter_dim);
+    LayoutBuilder::new()
+        .add("down", &[d, a])
+        .add("down_b", &[a])
+        .add("up", &[a, d])
+        .add("up_b", &[d])
+        .build()
+}
+
+fn globals_layout(cfg: &ModelCfg) -> Layout {
+    LayoutBuilder::new()
+        .add("embedding", &[cfg.vocab, cfg.d_model])
+        .add("positional", &[cfg.seq, cfg.d_model])
+        .add("lnf_g", &[cfg.d_model])
+        .add("lnf_b", &[cfg.d_model])
+        .build()
+}
+
+fn head_layout(cfg: &ModelCfg) -> Layout {
+    LayoutBuilder::new()
+        .add("head_w", &[cfg.d_model, cfg.n_classes])
+        .add("head_b", &[cfg.n_classes])
+        .build()
+}
+
+fn tensor(name: &str, shape: &[usize], dtype: Dtype) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype,
+    }
+}
+
+/// Build the artifact signature table mirroring `python -m compile.aot`.
+fn artifact_table(
+    cfg: &ModelCfg,
+    p: usize,
+    layouts: &[(&str, usize)],
+    h: usize,
+) -> BTreeMap<String, ArtifactSpec> {
+    use Dtype::{F32, I32};
+    let mut arts = BTreeMap::new();
+    let mut add = |name: String, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>| {
+        arts.insert(
+            name.clone(),
+            ArtifactSpec {
+                file: PathBuf::from(format!("native://{}/{name}", cfg.name)),
+                name,
+                inputs,
+                outputs,
+            },
+        );
+    };
+    let l = cfg.n_layers;
+    for &(kind, q) in layouts {
+        for k in 1..=l {
+            add(
+                format!("train_{kind}_k{k}"),
+                vec![
+                    tensor("layers", &[k, p], F32),
+                    tensor("peft", &[k, q], F32),
+                    tensor("opt_m", &[k, q], F32),
+                    tensor("opt_v", &[k, q], F32),
+                    tensor("globals", &[globals_layout(cfg).size], F32),
+                    tensor("head", &[h], F32),
+                    tensor("head_m", &[h], F32),
+                    tensor("head_v", &[h], F32),
+                    tensor("tokens", &[cfg.batch, cfg.seq], I32),
+                    tensor("labels", &[cfg.batch], I32),
+                    tensor("step", &[], F32),
+                    tensor("lr", &[], F32),
+                ],
+                vec![
+                    tensor("peft", &[k, q], F32),
+                    tensor("opt_m", &[k, q], F32),
+                    tensor("opt_v", &[k, q], F32),
+                    tensor("head", &[h], F32),
+                    tensor("head_m", &[h], F32),
+                    tensor("head_v", &[h], F32),
+                    tensor("loss", &[], F32),
+                    tensor("correct", &[], F32),
+                    tensor("grad_norms", &[k], F32),
+                ],
+            );
+        }
+        let full_inputs = vec![
+            tensor("layers", &[l, p], F32),
+            tensor("peft", &[l, q], F32),
+            tensor("globals", &[globals_layout(cfg).size], F32),
+            tensor("head", &[h], F32),
+            tensor("tokens", &[cfg.batch, cfg.seq], I32),
+        ];
+        let mut eval_inputs = full_inputs.clone();
+        eval_inputs.push(tensor("labels", &[cfg.batch], I32));
+        add(
+            format!("eval_{kind}"),
+            eval_inputs,
+            vec![tensor("loss", &[], F32), tensor("correct", &[], F32)],
+        );
+        add(
+            format!("infer_{kind}"),
+            full_inputs,
+            vec![tensor("logits", &[cfg.batch, cfg.n_classes], F32)],
+        );
+    }
+    arts
+}
+
+/// Build a complete [`ModelSpec`] for one built-in preset.
+pub fn build_model_spec(cfg: ModelCfg) -> ModelSpec {
+    let layer = layer_layout(&cfg);
+    let lora = lora_layout(&cfg);
+    let adapter = adapter_layout(&cfg);
+    let globals = globals_layout(&cfg);
+    let head = head_layout(&cfg);
+    let artifacts = artifact_table(
+        &cfg,
+        layer.size,
+        &[("lora", lora.size), ("adapter", adapter.size)],
+        head.size,
+    );
+    ModelSpec {
+        config: cfg,
+        layer_layout: layer,
+        lora_layout: lora,
+        adapter_layout: adapter,
+        globals_layout: globals,
+        head_layout: head,
+        artifacts,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared step plumbing (used by both `reference` and `step`)
+// ---------------------------------------------------------------------------
+
+/// Flattened model dimensions, resolved once per step.
+#[derive(Clone, Copy)]
+pub(crate) struct Dims {
+    pub b: usize,
+    pub s: usize,
+    pub d: usize,
+    pub h: usize,
+    pub dh: usize,
+    pub f: usize,
+    pub c: usize,
+    /// rows of the flattened activations: b * s
+    pub n: usize,
+    /// LoRA scale alpha/rank (unused for adapters)
+    pub lscale: f32,
+}
+
+impl Dims {
+    pub(crate) fn of(cfg: &ModelCfg) -> Dims {
+        Dims {
+            b: cfg.batch,
+            s: cfg.seq,
+            d: cfg.d_model,
+            h: cfg.n_heads,
+            dh: cfg.d_model / cfg.n_heads,
+            f: cfg.d_ff,
+            c: cfg.n_classes,
+            n: cfg.batch * cfg.seq,
+            lscale: (cfg.lora_alpha / cfg.lora_rank as f64) as f32,
+        }
+    }
+}
+
+/// Named slice of a packed parameter row.
+pub(crate) fn part<'a>(row: &'a [f32], lo: &Layout, name: &str) -> &'a [f32] {
+    let (off, len) = lo.slice(name).expect("native layout entry");
+    &row[off..off + len]
+}
+
+/// Named mutable slice of a packed gradient row.
+pub(crate) fn part_mut<'a>(row: &'a mut [f32], lo: &Layout, name: &str) -> &'a mut [f32] {
+    let (off, len) = lo.slice(name).expect("native layout entry");
+    &mut row[off..off + len]
+}
+
+// ---------------------------------------------------------------------------
+// The backend
+// ---------------------------------------------------------------------------
+
+/// Runtime knobs for the native backend.
+#[derive(Clone, Copy, Debug)]
+pub struct NativeOptions {
+    /// Intra-client worker count for the parallel attention and
+    /// deferred-PEFT paths. 1 (the default) runs fully sequentially;
+    /// any value produces bit-identical results. Env:
+    /// `DROPPEFT_NATIVE_THREADS`.
+    pub threads: usize,
+    /// Run the naive reference implementation instead of the blocked
+    /// kernels — a debugging escape hatch. Env: `DROPPEFT_NATIVE_REF=1`.
+    pub reference: bool,
+}
+
+impl Default for NativeOptions {
+    fn default() -> Self {
+        NativeOptions {
+            threads: 1,
+            reference: false,
+        }
+    }
+}
+
+impl NativeOptions {
+    /// Read `DROPPEFT_NATIVE_THREADS` / `DROPPEFT_NATIVE_REF`.
+    pub fn from_env() -> NativeOptions {
+        let threads = std::env::var("DROPPEFT_NATIVE_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(1)
+            .max(1);
+        let reference = std::env::var("DROPPEFT_NATIVE_REF")
+            .map(|v| !matches!(v.trim(), "" | "0" | "false"))
+            .unwrap_or(false);
+        NativeOptions { threads, reference }
+    }
+}
+
+/// Pure-Rust executor. Always available; no artifacts needed.
+pub struct NativeBackend {
+    models: BTreeMap<String, ModelSpec>,
+    stats: Mutex<HashMap<String, ExecStats>>,
+    opts: NativeOptions,
+}
+
+impl NativeBackend {
+    /// Backend with options taken from the environment.
+    pub fn new() -> NativeBackend {
+        NativeBackend::with_options(NativeOptions::from_env())
+    }
+
+    /// Backend with an explicit intra-client worker count.
+    pub fn with_threads(threads: usize) -> NativeBackend {
+        NativeBackend::with_options(NativeOptions {
+            threads: threads.max(1),
+            ..NativeOptions::default()
+        })
+    }
+
+    /// Backend with fully explicit options (ignores the environment).
+    pub fn with_options(opts: NativeOptions) -> NativeBackend {
+        let mut models = BTreeMap::new();
+        for name in PRESETS {
+            let cfg = preset_cfg(name).expect("built-in preset");
+            models.insert(name.to_string(), build_model_spec(cfg));
+        }
+        NativeBackend {
+            models,
+            stats: Mutex::new(HashMap::new()),
+            opts,
+        }
+    }
+
+    /// The options this backend executes with.
+    pub fn options(&self) -> NativeOptions {
+        self.opts
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn presets(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    fn model(&self, preset: &str) -> Result<&ModelSpec> {
+        self.models.get(preset).with_context(|| {
+            format!(
+                "native backend has no preset {preset:?} (built in: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    fn execute(&self, preset: &str, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let spec = self.model(preset)?;
+        let art = spec.artifact(artifact)?;
+        ensure!(
+            inputs.len() == art.inputs.len(),
+            "{artifact}: got {} inputs, signature wants {}",
+            inputs.len(),
+            art.inputs.len()
+        );
+        for (v, ts) in inputs.iter().zip(&art.inputs) {
+            v.check(ts).with_context(|| format!("artifact {artifact}"))?;
+        }
+        let t0 = Instant::now();
+        let outs = run_artifact(spec, artifact, inputs, &self.opts)
+            .with_context(|| format!("native execution of {artifact}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        debug_assert_eq!(outs.len(), art.outputs.len());
+        let mut st = self.stats.lock().unwrap();
+        let e = st.entry(format!("{preset}/{artifact}")).or_default();
+        e.calls += 1;
+        e.total_secs += dt;
+        Ok(outs)
+    }
+
+    fn stats(&self) -> Vec<(String, ExecStats)> {
+        super::snapshot_stats(&self.stats)
+    }
+}
+
+/// Dispatch one validated artifact call to the optimized step or, when
+/// `opts.reference` is set, the naive oracle.
+fn run_artifact(
+    spec: &ModelSpec,
+    artifact: &str,
+    inputs: &[Value],
+    opts: &NativeOptions,
+) -> Result<Vec<Value>> {
+    if let Some(rest) = artifact.strip_prefix("train_") {
+        let (kind, k) = rest
+            .rsplit_once("_k")
+            .with_context(|| format!("malformed train artifact name {artifact:?}"))?;
+        let k: usize = k.parse().context("active-layer count")?;
+        if opts.reference {
+            reference::train_step(spec, kind, k, inputs)
+        } else {
+            step::train_step(spec, kind, k, inputs, opts.threads)
+        }
+    } else if let Some(kind) = artifact.strip_prefix("eval_") {
+        if opts.reference {
+            reference::eval_step(spec, kind, inputs, true)
+        } else {
+            step::eval_step(spec, kind, inputs, true, opts.threads)
+        }
+    } else if let Some(kind) = artifact.strip_prefix("infer_") {
+        if opts.reference {
+            reference::eval_step(spec, kind, inputs, false)
+        } else {
+            step::eval_step(spec, kind, inputs, false, opts.threads)
+        }
+    } else {
+        bail!("unknown artifact family {artifact:?}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(n: usize, rng: &mut Rng, scale: f64) -> Vec<f32> {
+        (0..n).map(|_| (rng.gauss() * scale) as f32).collect()
+    }
+
+    /// Base rows with layernorm gains at 1.0 so activations are sane.
+    fn rand_layers(spec: &ModelSpec, k: usize, rng: &mut Rng) -> Vec<f32> {
+        let p = spec.layer_layout.size;
+        let mut rows = rand_vec(k * p, rng, 0.05);
+        for li in 0..k {
+            for gain in ["ln1_g", "ln2_g"] {
+                let (off, len) = spec.layer_layout.slice(gain).unwrap();
+                rows[li * p + off..li * p + off + len].fill(1.0);
+            }
+        }
+        rows
+    }
+
+    fn rand_globals(spec: &ModelSpec, rng: &mut Rng) -> Vec<f32> {
+        let mut g = rand_vec(spec.globals_layout.size, rng, 0.05);
+        let (off, len) = spec.globals_layout.slice("lnf_g").unwrap();
+        g[off..off + len].fill(1.0);
+        g
+    }
+
+    fn rand_batch(cfg: &ModelCfg, rng: &mut Rng) -> (Vec<i32>, Vec<i32>) {
+        let tokens = (0..cfg.batch * cfg.seq)
+            .map(|_| rng.below(cfg.vocab) as i32)
+            .collect();
+        let labels = (0..cfg.batch)
+            .map(|_| rng.below(cfg.n_classes) as i32)
+            .collect();
+        (tokens, labels)
+    }
+
+    /// A full, well-formed `train_{kind}_k{K}` input tuple.
+    fn train_inputs(spec: &ModelSpec, kind: &str, k: usize, rng: &mut Rng) -> Vec<Value> {
+        let cfg = &spec.config;
+        let p = spec.layer_layout.size;
+        let q = spec.peft_layout(kind).unwrap().size;
+        let hl = spec.head_layout.size;
+        let (tokens, labels) = rand_batch(cfg, rng);
+        vec![
+            Value::f32(rand_layers(spec, k, rng), vec![k, p]),
+            Value::f32(rand_vec(k * q, rng, 0.05), vec![k, q]),
+            Value::f32(vec![0.0; k * q], vec![k, q]),
+            Value::f32(vec![0.0; k * q], vec![k, q]),
+            Value::f32(rand_globals(spec, rng), vec![spec.globals_layout.size]),
+            Value::f32(rand_vec(hl, rng, 0.05), vec![hl]),
+            Value::f32(vec![0.0; hl], vec![hl]),
+            Value::f32(vec![0.0; hl], vec![hl]),
+            Value::i32(tokens, vec![cfg.batch, cfg.seq]),
+            Value::i32(labels, vec![cfg.batch]),
+            Value::scalar_f32(1.0),
+            Value::scalar_f32(1e-3),
+        ]
+    }
+
+    /// A full `eval_{kind}` / `infer_{kind}` input tuple.
+    fn eval_inputs(spec: &ModelSpec, kind: &str, rng: &mut Rng, with_labels: bool) -> Vec<Value> {
+        let cfg = &spec.config;
+        let l = cfg.n_layers;
+        let p = spec.layer_layout.size;
+        let q = spec.peft_layout(kind).unwrap().size;
+        let hl = spec.head_layout.size;
+        let (tokens, labels) = rand_batch(cfg, rng);
+        let mut v = vec![
+            Value::f32(rand_layers(spec, l, rng), vec![l, p]),
+            Value::f32(rand_vec(l * q, rng, 0.05), vec![l, q]),
+            Value::f32(rand_globals(spec, rng), vec![spec.globals_layout.size]),
+            Value::f32(rand_vec(hl, rng, 0.05), vec![hl]),
+            Value::i32(tokens, vec![cfg.batch, cfg.seq]),
+        ];
+        if with_labels {
+            v.push(Value::i32(labels, vec![cfg.batch]));
+        }
+        v
+    }
+
+    fn assert_outputs_bit_identical(a: &[Value], b: &[Value], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: output arity");
+        for (i, (va, vb)) in a.iter().zip(b).enumerate() {
+            assert_eq!(va.shape(), vb.shape(), "{what}[{i}]: shape");
+            let (xa, xb) = (va.as_f32().unwrap(), vb.as_f32().unwrap());
+            for (j, (x, y)) in xa.iter().zip(xb).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}][{j}]: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn preset_layouts_are_contiguous_and_match_python_packing() {
+        let be = NativeBackend::new();
+        for name in PRESETS {
+            let spec = be.model(name).unwrap();
+            let cfg = &spec.config;
+            for lo in [
+                &spec.layer_layout,
+                &spec.lora_layout,
+                &spec.adapter_layout,
+                &spec.globals_layout,
+                &spec.head_layout,
+            ] {
+                let mut expect_off = 0;
+                for e in &lo.entries {
+                    assert_eq!(e.offset, expect_off, "{name}: entry {} offset", e.name);
+                    expect_off += e.elements();
+                }
+                assert_eq!(lo.size, expect_off, "{name}: layout size");
+            }
+            // spot-check the closed forms from python/compile/packing.py
+            let d = cfg.d_model;
+            assert_eq!(
+                spec.lora_layout.size,
+                4 * d * cfg.lora_rank,
+                "{name}: lora pack"
+            );
+            assert_eq!(
+                spec.adapter_layout.size,
+                2 * d * cfg.adapter_dim + cfg.adapter_dim + d,
+                "{name}: adapter pack"
+            );
+            assert_eq!(
+                spec.head_layout.size,
+                d * cfg.n_classes + cfg.n_classes,
+                "{name}: head pack"
+            );
+            assert_eq!(
+                spec.globals_layout.size,
+                cfg.vocab * d + cfg.seq * d + 2 * d,
+                "{name}: globals pack"
+            );
+            // every train K plus eval/infer for both kinds
+            assert_eq!(spec.artifacts.len(), 2 * (cfg.n_layers + 2));
+            assert_eq!(spec.max_train_k("lora"), cfg.n_layers);
+            assert_eq!(spec.max_train_k("adapter"), cfg.n_layers);
+        }
+    }
+
+    #[test]
+    fn execute_validates_shapes_and_names() {
+        let be = NativeBackend::new();
+        assert!(be.model("base").is_err(), "no compiled-only presets");
+        assert!(be.execute("tiny", "train_lora_k99", &[]).is_err());
+        assert!(be.execute("tiny", "bogus", &[]).is_err());
+        // wrong input count
+        assert!(be.execute("tiny", "train_lora_k1", &[]).is_err());
+    }
+
+    /// Identical inputs must produce bit-identical outputs — the native
+    /// backend's half of the engine-wide determinism contract.
+    #[test]
+    fn execution_is_bitwise_deterministic() {
+        let be = NativeBackend::new();
+        let spec = be.model("tiny").unwrap().clone();
+        let mut rng = Rng::seed_from(7);
+        let inputs = train_inputs(&spec, "lora", 2, &mut rng);
+        let a = be.execute("tiny", "train_lora_k2", &inputs).unwrap();
+        let b = be.execute("tiny", "train_lora_k2", &inputs).unwrap();
+        assert_eq!(a, b, "native train step is not deterministic");
+        assert_eq!(a.len(), 9);
+        let loss = a[6].scalar().unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        // something actually trained
+        assert_ne!(a[0].as_f32().unwrap(), inputs[1].as_f32().unwrap());
+    }
+
+    /// The load-bearing contract of the kernel rewrite: the optimized
+    /// step produces the exact bytes of the naive reference — every
+    /// output of every artifact family, for both PEFT kinds, across K.
+    #[test]
+    fn optimized_matches_reference_bitwise() {
+        let opt = NativeBackend::with_options(NativeOptions {
+            threads: 1,
+            reference: false,
+        });
+        let refb = NativeBackend::with_options(NativeOptions {
+            threads: 1,
+            reference: true,
+        });
+        let spec = opt.model("tiny").unwrap().clone();
+        let l = spec.config.n_layers;
+        for kind in ["lora", "adapter"] {
+            for k in [1, 2, l] {
+                let art = format!("train_{kind}_k{k}");
+                let mut rng = Rng::seed_from(17 + k as u64);
+                let inputs = train_inputs(&spec, kind, k, &mut rng);
+                let a = opt.execute("tiny", &art, &inputs).unwrap();
+                let b = refb.execute("tiny", &art, &inputs).unwrap();
+                assert_outputs_bit_identical(&a, &b, &art);
+            }
+            for (art, with_labels) in [(format!("eval_{kind}"), true), (format!("infer_{kind}"), false)]
+            {
+                let mut rng = Rng::seed_from(23);
+                let inputs = eval_inputs(&spec, kind, &mut rng, with_labels);
+                let a = opt.execute("tiny", &art, &inputs).unwrap();
+                let b = refb.execute("tiny", &art, &inputs).unwrap();
+                assert_outputs_bit_identical(&a, &b, &art);
+            }
+        }
+    }
+
+    /// Intra-client parallelism must be invisible in the results: the
+    /// fan-out only partitions output space, never a reduction.
+    #[test]
+    fn threads_do_not_change_results() {
+        let t1 = NativeBackend::with_threads(1);
+        let t4 = NativeBackend::with_threads(4);
+        let spec = t1.model("tiny").unwrap().clone();
+        for kind in ["lora", "adapter"] {
+            let art = format!("train_{kind}_k3");
+            let mut rng = Rng::seed_from(29);
+            let inputs = train_inputs(&spec, kind, 3, &mut rng);
+            let a = t1.execute("tiny", &art, &inputs).unwrap();
+            let b = t4.execute("tiny", &art, &inputs).unwrap();
+            assert_outputs_bit_identical(&a, &b, &art);
+
+            let mut rng = Rng::seed_from(31);
+            let inputs = eval_inputs(&spec, kind, &mut rng, true);
+            let art = format!("eval_{kind}");
+            let a = t1.execute("tiny", &art, &inputs).unwrap();
+            let b = t4.execute("tiny", &art, &inputs).unwrap();
+            assert_outputs_bit_identical(&a, &b, &art);
+        }
+    }
+
+    /// The backward pass against a directional finite difference of the
+    /// full-depth loss: run `train_{kind}_kL` with cold optimizer moments
+    /// (so `m_out = 0.1 * grad` recovers the raw gradients exactly), then
+    /// compare `grad · u` with `(loss(p + h·u) - loss(p - h·u)) / 2h`
+    /// measured through the `eval_{kind}` artifact — which computes the
+    /// *same* mean-CE over the same K=L forward pass. Exercises the fused
+    /// backward kernels end to end.
+    #[test]
+    fn train_gradients_match_finite_difference() {
+        let be = NativeBackend::new();
+        let spec = be.model("tiny").unwrap().clone();
+        let cfg = spec.config.clone();
+        let l = cfg.n_layers;
+        let p = spec.layer_layout.size;
+        for kind in ["lora", "adapter"] {
+            let q = spec.peft_layout(kind).unwrap().size;
+            let h_len = spec.head_layout.size;
+            let mut rng = Rng::seed_from(11);
+            let layers = rand_layers(&spec, l, &mut rng);
+            let peft = rand_vec(l * q, &mut rng, 0.05);
+            let globals = rand_globals(&spec, &mut rng);
+            let head = rand_vec(h_len, &mut rng, 0.05);
+            let (tokens, labels) = rand_batch(&cfg, &mut rng);
+
+            let train_inputs = vec![
+                Value::f32(layers.clone(), vec![l, p]),
+                Value::f32(peft.clone(), vec![l, q]),
+                Value::f32(vec![0.0; l * q], vec![l, q]),
+                Value::f32(vec![0.0; l * q], vec![l, q]),
+                Value::f32(globals.clone(), vec![spec.globals_layout.size]),
+                Value::f32(head.clone(), vec![h_len]),
+                Value::f32(vec![0.0; h_len], vec![h_len]),
+                Value::f32(vec![0.0; h_len], vec![h_len]),
+                Value::i32(tokens.clone(), vec![cfg.batch, cfg.seq]),
+                Value::i32(labels.clone(), vec![cfg.batch]),
+                Value::scalar_f32(1.0),
+                Value::scalar_f32(1e-3),
+            ];
+            let outs = be
+                .execute("tiny", &format!("train_{kind}_k{l}"), &train_inputs)
+                .unwrap();
+            // m' = 0.9*0 + 0.1*g  =>  g = 10*m'
+            let g_peft: Vec<f32> = outs[1].as_f32().unwrap().iter().map(|&m| m * 10.0).collect();
+            let g_head: Vec<f32> = outs[4].as_f32().unwrap().iter().map(|&m| m * 10.0).collect();
+
+            let mut drng = Rng::seed_from(13);
+            let u_peft: Vec<f32> = (0..l * q)
+                .map(|_| if drng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                .collect();
+            let u_head: Vec<f32> = (0..h_len)
+                .map(|_| if drng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                .collect();
+            let analytic: f64 = g_peft
+                .iter()
+                .zip(&u_peft)
+                .chain(g_head.iter().zip(&u_head))
+                .map(|(&g, &u)| g as f64 * u as f64)
+                .sum();
+
+            let eval_loss = |eps: f32| -> f64 {
+                let pp: Vec<f32> = peft.iter().zip(&u_peft).map(|(&x, &u)| x + eps * u).collect();
+                let hh: Vec<f32> = head.iter().zip(&u_head).map(|(&x, &u)| x + eps * u).collect();
+                let inputs = vec![
+                    Value::f32(layers.clone(), vec![l, p]),
+                    Value::f32(pp, vec![l, q]),
+                    Value::f32(globals.clone(), vec![spec.globals_layout.size]),
+                    Value::f32(hh, vec![h_len]),
+                    Value::i32(tokens.clone(), vec![cfg.batch, cfg.seq]),
+                    Value::i32(labels.clone(), vec![cfg.batch]),
+                ];
+                be.execute("tiny", &format!("eval_{kind}"), &inputs).unwrap()[0]
+                    .scalar()
+                    .unwrap() as f64
+            };
+            let h_step = 2e-3f32;
+            let fd = (eval_loss(h_step) - eval_loss(-h_step)) / (2.0 * h_step as f64);
+            let tol = 0.05 * analytic.abs() + 5e-3;
+            assert!(
+                (fd - analytic).abs() <= tol,
+                "{kind}: finite difference {fd} vs analytic {analytic} (tol {tol})"
+            );
+        }
+    }
+
+    /// Repeated AdamW steps on one batch must overfit it (loss falls),
+    /// the same property the XLA integration suite asserts.
+    #[test]
+    fn repeated_steps_on_one_batch_reduce_loss() {
+        let be = NativeBackend::new();
+        let spec = be.model("tiny").unwrap().clone();
+        let cfg = spec.config.clone();
+        let l = cfg.n_layers;
+        let p = spec.layer_layout.size;
+        let q = spec.lora_layout.size;
+        let h_len = spec.head_layout.size;
+        let mut rng = Rng::seed_from(5);
+        let layers = rand_layers(&spec, l, &mut rng);
+        let mut peft = rand_vec(l * q, &mut rng, 0.05);
+        let globals = rand_globals(&spec, &mut rng);
+        let mut head = rand_vec(h_len, &mut rng, 0.05);
+        let mut opt = (
+            vec![0.0f32; l * q],
+            vec![0.0f32; l * q],
+            vec![0.0f32; h_len],
+            vec![0.0f32; h_len],
+        );
+        let (tokens, labels) = rand_batch(&cfg, &mut rng);
+        let mut losses = Vec::new();
+        for step in 1..=10 {
+            let inputs = vec![
+                Value::f32(layers.clone(), vec![l, p]),
+                Value::f32(peft.clone(), vec![l, q]),
+                Value::f32(opt.0.clone(), vec![l, q]),
+                Value::f32(opt.1.clone(), vec![l, q]),
+                Value::f32(globals.clone(), vec![spec.globals_layout.size]),
+                Value::f32(head.clone(), vec![h_len]),
+                Value::f32(opt.2.clone(), vec![h_len]),
+                Value::f32(opt.3.clone(), vec![h_len]),
+                Value::i32(tokens.clone(), vec![cfg.batch, cfg.seq]),
+                Value::i32(labels.clone(), vec![cfg.batch]),
+                Value::scalar_f32(step as f32),
+                Value::scalar_f32(5e-3),
+            ];
+            let outs = be
+                .execute("tiny", &format!("train_lora_k{l}"), &inputs)
+                .unwrap();
+            peft = outs[0].as_f32().unwrap().to_vec();
+            opt.0 = outs[1].as_f32().unwrap().to_vec();
+            opt.1 = outs[2].as_f32().unwrap().to_vec();
+            head = outs[3].as_f32().unwrap().to_vec();
+            opt.2 = outs[4].as_f32().unwrap().to_vec();
+            opt.3 = outs[5].as_f32().unwrap().to_vec();
+            losses.push(outs[6].scalar().unwrap());
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] - 0.05),
+            "no overfitting: {losses:?}"
+        );
+    }
+}

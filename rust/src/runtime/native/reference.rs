@@ -1,0 +1,782 @@
+//! The scalar reference implementation of the native compute core.
+//!
+//! This is the original allocation-per-call, naive-loop executor, kept
+//! verbatim and intentionally **not** sharing helpers with
+//! [`super::kernels`]: it serves as the independent oracle the
+//! optimized path is tested against (bit-for-bit, see the parity tests
+//! in `kernels.rs` and the whole-step tests in the parent module), as
+//! the baseline the benches measure speedups over, and as a debugging
+//! fallback selectable at runtime via `DROPPEFT_NATIVE_REF=1`.
+//!
+//! The math mirrors `python/compile/model.py` (and the kernel oracles
+//! in `python/compile/kernels/ref.py`): post-LN BERT-style encoder with
+//! LoRA on the attention Q/V projections or a Houlsby bottleneck
+//! adapter after the FFN, tanh-approximate GeLU, layernorm eps 1e-5,
+//! softmax attention scaled by 1/sqrt(d_head), mean pooling, a linear
+//! classifier head, mean cross-entropy loss, and decoupled weight-decay
+//! AdamW (b1 0.9, b2 0.999, eps 1e-8, wd 0.01). Only the PEFT rows and
+//! the head are trainable; the frozen base gets no gradients (the
+//! backward pass still flows *through* every active layer so earlier
+//! layers' PEFT parameters see the full chain). All arithmetic is
+//! sequential f32, so identical inputs produce bit-identical outputs.
+
+use anyhow::{ensure, Result};
+
+use super::{part, part_mut, Dims};
+use crate::runtime::manifest::{Layout, ModelCfg, ModelSpec};
+use crate::runtime::tensor::Value;
+
+// ---------------------------------------------------------------------------
+// f32 math helpers (naive loops — the kernel oracles)
+// ---------------------------------------------------------------------------
+
+/// `a [m,k] @ b [k,n]` — f32 accumulation, ikj order.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in a[i * k..(i + 1) * k].iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// `a [m,k] @ b^T` where `b` is `[n,k]` — row-dot form.
+pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// `a^T @ b` where `a` is `[k,m]` and `b` is `[k,n]`.
+pub fn matmul_at(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Add a `[n]` bias row to every row of `x [rows,n]`.
+pub fn add_bias(x: &mut [f32], bias: &[f32]) {
+    let n = bias.len();
+    for row in x.chunks_exact_mut(n) {
+        for (o, &b) in row.iter_mut().zip(bias) {
+            *o += b;
+        }
+    }
+}
+
+/// Column sums of `x [rows,n]`, accumulated into `out [n]`.
+pub fn colsum_into(x: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), n);
+    for row in x.chunks_exact(n) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+}
+
+const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+
+/// Tanh-approximate GeLU (the `jax.nn.gelu` default the model uses).
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+pub fn gelu_prime(x: f32) -> f32 {
+    let u = SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044_715 * x * x)
+}
+
+const LN_EPS: f32 = 1e-5;
+
+/// Row-wise layernorm over the last axis of `x [rows,d]`.
+pub fn layernorm(x: &[f32], gamma: &[f32], beta: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    for (xr, or) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|&t| (t - mu) * (t - mu)).sum::<f32>() / d as f32;
+        let rstd = 1.0 / (var + LN_EPS).sqrt();
+        for j in 0..d {
+            or[j] = (xr[j] - mu) * rstd * gamma[j] + beta[j];
+        }
+    }
+    out
+}
+
+/// Closed-form layernorm input gradient (gamma/beta are frozen base
+/// params here, so their gradients are not computed).
+pub fn layernorm_bwd(x: &[f32], gamma: &[f32], dy: &[f32], d: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; x.len()];
+    for ((xr, dyr), dxr) in x
+        .chunks_exact(d)
+        .zip(dy.chunks_exact(d))
+        .zip(dx.chunks_exact_mut(d))
+    {
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|&t| (t - mu) * (t - mu)).sum::<f32>() / d as f32;
+        let rstd = 1.0 / (var + LN_EPS).sqrt();
+        let mut mean_gy = 0.0f32;
+        let mut mean_gyx = 0.0f32;
+        for j in 0..d {
+            let gy = dyr[j] * gamma[j];
+            mean_gy += gy;
+            mean_gyx += gy * (xr[j] - mu) * rstd;
+        }
+        mean_gy /= d as f32;
+        mean_gyx /= d as f32;
+        for j in 0..d {
+            let gy = dyr[j] * gamma[j];
+            let xhat = (xr[j] - mu) * rstd;
+            dxr[j] = (gy - mean_gy - xhat * mean_gyx) * rstd;
+        }
+    }
+    dx
+}
+
+/// Decoupled-weight-decay Adam, identical on rows and vectors.
+pub fn adamw(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], step: f32, lr: f32) {
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    const WD: f32 = 0.01;
+    let bc1 = 1.0 - B1.powf(step);
+    let bc2 = 1.0 - B2.powf(step);
+    for i in 0..p.len() {
+        let gi = g[i];
+        m[i] = B1 * m[i] + (1.0 - B1) * gi;
+        v[i] = B2 * v[i] + (1.0 - B2) * gi * gi;
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        p[i] -= lr * (mhat / (vhat.sqrt() + EPS) + WD * p[i]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward / backward
+// ---------------------------------------------------------------------------
+
+/// Everything one layer's backward pass needs from its forward pass.
+struct LayerCache {
+    /// layer input `[N,D]`
+    x: Vec<f32>,
+    /// head-split projections `[B*H, S, Dh]`
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// attention context after head-combine, before the output proj `[N,D]`
+    octx: Vec<f32>,
+    /// pre-LN1 residual sum `[N,D]`
+    a1: Vec<f32>,
+    /// post-LN1 (FFN input) `[N,D]`
+    h1: Vec<f32>,
+    /// FFN pre-activation `[N,F]`
+    z1: Vec<f32>,
+    /// gelu(z1) `[N,F]`
+    g1: Vec<f32>,
+    /// FFN output before the adapter `[N,D]`
+    z2: Vec<f32>,
+    /// adapter bottleneck pre-activation `[N,A]` (empty for LoRA)
+    ad_pre: Vec<f32>,
+    /// gelu(ad_pre) `[N,A]` (empty for LoRA)
+    ad_act: Vec<f32>,
+    /// pre-LN2 residual sum `[N,D]`
+    a2: Vec<f32>,
+    /// x @ q_a `[N,r]` (LoRA only)
+    xa_q: Vec<f32>,
+    /// x @ v_a `[N,r]` (LoRA only)
+    xa_v: Vec<f32>,
+}
+
+/// Split `[N,D]` rows into head-major `[B*H, S, Dh]`.
+fn split_heads(x: &[f32], dm: Dims) -> Vec<f32> {
+    let mut out = vec![0.0f32; dm.n * dm.d];
+    for b in 0..dm.b {
+        for s in 0..dm.s {
+            let src = &x[(b * dm.s + s) * dm.d..(b * dm.s + s + 1) * dm.d];
+            for h in 0..dm.h {
+                let dst = ((b * dm.h + h) * dm.s + s) * dm.dh;
+                out[dst..dst + dm.dh].copy_from_slice(&src[h * dm.dh..(h + 1) * dm.dh]);
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`split_heads`].
+fn combine_heads(x: &[f32], dm: Dims) -> Vec<f32> {
+    let mut out = vec![0.0f32; dm.n * dm.d];
+    for b in 0..dm.b {
+        for s in 0..dm.s {
+            let dst = &mut out[(b * dm.s + s) * dm.d..(b * dm.s + s + 1) * dm.d];
+            for h in 0..dm.h {
+                let src = ((b * dm.h + h) * dm.s + s) * dm.dh;
+                dst[h * dm.dh..(h + 1) * dm.dh].copy_from_slice(&x[src..src + dm.dh]);
+            }
+        }
+    }
+    out
+}
+
+/// Row-wise softmax over `[rows,n]` (f32, max-subtracted).
+pub fn softmax_rows(x: &mut [f32], n: usize) {
+    for row in x.chunks_exact_mut(n) {
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - maxv).exp();
+            denom += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= denom;
+        }
+    }
+}
+
+/// One post-LN transformer layer forward; returns the cache and output.
+fn layer_fwd(
+    dm: Dims,
+    kind: &str,
+    x: Vec<f32>,
+    lrow: &[f32],
+    prow: &[f32],
+    layer_lo: &Layout,
+    peft_lo: &Layout,
+) -> (LayerCache, Vec<f32>) {
+    let (n, d) = (dm.n, dm.d);
+    let lora = kind == "lora";
+
+    // ---- attention projections (LoRA on Q/V when enabled) ----
+    let mut q = matmul(&x, part(lrow, layer_lo, "wq"), n, d, d);
+    let mut v = matmul(&x, part(lrow, layer_lo, "wv"), n, d, d);
+    let (mut xa_q, mut xa_v) = (Vec::new(), Vec::new());
+    if lora {
+        let r = peft_lo.entry("q_a").expect("q_a").shape[1];
+        xa_q = matmul(&x, part(prow, peft_lo, "q_a"), n, d, r);
+        let low_q = matmul(&xa_q, part(prow, peft_lo, "q_b"), n, r, d);
+        for (qo, lo) in q.iter_mut().zip(&low_q) {
+            *qo += dm.lscale * lo;
+        }
+        xa_v = matmul(&x, part(prow, peft_lo, "v_a"), n, d, r);
+        let low_v = matmul(&xa_v, part(prow, peft_lo, "v_b"), n, r, d);
+        for (vo, lo) in v.iter_mut().zip(&low_v) {
+            *vo += dm.lscale * lo;
+        }
+    }
+    add_bias(&mut q, part(lrow, layer_lo, "wq_b"));
+    add_bias(&mut v, part(lrow, layer_lo, "wv_b"));
+    let mut k = matmul(&x, part(lrow, layer_lo, "wk"), n, d, d);
+    add_bias(&mut k, part(lrow, layer_lo, "wk_b"));
+
+    // ---- scaled-dot-product attention per (batch, head) ----
+    let qs = split_heads(&q, dm);
+    let ks = split_heads(&k, dm);
+    let vs = split_heads(&v, dm);
+    let rscale = 1.0 / (dm.dh as f32).sqrt();
+    let mut ctx = vec![0.0f32; dm.n * dm.d];
+    for bh in 0..dm.b * dm.h {
+        let sl = bh * dm.s * dm.dh;
+        let qb = &qs[sl..sl + dm.s * dm.dh];
+        let kb = &ks[sl..sl + dm.s * dm.dh];
+        let vb = &vs[sl..sl + dm.s * dm.dh];
+        let mut logits = matmul_bt(qb, kb, dm.s, dm.dh, dm.s);
+        for l in logits.iter_mut() {
+            *l *= rscale;
+        }
+        softmax_rows(&mut logits, dm.s);
+        let o = matmul(&logits, vb, dm.s, dm.s, dm.dh);
+        ctx[sl..sl + dm.s * dm.dh].copy_from_slice(&o);
+    }
+    let octx = combine_heads(&ctx, dm);
+    let mut attn = matmul(&octx, part(lrow, layer_lo, "wo"), n, d, d);
+    add_bias(&mut attn, part(lrow, layer_lo, "wo_b"));
+
+    // ---- residual + LN1 ----
+    let mut a1 = x.clone();
+    for (ao, &at) in a1.iter_mut().zip(&attn) {
+        *ao += at;
+    }
+    let h1 = layernorm(&a1, part(lrow, layer_lo, "ln1_g"), part(lrow, layer_lo, "ln1_b"), d);
+
+    // ---- FFN (+ adapter) ----
+    let mut z1 = matmul(&h1, part(lrow, layer_lo, "w1"), n, d, dm.f);
+    add_bias(&mut z1, part(lrow, layer_lo, "w1_b"));
+    let g1: Vec<f32> = z1.iter().map(|&t| gelu(t)).collect();
+    let mut z2 = matmul(&g1, part(lrow, layer_lo, "w2"), n, dm.f, d);
+    add_bias(&mut z2, part(lrow, layer_lo, "w2_b"));
+    let (mut ad_pre, mut ad_act) = (Vec::new(), Vec::new());
+    let mut zf = z2.clone();
+    if kind == "adapter" {
+        let a = peft_lo.entry("down").expect("down").shape[1];
+        ad_pre = matmul(&z2, part(prow, peft_lo, "down"), n, d, a);
+        add_bias(&mut ad_pre, part(prow, peft_lo, "down_b"));
+        ad_act = ad_pre.iter().map(|&t| gelu(t)).collect();
+        let mut up = matmul(&ad_act, part(prow, peft_lo, "up"), n, a, d);
+        add_bias(&mut up, part(prow, peft_lo, "up_b"));
+        for (zo, &u) in zf.iter_mut().zip(&up) {
+            *zo += u;
+        }
+    }
+
+    // ---- residual + LN2 ----
+    let mut a2 = h1.clone();
+    for (ao, &z) in a2.iter_mut().zip(&zf) {
+        *ao += z;
+    }
+    let out = layernorm(&a2, part(lrow, layer_lo, "ln2_g"), part(lrow, layer_lo, "ln2_b"), d);
+
+    (
+        LayerCache {
+            x,
+            q: qs,
+            k: ks,
+            v: vs,
+            octx,
+            a1,
+            h1,
+            z1,
+            g1,
+            z2,
+            ad_pre,
+            ad_act,
+            a2,
+            xa_q,
+            xa_v,
+        },
+        out,
+    )
+}
+
+/// One layer's backward pass: given d(loss)/d(layer output), write this
+/// layer's PEFT gradients into `g_row` and return d(loss)/d(layer input).
+#[allow(clippy::too_many_arguments)]
+fn layer_bwd(
+    dm: Dims,
+    kind: &str,
+    cache: &LayerCache,
+    lrow: &[f32],
+    prow: &[f32],
+    layer_lo: &Layout,
+    peft_lo: &Layout,
+    dh_out: &[f32],
+    g_row: &mut [f32],
+) -> Vec<f32> {
+    let (n, d) = (dm.n, dm.d);
+    let lora = kind == "lora";
+
+    // LN2
+    let da2 = layernorm_bwd(&cache.a2, part(lrow, layer_lo, "ln2_g"), dh_out, d);
+    let mut dh1 = da2.clone(); // residual branch
+    let dz = &da2; // FFN branch
+
+    // adapter (bottleneck after the FFN, internal residual)
+    let dz2: Vec<f32> = if kind == "adapter" {
+        let a = peft_lo.entry("down").expect("down").shape[1];
+        // out = gelu(z2@down + down_b) @ up + up_b; zf = z2 + out
+        colsum_into(dz, d, part_mut(g_row, peft_lo, "up_b"));
+        let g_up = matmul_at(&cache.ad_act, dz, n, a, d);
+        for (go, &g) in part_mut(g_row, peft_lo, "up").iter_mut().zip(&g_up) {
+            *go += g;
+        }
+        let dad_act = matmul_bt(dz, part(prow, peft_lo, "up"), n, d, a);
+        let dad_pre: Vec<f32> = dad_act
+            .iter()
+            .zip(&cache.ad_pre)
+            .map(|(&g, &z)| g * gelu_prime(z))
+            .collect();
+        colsum_into(&dad_pre, a, part_mut(g_row, peft_lo, "down_b"));
+        let g_down = matmul_at(&cache.z2, &dad_pre, n, d, a);
+        for (go, &g) in part_mut(g_row, peft_lo, "down").iter_mut().zip(&g_down) {
+            *go += g;
+        }
+        let mut dz2 = dz.clone();
+        let through = matmul_bt(&dad_pre, part(prow, peft_lo, "down"), n, a, d);
+        for (o, &t) in dz2.iter_mut().zip(&through) {
+            *o += t;
+        }
+        dz2
+    } else {
+        dz.clone()
+    };
+
+    // FFN core (frozen base: w1/w2 gradients are not needed)
+    let dg1 = matmul_bt(&dz2, part(lrow, layer_lo, "w2"), n, d, dm.f);
+    let dz1: Vec<f32> = dg1
+        .iter()
+        .zip(&cache.z1)
+        .map(|(&g, &z)| g * gelu_prime(z))
+        .collect();
+    let dx_ffn = matmul_bt(&dz1, part(lrow, layer_lo, "w1"), n, dm.f, d);
+    for (o, &t) in dh1.iter_mut().zip(&dx_ffn) {
+        *o += t;
+    }
+
+    // LN1
+    let da1 = layernorm_bwd(&cache.a1, part(lrow, layer_lo, "ln1_g"), &dh1, d);
+    let mut dx = da1.clone(); // residual branch
+    let dattn = &da1;
+
+    // output projection
+    let doctx = matmul_bt(dattn, part(lrow, layer_lo, "wo"), n, d, d);
+    let dctx = split_heads(&doctx, dm);
+
+    // attention core (recompute the softmax, standard gradients)
+    let rscale = 1.0 / (dm.dh as f32).sqrt();
+    let mut dqs = vec![0.0f32; dm.n * dm.d];
+    let mut dks = vec![0.0f32; dm.n * dm.d];
+    let mut dvs = vec![0.0f32; dm.n * dm.d];
+    for bh in 0..dm.b * dm.h {
+        let sl = bh * dm.s * dm.dh;
+        let qb = &cache.q[sl..sl + dm.s * dm.dh];
+        let kb = &cache.k[sl..sl + dm.s * dm.dh];
+        let vb = &cache.v[sl..sl + dm.s * dm.dh];
+        let gb = &dctx[sl..sl + dm.s * dm.dh];
+        let mut p = matmul_bt(qb, kb, dm.s, dm.dh, dm.s);
+        for l in p.iter_mut() {
+            *l *= rscale;
+        }
+        softmax_rows(&mut p, dm.s);
+        dvs[sl..sl + dm.s * dm.dh].copy_from_slice(&matmul_at(&p, gb, dm.s, dm.s, dm.dh));
+        let dp = matmul_bt(gb, vb, dm.s, dm.dh, dm.s);
+        let mut dlog = vec![0.0f32; dm.s * dm.s];
+        for s in 0..dm.s {
+            let pr = &p[s * dm.s..(s + 1) * dm.s];
+            let dpr = &dp[s * dm.s..(s + 1) * dm.s];
+            let dot: f32 = pr.iter().zip(dpr).map(|(&a, &b)| a * b).sum();
+            for t in 0..dm.s {
+                dlog[s * dm.s + t] = pr[t] * (dpr[t] - dot) * rscale;
+            }
+        }
+        dqs[sl..sl + dm.s * dm.dh].copy_from_slice(&matmul(&dlog, kb, dm.s, dm.s, dm.dh));
+        dks[sl..sl + dm.s * dm.dh].copy_from_slice(&matmul_at(&dlog, qb, dm.s, dm.s, dm.dh));
+    }
+    let dq = combine_heads(&dqs, dm);
+    let dk = combine_heads(&dks, dm);
+    let dv = combine_heads(&dvs, dm);
+
+    // Q/V projections (LoRA factors are the trainables; K is plain)
+    if lora {
+        let r = peft_lo.entry("q_a").expect("q_a").shape[1];
+        for (proj, dproj, xa) in [("q", &dq, &cache.xa_q), ("v", &dv, &cache.xa_v)] {
+            let a_name = format!("{proj}_a");
+            let b_name = format!("{proj}_b");
+            let mut g_b = matmul_at(xa, dproj, n, r, d);
+            for g in g_b.iter_mut() {
+                *g *= dm.lscale;
+            }
+            for (go, &g) in part_mut(g_row, peft_lo, &b_name).iter_mut().zip(&g_b) {
+                *go += g;
+            }
+            let mut dxa = matmul_bt(dproj, part(prow, peft_lo, &b_name), n, d, r);
+            for g in dxa.iter_mut() {
+                *g *= dm.lscale;
+            }
+            let g_a = matmul_at(&cache.x, &dxa, n, d, r);
+            for (go, &g) in part_mut(g_row, peft_lo, &a_name).iter_mut().zip(&g_a) {
+                *go += g;
+            }
+            let through = matmul_bt(&dxa, part(prow, peft_lo, &a_name), n, r, d);
+            for (o, &t) in dx.iter_mut().zip(&through) {
+                *o += t;
+            }
+        }
+    }
+    for (w, dproj) in [("wq", &dq), ("wk", &dk), ("wv", &dv)] {
+        let through = matmul_bt(dproj, part(lrow, layer_lo, w), n, d, d);
+        for (o, &t) in dx.iter_mut().zip(&through) {
+            *o += t;
+        }
+    }
+    dx
+}
+
+/// Token embedding + positional table → `[N,D]` activations.
+fn embed(
+    cfg: &ModelCfg,
+    globals: &[f32],
+    glob_lo: &Layout,
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    let (d, seq) = (cfg.d_model, cfg.seq);
+    let emb = part(globals, glob_lo, "embedding");
+    let pos = part(globals, glob_lo, "positional");
+    let mut h = vec![0.0f32; cfg.batch * seq * d];
+    for b in 0..cfg.batch {
+        for s in 0..seq {
+            let t = tokens[b * seq + s];
+            ensure!(
+                t >= 0 && (t as usize) < cfg.vocab,
+                "token id {t} out of range for vocab {}",
+                cfg.vocab
+            );
+            let erow = &emb[(t as usize) * d..(t as usize + 1) * d];
+            let o = &mut h[(b * seq + s) * d..(b * seq + s + 1) * d];
+            for j in 0..d {
+                o[j] = erow[j] + pos[s * d + j];
+            }
+        }
+    }
+    Ok(h)
+}
+
+/// Final layernorm → mean pooling → classifier head.
+/// Returns (pre-LN input, post-LN activations, pooled, logits).
+fn head_fwd(
+    dm: Dims,
+    globals: &[f32],
+    glob_lo: &Layout,
+    head: &[f32],
+    head_lo: &Layout,
+    h: Vec<f32>,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let hf = layernorm(&h, part(globals, glob_lo, "lnf_g"), part(globals, glob_lo, "lnf_b"), dm.d);
+    let mut pooled = vec![0.0f32; dm.b * dm.d];
+    for b in 0..dm.b {
+        let prow = &mut pooled[b * dm.d..(b + 1) * dm.d];
+        for s in 0..dm.s {
+            let hrow = &hf[(b * dm.s + s) * dm.d..(b * dm.s + s + 1) * dm.d];
+            for j in 0..dm.d {
+                prow[j] += hrow[j];
+            }
+        }
+        for j in prow.iter_mut() {
+            *j /= dm.s as f32;
+        }
+    }
+    let mut logits = matmul(&pooled, part(head, head_lo, "head_w"), dm.b, dm.d, dm.c);
+    add_bias(&mut logits, part(head, head_lo, "head_b"));
+    (h, hf, pooled, logits)
+}
+
+/// Mean cross-entropy + argmax-correct count (and, for training, the
+/// logit gradients).
+fn loss_and_metrics(
+    dm: Dims,
+    logits: &[f32],
+    labels: &[i32],
+    want_grad: bool,
+) -> Result<(f32, f32, Vec<f32>)> {
+    let (b, c) = (dm.b, dm.c);
+    let mut loss_sum = 0.0f32;
+    let mut correct = 0.0f32;
+    let mut dlogits = vec![0.0f32; if want_grad { b * c } else { 0 }];
+    for bi in 0..b {
+        let row = &logits[bi * c..(bi + 1) * c];
+        let lab = labels[bi];
+        ensure!(
+            lab >= 0 && (lab as usize) < c,
+            "label {lab} out of range for {c} classes"
+        );
+        let lab = lab as usize;
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for &v in row {
+            denom += (v - maxv).exp();
+        }
+        let logz = maxv + denom.ln();
+        loss_sum += logz - row[lab];
+        let mut am = 0;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[am] {
+                am = j;
+            }
+        }
+        if am == lab {
+            correct += 1.0;
+        }
+        if want_grad {
+            for j in 0..c {
+                let pj = (row[j] - logz).exp();
+                dlogits[bi * c + j] = (pj - if j == lab { 1.0 } else { 0.0 }) / b as f32;
+            }
+        }
+    }
+    Ok((loss_sum / b as f32, correct, dlogits))
+}
+
+/// One STLD mini-batch over K active layers: forward, backward over the
+/// PEFT rows + head, AdamW — the `train_{kind}_k{K}` artifact.
+pub(crate) fn train_step(
+    spec: &ModelSpec,
+    kind: &str,
+    k: usize,
+    inputs: &[Value],
+) -> Result<Vec<Value>> {
+    let cfg = &spec.config;
+    let dm = Dims::of(cfg);
+    let layer_lo = &spec.layer_layout;
+    let peft_lo = spec.peft_layout(kind)?;
+    let (p, q) = (layer_lo.size, peft_lo.size);
+    let glob_lo = &spec.globals_layout;
+    let head_lo = &spec.head_layout;
+
+    let layers = inputs[0].as_f32()?;
+    let peft_in = inputs[1].as_f32()?;
+    let m_in = inputs[2].as_f32()?;
+    let v_in = inputs[3].as_f32()?;
+    let globals = inputs[4].as_f32()?;
+    let head_in = inputs[5].as_f32()?;
+    let head_m_in = inputs[6].as_f32()?;
+    let head_v_in = inputs[7].as_f32()?;
+    let tokens = inputs[8].as_i32()?;
+    let labels = inputs[9].as_i32()?;
+    let step = inputs[10].scalar()?;
+    let lr = inputs[11].scalar()?;
+
+    // ---- forward ----
+    let mut h = embed(cfg, globals, glob_lo, tokens)?;
+    let mut caches = Vec::with_capacity(k);
+    for li in 0..k {
+        let (cache, out) = layer_fwd(
+            dm,
+            kind,
+            h,
+            &layers[li * p..(li + 1) * p],
+            &peft_in[li * q..(li + 1) * q],
+            layer_lo,
+            peft_lo,
+        );
+        caches.push(cache);
+        h = out;
+    }
+    let (hn, _hf, pooled, logits) = head_fwd(dm, globals, glob_lo, head_in, head_lo, h);
+    let (loss, correct, dlogits) = loss_and_metrics(dm, logits.as_slice(), labels, true)?;
+
+    // ---- backward ----
+    let mut g_head = vec![0.0f32; head_lo.size];
+    let g_w = matmul_at(&pooled, &dlogits, dm.b, dm.d, dm.c);
+    part_mut(&mut g_head, head_lo, "head_w").copy_from_slice(&g_w);
+    colsum_into(&dlogits, dm.c, part_mut(&mut g_head, head_lo, "head_b"));
+    let dpooled = matmul_bt(&dlogits, part(head_in, head_lo, "head_w"), dm.b, dm.c, dm.d);
+    let mut dhf = vec![0.0f32; dm.n * dm.d];
+    for b in 0..dm.b {
+        for s in 0..dm.s {
+            let src = &dpooled[b * dm.d..(b + 1) * dm.d];
+            let dst = &mut dhf[(b * dm.s + s) * dm.d..(b * dm.s + s + 1) * dm.d];
+            for j in 0..dm.d {
+                dst[j] = src[j] / dm.s as f32;
+            }
+        }
+    }
+    let mut dh = layernorm_bwd(&hn, part(globals, glob_lo, "lnf_g"), &dhf, dm.d);
+
+    let mut g_peft = vec![0.0f32; k * q];
+    for li in (0..k).rev() {
+        dh = layer_bwd(
+            dm,
+            kind,
+            &caches[li],
+            &layers[li * p..(li + 1) * p],
+            &peft_in[li * q..(li + 1) * q],
+            layer_lo,
+            peft_lo,
+            &dh,
+            &mut g_peft[li * q..(li + 1) * q],
+        );
+    }
+
+    // per-layer PEFT gradient l2 norms (PTLS importance, Eq. 6)
+    let grad_norms: Vec<f32> = (0..k)
+        .map(|li| {
+            let row = &g_peft[li * q..(li + 1) * q];
+            (row.iter().map(|&g| g * g).sum::<f32>() + 1e-12).sqrt()
+        })
+        .collect();
+
+    // ---- AdamW ----
+    let mut peft = peft_in.to_vec();
+    let mut opt_m = m_in.to_vec();
+    let mut opt_v = v_in.to_vec();
+    adamw(&mut peft, &g_peft, &mut opt_m, &mut opt_v, step, lr);
+    let mut head = head_in.to_vec();
+    let mut head_m = head_m_in.to_vec();
+    let mut head_v = head_v_in.to_vec();
+    adamw(&mut head, &g_head, &mut head_m, &mut head_v, step, lr);
+
+    let hsize = head_lo.size;
+    Ok(vec![
+        Value::f32(peft, vec![k, q]),
+        Value::f32(opt_m, vec![k, q]),
+        Value::f32(opt_v, vec![k, q]),
+        Value::f32(head, vec![hsize]),
+        Value::f32(head_m, vec![hsize]),
+        Value::f32(head_v, vec![hsize]),
+        Value::scalar_f32(loss),
+        Value::scalar_f32(correct),
+        Value::f32(grad_norms, vec![k]),
+    ])
+}
+
+/// Full-depth forward: `eval_{kind}` (loss, correct) or `infer_{kind}`
+/// (logits).
+pub(crate) fn eval_step(
+    spec: &ModelSpec,
+    kind: &str,
+    inputs: &[Value],
+    with_labels: bool,
+) -> Result<Vec<Value>> {
+    let cfg = &spec.config;
+    let dm = Dims::of(cfg);
+    let layer_lo = &spec.layer_layout;
+    let peft_lo = spec.peft_layout(kind)?;
+    let (p, q) = (layer_lo.size, peft_lo.size);
+
+    let layers = inputs[0].as_f32()?;
+    let peft = inputs[1].as_f32()?;
+    let globals = inputs[2].as_f32()?;
+    let head = inputs[3].as_f32()?;
+    let tokens = inputs[4].as_i32()?;
+
+    let glob_lo = &spec.globals_layout;
+    let head_lo = &spec.head_layout;
+    let mut h = embed(cfg, globals, glob_lo, tokens)?;
+    for li in 0..cfg.n_layers {
+        let (_cache, out) = layer_fwd(
+            dm,
+            kind,
+            h,
+            &layers[li * p..(li + 1) * p],
+            &peft[li * q..(li + 1) * q],
+            layer_lo,
+            peft_lo,
+        );
+        h = out;
+    }
+    let (_hn, _hf, _pooled, logits) = head_fwd(dm, globals, glob_lo, head, head_lo, h);
+    if with_labels {
+        let labels = inputs[5].as_i32()?;
+        let (loss, correct, _) = loss_and_metrics(dm, &logits, labels, false)?;
+        Ok(vec![Value::scalar_f32(loss), Value::scalar_f32(correct)])
+    } else {
+        Ok(vec![Value::f32(logits, vec![dm.b, dm.c])])
+    }
+}

@@ -1,0 +1,152 @@
+//! Per-thread scratch arena for the optimized native step.
+//!
+//! The reference path allocates a fresh `Vec` for every kernel output
+//! and every `LayerCache` field — tens of heap round-trips per layer per
+//! batch. [`StepBuffers`] replaces all of that with one grow-only arena
+//! owned by a `thread_local`: the first step on a thread sizes every
+//! buffer (via `kernels::ensure`), and every later step on that thread
+//! reuses them, so the steady-state train step performs **zero**
+//! activation/gradient allocations (asserted by `tests/native_alloc.rs`).
+//!
+//! Lifetime: the arena lives as long as its thread. Under the federated
+//! engine each pool worker runs whole client tasks, so one arena serves
+//! every batch of every client that worker executes in a session; sizes
+//! only grow, so mixing presets or K values on one thread is fine. The
+//! intra-client parallel paths (`DROPPEFT_NATIVE_THREADS > 1`) hand
+//! worker jobs their own small scratch vectors instead of sharing the
+//! arena — those paths trade a few allocations for parallelism and are
+//! opt-in.
+
+use std::cell::RefCell;
+
+/// Attention working set for the sequential (threads = 1) path: one
+/// `[S,S]` score tile plus backward temporaries, reused across every
+/// (batch, head) block of every layer.
+#[derive(Default)]
+pub(crate) struct AttnScratch {
+    /// softmax probabilities `[S,S]` (recomputed in the backward pass)
+    pub score: Vec<f32>,
+    /// d(loss)/d(probabilities) `[S,S]`
+    pub dp: Vec<f32>,
+    /// d(loss)/d(logits) `[S,S]`
+    pub dlog: Vec<f32>,
+    /// transpose-packing scratch for the blocked kernels
+    pub pack: Vec<f32>,
+}
+
+/// One layer's forward cache + backward temporaries (the optimized
+/// counterpart of the reference `LayerCache`, plus the fields the
+/// deferred PEFT-gradient phase reads after the backward sweep).
+#[derive(Default)]
+pub(crate) struct LayerBufs {
+    /// layer input `[N,D]`
+    pub x: Vec<f32>,
+    /// head-split projections `[B*H, S, Dh]`
+    pub qs: Vec<f32>,
+    pub ks: Vec<f32>,
+    pub vs: Vec<f32>,
+    /// attention context after head-combine, before the output proj `[N,D]`
+    pub octx: Vec<f32>,
+    /// pre-LN1 residual sum `[N,D]`
+    pub a1: Vec<f32>,
+    /// post-LN1 (FFN input) `[N,D]`
+    pub h1: Vec<f32>,
+    /// FFN pre-activation `[N,F]`
+    pub z1: Vec<f32>,
+    /// gelu(z1) `[N,F]`
+    pub g1: Vec<f32>,
+    /// FFN output before the adapter `[N,D]`
+    pub z2: Vec<f32>,
+    /// adapter bottleneck pre-activation `[N,A]` (unused for LoRA)
+    pub ad_pre: Vec<f32>,
+    /// gelu(ad_pre) `[N,A]` (unused for LoRA)
+    pub ad_act: Vec<f32>,
+    /// pre-LN2 residual sum `[N,D]`
+    pub a2: Vec<f32>,
+    /// x @ q_a and x @ v_a `[N,r]` (LoRA only)
+    pub xa_q: Vec<f32>,
+    pub xa_v: Vec<f32>,
+    /// LN2 input gradient `[N,D]`, kept for the deferred adapter grads
+    pub dz: Vec<f32>,
+    /// adapter pre-activation gradient `[N,A]`, kept for deferred grads
+    pub dad_pre: Vec<f32>,
+    /// combined Q/V projection gradients `[N,D]`, kept for LoRA grads
+    pub dq: Vec<f32>,
+    pub dv: Vec<f32>,
+    /// scaled LoRA branch gradients `[N,r]`, kept for deferred grads
+    pub dxa_q: Vec<f32>,
+    pub dxa_v: Vec<f32>,
+    /// per-layer packing scratch so the deferred phase can run each
+    /// layer's gradient reduction on its own pool worker
+    pub pack: Vec<f32>,
+}
+
+/// The whole train/eval step working set. Every field is grow-only.
+#[derive(Default)]
+pub(crate) struct StepBuffers {
+    /// running activation `[N,D]` (embed output, then each layer output)
+    pub h: Vec<f32>,
+    /// per-active-layer caches (grown to K, or L for eval)
+    pub layers: Vec<LayerBufs>,
+    /// pre-split projection temporaries `[N,D]`
+    pub tq: Vec<f32>,
+    pub tk: Vec<f32>,
+    pub tv: Vec<f32>,
+    /// head-major attention context `[B*H, S, Dh]`
+    pub ctx: Vec<f32>,
+    /// adapter up-projection output `[N,D]`
+    pub tup: Vec<f32>,
+    /// FFN(+adapter) output before the LN2 residual `[N,D]`
+    pub zf: Vec<f32>,
+    /// final layernorm output `[N,D]`
+    pub hf: Vec<f32>,
+    /// mean-pooled features `[B,D]` and classifier logits `[B,C]`
+    pub pooled: Vec<f32>,
+    pub logits: Vec<f32>,
+    /// backward head temporaries
+    pub dlogits: Vec<f32>,
+    pub dpooled: Vec<f32>,
+    pub dhf: Vec<f32>,
+    /// layer-gradient ping-pong `[N,D]`: `dh_a` flows in, `dh_b` is the
+    /// produced input-gradient, then the two swap for the next layer
+    pub dh_a: Vec<f32>,
+    pub dh_b: Vec<f32>,
+    /// backward sweep temporaries
+    pub dh1: Vec<f32>,
+    pub dz2: Vec<f32>,
+    pub dg1: Vec<f32>,
+    pub da1: Vec<f32>,
+    pub doctx: Vec<f32>,
+    pub dctx: Vec<f32>,
+    pub dqs: Vec<f32>,
+    pub dks: Vec<f32>,
+    pub dvs: Vec<f32>,
+    /// combined K-projection gradient `[N,D]` (Q/V live in `LayerBufs`)
+    pub dk_c: Vec<f32>,
+    /// general transpose-packing scratch (head + sequential phases)
+    pub pack: Vec<f32>,
+    /// attention working set for the sequential path
+    pub attn: AttnScratch,
+    /// PEFT gradient rows `[K,Q]` and head gradient `[head size]`
+    pub g_peft: Vec<f32>,
+    pub g_head: Vec<f32>,
+}
+
+impl StepBuffers {
+    /// Make sure at least `k` per-layer buffer sets exist.
+    pub fn ensure_layers(&mut self, k: usize) {
+        while self.layers.len() < k {
+            self.layers.push(LayerBufs::default());
+        }
+    }
+}
+
+thread_local! {
+    static STEP_BUFS: RefCell<StepBuffers> = RefCell::new(StepBuffers::default());
+}
+
+/// Run `f` with this thread's step arena. Steps never nest (one artifact
+/// call runs one step), so the `RefCell` borrow cannot conflict.
+pub(crate) fn with_step_buffers<R>(f: impl FnOnce(&mut StepBuffers) -> R) -> R {
+    STEP_BUFS.with(|b| f(&mut b.borrow_mut()))
+}

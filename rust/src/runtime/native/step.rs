@@ -1,0 +1,1221 @@
+//! The optimized native train/eval step.
+//!
+//! Same math as [`super::reference`], executed through the blocked
+//! kernels in [`super::kernels`] over the per-thread scratch arena in
+//! [`super::scratch`] — bit-identical outputs (asserted by the
+//! `optimized_matches_reference_bitwise` test in the parent module),
+//! several times faster, and allocation-free in steady state.
+//!
+//! Restructurings relative to the reference, none of which change any
+//! f32 operation or its order:
+//!
+//! - every kernel writes into an arena buffer instead of a fresh `Vec`;
+//! - the scale+softmax, residual+layernorm, bias+GeLU, and
+//!   GeLU-prime-chain passes are fused (per-element op order kept);
+//! - PEFT gradient reductions are *deferred*: the backward sweep caches
+//!   the few per-layer activations/gradients the reductions need
+//!   (`LayerBufs::{dz, dad_pre, dq, dv, dxa_q, dxa_v}`) and the
+//!   `K` layers' gradient+AdamW work runs after the sweep. Each layer's
+//!   gradient row is disjoint and its reduction chains are untouched,
+//!   so this both preserves bits and exposes per-layer parallelism;
+//! - with `threads > 1`, attention (forward and backward) fans out over
+//!   (batch, head) blocks and the deferred PEFT phase over layers via
+//!   `util::pool`. Workers own fixed disjoint output slices and no
+//!   reduction is ever split, so any thread count produces the same
+//!   bytes as `threads = 1`.
+
+use anyhow::{ensure, Result};
+
+use super::kernels::{self, Accum};
+use super::scratch::{with_step_buffers, AttnScratch, LayerBufs, StepBuffers};
+use super::{part, part_mut, Dims};
+use crate::runtime::manifest::{Layout, ModelCfg, ModelSpec};
+use crate::runtime::tensor::Value;
+use crate::util::pool;
+
+/// Token embedding + positional table → `[N,D]` activations in `h`.
+fn embed_into(
+    cfg: &ModelCfg,
+    globals: &[f32],
+    glob_lo: &Layout,
+    tokens: &[i32],
+    h: &mut [f32],
+) -> Result<()> {
+    let (d, seq) = (cfg.d_model, cfg.seq);
+    let emb = part(globals, glob_lo, "embedding");
+    let pos = part(globals, glob_lo, "positional");
+    for b in 0..cfg.batch {
+        for s in 0..seq {
+            let t = tokens[b * seq + s];
+            ensure!(
+                t >= 0 && (t as usize) < cfg.vocab,
+                "token id {t} out of range for vocab {}",
+                cfg.vocab
+            );
+            let erow = &emb[(t as usize) * d..(t as usize + 1) * d];
+            let o = &mut h[(b * seq + s) * d..(b * seq + s + 1) * d];
+            for j in 0..d {
+                o[j] = erow[j] + pos[s * d + j];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Split `[N,D]` rows into head-major `[B*H, S, Dh]`.
+fn split_heads_into(x: &[f32], dm: Dims, out: &mut [f32]) {
+    for b in 0..dm.b {
+        for s in 0..dm.s {
+            let src = &x[(b * dm.s + s) * dm.d..(b * dm.s + s + 1) * dm.d];
+            for h in 0..dm.h {
+                let dst = ((b * dm.h + h) * dm.s + s) * dm.dh;
+                out[dst..dst + dm.dh].copy_from_slice(&src[h * dm.dh..(h + 1) * dm.dh]);
+            }
+        }
+    }
+}
+
+/// Inverse of [`split_heads_into`].
+fn combine_heads_into(x: &[f32], dm: Dims, out: &mut [f32]) {
+    for b in 0..dm.b {
+        for s in 0..dm.s {
+            let dst = &mut out[(b * dm.s + s) * dm.d..(b * dm.s + s + 1) * dm.d];
+            for h in 0..dm.h {
+                let src = ((b * dm.h + h) * dm.s + s) * dm.dh;
+                dst[h * dm.dh..(h + 1) * dm.dh].copy_from_slice(&x[src..src + dm.dh]);
+            }
+        }
+    }
+}
+
+/// Hand out disjoint `&mut` windows of `buf`, one per range of
+/// `blk`-sized blocks. `ranges` must be ascending and contiguous from 0
+/// (the shape [`pool::chunk_ranges`] produces).
+fn split_chunks<'a>(
+    mut rest: &'a mut [f32],
+    ranges: &[std::ops::Range<usize>],
+    blk: usize,
+) -> Vec<&'a mut [f32]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    for r in ranges {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * blk);
+        out.push(head);
+        rest = tail;
+    }
+    out
+}
+
+/// One (batch, head) block of attention forward: fused scale+softmax
+/// scores, then the context matmul. `score` is `[S,S]` scratch.
+#[allow(clippy::too_many_arguments)]
+fn attn_fwd_block(
+    qb: &[f32],
+    kb: &[f32],
+    vb: &[f32],
+    ob: &mut [f32],
+    score: &mut [f32],
+    pack: &mut Vec<f32>,
+    s: usize,
+    dh: usize,
+    rscale: f32,
+) {
+    kernels::matmul_bt(score, qb, kb, s, dh, s, pack, Accum::Store);
+    kernels::scaled_softmax_rows(score, s, rscale);
+    kernels::matmul(ob, score, vb, s, s, dh, Accum::Store);
+}
+
+/// One (batch, head) block of attention backward (softmax recomputed,
+/// reference gradient formulas verbatim).
+#[allow(clippy::too_many_arguments)]
+fn attn_bwd_block(
+    qb: &[f32],
+    kb: &[f32],
+    vb: &[f32],
+    gb: &[f32],
+    dqb: &mut [f32],
+    dkb: &mut [f32],
+    dvb: &mut [f32],
+    score: &mut [f32],
+    dp: &mut [f32],
+    dlog: &mut [f32],
+    pack: &mut Vec<f32>,
+    s: usize,
+    dh: usize,
+    rscale: f32,
+) {
+    kernels::matmul_bt(score, qb, kb, s, dh, s, pack, Accum::Store);
+    kernels::scaled_softmax_rows(score, s, rscale);
+    kernels::matmul_at(dvb, score, gb, s, s, dh, pack, Accum::Store);
+    kernels::matmul_bt(dp, gb, vb, s, dh, s, pack, Accum::Store);
+    for si in 0..s {
+        let pr = &score[si * s..(si + 1) * s];
+        let dpr = &dp[si * s..(si + 1) * s];
+        let dot: f32 = pr.iter().zip(dpr).map(|(&a, &b)| a * b).sum();
+        for t in 0..s {
+            dlog[si * s + t] = pr[t] * (dpr[t] - dot) * rscale;
+        }
+    }
+    kernels::matmul(dqb, dlog, kb, s, s, dh, Accum::Store);
+    kernels::matmul_at(dkb, dlog, qb, s, s, dh, pack, Accum::Store);
+}
+
+/// Attention forward over all (batch, head) blocks. With `threads > 1`
+/// the blocks fan out over the pool; each worker owns a fixed disjoint
+/// window of `ctx`, so the result is bitwise identical at every count.
+fn attn_forward(
+    dm: Dims,
+    threads: usize,
+    qs: &[f32],
+    ks: &[f32],
+    vs: &[f32],
+    ctx: &mut [f32],
+    scratch: &mut AttnScratch,
+) {
+    let (s, dh) = (dm.s, dm.dh);
+    let blk = s * dh;
+    let nblocks = dm.b * dm.h;
+    let rscale = 1.0 / (dh as f32).sqrt();
+    if threads <= 1 {
+        kernels::ensure(&mut scratch.score, s * s);
+        for bh in 0..nblocks {
+            let sl = bh * blk;
+            attn_fwd_block(
+                &qs[sl..sl + blk],
+                &ks[sl..sl + blk],
+                &vs[sl..sl + blk],
+                &mut ctx[sl..sl + blk],
+                &mut scratch.score[..s * s],
+                &mut scratch.pack,
+                s,
+                dh,
+                rscale,
+            );
+        }
+        return;
+    }
+    let ranges: Vec<_> = pool::chunk_ranges(nblocks, threads).collect();
+    let chunks = split_chunks(ctx, &ranges, blk);
+    let jobs: Vec<_> = ranges
+        .iter()
+        .cloned()
+        .zip(chunks)
+        .map(|(range, cchunk)| {
+            move || {
+                let mut score = vec![0.0f32; s * s];
+                let mut pack = Vec::new();
+                for (i, bh) in range.enumerate() {
+                    let sl = bh * blk;
+                    attn_fwd_block(
+                        &qs[sl..sl + blk],
+                        &ks[sl..sl + blk],
+                        &vs[sl..sl + blk],
+                        &mut cchunk[i * blk..(i + 1) * blk],
+                        &mut score,
+                        &mut pack,
+                        s,
+                        dh,
+                        rscale,
+                    );
+                }
+            }
+        })
+        .collect();
+    let _ = pool::run_parallel(threads, jobs);
+}
+
+/// Attention backward over all (batch, head) blocks; same fan-out and
+/// determinism contract as [`attn_forward`].
+#[allow(clippy::too_many_arguments)]
+fn attn_backward(
+    dm: Dims,
+    threads: usize,
+    qs: &[f32],
+    ks: &[f32],
+    vs: &[f32],
+    dctx: &[f32],
+    dqs: &mut [f32],
+    dks: &mut [f32],
+    dvs: &mut [f32],
+    scratch: &mut AttnScratch,
+) {
+    let (s, dh) = (dm.s, dm.dh);
+    let blk = s * dh;
+    let nblocks = dm.b * dm.h;
+    let rscale = 1.0 / (dh as f32).sqrt();
+    if threads <= 1 {
+        kernels::ensure(&mut scratch.score, s * s);
+        kernels::ensure(&mut scratch.dp, s * s);
+        kernels::ensure(&mut scratch.dlog, s * s);
+        for bh in 0..nblocks {
+            let sl = bh * blk;
+            attn_bwd_block(
+                &qs[sl..sl + blk],
+                &ks[sl..sl + blk],
+                &vs[sl..sl + blk],
+                &dctx[sl..sl + blk],
+                &mut dqs[sl..sl + blk],
+                &mut dks[sl..sl + blk],
+                &mut dvs[sl..sl + blk],
+                &mut scratch.score[..s * s],
+                &mut scratch.dp[..s * s],
+                &mut scratch.dlog[..s * s],
+                &mut scratch.pack,
+                s,
+                dh,
+                rscale,
+            );
+        }
+        return;
+    }
+    let ranges: Vec<_> = pool::chunk_ranges(nblocks, threads).collect();
+    let dq_chunks = split_chunks(dqs, &ranges, blk);
+    let dk_chunks = split_chunks(dks, &ranges, blk);
+    let dv_chunks = split_chunks(dvs, &ranges, blk);
+    let jobs: Vec<_> = ranges
+        .iter()
+        .cloned()
+        .zip(dq_chunks.into_iter().zip(dk_chunks).zip(dv_chunks))
+        .map(|(range, ((dqc, dkc), dvc))| {
+            move || {
+                let mut score = vec![0.0f32; s * s];
+                let mut dp = vec![0.0f32; s * s];
+                let mut dlog = vec![0.0f32; s * s];
+                let mut pack = Vec::new();
+                for (i, bh) in range.enumerate() {
+                    let sl = bh * blk;
+                    let w = i * blk..(i + 1) * blk;
+                    attn_bwd_block(
+                        &qs[sl..sl + blk],
+                        &ks[sl..sl + blk],
+                        &vs[sl..sl + blk],
+                        &dctx[sl..sl + blk],
+                        &mut dqc[w.clone()],
+                        &mut dkc[w.clone()],
+                        &mut dvc[w],
+                        &mut score,
+                        &mut dp,
+                        &mut dlog,
+                        &mut pack,
+                        s,
+                        dh,
+                        rscale,
+                    );
+                }
+            }
+        })
+        .collect();
+    let _ = pool::run_parallel(threads, jobs);
+}
+
+/// One post-LN transformer layer forward into the arena. Consumes the
+/// running activation `bufs.h` (copied into `layers[li].x`) and leaves
+/// the layer output in `bufs.h`.
+#[allow(clippy::too_many_arguments)]
+fn layer_fwd(
+    dm: Dims,
+    kind: &str,
+    threads: usize,
+    lrow: &[f32],
+    prow: &[f32],
+    layer_lo: &Layout,
+    peft_lo: &Layout,
+    bufs: &mut StepBuffers,
+    li: usize,
+) {
+    let StepBuffers {
+        h,
+        layers,
+        tq,
+        tk,
+        tv,
+        ctx,
+        tup,
+        zf,
+        attn,
+        ..
+    } = bufs;
+    let lb = &mut layers[li];
+    let (n, d, f) = (dm.n, dm.d, dm.f);
+    let nd = n * d;
+    let lora = kind == "lora";
+
+    kernels::ensure(&mut lb.x, nd);
+    lb.x[..nd].copy_from_slice(&h[..nd]);
+    kernels::ensure(tq, nd);
+    kernels::ensure(tk, nd);
+    kernels::ensure(tv, nd);
+    kernels::ensure(ctx, nd);
+    kernels::ensure(zf, nd);
+
+    // ---- attention projections (LoRA on Q/V when enabled) ----
+    kernels::matmul(&mut tq[..nd], &lb.x[..nd], part(lrow, layer_lo, "wq"), n, d, d, Accum::Store);
+    kernels::matmul(&mut tv[..nd], &lb.x[..nd], part(lrow, layer_lo, "wv"), n, d, d, Accum::Store);
+    if lora {
+        let r = peft_lo.entry("q_a").expect("q_a").shape[1];
+        kernels::ensure(&mut lb.xa_q, n * r);
+        kernels::ensure(&mut lb.xa_v, n * r);
+        kernels::matmul(
+            &mut lb.xa_q[..n * r],
+            &lb.x[..nd],
+            part(prow, peft_lo, "q_a"),
+            n,
+            d,
+            r,
+            Accum::Store,
+        );
+        kernels::matmul(
+            &mut tq[..nd],
+            &lb.xa_q[..n * r],
+            part(prow, peft_lo, "q_b"),
+            n,
+            r,
+            d,
+            Accum::AddScaled(dm.lscale),
+        );
+        kernels::matmul(
+            &mut lb.xa_v[..n * r],
+            &lb.x[..nd],
+            part(prow, peft_lo, "v_a"),
+            n,
+            d,
+            r,
+            Accum::Store,
+        );
+        kernels::matmul(
+            &mut tv[..nd],
+            &lb.xa_v[..n * r],
+            part(prow, peft_lo, "v_b"),
+            n,
+            r,
+            d,
+            Accum::AddScaled(dm.lscale),
+        );
+    }
+    kernels::add_bias(&mut tq[..nd], part(lrow, layer_lo, "wq_b"));
+    kernels::add_bias(&mut tv[..nd], part(lrow, layer_lo, "wv_b"));
+    kernels::matmul(&mut tk[..nd], &lb.x[..nd], part(lrow, layer_lo, "wk"), n, d, d, Accum::Store);
+    kernels::add_bias(&mut tk[..nd], part(lrow, layer_lo, "wk_b"));
+
+    // ---- scaled-dot-product attention per (batch, head) ----
+    kernels::ensure(&mut lb.qs, nd);
+    kernels::ensure(&mut lb.ks, nd);
+    kernels::ensure(&mut lb.vs, nd);
+    split_heads_into(&tq[..nd], dm, &mut lb.qs[..nd]);
+    split_heads_into(&tk[..nd], dm, &mut lb.ks[..nd]);
+    split_heads_into(&tv[..nd], dm, &mut lb.vs[..nd]);
+    attn_forward(
+        dm,
+        threads,
+        &lb.qs[..nd],
+        &lb.ks[..nd],
+        &lb.vs[..nd],
+        &mut ctx[..nd],
+        attn,
+    );
+    kernels::ensure(&mut lb.octx, nd);
+    combine_heads_into(&ctx[..nd], dm, &mut lb.octx[..nd]);
+    // reuse tq for the attention output projection
+    kernels::matmul(
+        &mut tq[..nd],
+        &lb.octx[..nd],
+        part(lrow, layer_lo, "wo"),
+        n,
+        d,
+        d,
+        Accum::Store,
+    );
+    kernels::add_bias(&mut tq[..nd], part(lrow, layer_lo, "wo_b"));
+
+    // ---- residual + LN1 (fused) ----
+    kernels::ensure(&mut lb.a1, nd);
+    kernels::ensure(&mut lb.h1, nd);
+    kernels::residual_layernorm(
+        &mut lb.a1[..nd],
+        &mut lb.h1[..nd],
+        &lb.x[..nd],
+        &tq[..nd],
+        part(lrow, layer_lo, "ln1_g"),
+        part(lrow, layer_lo, "ln1_b"),
+        d,
+    );
+
+    // ---- FFN (+ adapter) ----
+    kernels::ensure(&mut lb.z1, n * f);
+    kernels::ensure(&mut lb.g1, n * f);
+    kernels::matmul(
+        &mut lb.z1[..n * f],
+        &lb.h1[..nd],
+        part(lrow, layer_lo, "w1"),
+        n,
+        d,
+        f,
+        Accum::Store,
+    );
+    kernels::bias_gelu(&mut lb.z1[..n * f], part(lrow, layer_lo, "w1_b"), &mut lb.g1[..n * f]);
+    kernels::ensure(&mut lb.z2, nd);
+    kernels::matmul(
+        &mut lb.z2[..nd],
+        &lb.g1[..n * f],
+        part(lrow, layer_lo, "w2"),
+        n,
+        f,
+        d,
+        Accum::Store,
+    );
+    kernels::add_bias(&mut lb.z2[..nd], part(lrow, layer_lo, "w2_b"));
+    zf[..nd].copy_from_slice(&lb.z2[..nd]);
+    if kind == "adapter" {
+        let a = peft_lo.entry("down").expect("down").shape[1];
+        kernels::ensure(tup, nd);
+        kernels::ensure(&mut lb.ad_pre, n * a);
+        kernels::ensure(&mut lb.ad_act, n * a);
+        kernels::matmul(
+            &mut lb.ad_pre[..n * a],
+            &lb.z2[..nd],
+            part(prow, peft_lo, "down"),
+            n,
+            d,
+            a,
+            Accum::Store,
+        );
+        kernels::bias_gelu(
+            &mut lb.ad_pre[..n * a],
+            part(prow, peft_lo, "down_b"),
+            &mut lb.ad_act[..n * a],
+        );
+        kernels::matmul(
+            &mut tup[..nd],
+            &lb.ad_act[..n * a],
+            part(prow, peft_lo, "up"),
+            n,
+            a,
+            d,
+            Accum::Store,
+        );
+        kernels::add_bias(&mut tup[..nd], part(prow, peft_lo, "up_b"));
+        for (zo, &u) in zf[..nd].iter_mut().zip(&tup[..nd]) {
+            *zo += u;
+        }
+    }
+
+    // ---- residual + LN2 (fused) — layer output back into bufs.h ----
+    kernels::ensure(&mut lb.a2, nd);
+    kernels::residual_layernorm(
+        &mut lb.a2[..nd],
+        &mut h[..nd],
+        &lb.h1[..nd],
+        &zf[..nd],
+        part(lrow, layer_lo, "ln2_g"),
+        part(lrow, layer_lo, "ln2_b"),
+        d,
+    );
+}
+
+/// One layer's backward sweep: reads d(output) from `bufs.dh_a`, writes
+/// d(input) to `bufs.dh_b`, and caches what the deferred PEFT-gradient
+/// phase needs in `layers[li]`. The caller swaps `dh_a`/`dh_b` after.
+#[allow(clippy::too_many_arguments)]
+fn layer_bwd(
+    dm: Dims,
+    kind: &str,
+    threads: usize,
+    lrow: &[f32],
+    prow: &[f32],
+    layer_lo: &Layout,
+    peft_lo: &Layout,
+    bufs: &mut StepBuffers,
+    li: usize,
+) {
+    let StepBuffers {
+        layers,
+        dh_a,
+        dh_b,
+        dh1,
+        dz2,
+        dg1,
+        da1,
+        doctx,
+        dctx,
+        dqs,
+        dks,
+        dvs,
+        dk_c,
+        pack,
+        attn,
+        ..
+    } = bufs;
+    let lb = &mut layers[li];
+    let (n, d, f) = (dm.n, dm.d, dm.f);
+    let nd = n * d;
+    let lora = kind == "lora";
+
+    // LN2 — dz feeds both the residual and FFN branches, and the
+    // deferred adapter gradients, so it lives in the layer cache
+    kernels::ensure(&mut lb.dz, nd);
+    kernels::layernorm_bwd(
+        &mut lb.dz[..nd],
+        &lb.a2[..nd],
+        part(lrow, layer_lo, "ln2_g"),
+        &dh_a[..nd],
+        d,
+    );
+    kernels::ensure(dh1, nd);
+    dh1[..nd].copy_from_slice(&lb.dz[..nd]); // residual branch
+    kernels::ensure(dz2, nd);
+    dz2[..nd].copy_from_slice(&lb.dz[..nd]); // FFN branch
+
+    // adapter through-path (gradient reductions deferred)
+    if kind == "adapter" {
+        let a = peft_lo.entry("down").expect("down").shape[1];
+        kernels::ensure(&mut lb.dad_pre, n * a);
+        kernels::matmul_bt(
+            &mut lb.dad_pre[..n * a],
+            &lb.dz[..nd],
+            part(prow, peft_lo, "up"),
+            n,
+            d,
+            a,
+            pack,
+            Accum::Store,
+        );
+        kernels::mul_gelu_prime(&mut lb.dad_pre[..n * a], &lb.ad_pre[..n * a]);
+        kernels::matmul_bt(
+            &mut dz2[..nd],
+            &lb.dad_pre[..n * a],
+            part(prow, peft_lo, "down"),
+            n,
+            a,
+            d,
+            pack,
+            Accum::Add,
+        );
+    }
+
+    // FFN core (frozen base: w1/w2 gradients are not needed)
+    kernels::ensure(dg1, n * f);
+    kernels::matmul_bt(
+        &mut dg1[..n * f],
+        &dz2[..nd],
+        part(lrow, layer_lo, "w2"),
+        n,
+        d,
+        f,
+        pack,
+        Accum::Store,
+    );
+    kernels::mul_gelu_prime(&mut dg1[..n * f], &lb.z1[..n * f]);
+    kernels::matmul_bt(
+        &mut dh1[..nd],
+        &dg1[..n * f],
+        part(lrow, layer_lo, "w1"),
+        n,
+        f,
+        d,
+        pack,
+        Accum::Add,
+    );
+
+    // LN1
+    kernels::ensure(da1, nd);
+    kernels::layernorm_bwd(
+        &mut da1[..nd],
+        &lb.a1[..nd],
+        part(lrow, layer_lo, "ln1_g"),
+        &dh1[..nd],
+        d,
+    );
+    kernels::ensure(dh_b, nd);
+    dh_b[..nd].copy_from_slice(&da1[..nd]); // residual branch of dx
+
+    // output projection
+    kernels::ensure(doctx, nd);
+    kernels::matmul_bt(
+        &mut doctx[..nd],
+        &da1[..nd],
+        part(lrow, layer_lo, "wo"),
+        n,
+        d,
+        d,
+        pack,
+        Accum::Store,
+    );
+    kernels::ensure(dctx, nd);
+    split_heads_into(&doctx[..nd], dm, &mut dctx[..nd]);
+
+    // attention core
+    kernels::ensure(dqs, nd);
+    kernels::ensure(dks, nd);
+    kernels::ensure(dvs, nd);
+    attn_backward(
+        dm,
+        threads,
+        &lb.qs[..nd],
+        &lb.ks[..nd],
+        &lb.vs[..nd],
+        &dctx[..nd],
+        &mut dqs[..nd],
+        &mut dks[..nd],
+        &mut dvs[..nd],
+        attn,
+    );
+    kernels::ensure(&mut lb.dq, nd);
+    kernels::ensure(&mut lb.dv, nd);
+    kernels::ensure(dk_c, nd);
+    combine_heads_into(&dqs[..nd], dm, &mut lb.dq[..nd]);
+    combine_heads_into(&dks[..nd], dm, &mut dk_c[..nd]);
+    combine_heads_into(&dvs[..nd], dm, &mut lb.dv[..nd]);
+
+    // LoRA through-path (gradient reductions deferred; dxa is needed
+    // both here and by the deferred phase, so it lives in the cache)
+    if lora {
+        let r = peft_lo.entry("q_a").expect("q_a").shape[1];
+        kernels::ensure(&mut lb.dxa_q, n * r);
+        kernels::ensure(&mut lb.dxa_v, n * r);
+        kernels::matmul_bt(
+            &mut lb.dxa_q[..n * r],
+            &lb.dq[..nd],
+            part(prow, peft_lo, "q_b"),
+            n,
+            d,
+            r,
+            pack,
+            Accum::StoreScaled(dm.lscale),
+        );
+        kernels::matmul_bt(
+            &mut dh_b[..nd],
+            &lb.dxa_q[..n * r],
+            part(prow, peft_lo, "q_a"),
+            n,
+            r,
+            d,
+            pack,
+            Accum::Add,
+        );
+        kernels::matmul_bt(
+            &mut lb.dxa_v[..n * r],
+            &lb.dv[..nd],
+            part(prow, peft_lo, "v_b"),
+            n,
+            d,
+            r,
+            pack,
+            Accum::StoreScaled(dm.lscale),
+        );
+        kernels::matmul_bt(
+            &mut dh_b[..nd],
+            &lb.dxa_v[..n * r],
+            part(prow, peft_lo, "v_a"),
+            n,
+            r,
+            d,
+            pack,
+            Accum::Add,
+        );
+    }
+    kernels::matmul_bt(
+        &mut dh_b[..nd],
+        &lb.dq[..nd],
+        part(lrow, layer_lo, "wq"),
+        n,
+        d,
+        d,
+        pack,
+        Accum::Add,
+    );
+    kernels::matmul_bt(
+        &mut dh_b[..nd],
+        &dk_c[..nd],
+        part(lrow, layer_lo, "wk"),
+        n,
+        d,
+        d,
+        pack,
+        Accum::Add,
+    );
+    kernels::matmul_bt(
+        &mut dh_b[..nd],
+        &lb.dv[..nd],
+        part(lrow, layer_lo, "wv"),
+        n,
+        d,
+        d,
+        pack,
+        Accum::Add,
+    );
+}
+
+/// Final layernorm → mean pooling → classifier logits into the arena.
+fn head_forward(
+    dm: Dims,
+    globals: &[f32],
+    glob_lo: &Layout,
+    head_in: &[f32],
+    head_lo: &Layout,
+    bufs: &mut StepBuffers,
+) {
+    let StepBuffers {
+        h,
+        hf,
+        pooled,
+        logits,
+        ..
+    } = bufs;
+    let (b, d, c) = (dm.b, dm.d, dm.c);
+    let nd = dm.n * d;
+    kernels::ensure(hf, nd);
+    kernels::layernorm(
+        &mut hf[..nd],
+        &h[..nd],
+        part(globals, glob_lo, "lnf_g"),
+        part(globals, glob_lo, "lnf_b"),
+        d,
+    );
+    kernels::ensure(pooled, b * d);
+    pooled[..b * d].fill(0.0);
+    for bi in 0..b {
+        let prow = &mut pooled[bi * d..(bi + 1) * d];
+        for s in 0..dm.s {
+            let hrow = &hf[(bi * dm.s + s) * d..(bi * dm.s + s + 1) * d];
+            for j in 0..d {
+                prow[j] += hrow[j];
+            }
+        }
+        for j in prow.iter_mut() {
+            *j /= dm.s as f32;
+        }
+    }
+    kernels::ensure(logits, b * c);
+    kernels::matmul(
+        &mut logits[..b * c],
+        &pooled[..b * d],
+        part(head_in, head_lo, "head_w"),
+        b,
+        d,
+        c,
+        Accum::Store,
+    );
+    kernels::add_bias(&mut logits[..b * c], part(head_in, head_lo, "head_b"));
+}
+
+/// Mean cross-entropy + argmax-correct count; with `dlogits`, also the
+/// logit gradients (reference formulas verbatim).
+fn loss_and_metrics_into(
+    dm: Dims,
+    logits: &[f32],
+    labels: &[i32],
+    mut dlogits: Option<&mut [f32]>,
+) -> Result<(f32, f32)> {
+    let (b, c) = (dm.b, dm.c);
+    let mut loss_sum = 0.0f32;
+    let mut correct = 0.0f32;
+    for bi in 0..b {
+        let row = &logits[bi * c..(bi + 1) * c];
+        let lab = labels[bi];
+        ensure!(
+            lab >= 0 && (lab as usize) < c,
+            "label {lab} out of range for {c} classes"
+        );
+        let lab = lab as usize;
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for &v in row {
+            denom += (v - maxv).exp();
+        }
+        let logz = maxv + denom.ln();
+        loss_sum += logz - row[lab];
+        let mut am = 0;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[am] {
+                am = j;
+            }
+        }
+        if am == lab {
+            correct += 1.0;
+        }
+        if let Some(dl) = dlogits.as_deref_mut() {
+            for j in 0..c {
+                let pj = (row[j] - logz).exp();
+                dl[bi * c + j] = (pj - if j == lab { 1.0 } else { 0.0 }) / b as f32;
+            }
+        }
+    }
+    Ok((loss_sum / b as f32, correct))
+}
+
+/// Head gradients + the backward seed `dh_a` (d loss / d final hidden).
+fn head_backward(
+    dm: Dims,
+    globals: &[f32],
+    glob_lo: &Layout,
+    head_in: &[f32],
+    head_lo: &Layout,
+    bufs: &mut StepBuffers,
+) {
+    let StepBuffers {
+        h,
+        pooled,
+        dlogits,
+        dpooled,
+        dhf,
+        dh_a,
+        pack,
+        g_head,
+        ..
+    } = bufs;
+    let (b, d, c) = (dm.b, dm.d, dm.c);
+    let nd = dm.n * d;
+    let hsz = head_lo.size;
+    kernels::ensure(g_head, hsz);
+    g_head[..hsz].fill(0.0);
+    kernels::matmul_at(
+        part_mut(&mut g_head[..hsz], head_lo, "head_w"),
+        &pooled[..b * d],
+        &dlogits[..b * c],
+        b,
+        d,
+        c,
+        pack,
+        Accum::Store,
+    );
+    kernels::colsum_into(&dlogits[..b * c], c, part_mut(&mut g_head[..hsz], head_lo, "head_b"));
+    kernels::ensure(dpooled, b * d);
+    kernels::matmul_bt(
+        &mut dpooled[..b * d],
+        &dlogits[..b * c],
+        part(head_in, head_lo, "head_w"),
+        b,
+        c,
+        d,
+        pack,
+        Accum::Store,
+    );
+    kernels::ensure(dhf, nd);
+    for bi in 0..b {
+        for s in 0..dm.s {
+            let src = &dpooled[bi * d..(bi + 1) * d];
+            let dst = &mut dhf[(bi * dm.s + s) * d..(bi * dm.s + s + 1) * d];
+            for j in 0..d {
+                dst[j] = src[j] / dm.s as f32;
+            }
+        }
+    }
+    kernels::ensure(dh_a, nd);
+    kernels::layernorm_bwd(
+        &mut dh_a[..nd],
+        &h[..nd],
+        part(globals, glob_lo, "lnf_g"),
+        &dhf[..nd],
+        d,
+    );
+}
+
+/// Deferred per-layer PEFT work: gradient reductions (reference order
+/// within the layer), the gradient l2 norm, and the AdamW update —
+/// everything that only touches layer `li`'s disjoint slices, so layers
+/// can run on separate pool workers without changing a single bit.
+#[allow(clippy::too_many_arguments)]
+fn finish_layer_grads(
+    dm: Dims,
+    kind: &str,
+    lb: &mut LayerBufs,
+    peft_lo: &Layout,
+    g_row: &mut [f32],
+    p_row: &mut [f32],
+    m_row: &mut [f32],
+    v_row: &mut [f32],
+    step: f32,
+    lr: f32,
+) -> f32 {
+    let LayerBufs {
+        x,
+        xa_q,
+        xa_v,
+        dq,
+        dv,
+        dxa_q,
+        dxa_v,
+        dz,
+        dad_pre,
+        z2,
+        ad_act,
+        pack,
+        ..
+    } = lb;
+    let (n, d) = (dm.n, dm.d);
+    let nd = n * d;
+    if kind == "lora" {
+        let r = peft_lo.entry("q_a").expect("q_a").shape[1];
+        kernels::matmul_at(
+            part_mut(g_row, peft_lo, "q_b"),
+            &xa_q[..n * r],
+            &dq[..nd],
+            n,
+            r,
+            d,
+            pack,
+            Accum::AddScaled(dm.lscale),
+        );
+        kernels::matmul_at(
+            part_mut(g_row, peft_lo, "q_a"),
+            &x[..nd],
+            &dxa_q[..n * r],
+            n,
+            d,
+            r,
+            pack,
+            Accum::Add,
+        );
+        kernels::matmul_at(
+            part_mut(g_row, peft_lo, "v_b"),
+            &xa_v[..n * r],
+            &dv[..nd],
+            n,
+            r,
+            d,
+            pack,
+            Accum::AddScaled(dm.lscale),
+        );
+        kernels::matmul_at(
+            part_mut(g_row, peft_lo, "v_a"),
+            &x[..nd],
+            &dxa_v[..n * r],
+            n,
+            d,
+            r,
+            pack,
+            Accum::Add,
+        );
+    } else {
+        let a = peft_lo.entry("down").expect("down").shape[1];
+        kernels::colsum_into(&dz[..nd], d, part_mut(g_row, peft_lo, "up_b"));
+        kernels::matmul_at(
+            part_mut(g_row, peft_lo, "up"),
+            &ad_act[..n * a],
+            &dz[..nd],
+            n,
+            a,
+            d,
+            pack,
+            Accum::Add,
+        );
+        kernels::colsum_into(&dad_pre[..n * a], a, part_mut(g_row, peft_lo, "down_b"));
+        kernels::matmul_at(
+            part_mut(g_row, peft_lo, "down"),
+            &z2[..nd],
+            &dad_pre[..n * a],
+            n,
+            d,
+            a,
+            pack,
+            Accum::Add,
+        );
+    }
+    // per-layer PEFT gradient l2 norm (PTLS importance, Eq. 6)
+    let norm = (g_row.iter().map(|&g| g * g).sum::<f32>() + 1e-12).sqrt();
+    kernels::adamw(p_row, g_row, m_row, v_row, step, lr);
+    norm
+}
+
+/// One STLD mini-batch over K active layers: forward, backward over the
+/// PEFT rows + head, AdamW — the `train_{kind}_k{K}` artifact.
+pub(crate) fn train_step(
+    spec: &ModelSpec,
+    kind: &str,
+    k: usize,
+    inputs: &[Value],
+    threads: usize,
+) -> Result<Vec<Value>> {
+    let cfg = &spec.config;
+    let dm = Dims::of(cfg);
+    let layer_lo = &spec.layer_layout;
+    let peft_lo = spec.peft_layout(kind)?;
+    let (p, q) = (layer_lo.size, peft_lo.size);
+    let glob_lo = &spec.globals_layout;
+    let head_lo = &spec.head_layout;
+
+    let layers_in = inputs[0].as_f32()?;
+    let peft_in = inputs[1].as_f32()?;
+    let m_in = inputs[2].as_f32()?;
+    let v_in = inputs[3].as_f32()?;
+    let globals = inputs[4].as_f32()?;
+    let head_in = inputs[5].as_f32()?;
+    let head_m_in = inputs[6].as_f32()?;
+    let head_v_in = inputs[7].as_f32()?;
+    let tokens = inputs[8].as_i32()?;
+    let labels = inputs[9].as_i32()?;
+    let step = inputs[10].scalar()?;
+    let lr = inputs[11].scalar()?;
+
+    let nd = dm.n * dm.d;
+    with_step_buffers(|bufs| {
+        bufs.ensure_layers(k);
+
+        // ---- forward ----
+        kernels::ensure(&mut bufs.h, nd);
+        embed_into(cfg, globals, glob_lo, tokens, &mut bufs.h[..nd])?;
+        for li in 0..k {
+            layer_fwd(
+                dm,
+                kind,
+                threads,
+                &layers_in[li * p..(li + 1) * p],
+                &peft_in[li * q..(li + 1) * q],
+                layer_lo,
+                peft_lo,
+                bufs,
+                li,
+            );
+        }
+        head_forward(dm, globals, glob_lo, head_in, head_lo, bufs);
+        kernels::ensure(&mut bufs.dlogits, dm.b * dm.c);
+        let (loss, correct) = loss_and_metrics_into(
+            dm,
+            &bufs.logits[..dm.b * dm.c],
+            labels,
+            Some(&mut bufs.dlogits[..dm.b * dm.c]),
+        )?;
+
+        // ---- backward ----
+        head_backward(dm, globals, glob_lo, head_in, head_lo, bufs);
+        for li in (0..k).rev() {
+            layer_bwd(
+                dm,
+                kind,
+                threads,
+                &layers_in[li * p..(li + 1) * p],
+                &peft_in[li * q..(li + 1) * q],
+                layer_lo,
+                peft_lo,
+                bufs,
+                li,
+            );
+            std::mem::swap(&mut bufs.dh_a, &mut bufs.dh_b);
+        }
+
+        // ---- deferred PEFT gradients + AdamW (per-layer, parallel) ----
+        kernels::ensure(&mut bufs.g_peft, k * q);
+        bufs.g_peft[..k * q].fill(0.0);
+        let mut peft = peft_in.to_vec();
+        let mut opt_m = m_in.to_vec();
+        let mut opt_v = v_in.to_vec();
+        let grad_norms: Vec<f32> = {
+            let StepBuffers { layers, g_peft, .. } = bufs;
+            if threads <= 1 {
+                let mut norms = vec![0.0f32; k];
+                for (li, gn) in norms.iter_mut().enumerate() {
+                    *gn = finish_layer_grads(
+                        dm,
+                        kind,
+                        &mut layers[li],
+                        peft_lo,
+                        &mut g_peft[li * q..(li + 1) * q],
+                        &mut peft[li * q..(li + 1) * q],
+                        &mut opt_m[li * q..(li + 1) * q],
+                        &mut opt_v[li * q..(li + 1) * q],
+                        step,
+                        lr,
+                    );
+                }
+                norms
+            } else {
+                let jobs: Vec<_> = layers[..k]
+                    .iter_mut()
+                    .zip(g_peft[..k * q].chunks_mut(q))
+                    .zip(peft.chunks_mut(q))
+                    .zip(opt_m.chunks_mut(q))
+                    .zip(opt_v.chunks_mut(q))
+                    .map(|((((lb, g_row), p_row), m_row), v_row)| {
+                        move || {
+                            finish_layer_grads(
+                                dm, kind, lb, peft_lo, g_row, p_row, m_row, v_row, step, lr,
+                            )
+                        }
+                    })
+                    .collect();
+                pool::run_parallel(threads, jobs)
+            }
+        };
+
+        // ---- head AdamW ----
+        let mut head = head_in.to_vec();
+        let mut head_m = head_m_in.to_vec();
+        let mut head_v = head_v_in.to_vec();
+        kernels::adamw(
+            &mut head,
+            &bufs.g_head[..head_lo.size],
+            &mut head_m,
+            &mut head_v,
+            step,
+            lr,
+        );
+
+        let hsize = head_lo.size;
+        Ok(vec![
+            Value::f32(peft, vec![k, q]),
+            Value::f32(opt_m, vec![k, q]),
+            Value::f32(opt_v, vec![k, q]),
+            Value::f32(head, vec![hsize]),
+            Value::f32(head_m, vec![hsize]),
+            Value::f32(head_v, vec![hsize]),
+            Value::scalar_f32(loss),
+            Value::scalar_f32(correct),
+            Value::f32(grad_norms, vec![k]),
+        ])
+    })
+}
+
+/// Full-depth forward: `eval_{kind}` (loss, correct) or `infer_{kind}`
+/// (logits).
+pub(crate) fn eval_step(
+    spec: &ModelSpec,
+    kind: &str,
+    inputs: &[Value],
+    with_labels: bool,
+    threads: usize,
+) -> Result<Vec<Value>> {
+    let cfg = &spec.config;
+    let dm = Dims::of(cfg);
+    let layer_lo = &spec.layer_layout;
+    let peft_lo = spec.peft_layout(kind)?;
+    let (p, q) = (layer_lo.size, peft_lo.size);
+    let glob_lo = &spec.globals_layout;
+    let head_lo = &spec.head_layout;
+
+    let layers_in = inputs[0].as_f32()?;
+    let peft = inputs[1].as_f32()?;
+    let globals = inputs[2].as_f32()?;
+    let head = inputs[3].as_f32()?;
+    let tokens = inputs[4].as_i32()?;
+
+    let nd = dm.n * dm.d;
+    with_step_buffers(|bufs| {
+        bufs.ensure_layers(cfg.n_layers);
+        kernels::ensure(&mut bufs.h, nd);
+        embed_into(cfg, globals, glob_lo, tokens, &mut bufs.h[..nd])?;
+        for li in 0..cfg.n_layers {
+            layer_fwd(
+                dm,
+                kind,
+                threads,
+                &layers_in[li * p..(li + 1) * p],
+                &peft[li * q..(li + 1) * q],
+                layer_lo,
+                peft_lo,
+                bufs,
+                li,
+            );
+        }
+        head_forward(dm, globals, glob_lo, head, head_lo, bufs);
+        if with_labels {
+            let labels = inputs[5].as_i32()?;
+            let (loss, correct) =
+                loss_and_metrics_into(dm, &bufs.logits[..dm.b * dm.c], labels, None)?;
+            Ok(vec![Value::scalar_f32(loss), Value::scalar_f32(correct)])
+        } else {
+            Ok(vec![Value::f32(
+                bufs.logits[..dm.b * dm.c].to_vec(),
+                vec![dm.b, dm.c],
+            )])
+        }
+    })
+}

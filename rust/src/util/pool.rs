@@ -226,6 +226,31 @@ pub fn default_workers() -> usize {
         .unwrap_or(1)
 }
 
+/// Partition `0..n` into at most `parts` contiguous, ascending, disjoint
+/// ranges whose lengths differ by at most one (the first `n % parts`
+/// ranges get the extra element). Empty ranges are skipped, so with
+/// `n < parts` exactly `n` single-element ranges come back.
+///
+/// This is the handout shape the native backend's intra-client
+/// parallelism uses: each worker owns a fixed output slice, so the split
+/// never changes any reduction order and results are bitwise identical
+/// at every worker count.
+pub fn chunk_ranges(n: usize, parts: usize) -> impl Iterator<Item = std::ops::Range<usize>> {
+    let parts = parts.clamp(1, n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut start = 0;
+    (0..parts).filter_map(move |i| {
+        let len = base + usize::from(i < extra);
+        if len == 0 {
+            return None;
+        }
+        let r = start..start + len;
+        start += len;
+        Some(r)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -391,6 +416,33 @@ mod tests {
         let payload = res.expect_err("consumer panic must propagate");
         let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
         assert_eq!(msg, "consumer boom");
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly_once_in_order() {
+        for n in [0usize, 1, 2, 3, 7, 8, 64, 65] {
+            for parts in [1usize, 2, 3, 4, 7, 8, 100] {
+                let ranges: Vec<_> = chunk_ranges(n, parts).collect();
+                // disjoint, ascending, covering 0..n
+                let mut expect = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, expect, "gap at n={n} parts={parts}");
+                    assert!(r.end > r.start, "empty range leaked");
+                    expect = r.end;
+                }
+                assert_eq!(expect, n, "coverage at n={n} parts={parts}");
+                assert!(ranges.len() <= parts.max(1));
+                // balanced: lengths differ by at most one
+                if let (Some(lo), Some(hi)) = (
+                    ranges.iter().map(|r| r.len()).min(),
+                    ranges.iter().map(|r| r.len()).max(),
+                ) {
+                    assert!(hi - lo <= 1, "unbalanced at n={n} parts={parts}");
+                }
+            }
+        }
+        assert_eq!(chunk_ranges(0, 4).count(), 0);
+        assert_eq!(chunk_ranges(3, 8).count(), 3);
     }
 
     #[test]

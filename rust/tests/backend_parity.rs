@@ -154,6 +154,34 @@ fn eval_step_agrees_across_backends_within_tolerance() {
     );
 }
 
+/// The optimized kernel path and the naive reference path are not two
+/// backends within tolerance — they are one backend with a bitwise
+/// contract. A whole session (training, aggregation, eval, event log)
+/// run on each must produce byte-identical records.
+#[test]
+fn optimized_and_reference_native_sessions_are_byte_identical() {
+    use droppeft::runtime::native::{NativeBackend, NativeOptions};
+    let run = |reference: bool| {
+        let mut cfg = FedConfig::quick("tiny", "mnli");
+        cfg.rounds = 3;
+        cfg.n_devices = 8;
+        cfg.devices_per_round = 3;
+        cfg.local_batches = 2;
+        cfg.samples = 400;
+        cfg.eval_every = 2;
+        cfg.eval_batches = 2;
+        cfg.lr = 5e-3;
+        let backend = std::sync::Arc::new(NativeBackend::with_options(NativeOptions {
+            threads: 1,
+            reference,
+        }));
+        let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
+        let mut engine = Engine::new(cfg, backend, method).unwrap();
+        engine.run().unwrap()
+    };
+    assert_identical(&run(false), &run(true));
+}
+
 /// Native-backend determinism at the session level: same seed must be
 /// byte-identical at `--workers 1` and the host default. Unconditional —
 /// this is the backbone of the artifact-free tier-1 guarantee.

@@ -53,6 +53,20 @@ fn native_fedadaopt_workers_1_and_4_produce_identical_records() {
     check(native_backend, "fedadaopt");
 }
 
+/// Same contract one level down: the native backend's *intra-client*
+/// parallelism (`DROPPEFT_NATIVE_THREADS`) fans attention blocks and
+/// per-layer PEFT-gradient reductions out across a pool, but only ever
+/// partitions output space — so a whole session's records must be
+/// byte-identical at any thread count, stacked on top of the
+/// round-executor worker fan-out.
+#[test]
+fn native_intra_client_threads_1_and_4_produce_identical_records() {
+    use droppeft::runtime::NativeBackend;
+    let t1 = run_with_workers(Arc::new(NativeBackend::with_threads(1)), "droppeft-lora", 2);
+    let t4 = run_with_workers(Arc::new(NativeBackend::with_threads(4)), "droppeft-lora", 2);
+    assert_identical(&t1, &t4);
+}
+
 #[test]
 fn xla_droppeft_workers_1_and_4_produce_identical_records() {
     require_artifacts!();
