@@ -6,14 +6,17 @@
 //! `util::pool::run_parallel_streaming`'s bounded window. Payloads are
 //! synthetic `TrainState`-sized buffers, so the bench runs without
 //! compiled XLA artifacts. Emits machine-readable
-//! `BENCH_round_stream.json`.
+//! `BENCH_round_stream.json`, diffed against the committed baseline
+//! (warn-only) before overwriting it.
 //!
 //! Run with `cargo bench` (part of `make bench`).
 
-use droppeft::benchkit::{Bench, Suite};
+use droppeft::benchkit::{trajectory, Bench, Suite};
 use droppeft::testkit::Gauge;
 use droppeft::util::json::Json;
 use droppeft::util::pool::{run_parallel, run_parallel_streaming};
+
+const BASELINE: &str = "BENCH_round_stream.json";
 
 /// paper-scale cohort (devices_per_round in the hundreds)
 const COHORT: usize = 256;
@@ -118,6 +121,7 @@ fn main() {
 
     let j = Json::obj(vec![
         ("bench", Json::str("round_stream".to_string())),
+        ("provenance", Json::str("measured".to_string())),
         ("cohort", Json::num(COHORT as f64)),
         ("workers", Json::num(WORKERS as f64)),
         ("state_bytes", Json::num(state_bytes as f64)),
@@ -133,13 +137,25 @@ fn main() {
             Json::num((stream_peak as usize * state_bytes) as f64),
         ),
         ("streaming_mean_ns", Json::num(stream_ns)),
+        // the `_speedup` suffix tells the trajectory differ that higher
+        // is better (fewer live states under the streaming executor)
         (
-            "peak_reduction",
+            "peak_reduction_speedup",
             Json::num(eager_peak as f64 / (stream_peak.max(1)) as f64),
         ),
     ]);
-    match std::fs::write("BENCH_round_stream.json", j.to_string()) {
-        Ok(()) => println!("wrote BENCH_round_stream.json"),
-        Err(e) => eprintln!("could not write BENCH_round_stream.json: {e}"),
+
+    // diff against the committed baseline before clobbering it (warn-only)
+    match trajectory::load_baseline(BASELINE) {
+        Some(baseline) => {
+            let cmp = trajectory::compare(&baseline, &j);
+            print!("{}", cmp.report(BASELINE));
+        }
+        None => println!("no committed {BASELINE} baseline to diff against"),
+    }
+
+    match std::fs::write(BASELINE, j.to_string()) {
+        Ok(()) => println!("wrote {BASELINE}"),
+        Err(e) => eprintln!("could not write {BASELINE}: {e}"),
     }
 }

@@ -9,7 +9,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use droppeft::benchkit::{Bench, Suite};
+use droppeft::benchkit::{trajectory, Bench, Suite};
 use droppeft::data::{gen, TaskSpec};
 use droppeft::fed::{Engine, FedConfig};
 use droppeft::model::{BaseModel, TrainState};
@@ -108,8 +108,10 @@ fn main() {
 
 /// Host wall-clock of a full federated round at workers=1 vs the host's
 /// default worker count (same seed, identical results by construction —
-/// see tests/parallel_determinism.rs). Emits BENCH_round_parallel.json.
+/// see tests/parallel_determinism.rs). Emits BENCH_round_parallel.json,
+/// diffed against the committed baseline (warn-only) before overwriting.
 fn bench_round_parallel(rt: &Arc<Runtime>) {
+    const BASELINE: &str = "BENCH_round_parallel.json";
     if rt.model("tiny").is_err() {
         return;
     }
@@ -152,6 +154,7 @@ fn bench_round_parallel(rt: &Arc<Runtime>) {
 
     let j = Json::obj(vec![
         ("bench", Json::str("round_parallel".to_string())),
+        ("provenance", Json::str("measured".to_string())),
         ("devices_per_round", Json::num(DEVICES_PER_ROUND as f64)),
         ("rounds_timed", Json::num(TIMED_ROUNDS as f64)),
         ("workers_serial", Json::num(1.0)),
@@ -160,8 +163,18 @@ fn bench_round_parallel(rt: &Arc<Runtime>) {
         ("parallel_secs", Json::num(parallel_secs)),
         ("speedup", Json::num(speedup)),
     ]);
-    match std::fs::write("BENCH_round_parallel.json", j.to_string()) {
-        Ok(()) => println!("wrote BENCH_round_parallel.json"),
-        Err(e) => eprintln!("could not write BENCH_round_parallel.json: {e}"),
+
+    // diff against the committed baseline before clobbering it (warn-only)
+    match trajectory::load_baseline(BASELINE) {
+        Some(baseline) => {
+            let cmp = trajectory::compare(&baseline, &j);
+            print!("{}", cmp.report(BASELINE));
+        }
+        None => println!("no committed {BASELINE} baseline to diff against"),
+    }
+
+    match std::fs::write(BASELINE, j.to_string()) {
+        Ok(()) => println!("wrote {BASELINE}"),
+        Err(e) => eprintln!("could not write {BASELINE}: {e}"),
     }
 }

@@ -24,6 +24,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::fed::spec::{SessionSpec, SessionSpecBuilder, SweepPlan};
+use crate::fed::store::DeviceStoreSpec;
 use crate::fed::{ConsoleReporter, JsonlWriter};
 use crate::metrics::SessionResult;
 use crate::runtime::{self, Backend, BackendKind};
@@ -40,6 +41,11 @@ pub struct Ctx {
     /// worker threads for device-parallel local training (does not affect
     /// results: identical seed => identical sessions at any count)
     pub workers: usize,
+    /// where mutable device sessions live between rounds (host-specific
+    /// like `workers`: either store yields byte-identical sessions)
+    pub device_store: DeviceStoreSpec,
+    /// hot sessions the disk store keeps resident in RAM
+    pub device_cache: usize,
     /// write a session snapshot every N rounds (0 = disabled)
     pub snapshot_every: usize,
     /// base directory for session snapshots; the sweep plan gives each
@@ -60,6 +66,8 @@ impl Ctx {
             .dataset(dataset)
             .seed(self.seed)
             .workers(self.workers)
+            .device_store(self.device_store.clone())
+            .device_cache(self.device_cache)
             .snapshot_every(self.snapshot_every)
             .eval_every(2)
             // the tiny/small presets want a larger step than the paper's
@@ -154,6 +162,10 @@ pub fn run(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 42)?,
         workers: args
             .usize_or("workers", crate::util::pool::default_workers())?
+            .max(1),
+        device_store: DeviceStoreSpec::parse(&args.str_or("device-store", "mem"))?,
+        device_cache: args
+            .usize_or("device-cache", crate::fed::store::DEFAULT_DEVICE_CACHE)?
             .max(1),
         snapshot_every: args.usize_or("snapshot-every", 0)?,
         snapshot_dir: args.opt_str("snapshot-dir"),

@@ -1,5 +1,7 @@
 //! Federated session configuration (paper §6.1 "FL Settings").
 
+use crate::fed::store::DeviceStoreSpec;
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct FedConfig {
     /// compiled model preset ("tiny" | "small" | "base")
@@ -39,6 +41,13 @@ pub struct FedConfig {
     pub snapshot_every: usize,
     /// directory for session snapshots (default "snapshots")
     pub snapshot_dir: Option<String>,
+    /// where mutable device sessions live between rounds (host-side
+    /// runtime knob like `workers`: never serialized into snapshots,
+    /// overridable on resume)
+    pub device_store: DeviceStoreSpec,
+    /// max device sessions resident in RAM under the disk store (LRU
+    /// capacity; ignored by the in-memory store)
+    pub device_cache: usize,
 }
 
 impl FedConfig {
@@ -64,6 +73,8 @@ impl FedConfig {
             cost_model: None,
             snapshot_every: 0,
             snapshot_dir: None,
+            device_store: DeviceStoreSpec::Mem,
+            device_cache: crate::fed::store::DEFAULT_DEVICE_CACHE,
         }
     }
 }

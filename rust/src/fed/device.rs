@@ -1,11 +1,21 @@
-//! Simulated end device: data shard + hardware profile + bandwidth
-//! process + (for personalized methods) persistent local training state.
+//! Simulated end device, split into the **static** population parameters
+//! (data shard, hardware profile, bandwidth process — deterministic
+//! functions of the config seed, rebuilt on resume, never stored) and the
+//! **mutable session state** (RNG stream, personalized `TrainState`,
+//! share history, participation count) that a [`crate::fed::store::DeviceStore`]
+//! owns with checkout/commit semantics.
+//!
+//! The split is what lets a store bound resident memory: a device that
+//! has never participated carries exactly the session
+//! [`DeviceStatic::fresh_session`] rebuilds from `initial_rng`, so cold
+//! devices cost nothing — only *diverged* sessions need to live in RAM
+//! or on disk.
 
 use crate::bandit::{tier_of, Tier};
 use crate::data::{dirichlet_partition, split_shard, Shard};
 use crate::hw::{sample_device, Bandwidth, DeviceProfile};
 use crate::model::TrainState;
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, RngState};
 
 /// What strategy objects are allowed to see about a device.
 #[derive(Clone, Debug)]
@@ -17,29 +27,21 @@ pub struct DeviceInfo {
     pub n_samples: usize,
 }
 
-/// Snapshot contract (`fed::snapshot`): `shard`/`profile`/`mode`/
-/// `bandwidth` are static after `build_population` and are rebuilt from
-/// the config seed on resume; `rng`, `personal`, `last_shared`, and
-/// `participations` are the mutable session state a `DPEFTSN2` snapshot
-/// captures and `Engine::resume` patches back in. A new mutable field
-/// here must also be added to `DeviceSnapshot`.
-pub struct DeviceCtx {
+/// The static half of a device: everything `build_population` derives
+/// from the config seed. Immutable after construction; a resumed or
+/// disk-spilled session never stores any of this.
+pub struct DeviceStatic {
     pub id: usize,
     pub shard: Shard,
     pub profile: DeviceProfile,
     pub mode: usize,
     pub bandwidth: Bandwidth,
-    pub rng: Rng,
-    /// persistent local state (PTLS-personalized methods only)
-    pub personal: Option<TrainState>,
-    /// layers this device shared last round (these get refreshed from the
-    /// global model at the next download)
-    pub last_shared: Vec<usize>,
-    /// rounds this device has participated in
-    pub participations: usize,
+    /// device RNG state right after population construction — the
+    /// session stream a never-selected device (re)starts from
+    pub initial_rng: RngState,
 }
 
-impl DeviceCtx {
+impl DeviceStatic {
     pub fn info(&self) -> DeviceInfo {
         DeviceInfo {
             id: self.id,
@@ -57,36 +59,110 @@ impl DeviceCtx {
     pub fn power_w(&self) -> f64 {
         self.profile.power(self.mode)
     }
+
+    /// The session a device that has never participated carries: the
+    /// seed-derived RNG stream and no history. Stores rebuild cold
+    /// sessions through this instead of holding them resident.
+    pub fn fresh_session(&self) -> DeviceSession {
+        DeviceSession {
+            rng: Rng::from_state(self.initial_rng),
+            personal: None,
+            last_shared: Vec::new(),
+            participations: 0,
+        }
+    }
+}
+
+/// Snapshot contract (`fed::snapshot`): this is exactly the mutable
+/// per-device state a `DPEFTSN2` snapshot captures and `Engine::resume`
+/// patches back in. A new mutable field here must also be added to
+/// `DeviceSnapshot` (and the device-store spill codec that reuses it).
+#[derive(Clone, Debug)]
+pub struct DeviceSession {
+    pub rng: Rng,
+    /// persistent local state (PTLS-personalized methods only)
+    pub personal: Option<TrainState>,
+    /// layers this device shared last round (these get refreshed from the
+    /// global model at the next download)
+    pub last_shared: Vec<usize>,
+    /// rounds this device has participated in
+    pub participations: usize,
+}
+
+impl DeviceSession {
+    /// True when this session is byte-identical to what
+    /// [`DeviceStatic::fresh_session`] would rebuild — i.e. the device
+    /// never participated and its RNG stream was never advanced. Stores
+    /// and resume skip persisting such sessions.
+    pub fn is_default(&self, statics: &DeviceStatic) -> bool {
+        self.participations == 0
+            && self.last_shared.is_empty()
+            && self.personal.is_none()
+            && self.rng.export_state() == statics.initial_rng
+    }
+}
+
+/// The static device population: shards, profiles, and initial RNG
+/// states for every device id, fully resident (it is O(dataset) + a few
+/// hundred bytes per device — the heavy mutable state lives in the
+/// store).
+pub struct Population {
+    statics: Vec<DeviceStatic>,
+}
+
+impl Population {
+    /// Wrap pre-built statics (tests and benches; sessions normally come
+    /// from [`build_population`]).
+    pub fn from_statics(statics: Vec<DeviceStatic>) -> Population {
+        Population { statics }
+    }
+
+    pub fn len(&self) -> usize {
+        self.statics.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.statics.is_empty()
+    }
+
+    pub fn device(&self, id: usize) -> &DeviceStatic {
+        &self.statics[id]
+    }
+
+    pub fn devices(&self) -> &[DeviceStatic] {
+        &self.statics
+    }
 }
 
 /// Build the simulated device population: non-IID Dirichlet data shards
 /// plus sampled hardware profiles, power modes, and bandwidth processes.
+/// The per-device draw order (profile, bandwidth, shard split) is frozen
+/// — it defines `initial_rng` and therefore every session's RNG stream.
 pub fn build_population(
     labels: &[i32],
     n_classes: usize,
     n_devices: usize,
     alpha: f64,
     rng: &mut Rng,
-) -> Vec<DeviceCtx> {
+) -> Population {
     let shards = dirichlet_partition(labels, n_classes, n_devices, alpha, rng);
-    shards
+    let statics = shards
         .into_iter()
         .enumerate()
         .map(|(id, shard)| {
             let mut drng = rng.fork(id as u64);
             let (profile, mode) = sample_device(&mut drng);
             let bandwidth = Bandwidth::sample_base(&mut drng);
-            DeviceCtx {
+            let shard = split_shard(shard, 0.2, &mut drng);
+            DeviceStatic {
                 id,
-                shard: split_shard(shard, 0.2, &mut drng),
+                shard,
                 profile,
                 mode,
                 bandwidth,
-                rng: drng,
-                personal: None,
-                last_shared: Vec::new(),
-                participations: 0,
+                initial_rng: drng.export_state(),
             }
         })
-        .collect()
+        .collect();
+    Population { statics }
 }

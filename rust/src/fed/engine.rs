@@ -28,11 +28,12 @@ use anyhow::{Context, Result};
 use crate::data::{batch::eval_batches, gen, Batch, Dataset, TaskSpec};
 use crate::fed::client::{ClientCtx, ClientTask};
 use crate::fed::config::FedConfig;
-use crate::fed::device::{self, DeviceCtx};
+use crate::fed::device;
 use crate::fed::events::{Collector, EngineEvent, EventSink};
 use crate::fed::round;
 use crate::fed::server::{self, Server};
 use crate::fed::snapshot::{self, SessionSnapshot};
+use crate::fed::store::{self, DeviceStore, DeviceStoreSpec};
 use crate::metrics::{RoundRecord, SessionResult};
 use crate::methods::Method;
 use crate::model::{BaseModel, TrainState};
@@ -48,7 +49,9 @@ pub struct Engine {
     base: Arc<BaseModel>,
     dataset: Dataset,
     test_batches: Vec<Batch>,
-    devices: Vec<DeviceCtx>,
+    /// owner of all mutable per-device session state (`--device-store`);
+    /// the static population hangs off it via `DeviceStore::population`
+    store: Box<dyn DeviceStore>,
     method: Box<dyn Method>,
     server: Server,
     rng: Rng,
@@ -81,17 +84,19 @@ impl Engine {
         let all: Vec<usize> = (0..test_set.len()).collect();
         let test_batches = eval_batches(&test_set, &all, mcfg.batch, cfg.eval_batches);
 
-        // non-IID partition + device population
-        let devices = device::build_population(
+        // non-IID partition + device population (static parameters only;
+        // the mutable sessions live behind the device store)
+        let population = Arc::new(device::build_population(
             &dataset.labels,
             task.n_classes,
             cfg.n_devices,
             cfg.alpha,
             &mut rng,
-        );
+        ));
 
         let base = BaseModel::init(&spec, cfg.seed);
         let global = TrainState::init(&spec, method.kind(), cfg.seed)?;
+        let store = store::create(&cfg, population, &global)?;
         let collector =
             Collector::with_meta(method.name(), cfg.dataset.clone(), cfg.preset.clone());
         Ok(Engine {
@@ -101,7 +106,7 @@ impl Engine {
             base,
             dataset,
             test_batches,
-            devices,
+            store,
             method,
             server: Server::new(global),
             rng,
@@ -172,18 +177,32 @@ impl Engine {
         );
         engine.server = Server::resume(snap.global, snap.clock, snap.prev_acc);
         engine.rng = Rng::from_state(snap.rng);
+        let pop = engine.store.population().clone();
         anyhow::ensure!(
-            engine.devices.len() == snap.devices.len(),
+            pop.len() == snap.devices.len(),
             "snapshot has {} devices, rebuilt population has {}",
             snap.devices.len(),
-            engine.devices.len()
+            pop.len()
         );
-        for (dev, ds) in engine.devices.iter_mut().zip(snap.devices) {
-            anyhow::ensure!(dev.id == ds.id, "device id mismatch on resume");
-            dev.participations = ds.participations;
-            dev.last_shared = ds.last_shared;
-            dev.rng = Rng::from_state(ds.rng);
-            dev.personal = ds.personal;
+        for ds in snap.devices {
+            let statics = pop.device(ds.id);
+            anyhow::ensure!(statics.id == ds.id, "device id mismatch on resume");
+            // skip sessions identical to the seed-derived default: the
+            // store rebuilds those on demand, so resume stays O(hot-set)
+            // even on million-device populations
+            if ds.participations == 0
+                && ds.last_shared.is_empty()
+                && ds.personal.is_none()
+                && ds.rng == statics.initial_rng
+            {
+                continue;
+            }
+            let mut sess = engine.store.checkout(ds.id)?;
+            sess.participations = ds.participations;
+            sess.last_shared = ds.last_shared;
+            sess.rng = Rng::from_state(ds.rng);
+            sess.personal = ds.personal;
+            engine.store.commit(ds.id, sess)?;
         }
         // re-stamp the method display name: the blob import above can
         // restore ablation options that change it
@@ -212,9 +231,31 @@ impl Engine {
         runtime: Arc<dyn Backend>,
         workers: Option<usize>,
     ) -> Result<Engine> {
+        Engine::resume_from_path_overrides(path, runtime, workers, None, None)
+    }
+
+    /// Like [`Engine::resume_from_path`], additionally overriding the
+    /// device-store host configuration. Snapshots never record the store
+    /// flags (like `workers` they are host-specific and can never affect
+    /// results), so resuming under a `disk:` store requires re-passing
+    /// `--device-store` — and a snapshot written under either store can
+    /// resume under the other.
+    pub fn resume_from_path_overrides(
+        path: impl AsRef<Path>,
+        runtime: Arc<dyn Backend>,
+        workers: Option<usize>,
+        device_store: Option<DeviceStoreSpec>,
+        device_cache: Option<usize>,
+    ) -> Result<Engine> {
         let mut snap = snapshot::load(path.as_ref())?;
         if let Some(w) = workers {
             snap.cfg.workers = w.max(1);
+        }
+        if let Some(s) = device_store {
+            snap.cfg.device_store = s;
+        }
+        if let Some(n) = device_cache {
+            snap.cfg.device_cache = n.max(1);
         }
         Engine::resume_snapshot(snap, runtime)
     }
@@ -335,7 +376,7 @@ impl Engine {
             self.server.prev_acc(),
             self.server.global(),
             &self.rng,
-            &self.devices,
+            &mut *self.store,
             self.collector.records(),
         )?;
         self.emit(EngineEvent::SnapshotWritten {
@@ -354,9 +395,9 @@ impl Engine {
             &self.cfg,
             &self.spec,
             &mut *self.method,
-            &mut self.devices,
+            &mut *self.store,
             &mut self.rng,
-        );
+        )?;
         let selected = plan.selected();
         self.emit(EngineEvent::RoundPlanned {
             round,
@@ -366,13 +407,15 @@ impl Engine {
         // ---- streaming fan-out / sequential fan-in ----
         // Field-disjoint borrows: the client tasks read runtime / cfg /
         // spec / base / dataset / method / server.global(), while the
-        // fan-in consumer mutates devices and drives collector + sinks.
-        // Workers materialize their own downloads from &global, and the
-        // consumer releases each outcome as it is absorbed, so at most
-        // O(workers) TrainState copies are ever live.
+        // fan-in consumer commits sessions through the device store and
+        // drives collector + sinks. Workers materialize their own
+        // downloads from &global, and the consumer releases each outcome
+        // as it is absorbed, so at most O(workers) TrainState copies are
+        // ever live.
         let mut accum = self.server.begin_round(round);
         let mut first_err: Option<anyhow::Error> = None;
         let mut sink_err: Option<anyhow::Error> = None;
+        let mut store_err: Option<anyhow::Error> = None;
         {
             let ctx = ClientCtx {
                 runtime: &*self.runtime,
@@ -383,7 +426,7 @@ impl Engine {
             };
             let task = ClientTask::new(ctx, &*self.method, &plan, self.server.global());
             let task = &task;
-            let devices = &mut self.devices;
+            let store = &mut self.store;
             let collector = &mut self.collector;
             let sinks = &mut self.sinks;
             let jobs: Vec<_> = plan
@@ -393,12 +436,16 @@ impl Engine {
                 .collect();
             pool::run_parallel_streaming(self.cfg.workers.max(1), jobs, |_, res| match res {
                 Ok(mut out) => {
-                    if first_err.is_some() || sink_err.is_some() {
+                    if first_err.is_some() || sink_err.is_some() || store_err.is_some() {
                         // the round already failed: keep the finished
                         // client's device-side state (the serial engine
                         // persisted each device as it completed), but
                         // skip aggregation and events
-                        server::persist_only(&mut out, devices);
+                        if let Err(e) = server::persist_only(&mut out, &mut **store) {
+                            if store_err.is_none() {
+                                store_err = Some(e);
+                            }
+                        }
                         return;
                     }
                     // client events fire here, at the sequential
@@ -415,7 +462,10 @@ impl Engine {
                         comm_secs: out.comm_secs,
                         traffic_bytes: out.traffic_bytes,
                     };
-                    accum.absorb(out, devices);
+                    if let Err(e) = accum.absorb(out, &mut **store) {
+                        store_err = Some(e);
+                        return;
+                    }
                     if let Err(e) = deliver(collector, sinks, &ev) {
                         sink_err = Some(e);
                     }
@@ -429,6 +479,9 @@ impl Engine {
             });
         }
         if let Some(e) = first_err {
+            return Err(e);
+        }
+        if let Some(e) = store_err {
             return Err(e);
         }
         if let Some(e) = sink_err {
@@ -447,13 +500,25 @@ impl Engine {
         // periodic evaluation
         let last = round + 1 == self.cfg.rounds;
         if round % self.cfg.eval_every == self.cfg.eval_every - 1 || last {
-            rec.global_acc = Some(self.server.eval_global(&self.ctx(), &self.test_batches)?);
-            if self.cfg.eval_personalized && self.method.personalized() {
-                // None when no selected device has personalized state
-                // yet — the field is skipped rather than recorded as a
-                // garbage mean over an empty set
-                rec.personalized_acc =
-                    self.server.eval_personalized(&self.ctx(), &self.devices, &selected)?;
+            {
+                // built inline (not via self.ctx()) so the borrow stays
+                // field-disjoint from the store's &mut
+                let ctx = ClientCtx {
+                    runtime: &*self.runtime,
+                    cfg: &self.cfg,
+                    spec: &self.spec,
+                    base: &*self.base,
+                    dataset: &self.dataset,
+                };
+                rec.global_acc = Some(self.server.eval_global(&ctx, &self.test_batches)?);
+                if self.cfg.eval_personalized && self.method.personalized() {
+                    // None when no selected device has personalized state
+                    // yet — the field is skipped rather than recorded as
+                    // a garbage mean over an empty set
+                    rec.personalized_acc =
+                        self.server
+                            .eval_personalized(&ctx, &mut *self.store, &selected)?;
+                }
             }
             self.emit(EngineEvent::Evaluated {
                 round,

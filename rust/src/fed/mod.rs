@@ -14,6 +14,9 @@
 //!   simulated wall-clock);
 //! - [`snapshot`] — the versioned `DPEFTSN2` session snapshot format
 //!   behind `--snapshot-every` / `--resume` (kill-and-resume determinism);
+//! - [`store`] — pluggable [`DeviceStore`] ownership of mutable device
+//!   sessions (in-memory map, or a disk-backed store with a bounded LRU
+//!   of hot residents for populations far larger than RAM);
 //! - [`spec`] — the typed `SessionSpec` builder and `SweepPlan`, the
 //!   library-first way to describe sessions (the CLI is a thin
 //!   translator into these);
@@ -30,13 +33,15 @@ pub mod round;
 pub mod server;
 pub mod snapshot;
 pub mod spec;
+pub mod store;
 
 pub use client::{ClientCtx, ClientTask};
 pub use config::FedConfig;
-pub use device::{DeviceCtx, DeviceInfo};
+pub use device::{DeviceInfo, DeviceSession, DeviceStatic, Population};
 pub use engine::Engine;
 pub use events::{Collector, ConsoleReporter, EngineEvent, EventSink, JsonlWriter};
 pub use round::{DevicePlan, DownloadSpec, LocalOutcome, RoundPlan};
 pub use server::{RoundAccum, Server};
 pub use snapshot::SessionSnapshot;
 pub use spec::{SessionSpec, SessionSpecBuilder, SweepPlan};
+pub use store::{DeviceStore, DeviceStoreSpec, DiskStore, MemStore};

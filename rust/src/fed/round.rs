@@ -19,8 +19,11 @@
 //! `devices_per_round` (`tests/round_streaming.rs` asserts the bound via
 //! `testkit::DOWNLOADS`).
 
+use anyhow::Result;
+
 use crate::fed::config::FedConfig;
-use crate::fed::device::{DeviceCtx, DeviceInfo};
+use crate::fed::device::{DeviceInfo, DeviceSession};
+use crate::fed::store::DeviceStore;
 use crate::methods::{Method, SharePolicy};
 use crate::model::TrainState;
 use crate::ptls::Upload;
@@ -47,11 +50,11 @@ pub struct DownloadSpec {
 
 impl DownloadSpec {
     /// Capture a device's download inputs during planning. Moves the
-    /// personalized state out of the device; copies nothing.
-    fn for_device(dev: &mut DeviceCtx, personalized: bool) -> DownloadSpec {
+    /// personalized state out of the checked-out session; copies nothing.
+    fn for_device(sess: &mut DeviceSession, personalized: bool) -> DownloadSpec {
         DownloadSpec {
-            personal: if personalized { dev.personal.take() } else { None },
-            last_shared: dev.last_shared.clone(),
+            personal: if personalized { sess.personal.take() } else { None },
+            last_shared: sess.last_shared.clone(),
             personalized,
         }
     }
@@ -169,57 +172,62 @@ pub struct LocalOutcome {
 
 /// Plan one round: device selection, per-device dropout configuration,
 /// download-spec capture, and RNG pre-draws. Runs sequentially (the
-/// method is `&mut`, devices mutate their RNG streams and surrender
-/// personal state) so the plan is reproducible regardless of later
-/// execution order.
+/// method is `&mut`, selected sessions are checked out of the store one
+/// at a time, mutate their RNG streams, surrender personal state, and
+/// are committed back) so the plan is reproducible regardless of later
+/// execution order — and at most one session is resident beyond the
+/// store's own cache at any moment.
 pub fn plan_round(
     round: usize,
     cfg: &FedConfig,
     spec: &ModelSpec,
     method: &mut dyn Method,
-    devices: &mut [DeviceCtx],
+    store: &mut dyn DeviceStore,
     rng: &mut Rng,
-) -> RoundPlan {
+) -> Result<RoundPlan> {
     method.begin_round(round);
     let n_layers = spec.config.n_layers;
-    let selected = rng.sample_indices(devices.len(), cfg.devices_per_round.min(devices.len()));
+    let pop = store.population().clone();
+    let selected = rng.sample_indices(pop.len(), cfg.devices_per_round.min(pop.len()));
     let personalized = method.personalized();
     let kind = method.kind().to_string();
 
     let mut plans = Vec::with_capacity(selected.len());
     for &d in &selected {
-        let dev = &mut devices[d];
-        let info = dev.info();
+        let statics = pop.device(d);
+        let info = statics.info();
+        let mut sess = store.checkout(d)?;
         // per-device RNG draws in the exact order of the serial engine:
         // dropout fork, sampler fork, mask fork, bandwidth jitter
-        let mut drng = dev.rng.fork(round as u64);
+        let mut drng = sess.rng.fork(round as u64);
         let dropout = method.dropout_for(round, &info, n_layers, &mut drng);
-        let download = DownloadSpec::for_device(dev, personalized);
-        let sampler_rng = dev.rng.fork(0x10CA1 ^ round as u64);
-        let mask_rng = dev.rng.fork(0x5eed ^ round as u64);
-        let bps = dev.bandwidth.round_bps(&mut dev.rng);
+        let download = DownloadSpec::for_device(&mut sess, personalized);
+        let sampler_rng = sess.rng.fork(0x10CA1 ^ round as u64);
+        let mask_rng = sess.rng.fork(0x5eed ^ round as u64);
+        let bps = statics.bandwidth.round_bps(&mut sess.rng);
+        store.commit(d, sess)?;
         plans.push(DevicePlan {
             device: d,
             dropout,
             download,
-            shard_train: dev.shard.train.clone(),
-            shard_val: dev.shard.val.clone(),
+            shard_train: statics.shard.train.clone(),
+            shard_val: statics.shard.val.clone(),
             sampler_rng,
             mask_rng,
             bps,
-            power_w: dev.power_w(),
+            power_w: statics.power_w(),
             frozen_below: method.frozen_below(round, n_layers),
             share_policy: method.share_policy(n_layers),
             agg_weight: method.aggregation_weight(&info),
             info,
         });
     }
-    RoundPlan {
+    Ok(RoundPlan {
         round,
         kind,
         personalized,
         devices: plans,
-    }
+    })
 }
 
 #[cfg(test)]

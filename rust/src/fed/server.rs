@@ -17,8 +17,8 @@ use anyhow::Result;
 
 use crate::data::batch::{eval_batches, Batch};
 use crate::fed::client::{eval_state, ClientCtx};
-use crate::fed::device::DeviceCtx;
 use crate::fed::round::LocalOutcome;
+use crate::fed::store::DeviceStore;
 use crate::methods::Method;
 use crate::metrics::RoundRecord;
 use crate::model::TrainState;
@@ -34,18 +34,22 @@ pub struct Server {
 }
 
 /// Persist one finished client's device-side session state (participation
-/// count, shared set, personalized state). Used by [`RoundAccum::absorb`]
-/// and directly by the engine when a round has already failed — a failed
-/// client must not wipe the survivors' progress.
-pub fn persist_only(out: &mut LocalOutcome, devices: &mut [DeviceCtx]) {
-    let dev = &mut devices[out.device];
-    dev.participations += 1;
-    dev.last_shared = out.upload.layers.clone();
+/// count, shared set, personalized state) through the device store. Used
+/// by [`RoundAccum::absorb`] and directly by the engine when a round has
+/// already failed — a failed client must not wipe the survivors'
+/// progress. Takes the upload's shared-layer set **by move** (the outcome
+/// dies at the fan-in anyway), so callers that read the upload must do so
+/// before persisting.
+pub fn persist_only(out: &mut LocalOutcome, store: &mut dyn DeviceStore) -> Result<()> {
+    let mut sess = store.checkout(out.device)?;
+    sess.participations += 1;
+    sess.last_shared = std::mem::take(&mut out.upload.layers);
     if let Some(state) = out.final_state.take() {
-        dev.personal = Some(state);
+        sess.personal = Some(state);
         // the round-start download's round-trip ends on the device
         crate::testkit::DOWNLOADS.dec();
     }
+    store.commit(out.device, sess)
 }
 
 /// Streaming per-round absorber: one client outcome at a time, in
@@ -68,11 +72,11 @@ pub struct RoundAccum {
 }
 
 impl RoundAccum {
-    /// Absorb one outcome: persist the device's session state, fold the
-    /// upload into the aggregation accumulator, fold the round
-    /// statistics. The outcome dies here.
-    pub fn absorb(&mut self, mut out: LocalOutcome, devices: &mut [DeviceCtx]) {
-        persist_only(&mut out, devices);
+    /// Absorb one outcome: fold the upload into the aggregation
+    /// accumulator, fold the round statistics, then persist the device's
+    /// session state (which consumes the upload's layer set). The
+    /// outcome dies here.
+    pub fn absorb(&mut self, mut out: LocalOutcome, store: &mut dyn DeviceStore) -> Result<()> {
         self.agg.absorb(&out.upload);
         self.n += 1;
         let t = out.comp_secs + out.comm_secs;
@@ -85,6 +89,7 @@ impl RoundAccum {
         self.sum_active += out.active_frac;
         self.sum_local_acc += out.local_acc;
         self.sum_train_acc += out.train_acc;
+        persist_only(&mut out, store)
     }
 
     /// Outcomes absorbed so far.
@@ -212,19 +217,28 @@ impl Server {
 
     /// Mean personalized accuracy over the given devices' local val sets,
     /// or `None` when no selected device has personalized state yet.
+    /// Sessions are visited read-only through the store, one at a time,
+    /// so a disk store's residency bound holds during eval too.
     pub fn eval_personalized(
         &self,
         ctx: &ClientCtx<'_>,
-        devices: &[DeviceCtx],
+        store: &mut dyn DeviceStore,
         device_ids: &[usize],
     ) -> Result<Option<f64>> {
+        let pop = store.population().clone();
         let mut accs = Vec::new();
         for &d in device_ids {
-            let dev = &devices[d];
-            if let Some(state) = &dev.personal {
-                let batches =
-                    eval_batches(ctx.dataset, &dev.shard.val, ctx.spec.config.batch, 2);
-                accs.push(eval_state(ctx, state, &batches)?);
+            let val = &pop.device(d).shard.val;
+            let mut acc = None;
+            store.with_session(d, &mut |sess| {
+                if let Some(state) = &sess.personal {
+                    let batches = eval_batches(ctx.dataset, val, ctx.spec.config.batch, 2);
+                    acc = Some(eval_state(ctx, state, &batches)?);
+                }
+                Ok(())
+            })?;
+            if let Some(a) = acc {
+                accs.push(a);
             }
         }
         Ok(personalized_mean(&accs))
@@ -246,8 +260,11 @@ pub fn personalized_mean(accs: &[f64]) -> Option<f64> {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
-    use crate::hw::{sample_device, Bandwidth};
+    use crate::fed::device::{build_population, Population};
+    use crate::fed::store::{DeviceStore, MemStore};
     use crate::ptls::Upload;
     use crate::util::rng::Rng;
 
@@ -266,27 +283,17 @@ mod tests {
         }
     }
 
+    fn population(n_devices: usize) -> Arc<Population> {
+        let labels: Vec<i32> = (0..40).map(|i| (i % 2) as i32).collect();
+        let mut rng = Rng::seed_from(1);
+        Arc::new(build_population(&labels, 2, n_devices, 1.0, &mut rng))
+    }
+
     #[test]
     fn streamed_round_persists_devices_and_accumulates_stats() {
         let (q, l, h) = (2, 3, 2);
         let mut server = Server::new(ts(q, l, h, 0.0));
-        let mut rng = Rng::seed_from(1);
-        let mut devices: Vec<DeviceCtx> = (0..2)
-            .map(|id| {
-                let (profile, mode) = sample_device(&mut rng);
-                DeviceCtx {
-                    id,
-                    shard: crate::data::split_shard((0..10).collect(), 0.2, &mut rng),
-                    profile,
-                    mode,
-                    bandwidth: Bandwidth::sample_base(&mut rng),
-                    rng: rng.fork(id as u64),
-                    personal: None,
-                    last_shared: Vec::new(),
-                    participations: 0,
-                }
-            })
-            .collect();
+        let mut store = MemStore::new(population(2));
 
         let outcome = |device: usize, acc: f64, t: f64| {
             // balance the gauge: absorbing a personalized state dec()s it
@@ -314,13 +321,23 @@ mod tests {
         };
 
         let mut accum = server.begin_round(4);
-        accum.absorb(outcome(0, 0.2, 1.0), &mut devices);
-        accum.absorb(outcome(1, 0.6, 3.0), &mut devices);
+        accum.absorb(outcome(0, 0.2, 1.0), &mut store).unwrap();
+        accum.absorb(outcome(1, 0.6, 3.0), &mut store).unwrap();
         assert_eq!(accum.absorbed(), 2);
-        // devices persisted at absorption time, one outcome at a time
-        assert_eq!(devices[0].participations, 1);
-        assert_eq!(devices[0].last_shared, vec![0]);
-        assert!(devices[1].personal.is_some(), "personalized state kept");
+        // sessions persisted at absorption time, one outcome at a time
+        store
+            .with_session(0, &mut |sess| {
+                assert_eq!(sess.participations, 1);
+                assert_eq!(sess.last_shared, vec![0]);
+                Ok(())
+            })
+            .unwrap();
+        store
+            .with_session(1, &mut |sess| {
+                assert!(sess.personal.is_some(), "personalized state kept");
+                Ok(())
+            })
+            .unwrap();
         // the global model is untouched while the round is in flight
         assert!(server.global().peft.iter().all(|&x| x == 0.0));
 

@@ -25,7 +25,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::fed::config::FedConfig;
-use crate::fed::device::DeviceCtx;
+use crate::fed::device::DeviceSession;
+use crate::fed::store::DeviceStore;
 use crate::methods::Method;
 use crate::metrics::RoundRecord;
 use crate::model::ckpt::{self, Reader, Writer};
@@ -40,7 +41,9 @@ pub const FORMAT_VERSION: u64 = 2;
 pub const DEFAULT_DIR: &str = "snapshots";
 
 /// Per-device mutable session state (everything `fed::server` and the
-/// round planner touch on a `DeviceCtx` between rounds).
+/// round planner touch on a `DeviceSession` between rounds). Also the
+/// payload of a device-store spill file (`fed::store::DiskStore`), which
+/// wraps this section in its own magic + version header.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DeviceSnapshot {
     pub id: usize,
@@ -136,6 +139,11 @@ fn read_config<R: Read>(r: &mut Reader<R>) -> Result<FedConfig> {
         cost_model: r.opt_string()?,
         snapshot_every: r.u64()? as usize,
         snapshot_dir: r.opt_string()?,
+        // host-side store knobs are never serialized (like `workers`
+        // they cannot affect results): default here, overridden by
+        // `--device-store` / `--device-cache` on resume
+        device_store: crate::fed::store::DeviceStoreSpec::default(),
+        device_cache: crate::fed::store::DEFAULT_DEVICE_CACHE,
     })
 }
 
@@ -173,16 +181,16 @@ fn read_record<R: Read>(r: &mut Reader<R>) -> Result<RoundRecord> {
     })
 }
 
-/// Borrowed per-device view: both save paths (owned `SessionSnapshot`
-/// and the engine's live state) funnel through this, so the wire format
-/// has exactly one writer and the hot path never deep-clones model
-/// state.
-struct DeviceFields<'a> {
-    id: usize,
-    participations: usize,
-    last_shared: &'a [usize],
-    rng: RngState,
-    personal: Option<&'a TrainState>,
+/// Borrowed per-device view: every writer of the device section (owned
+/// `SessionSnapshot`, the engine's streamed snapshot save, the disk
+/// store's spill files) funnels through this, so the wire format has
+/// exactly one writer and the hot path never deep-clones model state.
+pub(crate) struct DeviceFields<'a> {
+    pub(crate) id: usize,
+    pub(crate) participations: usize,
+    pub(crate) last_shared: &'a [usize],
+    pub(crate) rng: RngState,
+    pub(crate) personal: Option<&'a TrainState>,
 }
 
 impl<'a> From<&'a DeviceSnapshot> for DeviceFields<'a> {
@@ -197,19 +205,23 @@ impl<'a> From<&'a DeviceSnapshot> for DeviceFields<'a> {
     }
 }
 
-impl<'a> From<&'a DeviceCtx> for DeviceFields<'a> {
-    fn from(d: &'a DeviceCtx) -> DeviceFields<'a> {
+impl<'a> DeviceFields<'a> {
+    /// View a live store session as its wire fields.
+    pub(crate) fn of_session(id: usize, s: &'a DeviceSession) -> DeviceFields<'a> {
         DeviceFields {
-            id: d.id,
-            participations: d.participations,
-            last_shared: &d.last_shared,
-            rng: d.rng.export_state(),
-            personal: d.personal.as_ref(),
+            id,
+            participations: s.participations,
+            last_shared: &s.last_shared,
+            rng: s.rng.export_state(),
+            personal: s.personal.as_ref(),
         }
     }
 }
 
-fn write_device<W: std::io::Write>(w: &mut Writer<W>, d: &DeviceFields<'_>) -> Result<()> {
+pub(crate) fn write_device<W: std::io::Write>(
+    w: &mut Writer<W>,
+    d: &DeviceFields<'_>,
+) -> Result<()> {
     w.u64(d.id as u64)?;
     w.u64(d.participations as u64)?;
     let shared: Vec<u64> = d.last_shared.iter().map(|&l| l as u64).collect();
@@ -224,7 +236,7 @@ fn write_device<W: std::io::Write>(w: &mut Writer<W>, d: &DeviceFields<'_>) -> R
     }
 }
 
-fn read_device<R: Read>(r: &mut Reader<R>) -> Result<DeviceSnapshot> {
+pub(crate) fn read_device<R: Read>(r: &mut Reader<R>) -> Result<DeviceSnapshot> {
     let id = r.u64()? as usize;
     let participations = r.u64()? as usize;
     let last_shared: Vec<usize> = r.u64s()?.into_iter().map(|l| l as usize).collect();
@@ -243,9 +255,10 @@ fn read_device<R: Read>(r: &mut Reader<R>) -> Result<DeviceSnapshot> {
     })
 }
 
-/// Borrowed view of everything a snapshot serializes; the single wire
-/// writer both `save` (owned snapshot) and `save_session` (live engine
-/// state, no clones) drive.
+/// Borrowed view of everything a snapshot serializes except the device
+/// sections; the single wire writer both `save` (owned snapshot) and
+/// `save_session` (live engine state, streamed out of the device store)
+/// drive.
 struct SessionFields<'a> {
     cfg: &'a FedConfig,
     method_key: String,
@@ -256,11 +269,18 @@ struct SessionFields<'a> {
     prev_acc: f64,
     global: &'a TrainState,
     rng: RngState,
-    devices: Vec<DeviceFields<'a>>,
     records: &'a [RoundRecord],
 }
 
-fn write_session(path: &Path, s: &SessionFields<'_>) -> Result<()> {
+/// The concrete writer `ckpt::atomic_write` hands its body.
+type SnapWriter = Writer<std::io::BufWriter<std::fs::File>>;
+
+fn write_session(
+    path: &Path,
+    s: &SessionFields<'_>,
+    n_devices: usize,
+    devices: &mut dyn FnMut(&mut SnapWriter) -> Result<()>,
+) -> Result<()> {
     ckpt::atomic_write(path, |w| {
         w.raw(MAGIC)?;
         w.u64(FORMAT_VERSION)?;
@@ -273,10 +293,8 @@ fn write_session(path: &Path, s: &SessionFields<'_>) -> Result<()> {
         w.f64(s.prev_acc)?;
         ckpt::write_train_state(w, s.global)?;
         ckpt::write_rng_state(w, &s.rng)?;
-        w.u64(s.devices.len() as u64)?;
-        for d in &s.devices {
-            write_device(w, d)?;
-        }
+        w.u64(n_devices as u64)?;
+        devices(w)?;
         w.u64(s.records.len() as u64)?;
         for rec in s.records {
             write_record(w, rec)?;
@@ -301,16 +319,23 @@ pub fn save(snap: &SessionSnapshot, path: impl AsRef<Path>) -> Result<()> {
             prev_acc: snap.prev_acc,
             global: &snap.global,
             rng: snap.rng,
-            devices: snap.devices.iter().map(DeviceFields::from).collect(),
             records: &snap.records,
+        },
+        snap.devices.len(),
+        &mut |w| {
+            for d in &snap.devices {
+                write_device(w, &DeviceFields::from(d))?;
+            }
+            Ok(())
         },
     )
 }
 
 /// Hot-path save used by the engine's periodic snapshots: serializes
-/// straight from borrowed session state, so the global model, device
-/// personal states, and round history are never deep-cloned just to be
-/// written to disk.
+/// straight from borrowed session state, streaming device sections out
+/// of the store one at a time — the global model, device personal
+/// states, and round history are never deep-cloned (and, with a disk
+/// store, never all resident) just to be written to disk.
 #[allow(clippy::too_many_arguments)]
 pub fn save_session(
     path: &Path,
@@ -321,9 +346,10 @@ pub fn save_session(
     prev_acc: f64,
     global: &TrainState,
     rng: &Rng,
-    devices: &[DeviceCtx],
+    store: &mut dyn DeviceStore,
     records: &[RoundRecord],
 ) -> Result<()> {
+    let n_devices = store.population().len();
     write_session(
         path,
         &SessionFields {
@@ -336,8 +362,16 @@ pub fn save_session(
             prev_acc,
             global,
             rng: rng.export_state(),
-            devices: devices.iter().map(DeviceFields::from).collect(),
             records,
+        },
+        n_devices,
+        &mut |w| {
+            for id in 0..n_devices {
+                store.with_session(id, &mut |sess| {
+                    write_device(w, &DeviceFields::of_session(id, sess))
+                })?;
+            }
+            Ok(())
         },
     )
 }

@@ -22,6 +22,7 @@ use anyhow::{bail, Context, Result};
 use crate::fed::config::FedConfig;
 use crate::fed::engine::Engine;
 use crate::fed::snapshot::{self, SessionSnapshot};
+use crate::fed::store::DeviceStoreSpec;
 use crate::methods::{Method, MethodSpec};
 use crate::runtime::{self, Backend, BackendKind};
 use crate::util::cli::Args;
@@ -117,6 +118,9 @@ impl SessionSpec {
             if !(t > 0.0 && t <= 1.0) {
                 bail!("spec: target_acc must be in (0, 1] (got {t})");
             }
+        }
+        if c.device_cache == 0 {
+            bail!("spec: device_cache must be >= 1");
         }
         Ok(())
     }
@@ -257,6 +261,21 @@ impl SessionSpecBuilder {
         self
     }
 
+    /// Where mutable device sessions live between rounds
+    /// (`--device-store mem|disk:DIR`). Host-specific like `workers`:
+    /// never changes results, never serialized into snapshots.
+    pub fn device_store(mut self, store: DeviceStoreSpec) -> Self {
+        self.spec.cfg.device_store = store;
+        self
+    }
+
+    /// Max device sessions resident in RAM under the disk store
+    /// (`--device-cache`). Clamped to >= 1 like the CLI.
+    pub fn device_cache(mut self, n: usize) -> Self {
+        self.spec.cfg.device_cache = n.max(1);
+        self
+    }
+
     pub fn build(self) -> Result<SessionSpec> {
         self.spec.validate()?;
         Ok(self.spec)
@@ -294,6 +313,10 @@ pub fn builder_from_args(args: &Args) -> Result<SessionSpecBuilder> {
         .personal_eval(args.flag("personal-eval"))
         .workers(args.usize_or("workers", d.workers)?)
         .backend(BackendKind::parse(&args.str_or("backend", "auto"))?)
+        .device_store(DeviceStoreSpec::parse(
+            &args.str_or("device-store", "mem"),
+        )?)
+        .device_cache(args.usize_or("device-cache", d.device_cache)?)
         .snapshot_every(args.usize_or("snapshot-every", 0)?);
     if let Some(t) = args.opt_str("target-acc") {
         b = b.target_acc(
@@ -398,7 +421,11 @@ impl SweepPlan {
                 snap.next_round,
                 snap.cfg.rounds
             );
+            // host-side runtime knobs come from *this* sweep's config,
+            // not the snapshot's writer
             snap.cfg.workers = cfg.workers.max(1);
+            snap.cfg.device_store = cfg.device_store.clone();
+            snap.cfg.device_cache = cfg.device_cache.max(1);
             return Engine::resume_snapshot(snap, runtime);
         }
         Engine::new(cfg, runtime, method)
@@ -439,6 +466,28 @@ mod tests {
     fn workers_clamp_matches_cli() {
         let spec = SessionSpec::builder().workers(0).build().unwrap();
         assert_eq!(spec.cfg.workers, 1);
+    }
+
+    #[test]
+    fn device_cache_clamp_matches_cli() {
+        let spec = SessionSpec::builder().device_cache(0).build().unwrap();
+        assert_eq!(spec.cfg.device_cache, 1);
+    }
+
+    #[test]
+    fn device_store_spec_parses() {
+        assert_eq!(
+            DeviceStoreSpec::parse("mem").unwrap(),
+            DeviceStoreSpec::Mem
+        );
+        assert_eq!(
+            DeviceStoreSpec::parse("disk:/tmp/devstore").unwrap(),
+            DeviceStoreSpec::Disk {
+                dir: "/tmp/devstore".to_string()
+            }
+        );
+        assert!(DeviceStoreSpec::parse("disk:").is_err());
+        assert!(DeviceStoreSpec::parse("ram").is_err());
     }
 
     #[test]

@@ -1,0 +1,420 @@
+//! Device-state stores: ownership of the mutable per-device session
+//! state ([`DeviceSession`]) behind checkout/commit semantics keyed by
+//! device id, so the engine never holds the whole registry resident.
+//!
+//! Two implementations share one contract (and are byte-identical in
+//! every determinism suite):
+//!
+//! - [`MemStore`] — the degenerate in-memory store. Holds only sessions
+//!   that have *diverged* from the seed-derived default
+//!   ([`crate::fed::device::DeviceStatic::fresh_session`]); cold devices
+//!   cost nothing.
+//! - [`DiskStore`] — a bounded write-back LRU of hot resident sessions;
+//!   evicted sessions spill to per-device files built on the
+//!   atomic-write / bounded-read primitives in [`crate::model::ckpt`]
+//!   and the `DeviceSnapshot` section codec in [`crate::fed::snapshot`].
+//!   Peak resident mutable device state is O(`--device-cache`), so a
+//!   million-device population with paper-scale cohorts fits in a few
+//!   megabytes of RAM (`tests/device_store.rs` pins the bound via
+//!   [`crate::testkit::DEVICE_RESIDENT`]).
+//!
+//! Safety contract: a spill file that fails to read is an error, never a
+//! silent fall-back to the seed default — and a store that fails to
+//! *write* a spill is poisoned and refuses all subsequent operations.
+//! Either shortcut would serve stale session state and break the
+//! byte-identity guarantee.
+
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::fed::config::FedConfig;
+use crate::fed::device::{DeviceInfo, DeviceSession, Population};
+use crate::fed::snapshot::{self, DeviceFields};
+use crate::model::{ckpt, TrainState};
+use crate::testkit;
+use crate::util::rng::Rng;
+
+/// Magic prefix of a per-device spill file.
+pub const SPILL_MAGIC: &[u8; 8] = b"DPEFTDS1";
+/// Bump when the spill layout changes incompatibly.
+pub const SPILL_VERSION: u64 = 1;
+/// Default bounded-LRU capacity for the disk store (`--device-cache`).
+pub const DEFAULT_DEVICE_CACHE: usize = 1024;
+
+/// Which store implementation a session uses (`--device-store`). Host
+/// configuration like `workers`: never serialized into snapshots, so a
+/// session can be snapshotted under one store and resumed under another.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum DeviceStoreSpec {
+    #[default]
+    Mem,
+    Disk {
+        /// spill directory (per-session scratch, wiped on open)
+        dir: String,
+    },
+}
+
+impl DeviceStoreSpec {
+    /// Parse the `--device-store` flag: `mem` or `disk:DIR`.
+    pub fn parse(s: &str) -> Result<DeviceStoreSpec> {
+        if s == "mem" {
+            return Ok(DeviceStoreSpec::Mem);
+        }
+        if let Some(dir) = s.strip_prefix("disk:") {
+            ensure!(!dir.is_empty(), "--device-store disk: needs a directory (disk:DIR)");
+            return Ok(DeviceStoreSpec::Disk {
+                dir: dir.to_string(),
+            });
+        }
+        bail!("unknown device store {s:?} (expected mem or disk:DIR)")
+    }
+}
+
+/// Global-model geometry every spilled personal state must match (the
+/// same checks `fed::snapshot::load` applies to device sections).
+#[derive(Clone, Debug)]
+pub struct StateGeom {
+    pub q: usize,
+    pub n_layers: usize,
+    pub head_len: usize,
+}
+
+impl StateGeom {
+    pub fn of(global: &TrainState) -> StateGeom {
+        StateGeom {
+            q: global.q,
+            n_layers: global.n_layers,
+            head_len: global.head.len(),
+        }
+    }
+}
+
+/// Owner of all mutable per-device session state. The engine checks a
+/// session out (exclusive ownership), mutates it, and commits it back;
+/// the static population parameters stay readable throughout via
+/// [`DeviceStore::population`]. All calls happen at the engine's
+/// sequential barriers (planning, fan-in, eval, snapshot), so the trait
+/// needs no interior locking.
+pub trait DeviceStore: Send {
+    /// The static device population this store serves sessions for.
+    fn population(&self) -> &Arc<Population>;
+
+    /// Take exclusive ownership of a device's session. A device that was
+    /// never committed gets the seed-derived default.
+    fn checkout(&mut self, id: usize) -> Result<DeviceSession>;
+
+    /// Return a (possibly mutated) session to the store. Must follow a
+    /// `checkout` of the same id.
+    fn commit(&mut self, id: usize, session: DeviceSession) -> Result<()>;
+
+    /// Read-only visit (personalized eval, snapshot save). Must not grow
+    /// residency by more than one transient session.
+    fn with_session(
+        &mut self,
+        id: usize,
+        f: &mut dyn FnMut(&DeviceSession) -> Result<()>,
+    ) -> Result<()>;
+
+    /// Implementation label ("mem" / "disk") for logs and errors.
+    fn name(&self) -> &'static str;
+
+    fn len(&self) -> usize {
+        self.population().len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The read-only view planning and strategy objects get.
+    fn info(&self, id: usize) -> DeviceInfo {
+        self.population().device(id).info()
+    }
+}
+
+/// Build the store a config asks for. The disk store needs the global
+/// model's geometry to validate spill files on the way back in.
+pub fn create(
+    cfg: &FedConfig,
+    population: Arc<Population>,
+    global: &TrainState,
+) -> Result<Box<dyn DeviceStore>> {
+    match &cfg.device_store {
+        DeviceStoreSpec::Mem => Ok(Box::new(MemStore::new(population))),
+        DeviceStoreSpec::Disk { dir } => Ok(Box::new(DiskStore::open(
+            population,
+            Path::new(dir),
+            cfg.device_cache,
+            StateGeom::of(global),
+        )?)),
+    }
+}
+
+/// The degenerate in-memory store: a map of diverged sessions. Keeps the
+/// pre-store behavior (everything in RAM) while already benefiting from
+/// the static/session split — never-selected devices are rebuilt from
+/// the seed on demand instead of stored.
+pub struct MemStore {
+    population: Arc<Population>,
+    sessions: HashMap<usize, DeviceSession>,
+}
+
+impl MemStore {
+    pub fn new(population: Arc<Population>) -> MemStore {
+        MemStore {
+            population,
+            sessions: HashMap::new(),
+        }
+    }
+}
+
+impl DeviceStore for MemStore {
+    fn population(&self) -> &Arc<Population> {
+        &self.population
+    }
+
+    fn checkout(&mut self, id: usize) -> Result<DeviceSession> {
+        ensure!(id < self.population.len(), "device id {id} out of range");
+        Ok(self
+            .sessions
+            .remove(&id)
+            .unwrap_or_else(|| self.population.device(id).fresh_session()))
+    }
+
+    fn commit(&mut self, id: usize, session: DeviceSession) -> Result<()> {
+        ensure!(id < self.population.len(), "device id {id} out of range");
+        self.sessions.insert(id, session);
+        Ok(())
+    }
+
+    fn with_session(
+        &mut self,
+        id: usize,
+        f: &mut dyn FnMut(&DeviceSession) -> Result<()>,
+    ) -> Result<()> {
+        ensure!(id < self.population.len(), "device id {id} out of range");
+        match self.sessions.get(&id) {
+            Some(s) => f(s),
+            None => f(&self.population.device(id).fresh_session()),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "mem"
+    }
+}
+
+/// Disk-backed store: a bounded write-back LRU of hot resident sessions;
+/// everything else lives in per-device spill files (or, for devices that
+/// never diverged, nowhere at all — they are rebuilt from the seed).
+///
+/// Residency accounting: every session this store materializes in RAM
+/// (cache entries plus the one transiently checked-out or visited
+/// session) is counted on [`testkit::DEVICE_RESIDENT`], so tests can pin
+/// the peak at `capacity + 1` regardless of population size.
+pub struct DiskStore {
+    population: Arc<Population>,
+    dir: PathBuf,
+    capacity: usize,
+    geom: StateGeom,
+    /// hot sessions, least-recently-committed first
+    cache: Vec<(usize, DeviceSession)>,
+    /// ids whose authoritative session lives in a spill file
+    spilled: HashSet<usize>,
+    /// a failed spill write lost session state: refuse everything after
+    poisoned: Option<String>,
+}
+
+impl DiskStore {
+    /// Open a disk store over `dir`, wiping any `*.dev` spill files a
+    /// previous session left behind (the directory is per-session
+    /// scratch; stale spills must never leak into a new session).
+    pub fn open(
+        population: Arc<Population>,
+        dir: &Path,
+        capacity: usize,
+        geom: StateGeom,
+    ) -> Result<DiskStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating device-store dir {dir:?}"))?;
+        for entry in
+            std::fs::read_dir(dir).with_context(|| format!("listing device-store dir {dir:?}"))?
+        {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("dev") {
+                std::fs::remove_file(&path)
+                    .with_context(|| format!("removing stale spill {path:?}"))?;
+            }
+        }
+        Ok(DiskStore {
+            population,
+            dir: dir.to_path_buf(),
+            capacity: capacity.max(1),
+            geom,
+            cache: Vec::new(),
+            spilled: HashSet::new(),
+            poisoned: None,
+        })
+    }
+
+    /// Where device `id` spills when evicted (public so corruption tests
+    /// can target the file).
+    pub fn spill_path(&self, id: usize) -> PathBuf {
+        self.dir.join(format!("device-{id:08}.dev"))
+    }
+
+    fn guard(&self) -> Result<()> {
+        if let Some(why) = &self.poisoned {
+            bail!("device store poisoned ({why}); refusing to serve possibly-stale state");
+        }
+        Ok(())
+    }
+
+    fn spill(&mut self, id: usize, session: &DeviceSession) -> Result<()> {
+        let path = self.spill_path(id);
+        let res = ckpt::atomic_write(&path, |w| {
+            w.raw(SPILL_MAGIC)?;
+            w.u64(SPILL_VERSION)?;
+            snapshot::write_device(w, &DeviceFields::of_session(id, session))
+        });
+        if let Err(e) = res {
+            // the evicted session is gone; anything served from here on
+            // could silently be the stale seed default, so fail closed
+            self.poisoned = Some(format!("spilling device {id} to {path:?} failed: {e:#}"));
+            bail!("device store: spilling device {id} to {path:?} failed: {e:#}");
+        }
+        self.spilled.insert(id);
+        Ok(())
+    }
+
+    fn load_spilled(&self, id: usize) -> Result<DeviceSession> {
+        let path = self.spill_path(id);
+        let mut r =
+            ckpt::open_reader(&path).with_context(|| format!("opening device spill {path:?}"))?;
+        let mut magic = [0u8; 8];
+        r.raw(&mut magic)?;
+        if &magic != SPILL_MAGIC {
+            bail!("{path:?} is not a device spill file (bad magic)");
+        }
+        let version = r.u64()?;
+        if version != SPILL_VERSION {
+            bail!("unsupported device spill version {version} (expected {SPILL_VERSION})");
+        }
+        let d = snapshot::read_device(&mut r)?;
+        if d.id != id {
+            bail!("corrupt device spill {path:?}: contains device {}, not {id}", d.id);
+        }
+        if let Some(&l) = d.last_shared.iter().find(|&&l| l >= self.geom.n_layers) {
+            bail!(
+                "corrupt device spill {path:?}: shared layer {l} out of range \
+                 (model has {} layers)",
+                self.geom.n_layers
+            );
+        }
+        if let Some(p) = &d.personal {
+            if p.q != self.geom.q
+                || p.n_layers != self.geom.n_layers
+                || p.head.len() != self.geom.head_len
+            {
+                bail!(
+                    "corrupt device spill {path:?}: personal state {}x{} (head {}) \
+                     != model {}x{} (head {})",
+                    p.n_layers,
+                    p.q,
+                    p.head.len(),
+                    self.geom.n_layers,
+                    self.geom.q,
+                    self.geom.head_len
+                );
+            }
+        }
+        Ok(DeviceSession {
+            rng: Rng::from_state(d.rng),
+            personal: d.personal,
+            last_shared: d.last_shared,
+            participations: d.participations,
+        })
+    }
+}
+
+impl DeviceStore for DiskStore {
+    fn population(&self) -> &Arc<Population> {
+        &self.population
+    }
+
+    fn checkout(&mut self, id: usize) -> Result<DeviceSession> {
+        self.guard()?;
+        ensure!(id < self.population.len(), "device id {id} out of range");
+        if let Some(pos) = self.cache.iter().position(|(cid, _)| *cid == id) {
+            // cache hit: ownership moves to the caller, still resident
+            return Ok(self.cache.remove(pos).1);
+        }
+        let session = if self.spilled.contains(&id) {
+            // the authoritative copy is on disk; a read failure is an
+            // error here, never a fall-back to the stale seed default
+            self.load_spilled(id)?
+        } else {
+            self.population.device(id).fresh_session()
+        };
+        testkit::DEVICE_RESIDENT.inc();
+        Ok(session)
+    }
+
+    fn commit(&mut self, id: usize, session: DeviceSession) -> Result<()> {
+        self.guard()?;
+        ensure!(id < self.population.len(), "device id {id} out of range");
+        while self.cache.len() >= self.capacity {
+            let (old_id, old) = self.cache.remove(0);
+            let res = self.spill(old_id, &old);
+            drop(old);
+            testkit::DEVICE_RESIDENT.dec();
+            if let Err(e) = res {
+                // the incoming session is dropped with the error
+                testkit::DEVICE_RESIDENT.dec();
+                return Err(e);
+            }
+        }
+        self.cache.push((id, session));
+        Ok(())
+    }
+
+    fn with_session(
+        &mut self,
+        id: usize,
+        f: &mut dyn FnMut(&DeviceSession) -> Result<()>,
+    ) -> Result<()> {
+        self.guard()?;
+        ensure!(id < self.population.len(), "device id {id} out of range");
+        if let Some((_, s)) = self.cache.iter().find(|(cid, _)| *cid == id) {
+            return f(s);
+        }
+        // transient materialization: load, visit, drop — residency grows
+        // by exactly one for the duration of the visit
+        let session = if self.spilled.contains(&id) {
+            self.load_spilled(id)?
+        } else {
+            self.population.device(id).fresh_session()
+        };
+        testkit::DEVICE_RESIDENT.inc();
+        let res = f(&session);
+        drop(session);
+        testkit::DEVICE_RESIDENT.dec();
+        res
+    }
+
+    fn name(&self) -> &'static str {
+        "disk"
+    }
+}
+
+impl Drop for DiskStore {
+    fn drop(&mut self) {
+        // keep the residency gauge balanced across store lifetimes
+        for _ in &self.cache {
+            testkit::DEVICE_RESIDENT.dec();
+        }
+    }
+}

@@ -16,7 +16,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use droppeft::fed::{spec, ConsoleReporter, Engine, JsonlWriter};
+use droppeft::fed::{spec, ConsoleReporter, DeviceStoreSpec, Engine, JsonlWriter};
 use droppeft::runtime::{self, BackendKind};
 use droppeft::util::cli::Args;
 
@@ -56,6 +56,16 @@ USAGE:
                  [--workers N]   (device-parallel local training;
                                   default: host parallelism; same seed =>
                                   identical results at any N)
+                 [--device-store mem|disk:DIR]
+                                 (where mutable device sessions live
+                                  between rounds; disk bounds resident
+                                  state at --device-cache sessions so
+                                  million-device populations fit in RAM;
+                                  same seed => identical results under
+                                  either store)
+                 [--device-cache N]
+                                 (hot sessions kept in RAM by the disk
+                                  store, default 1024)
                  [--out DIR]     (write a structured JSONL event log to
                                   DIR/events.jsonl — byte-identical at any
                                   --workers; a --resume run appends to it)
@@ -65,13 +75,15 @@ USAGE:
                  [--resume PATH] (resume a snapshotted session; session
                                   settings come from the snapshot, only
                                   the host-specific --workers/--artifacts/
-                                  --backend still apply; results are
-                                  byte-identical to an uninterrupted run)
+                                  --backend/--device-store/--device-cache
+                                  still apply; results are byte-identical
+                                  to an uninterrupted run)
   droppeft exp <table1|fig2|fig3|fig6a|fig6b|fig7|table3|fig9|fig10|fig11|
                 fig12|fig13|fig14|fig15|all> [--quick] [--out results]
                 [--events]      (per-session JSONL event logs under
                                  <out>/events/)
                 [--workers N] [--snapshot-every N] [--snapshot-dir DIR]
+                [--device-store mem|disk:DIR] [--device-cache N]
                 [--backend auto|xla|native]
                 [--resume PATH] (resumes the session matching the
                                  snapshot's method/dataset; others fresh)
@@ -85,11 +97,17 @@ Methods: fedlora fedadapter fedhetlora fedadaopt
 
 fn cmd_train(args: &Args) -> Result<()> {
     // on --resume, session settings come from the snapshot; only the
-    // host-specific --workers (and --artifacts) still apply. The other
-    // flags are still parsed (type checks, unknown-flag detection) but
-    // never validated as a combination, since they are discarded.
+    // host-specific --workers/--device-store/--device-cache (and
+    // --artifacts) still apply. The other flags are still parsed (type
+    // checks, unknown-flag detection) but never validated as a
+    // combination, since they are discarded.
     let resume = args.opt_str("resume");
     let workers_override = args.opt_usize("workers")?;
+    let store_override = match args.opt_str("device-store") {
+        Some(s) => Some(DeviceStoreSpec::parse(&s)?),
+        None => None,
+    };
+    let cache_override = args.opt_usize("device-cache")?;
     let builder = spec::builder_from_args(args)?;
     let artifacts = args.str_or("artifacts", "artifacts");
     let backend = BackendKind::parse(&args.str_or("backend", "auto"))?;
@@ -98,7 +116,13 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let runtime = runtime::create_backend(backend, &artifacts)?;
     let mut engine = match resume {
-        Some(path) => Engine::resume_from_path(&path, runtime.clone(), workers_override)?,
+        Some(path) => Engine::resume_from_path_overrides(
+            &path,
+            runtime.clone(),
+            workers_override,
+            store_override,
+            cache_override,
+        )?,
         None => builder.build()?.build_engine(runtime.clone())?,
     };
     engine.add_sink(Box::new(ConsoleReporter::new()));

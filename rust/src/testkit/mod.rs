@@ -86,6 +86,15 @@ impl Default for Gauge {
 /// exceeds the worker count.
 pub static DOWNLOADS: Gauge = Gauge::new();
 
+/// Mutable device sessions resident in RAM under `fed::store::DiskStore`
+/// management: incremented when the store materializes a session (fresh
+/// from the seed or loaded from a spill file), decremented when one is
+/// evicted to disk or dropped. The in-memory store deliberately does not
+/// count — the bound under test is the disk store's O(`--device-cache`)
+/// residency on populations far larger than the cache
+/// (`tests/device_store.rs`).
+pub static DEVICE_RESIDENT: Gauge = Gauge::new();
+
 /// Run `cases` iterations of `prop`, each with an independent seeded RNG.
 /// Panics with the failing case's seed so it can be replayed exactly.
 pub fn proptest<F>(name: &str, cases: u64, mut prop: F)

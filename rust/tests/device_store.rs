@@ -1,0 +1,357 @@
+//! Device-store contract tests: the disk store's O(`--device-cache`)
+//! bound on resident mutable device state (pinned via
+//! `testkit::DEVICE_RESIDENT` on a 100k-device population), and byte
+//! identity between the in-memory and disk stores — results, JSONL event
+//! logs, and kill-and-resume through a `DPEFTSN2` snapshot, across cache
+//! sizes and worker counts.
+//!
+//! Runs unconditionally on the native backend (no artifacts needed).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use droppeft::fed::device::build_population;
+use droppeft::fed::store::{DeviceStore, DeviceStoreSpec, DiskStore, StateGeom};
+use droppeft::fed::{snapshot::SessionSnapshot, Engine, FedConfig, JsonlWriter};
+use droppeft::methods;
+use droppeft::metrics::SessionResult;
+use droppeft::model::TrainState;
+use droppeft::runtime::Backend;
+use droppeft::testkit::DEVICE_RESIDENT;
+use droppeft::util::rng::Rng;
+
+mod common;
+use common::{assert_identical, native_backend, require_artifacts, xla_backend};
+
+/// The DEVICE_RESIDENT gauge is process-global and every disk store in
+/// this binary touches it: tests serialize through this lock.
+static GAUGE: Mutex<()> = Mutex::new(());
+
+fn gauge_lock() -> MutexGuard<'static, ()> {
+    GAUGE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn fresh_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("droppeft_devstore_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn disk_spec(dir: &std::path::Path) -> DeviceStoreSpec {
+    DeviceStoreSpec::Disk {
+        dir: dir.to_string_lossy().into_owned(),
+    }
+}
+
+fn tiny_state(q: usize, l: usize, h: usize, fill: f32) -> TrainState {
+    TrainState {
+        kind: "lora".into(),
+        q,
+        n_layers: l,
+        peft: vec![fill; l * q],
+        opt_m: vec![fill; l * q],
+        opt_v: vec![fill; l * q],
+        head: vec![fill; h],
+        head_m: vec![fill; h],
+        head_v: vec![fill; h],
+        step: 1,
+    }
+}
+
+/// Drive paper-scale round traffic (checkout → mutate → commit over a
+/// per-round cohort) through a disk store with a tiny cache and assert
+/// the resident-session gauge never exceeds cache + 1 (the one session
+/// transiently checked out while the cache is full).
+fn check_resident_bound(n_devices: usize, rounds: usize, cohort: usize) {
+    const CACHE: usize = 8;
+    let (q, l, h) = (4, 4, 3);
+    let labels: Vec<i32> = (0..200).map(|i| (i % 4) as i32).collect();
+    let mut rng = Rng::seed_from(7);
+    let population = Arc::new(build_population(&labels, 4, n_devices, 1.0, &mut rng));
+    let dir = fresh_dir(&format!("gauge_{n_devices}"));
+    let mut store = DiskStore::open(
+        population,
+        &dir,
+        CACHE,
+        StateGeom {
+            q,
+            n_layers: l,
+            head_len: h,
+        },
+    )
+    .unwrap();
+
+    DEVICE_RESIDENT.reset();
+    let mut participations: HashMap<usize, usize> = HashMap::new();
+    for round in 0..rounds {
+        for i in 0..cohort {
+            // deterministic ids spread across the whole population, so
+            // most checkouts are cold or come back from a spill file
+            let id = (round * 7919 + i * 104_729) % n_devices;
+            let mut sess = store.checkout(id).unwrap();
+            sess.participations += 1;
+            sess.last_shared = vec![id % l];
+            let _ = sess.rng.fork(round as u64);
+            if id % 3 == 0 {
+                sess.personal = Some(tiny_state(q, l, h, id as f32));
+            }
+            store.commit(id, sess).unwrap();
+            *participations.entry(id).or_insert(0) += 1;
+        }
+    }
+
+    let peak = DEVICE_RESIDENT.peak();
+    assert!(peak >= 1, "gauge never saw a session — instrumentation broken?");
+    assert!(
+        peak <= (CACHE + 1) as isize,
+        "peak resident sessions {peak} exceeded --device-cache {CACHE} + 1 \
+         on a {n_devices}-device population"
+    );
+    assert!(
+        DEVICE_RESIDENT.live() <= CACHE as isize,
+        "live sessions {} exceed the cache capacity at rest",
+        DEVICE_RESIDENT.live()
+    );
+
+    // mutations round-trip through eviction: re-checkout devices that
+    // long since spilled and verify the exact state written above
+    let touched: Vec<(usize, usize)> = participations
+        .iter()
+        .map(|(&id, &n)| (id, n))
+        .take(20)
+        .collect();
+    for (id, n) in touched {
+        let sess = store.checkout(id).unwrap();
+        assert_eq!(sess.participations, n, "device {id} lost participations");
+        assert_eq!(sess.last_shared, vec![id % l], "device {id} lost share set");
+        if id % 3 == 0 {
+            let p = sess.personal.as_ref().expect("personal state lost");
+            assert_eq!(p.peft, vec![id as f32; l * q], "device {id} personal state");
+        }
+        store.commit(id, sess).unwrap();
+    }
+
+    drop(store);
+    assert_eq!(
+        DEVICE_RESIDENT.live(),
+        0,
+        "dropping the store must release every resident session"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn disk_store_bounds_resident_sessions_on_100k_devices() {
+    let _g = gauge_lock();
+    check_resident_bound(100_000, 40, 50);
+}
+
+/// The same bound at the paper's million-device scale. Ignored by
+/// default (population construction alone takes a while in debug); run
+/// explicitly with:
+/// `cargo test --release --test device_store -- --ignored --nocapture`
+#[test]
+#[ignore]
+fn disk_store_bounds_resident_sessions_on_1m_devices() {
+    let _g = gauge_lock();
+    check_resident_bound(1_000_000, 40, 100);
+}
+
+const E2E_ROUNDS: usize = 4;
+
+fn e2e_cfg(workers: usize, store: DeviceStoreSpec, cache: usize) -> FedConfig {
+    let mut cfg = FedConfig::quick("tiny", "mnli");
+    cfg.rounds = E2E_ROUNDS;
+    cfg.n_devices = 10;
+    cfg.devices_per_round = 4;
+    cfg.local_batches = 2;
+    cfg.samples = 400;
+    cfg.eval_every = 2;
+    cfg.eval_batches = 2;
+    cfg.lr = 5e-3;
+    cfg.eval_personalized = true;
+    cfg.workers = workers;
+    cfg.device_store = store;
+    cfg.device_cache = cache;
+    cfg
+}
+
+fn run_logged(
+    rt: Arc<dyn Backend>,
+    cfg: FedConfig,
+    log: &std::path::Path,
+) -> (SessionResult, TrainState) {
+    let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
+    let mut engine = Engine::new(cfg, rt, method).unwrap();
+    engine.add_sink(Box::new(JsonlWriter::create(log).unwrap()));
+    let result = engine.run().unwrap();
+    let model = engine.global_state().clone();
+    (result, model)
+}
+
+fn assert_same_model(a: &TrainState, b: &TrainState) {
+    let bits = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+    assert_eq!(a.step, b.step);
+    assert_eq!(bits(&a.peft), bits(&b.peft), "peft diverged");
+    assert_eq!(bits(&a.opt_m), bits(&b.opt_m), "opt_m diverged");
+    assert_eq!(bits(&a.opt_v), bits(&b.opt_v), "opt_v diverged");
+    assert_eq!(bits(&a.head), bits(&b.head), "head diverged");
+    assert_eq!(bits(&a.head_m), bits(&b.head_m), "head_m diverged");
+    assert_eq!(bits(&a.head_v), bits(&b.head_v), "head_v diverged");
+}
+
+#[test]
+fn mem_and_disk_stores_are_byte_identical_across_cache_sizes_and_workers() {
+    let _g = gauge_lock();
+    let rt = native_backend();
+    let dir = fresh_dir("xstore");
+
+    let ref_log = dir.join("mem.jsonl");
+    let (reference, ref_model) = run_logged(
+        rt.clone(),
+        e2e_cfg(1, DeviceStoreSpec::Mem, 1024),
+        &ref_log,
+    );
+    let ref_bytes = std::fs::read(&ref_log).unwrap();
+    assert!(!ref_bytes.is_empty(), "event log is empty");
+
+    // the degenerate cache=1 store spills on every commit; larger caches
+    // and parallel workers must not change a single byte
+    for (cache, workers) in [(1, 1), (2, 4), (64, 4)] {
+        let tag = format!("disk_c{cache}_w{workers}");
+        let spill = dir.join(format!("{tag}_spill"));
+        let log = dir.join(format!("{tag}.jsonl"));
+        let cfg = e2e_cfg(workers, disk_spec(&spill), cache);
+        let (result, model) = run_logged(rt.clone(), cfg, &log);
+        assert_identical(&reference, &result);
+        assert_same_model(&ref_model, &model);
+        assert_eq!(
+            ref_bytes,
+            std::fs::read(&log).unwrap(),
+            "JSONL event log differs between mem and {tag}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn kill_and_resume_is_byte_identical_across_stores() {
+    let _g = gauge_lock();
+    let rt = native_backend();
+    let dir = fresh_dir("resume");
+    let snap_every = 2;
+
+    // uninterrupted reference session under the mem store, snapshotting
+    // as it goes — this IS the "killed" session's history up to round k
+    let mut cfg = e2e_cfg(1, DeviceStoreSpec::Mem, 1024);
+    cfg.rounds = 6;
+    cfg.snapshot_every = snap_every;
+    cfg.snapshot_dir = Some(dir.join("snaps").to_string_lossy().into_owned());
+    let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
+    let mut full = Engine::new(cfg, rt.clone(), method).unwrap();
+    let reference = full.run().unwrap();
+    let ref_model = full.global_state().clone();
+
+    let snap_path =
+        SessionSnapshot::path_in(&dir.join("snaps"), "droppeft-lora", "mnli", snap_every);
+    assert!(snap_path.exists(), "expected snapshot at {snap_path:?}");
+
+    // resume the mem-written snapshot under BOTH stores (snapshots never
+    // record the store — it is host config, overridden at resume), each
+    // writing a fresh event log from the resume point
+    let mut logs = Vec::new();
+    for (tag, store, cache, workers) in [
+        ("mem", DeviceStoreSpec::Mem, 1024usize, 1usize),
+        ("disk", disk_spec(&dir.join("resume_spill")), 2, 3),
+    ] {
+        let mut resumed = Engine::resume_from_path_overrides(
+            &snap_path,
+            rt.clone(),
+            Some(workers),
+            Some(store),
+            Some(cache),
+        )
+        .unwrap();
+        assert_eq!(resumed.rounds_finished(), snap_every);
+        let log = dir.join(format!("resume_{tag}.jsonl"));
+        resumed.add_sink(Box::new(JsonlWriter::create(&log).unwrap()));
+        let replayed = resumed.run().unwrap();
+        assert_identical(&reference, &replayed);
+        assert_same_model(&ref_model, resumed.global_state());
+        logs.push(std::fs::read(&log).unwrap());
+    }
+    assert!(!logs[0].is_empty(), "resumed event log is empty");
+    assert_eq!(
+        logs[0], logs[1],
+        "resumed JSONL event log differs between mem and disk stores"
+    );
+
+    // and the reverse direction: a session that RAN under the disk store
+    // (cache=1, so every device session round-trips through a spill
+    // before reaching the snapshot) must snapshot the same session state,
+    // so resuming its snapshot lands on the same records + model
+    let mut cfg = e2e_cfg(1, disk_spec(&dir.join("full_spill")), 1);
+    cfg.rounds = 6;
+    cfg.snapshot_every = snap_every;
+    cfg.snapshot_dir = Some(dir.join("snaps_disk").to_string_lossy().into_owned());
+    let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
+    let mut full_disk = Engine::new(cfg, rt.clone(), method).unwrap();
+    let disk_result = full_disk.run().unwrap();
+    assert_identical(&reference, &disk_result);
+    let snap_disk =
+        SessionSnapshot::path_in(&dir.join("snaps_disk"), "droppeft-lora", "mnli", snap_every);
+    assert!(snap_disk.exists(), "expected snapshot at {snap_disk:?}");
+    let mut resumed =
+        Engine::resume_from_path_overrides(&snap_disk, rt, Some(1), None, None).unwrap();
+    let replayed = resumed.run().unwrap();
+    assert_identical(&reference, &replayed);
+    assert_same_model(&ref_model, resumed.global_state());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn xla_mem_and_disk_stores_are_byte_identical() {
+    require_artifacts!();
+    let _g = gauge_lock();
+    let rt = xla_backend();
+    let dir = fresh_dir("xla_xstore");
+    let (reference, ref_model) = run_logged(
+        rt.clone(),
+        e2e_cfg(1, DeviceStoreSpec::Mem, 1024),
+        &dir.join("mem.jsonl"),
+    );
+    let cfg = e2e_cfg(2, disk_spec(&dir.join("spill")), 2);
+    let (result, model) = run_logged(rt, cfg, &dir.join("disk.jsonl"));
+    assert_identical(&reference, &result);
+    assert_same_model(&ref_model, &model);
+    assert_eq!(
+        std::fs::read(dir.join("mem.jsonl")).unwrap(),
+        std::fs::read(dir.join("disk.jsonl")).unwrap(),
+        "JSONL event log differs between mem and disk stores on XLA"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn engine_under_disk_store_keeps_residency_bounded() {
+    let _g = gauge_lock();
+    let rt = native_backend();
+    let dir = fresh_dir("engine_gauge");
+    const CACHE: usize = 2;
+    let cfg = e2e_cfg(2, disk_spec(&dir.join("spill")), CACHE);
+    DEVICE_RESIDENT.reset();
+    let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
+    let mut engine = Engine::new(cfg, rt, method).unwrap();
+    engine.run().unwrap();
+    let peak = DEVICE_RESIDENT.peak();
+    assert!(peak >= 1, "gauge never saw a session");
+    assert!(
+        peak <= (CACHE + 1) as isize,
+        "engine peaked at {peak} resident sessions with --device-cache {CACHE}"
+    );
+    drop(engine);
+    assert_eq!(DEVICE_RESIDENT.live(), 0, "sessions leaked past engine drop");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,228 @@
+//! Device-store spill-file corruption: every malformed spill must
+//! surface as a clean `Err` — truncations at every byte boundary, bad
+//! magic, unsupported version, oversized length prefixes (the bounded
+//! reader claims before allocating, so no OOM), and random byte flips
+//! (no panic). A corrupt spill must never fall back to the seed-default
+//! session, and a store whose spill *write* failed is poisoned and
+//! refuses every subsequent operation — either shortcut would silently
+//! serve stale device state. Companion to `tests/snapshot_corruption.rs`
+//! (the session-snapshot half of the same contract).
+
+use std::sync::Arc;
+
+use droppeft::fed::device::{build_population, Population};
+use droppeft::fed::store::{DeviceStore, DiskStore, StateGeom, SPILL_MAGIC};
+use droppeft::model::TrainState;
+use droppeft::util::rng::Rng;
+
+const Q: usize = 6;
+const L: usize = 4;
+const H: usize = 5;
+
+fn dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("droppeft_devcorrupt_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn population(n_devices: usize) -> Arc<Population> {
+    let labels: Vec<i32> = (0..40).map(|i| (i % 2) as i32).collect();
+    Arc::new(build_population(&labels, 2, n_devices, 1.0, &mut Rng::seed_from(1)))
+}
+
+fn geom() -> StateGeom {
+    StateGeom {
+        q: Q,
+        n_layers: L,
+        head_len: H,
+    }
+}
+
+fn personal_state(fill: f32) -> TrainState {
+    TrainState {
+        kind: "lora".into(),
+        q: Q,
+        n_layers: L,
+        peft: vec![fill; L * Q],
+        opt_m: vec![fill; L * Q],
+        opt_v: vec![fill; L * Q],
+        head: vec![fill; H],
+        head_m: vec![fill; H],
+        head_v: vec![fill; H],
+        step: 3,
+    }
+}
+
+/// A capacity-1 disk store where device 0 carries diverged state
+/// (personal model, share history, advanced RNG) and has been evicted to
+/// its spill file by the commit of device 1. Returns the store, the
+/// spill path, and a clone of device 0's expected session.
+fn store_with_spill(
+    tag: &str,
+) -> (DiskStore, std::path::PathBuf, droppeft::fed::DeviceSession) {
+    let d = dir(tag);
+    let mut store = DiskStore::open(population(3), &d, 1, geom()).unwrap();
+    let mut s0 = store.checkout(0).unwrap();
+    s0.participations = 7;
+    s0.last_shared = vec![0, 2];
+    let _ = s0.rng.fork(99);
+    s0.personal = Some(personal_state(0.5));
+    let expected = s0.clone();
+    store.commit(0, s0).unwrap();
+    let s1 = store.checkout(1).unwrap();
+    store.commit(1, s1).unwrap(); // capacity 1: evicts device 0 to disk
+    let spill = store.spill_path(0);
+    assert!(spill.exists(), "expected spill file at {spill:?}");
+    (store, spill, expected)
+}
+
+fn cleanup(spill: &std::path::Path) {
+    if let Some(d) = spill.parent() {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+#[test]
+fn spill_roundtrip_is_bit_exact() {
+    let (mut store, spill, expected) = store_with_spill("roundtrip");
+    assert_eq!(&std::fs::read(&spill).unwrap()[..8], SPILL_MAGIC);
+    let sess = store.checkout(0).unwrap();
+    assert_eq!(sess.participations, expected.participations);
+    assert_eq!(sess.last_shared, expected.last_shared);
+    assert_eq!(sess.rng.export_state(), expected.rng.export_state());
+    let (got, want) = (sess.personal.unwrap(), expected.personal.unwrap());
+    let bits = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+    assert_eq!(got.kind, want.kind);
+    assert_eq!(got.step, want.step);
+    assert_eq!(bits(&got.peft), bits(&want.peft));
+    assert_eq!(bits(&got.opt_m), bits(&want.opt_m));
+    assert_eq!(bits(&got.opt_v), bits(&want.opt_v));
+    assert_eq!(bits(&got.head), bits(&want.head));
+    assert_eq!(bits(&got.head_m), bits(&want.head_m));
+    assert_eq!(bits(&got.head_v), bits(&want.head_v));
+    cleanup(&spill);
+}
+
+#[test]
+fn every_truncation_is_a_clean_error_never_a_default_session() {
+    let (mut store, spill, _) = store_with_spill("trunc");
+    let full = std::fs::read(&spill).unwrap();
+    for cut in 0..full.len() {
+        std::fs::write(&spill, &full[..cut]).unwrap();
+        // a device with diverged state on disk: serving anything but an
+        // error here would hand the engine the stale seed default
+        assert!(
+            store.checkout(0).is_err(),
+            "truncation at byte {cut}/{} must fail the checkout",
+            full.len()
+        );
+        assert!(
+            store.with_session(0, &mut |_| Ok(())).is_err(),
+            "truncation at byte {cut}/{} must fail the read-only visit",
+            full.len()
+        );
+    }
+    // read failures do not poison the store: restoring the file restores
+    // service, with the exact state that was spilled
+    std::fs::write(&spill, &full).unwrap();
+    let sess = store.checkout(0).unwrap();
+    assert_eq!(sess.participations, 7, "restored spill must serve the real session");
+    cleanup(&spill);
+}
+
+#[test]
+fn bad_magic_and_version_are_rejected() {
+    let (mut store, spill, _) = store_with_spill("magic");
+    let full = std::fs::read(&spill).unwrap();
+
+    let mut bad = full.clone();
+    bad[..8].copy_from_slice(b"GARBAGE!");
+    std::fs::write(&spill, &bad).unwrap();
+    let err = format!("{:#}", store.checkout(0).unwrap_err());
+    assert!(err.contains("magic"), "unexpected error: {err}");
+
+    // version is the u64 right after the magic
+    let mut bad = full.clone();
+    bad[8] = bad[8].wrapping_add(1);
+    std::fs::write(&spill, &bad).unwrap();
+    let err = format!("{:#}", store.checkout(0).unwrap_err());
+    assert!(err.contains("version"), "unexpected error: {err}");
+
+    // a spill holding some other device's session must be rejected too
+    let other = full_of_other_device(&mut store);
+    std::fs::write(&spill, std::fs::read(&other).unwrap()).unwrap();
+    let err = format!("{:#}", store.checkout(0).unwrap_err());
+    assert!(err.contains("contains device"), "unexpected error: {err}");
+    cleanup(&spill);
+}
+
+/// Force device 1 (committed in `store_with_spill`) out to disk and
+/// return its spill path.
+fn full_of_other_device(store: &mut DiskStore) -> std::path::PathBuf {
+    let s2 = store.checkout(2).unwrap();
+    store.commit(2, s2).unwrap(); // evicts device 1
+    let p = store.spill_path(1);
+    assert!(p.exists());
+    p
+}
+
+#[test]
+fn oversized_length_prefixes_fail_without_overallocating() {
+    let (mut store, spill, _) = store_with_spill("oversize");
+    let full = std::fs::read(&spill).unwrap();
+    let huge = (u64::MAX / 2).to_le_bytes();
+    // stamp an absurd length prefix over every alignment past the header:
+    // the bounded reader must claim-before-allocate and error out, not
+    // try to reserve exabytes
+    for off in (16..full.len().saturating_sub(8)).step_by(3) {
+        let mut bad = full.clone();
+        bad[off..off + 8].copy_from_slice(&huge);
+        std::fs::write(&spill, &bad).unwrap();
+        let _ = store.checkout(0); // must return, never abort or OOM
+    }
+    std::fs::write(&spill, &full).unwrap();
+    assert!(store.checkout(0).is_ok(), "restored spill must load again");
+    cleanup(&spill);
+}
+
+#[test]
+fn byte_flips_never_panic() {
+    let (mut store, spill, _) = store_with_spill("flip");
+    let full = std::fs::read(&spill).unwrap();
+    for off in (0..full.len()).step_by(7) {
+        let mut bad = full.clone();
+        bad[off] ^= 0xFF;
+        std::fs::write(&spill, &bad).unwrap();
+        // flips in value bytes may still parse — that is fine; flips in
+        // structure must surface as Err, and nothing may panic
+        let _ = store.checkout(0);
+    }
+    cleanup(&spill);
+}
+
+#[test]
+fn failed_spill_write_poisons_the_store() {
+    let d = dir("poison");
+    let mut store = DiskStore::open(population(3), &d, 1, geom()).unwrap();
+    let mut s0 = store.checkout(0).unwrap();
+    s0.participations = 1;
+    store.commit(0, s0).unwrap();
+    let s1 = store.checkout(1).unwrap();
+
+    // nuke the spill directory out from under the store: the eviction
+    // write inside the next commit must fail...
+    std::fs::remove_dir_all(&d).unwrap();
+    let err = format!("{:#}", store.commit(1, s1).unwrap_err());
+    assert!(err.contains("spilling device"), "unexpected error: {err}");
+
+    // ...and from here on the store has lost device 0's session, so
+    // every operation must refuse rather than risk serving stale state
+    let err = format!("{:#}", store.checkout(0).unwrap_err());
+    assert!(err.contains("poisoned"), "checkout after failed spill: {err}");
+    let fresh = store.population().device(2).fresh_session();
+    let err = format!("{:#}", store.commit(2, fresh).unwrap_err());
+    assert!(err.contains("poisoned"), "commit after failed spill: {err}");
+    let err = format!("{:#}", store.with_session(0, &mut |_| Ok(())).unwrap_err());
+    assert!(err.contains("poisoned"), "visit after failed spill: {err}");
+}

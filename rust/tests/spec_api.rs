@@ -4,7 +4,7 @@
 //! every flag `train` accepts. No artifacts needed.
 
 use droppeft::fed::spec::{self, SessionSpec};
-use droppeft::fed::FedConfig;
+use droppeft::fed::{DeviceStoreSpec, FedConfig};
 use droppeft::methods::{Method, MethodSpec, PeftKind};
 use droppeft::runtime::BackendKind;
 use droppeft::util::cli::Args;
@@ -25,7 +25,7 @@ fn every_train_flag_translates_to_the_matching_builder_call() {
          --alpha 0.3 --samples 1234 --lr 0.002 --seed 7 --eval-every 3 \
          --eval-batches 9 --personal-eval --target-acc 0.8 \
          --cost-model roberta-large --workers 3 --snapshot-every 2 \
-         --snapshot-dir snaps",
+         --snapshot-dir snaps --device-store disk:devstore --device-cache 7",
     );
     let from_cli = spec::from_args(&args).unwrap();
     let built = SessionSpec::builder()
@@ -48,6 +48,10 @@ fn every_train_flag_translates_to_the_matching_builder_call() {
         .workers(3)
         .snapshot_every(2)
         .snapshot_dir("snaps")
+        .device_store(DeviceStoreSpec::Disk {
+            dir: "devstore".into(),
+        })
+        .device_cache(7)
         .build()
         .unwrap();
     assert_eq!(from_cli, built);
@@ -120,6 +124,29 @@ fn workers_zero_clamps_identically() {
     let built = SessionSpec::builder().workers(0).build().unwrap();
     assert_eq!(from_cli, built);
     assert_eq!(from_cli.cfg.workers, 1);
+}
+
+#[test]
+fn device_store_flag_translates_and_defaults_to_mem() {
+    let default = spec::from_args(&parse("train")).unwrap();
+    assert_eq!(default.cfg.device_store, DeviceStoreSpec::Mem);
+
+    let from_cli = spec::from_args(&parse("train --device-store disk:/tmp/ds")).unwrap();
+    let built = SessionSpec::builder()
+        .device_store(DeviceStoreSpec::Disk {
+            dir: "/tmp/ds".into(),
+        })
+        .build()
+        .unwrap();
+    assert_eq!(from_cli, built);
+    assert!(spec::from_args(&parse("train --device-store ram")).is_err());
+    assert!(spec::from_args(&parse("train --device-store disk:")).is_err());
+
+    // --device-cache clamps like --workers
+    let from_cli = spec::from_args(&parse("train --device-cache 0")).unwrap();
+    let built = SessionSpec::builder().device_cache(0).build().unwrap();
+    assert_eq!(from_cli, built);
+    assert_eq!(from_cli.cfg.device_cache, 1);
 }
 
 #[test]
