@@ -1,0 +1,158 @@
+//! In-process vs loopback-TCP round transport: whole-session wall time
+//! and bytes on the wire per round. Both shapes run the same tiny-preset
+//! session on the pure-rust native backend (no compiled XLA artifacts
+//! needed); the TCP shape serves rounds to two worker threads over
+//! 127.0.0.1 through the real `fed::transport` stack — the same
+//! `run_worker` entry the `droppeft worker` binary calls. Results are
+//! asserted byte-identical across transports before anything is timed.
+//! Emits machine-readable `BENCH_round_net.json`, diffed against the
+//! committed baseline (warn-only) before overwriting it.
+//!
+//! Run with `cargo bench` (part of `make bench`).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread;
+
+use droppeft::benchkit::{trajectory, Bench, Suite};
+use droppeft::fed::{run_worker, SessionSpec, TcpTransport, WorkerOptions};
+use droppeft::metrics::SessionResult;
+use droppeft::runtime::{Backend, NativeBackend};
+use droppeft::util::json::Json;
+
+const BASELINE: &str = "BENCH_round_net.json";
+
+const ROUNDS: usize = 3;
+const PER_ROUND: usize = 4;
+const N_WORKERS: usize = 2;
+
+fn backend() -> Arc<dyn Backend> {
+    Arc::new(NativeBackend::new())
+}
+
+fn spec() -> SessionSpec {
+    SessionSpec::builder()
+        .preset("tiny")
+        .dataset("mnli")
+        .rounds(ROUNDS)
+        .devices(10)
+        .per_round(PER_ROUND)
+        .local_batches(2)
+        .samples(400)
+        .eval_every(2)
+        .eval_batches(2)
+        .workers(N_WORKERS)
+        .build()
+        .expect("bench spec")
+}
+
+/// One session through the in-process pool (`--workers 2`).
+fn run_local() -> SessionResult {
+    let mut engine = spec().build_engine(backend()).expect("local engine");
+    engine.run().expect("local session")
+}
+
+/// The same session served over loopback TCP to two worker threads.
+/// Returns the result plus total (sent, received) wire bytes.
+fn run_tcp() -> (SessionResult, u64, u64) {
+    let mut engine = spec().build_engine(backend()).expect("tcp engine");
+    let transport = TcpTransport::listen("127.0.0.1:0").expect("bind loopback");
+    let addr = transport.local_addr().expect("local addr").to_string();
+    let (sent, received) = transport.wire_counters();
+    engine.set_transport(Box::new(transport));
+    let workers: Vec<_> = (0..N_WORKERS)
+        .map(|_| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                run_worker(&addr, backend(), WorkerOptions::default()).expect("bench worker")
+            })
+        })
+        .collect();
+    let result = engine.run().expect("tcp session");
+    drop(engine); // shutdown broadcast releases the workers
+    for w in workers {
+        w.join().expect("worker thread");
+    }
+    (
+        result,
+        sent.load(Ordering::Relaxed),
+        received.load(Ordering::Relaxed),
+    )
+}
+
+fn main() {
+    // correctness cross-check before timing anything: the transports
+    // must agree bit-for-bit
+    let local = run_local();
+    let (tcp, wire_sent, wire_received) = run_tcp();
+    assert_eq!(local.records.len(), tcp.records.len());
+    for (a, b) in local.records.iter().zip(&tcp.records) {
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "transports disagree at round {}",
+            a.round
+        );
+        assert_eq!(a.traffic_bytes, b.traffic_bytes);
+    }
+    assert!(wire_sent > 0 && wire_received > 0, "no bytes on the wire?");
+
+    let mut suite = Suite::new();
+    let i = suite.results.len();
+    suite.add(
+        Bench::new(format!(
+            "round_net/in-process {ROUNDS}r x{N_WORKERS}w"
+        ))
+        .warmup(1)
+        .iters(2, 10)
+        .target_secs(1.0)
+        .run(|| run_local().records.len()),
+    );
+    let local_ns = suite.results[i].mean_ns;
+
+    let i = suite.results.len();
+    suite.add(
+        Bench::new(format!(
+            "round_net/loopback-tcp {ROUNDS}r x{N_WORKERS}w"
+        ))
+        .warmup(1)
+        .iters(2, 10)
+        .target_secs(1.0)
+        .run(|| run_tcp().0.records.len()),
+    );
+    let tcp_ns = suite.results[i].mean_ns;
+
+    let per_round = (wire_sent + wire_received) / ROUNDS as u64;
+    println!(
+        "\nround-net: {ROUNDS} rounds, {PER_ROUND} devices/round, {N_WORKERS} workers  \
+         wire {wire_sent} B out + {wire_received} B in (~{per_round} B/round incl. handshake)"
+    );
+    println!("{}", suite.markdown("In-process vs loopback-TCP round transport"));
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("round_net".to_string())),
+        ("provenance", Json::str("measured".to_string())),
+        ("rounds", Json::num(ROUNDS as f64)),
+        ("devices_per_round", Json::num(PER_ROUND as f64)),
+        ("workers", Json::num(N_WORKERS as f64)),
+        ("local_session_mean_ns", Json::num(local_ns)),
+        ("tcp_session_mean_ns", Json::num(tcp_ns)),
+        ("wire_sent_bytes", Json::num(wire_sent as f64)),
+        ("wire_received_bytes", Json::num(wire_received as f64)),
+        ("wire_bytes_per_round", Json::num(per_round as f64)),
+    ]);
+
+    // diff against the committed baseline before clobbering it (warn-only)
+    match trajectory::load_baseline(BASELINE) {
+        Some(baseline) => {
+            let cmp = trajectory::compare(&baseline, &j);
+            print!("{}", cmp.report(BASELINE));
+        }
+        None => println!("no committed {BASELINE} baseline to diff against"),
+    }
+
+    match std::fs::write(BASELINE, j.to_string()) {
+        Ok(()) => println!("wrote {BASELINE}"),
+        Err(e) => eprintln!("could not write {BASELINE}: {e}"),
+    }
+}

@@ -54,13 +54,27 @@ impl<'a> ClientTask<'a> {
         plan: &RoundPlan,
         global: &'a TrainState,
     ) -> ClientTask<'a> {
+        ClientTask::for_round(ctx, method, plan.round, &plan.kind, plan.personalized, global)
+    }
+
+    /// Build a task from the round's identity fields alone — what remote
+    /// workers have after decoding a `RoundStartMsg` (they never hold a
+    /// whole `RoundPlan`).
+    pub fn for_round(
+        ctx: ClientCtx<'a>,
+        method: &'a dyn Method,
+        round: usize,
+        kind: &str,
+        personalized: bool,
+        global: &'a TrainState,
+    ) -> ClientTask<'a> {
         ClientTask {
             ctx,
             method,
             global,
-            round: plan.round,
-            kind: plan.kind.clone(),
-            personalized: plan.personalized,
+            round,
+            kind: kind.to_string(),
+            personalized,
         }
     }
 

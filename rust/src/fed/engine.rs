@@ -3,9 +3,10 @@
 //!
 //! Per round: `fed::round::plan_round` runs the sequential planning pass
 //! (method strategy + RNG pre-draws + download specs), `ClientTask`s
-//! execute the per-device plans — streamed over
-//! `util::pool::run_parallel_streaming` with `cfg.workers` threads, each
-//! worker materializing its own download from `&global` — and the
+//! execute the per-device plans — handed to the session's
+//! [`RoundTransport`]: the in-process streaming pool by default, or a
+//! TCP round server fanning plans out to remote worker processes, each
+//! executor materializing its own download from `&global` — and the
 //! outcomes are absorbed into `fed::server`'s streaming `RoundAccum` at
 //! the sequential fan-in, in selection order, as they arrive. At most
 //! O(workers) `TrainState` copies are therefore live per round,
@@ -26,7 +27,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::data::{batch::eval_batches, gen, Batch, Dataset, TaskSpec};
-use crate::fed::client::{ClientCtx, ClientTask};
+use crate::fed::client::ClientCtx;
 use crate::fed::config::FedConfig;
 use crate::fed::device;
 use crate::fed::events::{Collector, EngineEvent, EventSink};
@@ -34,44 +35,34 @@ use crate::fed::round;
 use crate::fed::server::{self, Server};
 use crate::fed::snapshot::{self, SessionSnapshot};
 use crate::fed::store::{self, DeviceStore, DeviceStoreSpec};
+use crate::fed::transport::{LocalTransport, RoundExec, RoundTransport};
 use crate::metrics::{RoundRecord, SessionResult};
 use crate::methods::Method;
 use crate::model::{BaseModel, TrainState};
 use crate::runtime::manifest::ModelSpec;
 use crate::runtime::Backend;
-use crate::util::pool;
 use crate::util::rng::Rng;
 
-pub struct Engine {
-    pub cfg: FedConfig,
-    runtime: Arc<dyn Backend>,
-    spec: ModelSpec,
-    base: Arc<BaseModel>,
-    dataset: Dataset,
-    test_batches: Vec<Batch>,
-    /// owner of all mutable per-device session state (`--device-store`);
-    /// the static population hangs off it via `DeviceStore::population`
-    store: Box<dyn DeviceStore>,
-    method: Box<dyn Method>,
-    server: Server,
-    rng: Rng,
-    /// the engine's own event fold: accumulates the per-round history
-    /// (restored on snapshot resume) and builds `SessionResult`
-    collector: Collector,
-    /// observer pipeline; every sink sees every event, in order
-    sinks: Vec<Box<dyn EventSink>>,
-    /// `SessionStarted` has been emitted
-    announced: bool,
-    /// first round the next `run` call executes
-    next_round: usize,
+/// The deterministic, seed-derived static state of a session: everything
+/// `Engine::new` rebuilds from the config alone. Split out so a remote
+/// transport worker (`fed::transport::run_worker`) can reconstruct the
+/// *exact* statics the server planned against from the handshaken config
+/// — datasets, shards, device population, and base model are all pure
+/// functions of the seed, so none of them ever travel on the wire.
+pub struct SessionStatics {
+    pub spec: ModelSpec,
+    pub dataset: Dataset,
+    pub test_batches: Vec<Batch>,
+    pub population: Arc<device::Population>,
+    pub base: Arc<BaseModel>,
+    /// the engine's device-selection RNG stream, advanced exactly past
+    /// population construction (workers ignore it — selection already
+    /// happened on the server)
+    pub rng: Rng,
 }
 
-impl Engine {
-    pub fn new(
-        cfg: FedConfig,
-        runtime: Arc<dyn Backend>,
-        method: Box<dyn Method>,
-    ) -> Result<Engine> {
+impl SessionStatics {
+    pub fn build(cfg: &FedConfig, runtime: &dyn Backend) -> Result<SessionStatics> {
         let spec = runtime.model(&cfg.preset)?.clone();
         let mcfg = &spec.config;
         let mut rng = Rng::seed_from(cfg.seed);
@@ -95,6 +86,59 @@ impl Engine {
         ));
 
         let base = BaseModel::init(&spec, cfg.seed);
+        Ok(SessionStatics {
+            spec,
+            dataset,
+            test_batches,
+            population,
+            base,
+            rng,
+        })
+    }
+}
+
+pub struct Engine {
+    pub cfg: FedConfig,
+    runtime: Arc<dyn Backend>,
+    spec: ModelSpec,
+    base: Arc<BaseModel>,
+    dataset: Dataset,
+    test_batches: Vec<Batch>,
+    /// owner of all mutable per-device session state (`--device-store`);
+    /// the static population hangs off it via `DeviceStore::population`
+    store: Box<dyn DeviceStore>,
+    method: Box<dyn Method>,
+    server: Server,
+    rng: Rng,
+    /// the engine's own event fold: accumulates the per-round history
+    /// (restored on snapshot resume) and builds `SessionResult`
+    collector: Collector,
+    /// observer pipeline; every sink sees every event, in order
+    sinks: Vec<Box<dyn EventSink>>,
+    /// `SessionStarted` has been emitted
+    announced: bool,
+    /// first round the next `run` call executes
+    next_round: usize,
+    /// how round plans reach client executors (in-process pool by
+    /// default; TCP via [`Engine::set_transport`]) — host configuration
+    /// like `workers`, never serialized, never able to affect results
+    transport: Box<dyn RoundTransport>,
+}
+
+impl Engine {
+    pub fn new(
+        cfg: FedConfig,
+        runtime: Arc<dyn Backend>,
+        method: Box<dyn Method>,
+    ) -> Result<Engine> {
+        let SessionStatics {
+            spec,
+            dataset,
+            test_batches,
+            population,
+            base,
+            rng,
+        } = SessionStatics::build(&cfg, &*runtime)?;
         let global = TrainState::init(&spec, method.kind(), cfg.seed)?;
         let store = store::create(&cfg, population, &global)?;
         let collector =
@@ -114,7 +158,21 @@ impl Engine {
             sinks: Vec::new(),
             announced: false,
             next_round: 0,
+            transport: Box::new(LocalTransport),
         })
+    }
+
+    /// Swap the round transport (e.g. a bound
+    /// [`crate::fed::transport::TcpTransport`] for `serve` mode). Like
+    /// `workers`, the transport can never affect results — only where
+    /// the client work physically runs.
+    pub fn set_transport(&mut self, transport: Box<dyn RoundTransport>) {
+        self.transport = transport;
+    }
+
+    /// The active transport's name ("local" | "tcp").
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
     }
 
     /// Attach an observer. Sinks are notified at every sequential
@@ -405,78 +463,94 @@ impl Engine {
         })?;
 
         // ---- streaming fan-out / sequential fan-in ----
-        // Field-disjoint borrows: the client tasks read runtime / cfg /
+        // Field-disjoint borrows: the transport reads runtime / cfg /
         // spec / base / dataset / method / server.global(), while the
         // fan-in consumer commits sessions through the device store and
-        // drives collector + sinks. Workers materialize their own
+        // drives collector + sinks. Executors materialize their own
         // downloads from &global, and the consumer releases each outcome
         // as it is absorbed, so at most O(workers) TrainState copies are
-        // ever live.
+        // ever live. The transport delivers outcomes in selection order
+        // whether clients ran on pool threads or remote processes, so
+        // everything below is transport-agnostic.
         let mut accum = self.server.begin_round(round);
         let mut first_err: Option<anyhow::Error> = None;
         let mut sink_err: Option<anyhow::Error> = None;
         let mut store_err: Option<anyhow::Error> = None;
+        let transport_res;
         {
-            let ctx = ClientCtx {
-                runtime: &*self.runtime,
-                cfg: &self.cfg,
-                spec: &self.spec,
-                base: &*self.base,
-                dataset: &self.dataset,
+            let round::RoundPlan {
+                kind,
+                personalized,
+                devices,
+                ..
+            } = plan;
+            let exec = RoundExec {
+                ctx: ClientCtx {
+                    runtime: &*self.runtime,
+                    cfg: &self.cfg,
+                    spec: &self.spec,
+                    base: &*self.base,
+                    dataset: &self.dataset,
+                },
+                method: &*self.method,
+                round,
+                kind: &kind,
+                personalized,
+                global: self.server.global(),
+                workers: self.cfg.workers.max(1),
             };
-            let task = ClientTask::new(ctx, &*self.method, &plan, self.server.global());
-            let task = &task;
             let store = &mut self.store;
             let collector = &mut self.collector;
             let sinks = &mut self.sinks;
-            let jobs: Vec<_> = plan
-                .devices
-                .into_iter()
-                .map(|dp| move || task.run(dp))
-                .collect();
-            pool::run_parallel_streaming(self.cfg.workers.max(1), jobs, |_, res| match res {
-                Ok(mut out) => {
-                    if first_err.is_some() || sink_err.is_some() || store_err.is_some() {
-                        // the round already failed: keep the finished
-                        // client's device-side state (the serial engine
-                        // persisted each device as it completed), but
-                        // skip aggregation and events
-                        if let Err(e) = server::persist_only(&mut out, &mut **store) {
-                            if store_err.is_none() {
+            transport_res =
+                self.transport
+                    .run_round(exec, devices, &mut |_, res| match res {
+                        Ok(mut out) => {
+                            if first_err.is_some()
+                                || sink_err.is_some()
+                                || store_err.is_some()
+                            {
+                                // the round already failed: keep the finished
+                                // client's device-side state (the serial engine
+                                // persisted each device as it completed), but
+                                // skip aggregation and events
+                                if let Err(e) = server::persist_only(&mut out, &mut **store)
+                                {
+                                    if store_err.is_none() {
+                                        store_err = Some(e);
+                                    }
+                                }
+                                return;
+                            }
+                            // client events fire here, at the sequential
+                            // fan-in, in selection order — never from the
+                            // worker threads
+                            let ev = EngineEvent::ClientDone {
+                                round,
+                                device: out.device,
+                                local_acc: out.local_acc,
+                                train_acc: out.train_acc,
+                                mean_loss: out.mean_loss,
+                                active_frac: out.active_frac,
+                                comp_secs: out.comp_secs,
+                                comm_secs: out.comm_secs,
+                                traffic_bytes: out.traffic_bytes,
+                            };
+                            if let Err(e) = accum.absorb(out, &mut **store) {
                                 store_err = Some(e);
+                                return;
+                            }
+                            if let Err(e) = deliver(collector, sinks, &ev) {
+                                sink_err = Some(e);
                             }
                         }
-                        return;
-                    }
-                    // client events fire here, at the sequential
-                    // fan-in, in selection order — never from the
-                    // worker threads
-                    let ev = EngineEvent::ClientDone {
-                        round,
-                        device: out.device,
-                        local_acc: out.local_acc,
-                        train_acc: out.train_acc,
-                        mean_loss: out.mean_loss,
-                        active_frac: out.active_frac,
-                        comp_secs: out.comp_secs,
-                        comm_secs: out.comm_secs,
-                        traffic_bytes: out.traffic_bytes,
-                    };
-                    if let Err(e) = accum.absorb(out, &mut **store) {
-                        store_err = Some(e);
-                        return;
-                    }
-                    if let Err(e) = deliver(collector, sinks, &ev) {
-                        sink_err = Some(e);
-                    }
-                }
-                // surface the first failure in selection order
-                Err(e) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
-            });
+                        // surface the first failure in selection order
+                        Err(e) => {
+                            if first_err.is_none() {
+                                first_err = Some(e);
+                            }
+                        }
+                    });
         }
         if let Some(e) = first_err {
             return Err(e);
@@ -487,6 +561,10 @@ impl Engine {
         if let Some(e) = sink_err {
             return Err(e);
         }
+        // transport-level breakdown (all remote workers gone, frame
+        // encoding failure) — checked after the per-client errors so
+        // failure precedence matches the historical local path
+        transport_res?;
 
         let mut rec = self.server.finish_round(accum, &mut *self.method);
         self.emit(EngineEvent::RoundAggregated {

@@ -20,6 +20,11 @@
 //! - [`spec`] — the typed `SessionSpec` builder and `SweepPlan`, the
 //!   library-first way to describe sessions (the CLI is a thin
 //!   translator into these);
+//! - [`transport`] — the `RoundTransport` seam between round planning
+//!   and client execution: the in-process pool (`LocalTransport`) or a
+//!   round server streaming plans to remote worker processes over the
+//!   length-prefixed `DPEFTRPC1` wire protocol (`TcpTransport` /
+//!   `run_worker`), with byte-identical results either way;
 //! - [`events`] — the `EngineEvent` stream and `EventSink` observers
 //!   (console reporter, JSONL log, in-memory collector) emitted at the
 //!   engine's sequential barriers.
@@ -34,6 +39,7 @@ pub mod server;
 pub mod snapshot;
 pub mod spec;
 pub mod store;
+pub mod transport;
 
 pub use client::{ClientCtx, ClientTask};
 pub use config::FedConfig;
@@ -45,3 +51,7 @@ pub use server::{RoundAccum, Server};
 pub use snapshot::SessionSnapshot;
 pub use spec::{SessionSpec, SessionSpecBuilder, SweepPlan};
 pub use store::{DeviceStore, DeviceStoreSpec, DiskStore, MemStore};
+pub use transport::{
+    run_worker, LocalTransport, RoundTransport, TcpTransport, TransportSpec, WorkerOptions,
+    WorkerReport,
+};

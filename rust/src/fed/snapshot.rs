@@ -98,7 +98,10 @@ impl SessionSnapshot {
     }
 }
 
-fn write_config<W: std::io::Write>(w: &mut Writer<W>, cfg: &FedConfig) -> Result<()> {
+/// Serialize a `FedConfig` section. `pub(crate)`: the transport
+/// handshake (`fed::transport`) ships the session config to joining
+/// workers through the same single wire codec the snapshot uses.
+pub(crate) fn write_config<W: std::io::Write>(w: &mut Writer<W>, cfg: &FedConfig) -> Result<()> {
     w.string(&cfg.preset)?;
     w.string(&cfg.dataset)?;
     w.u64(cfg.n_devices as u64)?;
@@ -119,7 +122,7 @@ fn write_config<W: std::io::Write>(w: &mut Writer<W>, cfg: &FedConfig) -> Result
     w.opt_string(cfg.snapshot_dir.as_deref())
 }
 
-fn read_config<R: Read>(r: &mut Reader<R>) -> Result<FedConfig> {
+pub(crate) fn read_config<R: Read>(r: &mut Reader<R>) -> Result<FedConfig> {
     Ok(FedConfig {
         preset: r.string()?,
         dataset: r.string()?,
@@ -380,21 +383,15 @@ pub fn save_session(
 pub fn load(path: impl AsRef<Path>) -> Result<SessionSnapshot> {
     let path = path.as_ref();
     let mut r = ckpt::open_reader(path)?;
-    let mut magic = [0u8; 8];
-    r.raw(&mut magic)?;
-    if &magic == b"DPEFTCK1" {
-        bail!(
-            "{path:?} is a legacy DPEFTCK1 model checkpoint, not a session \
-             snapshot (load it with model::ckpt::load)"
-        );
-    }
-    if &magic != MAGIC {
-        bail!("not a droppeft session snapshot (bad magic)");
-    }
-    let version = r.u64()?;
-    if version != FORMAT_VERSION {
-        bail!("unsupported snapshot format version {version} (expected {FORMAT_VERSION})");
-    }
+    // no context wrapper: the helper's own messages ("bad magic", the
+    // legacy-DPEFTCK1 redirect, version mismatches) are the interface
+    // the corruption suite pins
+    ckpt::check_header(
+        &mut r,
+        MAGIC,
+        Some(FORMAT_VERSION),
+        "droppeft session snapshot",
+    )?;
     let cfg = read_config(&mut r)?;
     let method_key = r.string()?;
     let method_name = r.string()?;

@@ -23,6 +23,7 @@ use crate::fed::config::FedConfig;
 use crate::fed::engine::Engine;
 use crate::fed::snapshot::{self, SessionSnapshot};
 use crate::fed::store::DeviceStoreSpec;
+use crate::fed::transport::{TcpTransport, TransportSpec};
 use crate::methods::{Method, MethodSpec};
 use crate::runtime::{self, Backend, BackendKind};
 use crate::util::cli::Args;
@@ -42,6 +43,12 @@ pub struct SessionSpec {
     /// snapshots and never affects simulated results beyond floating
     /// point differences between executors.
     pub backend: BackendKind,
+    /// How round plans reach client executors (`--listen` = serve plans
+    /// to remote `droppeft worker` processes over TCP). Host
+    /// configuration, like `workers`: never serialized into snapshots
+    /// and never able to affect results — `tests/transport.rs` pins the
+    /// byte-identity across transports.
+    pub transport: TransportSpec,
 }
 
 impl SessionSpec {
@@ -54,6 +61,7 @@ impl SessionSpec {
                 cfg: FedConfig::quick("tiny", "mnli"),
                 method: MethodSpec::default(),
                 backend: BackendKind::Auto,
+                transport: TransportSpec::Local,
             },
         }
     }
@@ -122,6 +130,11 @@ impl SessionSpec {
         if c.device_cache == 0 {
             bail!("spec: device_cache must be >= 1");
         }
+        if let TransportSpec::Tcp { listen } = &self.transport {
+            if listen.is_empty() {
+                bail!("spec: --listen address must not be empty");
+            }
+        }
         Ok(())
     }
 
@@ -135,7 +148,11 @@ impl SessionSpec {
     /// with [`Engine::add_sink`] before calling [`Engine::run`].
     pub fn build_engine(&self, runtime: Arc<dyn Backend>) -> Result<Engine> {
         self.validate()?;
-        Engine::new(self.cfg.clone(), runtime, self.build_method())
+        let mut engine = Engine::new(self.cfg.clone(), runtime, self.build_method())?;
+        if let TransportSpec::Tcp { listen } = &self.transport {
+            engine.set_transport(Box::new(TcpTransport::listen(listen)?));
+        }
+        Ok(engine)
     }
 }
 
@@ -276,6 +293,16 @@ impl SessionSpecBuilder {
         self
     }
 
+    /// Serve round plans to remote worker processes on this TCP address
+    /// (`--listen`, e.g. "127.0.0.1:7171"; port 0 = ephemeral).
+    /// Host-specific like `workers`: never changes results.
+    pub fn listen(mut self, addr: impl Into<String>) -> Self {
+        self.spec.transport = TransportSpec::Tcp {
+            listen: addr.into(),
+        };
+        self
+    }
+
     pub fn build(self) -> Result<SessionSpec> {
         self.spec.validate()?;
         Ok(self.spec)
@@ -329,6 +356,9 @@ pub fn builder_from_args(args: &Args) -> Result<SessionSpecBuilder> {
     }
     if let Some(dir) = args.opt_str("snapshot-dir") {
         b = b.snapshot_dir(dir);
+    }
+    if let Some(addr) = args.opt_str("listen") {
+        b = b.listen(addr);
     }
     Ok(b)
 }

@@ -294,15 +294,8 @@ impl DiskStore {
         let path = self.spill_path(id);
         let mut r =
             ckpt::open_reader(&path).with_context(|| format!("opening device spill {path:?}"))?;
-        let mut magic = [0u8; 8];
-        r.raw(&mut magic)?;
-        if &magic != SPILL_MAGIC {
-            bail!("{path:?} is not a device spill file (bad magic)");
-        }
-        let version = r.u64()?;
-        if version != SPILL_VERSION {
-            bail!("unsupported device spill version {version} (expected {SPILL_VERSION})");
-        }
+        ckpt::check_header(&mut r, SPILL_MAGIC, Some(SPILL_VERSION), "device spill file")
+            .with_context(|| format!("reading device spill {path:?}"))?;
         let d = snapshot::read_device(&mut r)?;
         if d.id != id {
             bail!("corrupt device spill {path:?}: contains device {}, not {id}", d.id);

@@ -1,0 +1,121 @@
+//! Distributed round transport: how one round's `DevicePlan`s reach
+//! client executors and how their `LocalOutcome`s come back.
+//!
+//! The engine plans rounds sequentially and absorbs outcomes at a
+//! sequential fan-in (`RoundAccum`) — neither side cares *where* the
+//! client work ran. [`RoundTransport`] is that seam:
+//!
+//! - [`LocalTransport`] (the default) executes plans on the in-process
+//!   `util::pool::run_parallel_streaming` worker pool, exactly as the
+//!   engine always has;
+//! - [`TcpTransport`] (`--listen`, the `serve` subcommand) streams each
+//!   plan to remote worker processes (`droppeft worker --connect`) over
+//!   the length-prefixed [`wire`] protocol, retrying a plan on another
+//!   live worker if a connection dies mid-task.
+//!
+//! Determinism contract: a `ClientTask::run` is a pure function of
+//! `(DevicePlan, global)`, all RNG is pre-drawn during planning, and
+//! both transports deliver outcomes to the fan-in **in selection
+//! order** — so results, event logs, and snapshots are byte-identical
+//! across transports, worker counts, worker processes joining or
+//! leaving between rounds, and even mid-task connection failures
+//! (`tests/transport.rs` pins all of this).
+
+mod server;
+mod worker;
+pub mod wire;
+
+use anyhow::Result;
+
+use crate::fed::client::{ClientCtx, ClientTask};
+use crate::fed::round::{DevicePlan, LocalOutcome};
+use crate::methods::Method;
+use crate::model::TrainState;
+use crate::util::pool;
+
+pub use server::TcpTransport;
+pub use worker::{run_worker, WorkerOptions, WorkerReport};
+
+/// Which transport a session's rounds execute over. Host configuration,
+/// like `workers` or the device store: never serialized into snapshots
+/// (a resumed session picks its transport from the resuming host's
+/// flags) and never able to affect results.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum TransportSpec {
+    /// in-process worker pool (the degenerate transport)
+    #[default]
+    Local,
+    /// serve plans to remote `droppeft worker` processes over TCP
+    Tcp {
+        /// listen address, e.g. "127.0.0.1:7171" (port 0 = ephemeral)
+        listen: String,
+    },
+}
+
+/// Everything a transport needs to execute one round: the read-only
+/// session context client tasks borrow, the round's identity, and the
+/// global state workers materialize downloads from.
+pub struct RoundExec<'a> {
+    pub ctx: ClientCtx<'a>,
+    pub method: &'a dyn Method,
+    pub round: usize,
+    /// PEFT kind: "lora" | "adapter"
+    pub kind: &'a str,
+    pub personalized: bool,
+    pub global: &'a TrainState,
+    /// in-process worker threads (local transport only; remote
+    /// parallelism is however many worker processes are connected)
+    pub workers: usize,
+}
+
+/// One round's execution seam. `consume` runs on the calling thread and
+/// receives `(selection_index, outcome)` in selection order — the same
+/// contract `run_parallel_streaming` gives the engine's fan-in, so the
+/// sequential absorption path is transport-agnostic.
+///
+/// An `Err` from a *client task* (deterministic application failure)
+/// flows through `consume` like any other result; `run_round` itself
+/// only fails on transport-level breakdown (every worker gone, a frame
+/// that cannot be encoded).
+pub trait RoundTransport: Send {
+    fn name(&self) -> &'static str;
+
+    fn run_round(
+        &mut self,
+        exec: RoundExec<'_>,
+        plans: Vec<DevicePlan>,
+        consume: &mut dyn FnMut(usize, Result<LocalOutcome>),
+    ) -> Result<()>;
+}
+
+/// The in-process transport: plans run on the bounded streaming worker
+/// pool. This is byte-for-byte the execution path the engine used
+/// before transports existed — the determinism suites pin it.
+#[derive(Default)]
+pub struct LocalTransport;
+
+impl RoundTransport for LocalTransport {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn run_round(
+        &mut self,
+        exec: RoundExec<'_>,
+        plans: Vec<DevicePlan>,
+        consume: &mut dyn FnMut(usize, Result<LocalOutcome>),
+    ) -> Result<()> {
+        let task = ClientTask::for_round(
+            exec.ctx,
+            exec.method,
+            exec.round,
+            exec.kind,
+            exec.personalized,
+            exec.global,
+        );
+        let task = &task;
+        let jobs: Vec<_> = plans.into_iter().map(|dp| move || task.run(dp)).collect();
+        pool::run_parallel_streaming(exec.workers.max(1), jobs, consume);
+        Ok(())
+    }
+}

@@ -1,0 +1,445 @@
+//! The TCP round server: [`TcpTransport`] accepts `droppeft worker`
+//! connections, broadcasts each round's start (method blob + global
+//! state), fans the round's `DevicePlan`s out over the live connections,
+//! and feeds the returned `LocalOutcome`s to the engine's sequential
+//! fan-in in selection order.
+//!
+//! Scheduling reuses `util::pool::run_parallel_streaming` verbatim: one
+//! in-process job per plan, each claiming a connection from a shared
+//! free-list, so the bounded claim window, in-order delivery, and panic
+//! semantics are *identical* to the local transport — the fan-in cannot
+//! tell the difference.
+//!
+//! Fault model:
+//! - workers may join between rounds (handshake at round start) and
+//!   leave between rounds (clean close, detected by an EOF probe);
+//! - a connection that dies **mid-task** is dropped and its plan is
+//!   re-dispatched on another live connection — outcomes are pure
+//!   functions of `(plan, global)`, so a retry is byte-identical;
+//! - a round fails only when no connections remain; the session itself
+//!   survives via snapshots (`--snapshot-every` + `--resume`), which
+//!   double as crash recovery when the *server* is killed;
+//! - a worker-reported application error (`MSG_CLIENT_ERR`) is
+//!   deterministic and is NOT retried: it flows to the fan-in like a
+//!   local task failure.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::fed::round::{DevicePlan, LocalOutcome};
+use crate::fed::transport::{wire, RoundExec, RoundTransport};
+use crate::model::TrainState;
+use crate::util::pool;
+
+/// How long a joining connection gets to complete the handshake before
+/// the server drops it and keeps serving (a wedged or hostile client
+/// must not stall round start for the healthy workers).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A `Read + Write` stream that counts bytes both ways into shared
+/// atomics — the source of the bytes-on-wire numbers `benches/round_net`
+/// reports.
+struct CountingStream {
+    inner: TcpStream,
+    sent: Arc<AtomicU64>,
+    received: Arc<AtomicU64>,
+}
+
+impl Read for CountingStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.received.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(n)
+    }
+}
+
+impl Write for CountingStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.sent.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// One handshaken worker connection.
+struct WorkerConn {
+    stream: CountingStream,
+    /// monotone join id, for log lines only
+    id: u64,
+}
+
+/// What one task dispatch produced on a connection.
+enum Reply {
+    Outcome(Box<LocalOutcome>),
+    /// deterministic application error reported by the worker
+    ClientErr(String),
+}
+
+/// Shared connection free-list for one round's dispatch. `alive` counts
+/// every usable connection (free or checked out); a claim blocks until a
+/// connection frees up and errors only once none remain anywhere.
+struct ConnPool {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+struct PoolState {
+    free: Vec<WorkerConn>,
+    alive: usize,
+}
+
+impl ConnPool {
+    fn new(conns: Vec<WorkerConn>) -> ConnPool {
+        ConnPool {
+            state: Mutex::new(PoolState {
+                alive: conns.len(),
+                free: conns,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn claim(&self) -> Result<WorkerConn> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(c) = st.free.pop() {
+                return Ok(c);
+            }
+            if st.alive == 0 {
+                bail!("all remote workers disconnected mid-round");
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn release(&self, conn: WorkerConn) {
+        self.state.lock().unwrap().free.push(conn);
+        self.cv.notify_one();
+    }
+
+    fn discard(&self, conn: WorkerConn) {
+        drop(conn); // closes the socket
+        self.state.lock().unwrap().alive -= 1;
+        // every waiter must re-check: if this was the last connection
+        // they all need to fail rather than sleep forever
+        self.cv.notify_all();
+    }
+
+    /// Surviving connections after the round's dispatch completed.
+    fn into_conns(self) -> Vec<WorkerConn> {
+        self.state.into_inner().unwrap().free
+    }
+
+    /// Dispatch one plan: send the task, await the reply, retry on
+    /// another live connection if this one dies mid-exchange.
+    fn run_task(
+        &self,
+        device: usize,
+        task_body: &[u8],
+        global: &TrainState,
+    ) -> Result<LocalOutcome> {
+        loop {
+            let mut conn = self.claim()?;
+            match attempt(&mut conn, device, task_body, global) {
+                Ok(Reply::Outcome(out)) => {
+                    self.release(conn);
+                    return Ok(*out);
+                }
+                Ok(Reply::ClientErr(msg)) => {
+                    self.release(conn);
+                    // deterministic application failure: retrying on
+                    // another worker would fail identically
+                    return Err(anyhow::anyhow!(
+                        "remote client task failed (device {device}): {msg}"
+                    ));
+                }
+                Err(e) => {
+                    crate::info!(
+                        "transport: worker {} lost mid-task (device {device}): {e:#}; \
+                         re-dispatching",
+                        conn.id
+                    );
+                    self.discard(conn);
+                }
+            }
+        }
+    }
+}
+
+/// One task exchange on one connection. Any error here — I/O failure,
+/// clean close mid-round, corrupt or geometry-violating reply — means
+/// the connection is unusable; the caller drops it and retries the plan
+/// elsewhere.
+fn attempt(
+    conn: &mut WorkerConn,
+    device: usize,
+    task_body: &[u8],
+    global: &TrainState,
+) -> Result<Reply> {
+    wire::send_frame(&mut conn.stream, wire::MSG_TASK, task_body)?;
+    let (kind, body) = wire::recv_frame(&mut conn.stream)?
+        .context("worker closed the connection mid-task")?;
+    match kind {
+        wire::MSG_OUTCOME => {
+            let out = wire::read_outcome(&body)?;
+            wire::validate_outcome(&out, device, global)?;
+            Ok(Reply::Outcome(Box::new(out)))
+        }
+        wire::MSG_CLIENT_ERR => Ok(Reply::ClientErr(wire::read_client_err(&body)?)),
+        k => bail!("unexpected reply frame kind {k} (expected outcome)"),
+    }
+}
+
+/// The TCP round transport (the `serve` side).
+pub struct TcpTransport {
+    listener: TcpListener,
+    /// handshaken connections carried between rounds
+    conns: Vec<WorkerConn>,
+    next_id: u64,
+    bytes_sent: Arc<AtomicU64>,
+    bytes_received: Arc<AtomicU64>,
+}
+
+impl TcpTransport {
+    /// Bind the listen address (port 0 = ephemeral, see
+    /// [`TcpTransport::local_addr`]). Accepting is lazy: workers join at
+    /// the next round start.
+    pub fn listen(addr: &str) -> Result<TcpTransport> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding transport listener on {addr:?}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting transport listener nonblocking")?;
+        crate::info!("transport: serving rounds on {}", listener.local_addr()?);
+        Ok(TcpTransport {
+            listener,
+            conns: Vec::new(),
+            next_id: 0,
+            bytes_sent: Arc::new(AtomicU64::new(0)),
+            bytes_received: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    /// The bound address (resolves port 0 binds).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Total bytes written to / read from all worker connections so far
+    /// (wire frames only; counted at the socket).
+    pub fn bytes_on_wire(&self) -> (u64, u64) {
+        (
+            self.bytes_sent.load(Ordering::Relaxed),
+            self.bytes_received.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Handles onto the (sent, received) byte counters. The counters
+    /// stay live after the transport is boxed into an engine — how the
+    /// `round_net` bench reads bytes-on-wire out of a finished session.
+    pub fn wire_counters(&self) -> (Arc<AtomicU64>, Arc<AtomicU64>) {
+        (self.bytes_sent.clone(), self.bytes_received.clone())
+    }
+
+    /// Connections currently carried between rounds.
+    pub fn workers_connected(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// Handshake one accepted socket into a usable connection.
+    fn handshake(&mut self, stream: TcpStream, exec: &RoundExec<'_>) -> Result<WorkerConn> {
+        // the listener is nonblocking; its accepted sockets must not be
+        stream.set_nonblocking(false)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        let mut conn = WorkerConn {
+            stream: CountingStream {
+                inner: stream,
+                sent: self.bytes_sent.clone(),
+                received: self.bytes_received.clone(),
+            },
+            id: self.next_id,
+        };
+        let (kind, body) = wire::recv_frame(&mut conn.stream)?
+            .context("worker closed during handshake")?;
+        anyhow::ensure!(
+            kind == wire::MSG_HELLO,
+            "expected hello frame, got kind {kind}"
+        );
+        let ver = wire::read_hello(&body)?;
+        anyhow::ensure!(
+            ver == wire::PROTOCOL_VERSION,
+            "worker speaks protocol {ver}, this server speaks {}",
+            wire::PROTOCOL_VERSION
+        );
+        let init = wire::session_init_payload(exec.ctx.cfg, &exec.method.key())?;
+        wire::send_frame(&mut conn.stream, wire::MSG_SESSION_INIT, &init)?;
+        conn.stream.inner.set_read_timeout(None)?;
+        self.next_id += 1;
+        crate::info!("transport: worker {} joined", conn.id);
+        Ok(conn)
+    }
+
+    /// Drop connections whose worker left between rounds. A worker
+    /// leaves by closing its socket after a round ends; between rounds a
+    /// healthy worker sends nothing, so a readable socket means either
+    /// EOF (left) or a protocol violation (dropped too).
+    fn reap_departed(&mut self) {
+        self.conns.retain_mut(|c| {
+            if c.stream.inner.set_nonblocking(true).is_err() {
+                crate::info!("transport: worker {} lost (probe failed)", c.id);
+                return false;
+            }
+            let mut probe = [0u8; 1];
+            let alive = match c.stream.inner.peek(&mut probe) {
+                Ok(0) => {
+                    crate::info!("transport: worker {} left", c.id);
+                    false
+                }
+                Ok(_) => {
+                    crate::info!(
+                        "transport: worker {} sent data between rounds; dropping",
+                        c.id
+                    );
+                    false
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => true,
+                Err(e) => {
+                    crate::info!("transport: worker {} lost ({e})", c.id);
+                    false
+                }
+            };
+            alive && c.stream.inner.set_nonblocking(false).is_ok()
+        });
+    }
+
+    /// Accept every worker waiting to join. With no workers connected at
+    /// all, blocks until the first one arrives — an empty fleet waits
+    /// rather than failing the session.
+    fn accept_joins(&mut self, exec: &RoundExec<'_>) -> Result<()> {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => match self.handshake(stream, exec) {
+                    Ok(conn) => self.conns.push(conn),
+                    Err(e) => {
+                        // a broken joiner must not take the round down
+                        crate::info!("transport: rejected join from {peer}: {e:#}");
+                    }
+                },
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if !self.conns.is_empty() {
+                        return Ok(());
+                    }
+                    // no workers at all: block until one arrives (the
+                    // listener flips to blocking mode for one accept
+                    // cycle — no busy-wait), then keep draining joiners
+                    crate::info!("transport: waiting for a worker to join...");
+                    self.listener.set_nonblocking(false)?;
+                    let accept = self.listener.accept();
+                    self.listener.set_nonblocking(true)?;
+                    let (stream, peer) =
+                        accept.context("waiting for a worker connection")?;
+                    match self.handshake(stream, exec) {
+                        Ok(conn) => self.conns.push(conn),
+                        Err(e) => {
+                            crate::info!("transport: rejected join from {peer}: {e:#}");
+                        }
+                    }
+                }
+                Err(e) => return Err(e).context("accepting worker connection"),
+            }
+        }
+    }
+}
+
+impl RoundTransport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn run_round(
+        &mut self,
+        exec: RoundExec<'_>,
+        plans: Vec<DevicePlan>,
+        consume: &mut dyn FnMut(usize, Result<LocalOutcome>),
+    ) -> Result<()> {
+        self.reap_departed();
+        self.accept_joins(&exec)?;
+
+        // round-start broadcast: method blob + global state; a send
+        // failure means the worker is gone — drop it and carry on
+        let start = wire::round_start_payload(
+            exec.round,
+            exec.kind,
+            exec.personalized,
+            &exec.method.export_round_state(),
+            exec.global,
+        )?;
+        let mut live = Vec::new();
+        for mut conn in self.conns.drain(..) {
+            match wire::send_frame(&mut conn.stream, wire::MSG_ROUND_START, &start) {
+                Ok(()) => live.push(conn),
+                Err(e) => crate::info!("transport: worker {} lost ({e:#})", conn.id),
+            }
+        }
+        if live.is_empty() {
+            // every worker vanished between handshake and round start;
+            // loop back to blocking accept rather than failing
+            return self.run_round(exec, plans, consume);
+        }
+
+        // serialize every plan up front: payload bytes survive their
+        // plan, so a dead connection's task can be re-sent elsewhere
+        let tasks: Vec<(usize, Vec<u8>)> = plans
+            .iter()
+            .map(|p| Ok((p.device, wire::task_payload(p)?)))
+            .collect::<Result<_>>()?;
+        drop(plans);
+
+        let n_workers = live.len();
+        let conn_pool = ConnPool::new(live);
+        {
+            let conn_pool = &conn_pool;
+            let global = exec.global;
+            let jobs: Vec<_> = tasks
+                .iter()
+                .map(|(device, body)| {
+                    let (device, body) = (*device, body.as_slice());
+                    move || conn_pool.run_task(device, body, global)
+                })
+                .collect();
+            pool::run_parallel_streaming(n_workers, jobs, consume);
+        }
+
+        // round end: surviving connections carry over to the next round
+        let mut survivors = Vec::new();
+        for mut conn in conn_pool.into_conns() {
+            match wire::send_frame(&mut conn.stream, wire::MSG_ROUND_END, &[]) {
+                Ok(()) => survivors.push(conn),
+                Err(e) => crate::info!("transport: worker {} lost ({e:#})", conn.id),
+            }
+        }
+        self.conns = survivors;
+        Ok(())
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // best-effort goodbye so workers exit promptly instead of
+        // waiting on EOF (which they also handle — a killed server
+        // never sends this, and workers still exit cleanly)
+        for conn in &mut self.conns {
+            let _ = wire::send_frame(&mut conn.stream, wire::MSG_SHUTDOWN, &[]);
+        }
+    }
+}

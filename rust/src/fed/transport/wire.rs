@@ -1,0 +1,678 @@
+//! The `DPEFTRPC1` wire protocol: length-prefixed frames carrying the
+//! round server ↔ remote worker conversation, encoded with the same
+//! `model::ckpt` bounded Reader / Writer primitives every other droppeft
+//! format family uses.
+//!
+//! Frame layout (all integers little-endian, like the on-disk formats):
+//!
+//! ```text
+//! +----------------+------+-------------+------------------+
+//! | b"DPEFTRPC1"   | kind | payload len | payload          |
+//! | 9 bytes        | u8   | u64         | `len` bytes      |
+//! +----------------+------+-------------+------------------+
+//! ```
+//!
+//! The payload of each frame is parsed through a bounded
+//! [`ckpt::Reader`] whose budget is exactly the frame length, so every
+//! section-length claim inside a frame is validated before a single
+//! byte is allocated — the same defense `DPEFTSN2` snapshots get.
+//! The frame length itself is capped at [`MAX_FRAME`] and the payload
+//! is read incrementally (`Read::take`), so a lying length prefix from
+//! a dying or hostile peer never costs more memory than the bytes that
+//! actually arrived (`tests/transport_corruption.rs` pins this).
+//!
+//! Determinism contract: the codecs below round-trip every field
+//! bit-exactly — floats travel as raw IEEE-754 bytes, RNG streams as
+//! their exported state — so a plan executed by a remote worker is the
+//! same pure function of `(DevicePlan, global)` it would have been
+//! in-process, and outcomes are byte-identical either way.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::fed::config::FedConfig;
+use crate::fed::round::{DevicePlan, DownloadSpec, LocalOutcome};
+use crate::fed::snapshot;
+use crate::methods::SharePolicy;
+use crate::model::{ckpt, TrainState};
+use crate::ptls::Upload;
+use crate::stld::DropoutConfig;
+use crate::util::rng::Rng;
+
+/// Protocol revision spoken by this build; the `Hello`/`SessionInit`
+/// handshake rejects any mismatch (bump on ANY codec change).
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Hard cap on one frame's payload. Generous for any realistic
+/// `TrainState` (a "base"-preset global is a few MB) while bounding
+/// what a corrupt length prefix can make the receiver read.
+pub const MAX_FRAME: u64 = 1 << 30;
+
+/// Fixed frame header size: 9-byte magic + kind byte + u64 length.
+pub const FRAME_HEADER: usize = ckpt::RPC_MAGIC.len() + 1 + 8;
+
+// ---- frame kinds ----
+/// worker → server: protocol version (first frame on a connection)
+pub const MSG_HELLO: u8 = 1;
+/// server → worker: session config + method factory key
+pub const MSG_SESSION_INIT: u8 = 2;
+/// server → worker: round number, PEFT kind, method blob, global state
+pub const MSG_ROUND_START: u8 = 3;
+/// server → worker: one device's plan (the dynamic `DevicePlan` fields)
+pub const MSG_TASK: u8 = 4;
+/// worker → server: one device's `LocalOutcome`
+pub const MSG_OUTCOME: u8 = 5;
+/// worker → server: `ClientTask::run` failed (deterministic app error)
+pub const MSG_CLIENT_ERR: u8 = 6;
+/// server → worker: the round is over, wait for the next one
+pub const MSG_ROUND_END: u8 = 7;
+/// server → worker: the session is over, exit cleanly
+pub const MSG_SHUTDOWN: u8 = 8;
+
+/// Write one frame. Flushes, so a frame is either fully on the wire or
+/// the connection is dead — there is no partial-write state to resync.
+pub fn send_frame(w: &mut impl Write, kind: u8, payload: &[u8]) -> Result<()> {
+    ensure!(
+        (payload.len() as u64) <= MAX_FRAME,
+        "refusing to send a {} byte frame (MAX_FRAME {MAX_FRAME})",
+        payload.len()
+    );
+    w.write_all(ckpt::RPC_MAGIC)?;
+    w.write_all(&[kind])?;
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` is a **clean** end-of-stream exactly at a
+/// frame boundary (the peer closed between frames — how workers leave
+/// and how a killed server looks to its workers); EOF anywhere inside a
+/// frame is an error, as is a foreign magic, an over-[`MAX_FRAME`]
+/// length prefix, or a payload shorter than its declared length.
+pub fn recv_frame(r: &mut impl Read) -> Result<Option<(u8, Vec<u8>)>> {
+    let mut header = [0u8; FRAME_HEADER];
+    let mut filled = 0;
+    while filled < FRAME_HEADER {
+        let n = match r.read(&mut header[filled..]) {
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading transport frame header"),
+        };
+        if n == 0 {
+            if filled == 0 {
+                return Ok(None); // clean close at a frame boundary
+            }
+            bail!(
+                "connection closed mid-frame ({filled} of {FRAME_HEADER} header bytes)"
+            );
+        }
+        filled += n;
+    }
+    let magic_len = ckpt::RPC_MAGIC.len();
+    ckpt::check_magic(&header[..magic_len], ckpt::RPC_MAGIC, "droppeft transport frame")?;
+    let kind = header[magic_len];
+    let len = u64::from_le_bytes(header[magic_len + 1..].try_into().unwrap());
+    ensure!(
+        len <= MAX_FRAME,
+        "transport frame claims {len} bytes (MAX_FRAME {MAX_FRAME})"
+    );
+    // incremental read: allocation grows with bytes actually received,
+    // never with the claimed length
+    let mut payload = Vec::new();
+    let got = r
+        .take(len)
+        .read_to_end(&mut payload)
+        .context("reading transport frame payload")?;
+    ensure!(
+        got as u64 == len,
+        "transport frame truncated: {got} of {len} payload bytes"
+    );
+    Ok(Some((kind, payload)))
+}
+
+/// Build a frame payload with a `ckpt::Writer` over a byte vector.
+fn payload(build: impl FnOnce(&mut ckpt::Writer<Vec<u8>>) -> Result<()>) -> Result<Vec<u8>> {
+    let mut w = ckpt::Writer::new(Vec::new());
+    build(&mut w)?;
+    Ok(w.into_inner())
+}
+
+/// Bounded reader over a received payload.
+fn reader(body: &[u8]) -> ckpt::Reader<&[u8]> {
+    ckpt::Reader::new(body, body.len() as u64)
+}
+
+/// Every section of a payload must be consumed: trailing garbage means
+/// the two sides disagree about the codec, which would otherwise go
+/// undetected until a later field misparses.
+fn finish<R: Read>(r: ckpt::Reader<R>, what: &str) -> Result<()> {
+    ensure!(
+        r.remaining() == 0,
+        "{what} payload has {} undecoded trailing bytes",
+        r.remaining()
+    );
+    Ok(())
+}
+
+// ---- Hello ----
+
+pub fn hello_payload() -> Result<Vec<u8>> {
+    payload(|w| w.u64(PROTOCOL_VERSION))
+}
+
+pub fn read_hello(body: &[u8]) -> Result<u64> {
+    let mut r = reader(body);
+    let ver = r.u64()?;
+    finish(r, "hello")?;
+    Ok(ver)
+}
+
+// ---- SessionInit ----
+
+/// Ships the full session config (the snapshot's own config codec) plus
+/// the method factory key, so a joining worker rebuilds every static —
+/// dataset, shards, population, base model — deterministically from the
+/// seed, exactly like `Engine::new` does.
+pub fn session_init_payload(cfg: &FedConfig, method_key: &str) -> Result<Vec<u8>> {
+    payload(|w| {
+        snapshot::write_config(w, cfg)?;
+        w.string(method_key)
+    })
+}
+
+pub fn read_session_init(body: &[u8]) -> Result<(FedConfig, String)> {
+    let mut r = reader(body);
+    let cfg = snapshot::read_config(&mut r)?;
+    let key = r.string()?;
+    finish(r, "session-init")?;
+    Ok((cfg, key))
+}
+
+// ---- RoundStart ----
+
+pub struct RoundStartMsg {
+    pub round: usize,
+    /// PEFT kind: "lora" | "adapter"
+    pub kind: String,
+    pub personalized: bool,
+    /// the method's cross-round state (`Method::export_round_state`),
+    /// imported by the worker so read-only hooks like `postprocess`
+    /// see exactly the server's strategy state
+    pub method_blob: Vec<u8>,
+    /// the global model every task this round materializes from
+    pub global: TrainState,
+}
+
+pub fn round_start_payload(
+    round: usize,
+    kind: &str,
+    personalized: bool,
+    method_blob: &[u8],
+    global: &TrainState,
+) -> Result<Vec<u8>> {
+    payload(|w| {
+        w.u64(round as u64)?;
+        w.string(kind)?;
+        w.bool(personalized)?;
+        w.bytes(method_blob)?;
+        ckpt::write_train_state(w, global)
+    })
+}
+
+pub fn read_round_start(body: &[u8]) -> Result<RoundStartMsg> {
+    let mut r = reader(body);
+    let msg = RoundStartMsg {
+        round: r.u64()? as usize,
+        kind: r.string()?,
+        personalized: r.bool()?,
+        method_blob: r.bytes()?,
+        global: ckpt::read_train_state(&mut r)?,
+    };
+    finish(r, "round-start")?;
+    Ok(msg)
+}
+
+// ---- Task ----
+
+/// The dynamic half of a [`DevicePlan`]: everything the planner drew for
+/// this round. The static half (device info, data shards, power draw) is
+/// a pure function of the config seed, so the worker rebuilds it from
+/// its own `Population` instead of paying for it on the wire every task.
+pub struct TaskMsg {
+    pub device: usize,
+    pub rates: Vec<f64>,
+    pub personal: Option<TrainState>,
+    pub last_shared: Vec<usize>,
+    pub dl_personalized: bool,
+    pub sampler_rng: crate::util::rng::RngState,
+    pub mask_rng: crate::util::rng::RngState,
+    pub bps: f64,
+    pub frozen_below: usize,
+    pub share_policy: SharePolicy,
+    pub agg_weight: f64,
+}
+
+impl TaskMsg {
+    /// Reassemble the full `DevicePlan` against the worker's own
+    /// seed-derived population.
+    pub fn into_plan(self, pop: &crate::fed::device::Population) -> Result<DevicePlan> {
+        ensure!(
+            self.device < pop.len(),
+            "task for device {} but the population has {} devices \
+             (worker and server disagree about the session config)",
+            self.device,
+            pop.len()
+        );
+        let statics = pop.device(self.device);
+        Ok(DevicePlan {
+            device: self.device,
+            info: statics.info(),
+            dropout: DropoutConfig { rates: self.rates },
+            download: DownloadSpec {
+                personal: self.personal,
+                last_shared: self.last_shared,
+                personalized: self.dl_personalized,
+            },
+            shard_train: statics.shard.train.clone(),
+            shard_val: statics.shard.val.clone(),
+            sampler_rng: Rng::from_state(self.sampler_rng),
+            mask_rng: Rng::from_state(self.mask_rng),
+            bps: self.bps,
+            power_w: statics.power_w(),
+            frozen_below: self.frozen_below,
+            share_policy: self.share_policy,
+            agg_weight: self.agg_weight,
+        })
+    }
+}
+
+fn write_usizes<W: Write>(w: &mut ckpt::Writer<W>, v: &[usize]) -> Result<()> {
+    let v: Vec<u64> = v.iter().map(|&x| x as u64).collect();
+    w.u64s(&v)
+}
+
+fn read_usizes<R: Read>(r: &mut ckpt::Reader<R>) -> Result<Vec<usize>> {
+    Ok(r.u64s()?.into_iter().map(|x| x as usize).collect())
+}
+
+pub fn task_payload(plan: &DevicePlan) -> Result<Vec<u8>> {
+    payload(|w| {
+        w.u64(plan.device as u64)?;
+        w.u64(plan.dropout.rates.len() as u64)?;
+        for &rate in &plan.dropout.rates {
+            w.f64(rate)?;
+        }
+        match &plan.download.personal {
+            None => w.u8(0)?,
+            Some(state) => {
+                w.u8(1)?;
+                ckpt::write_train_state(w, state)?;
+            }
+        }
+        write_usizes(w, &plan.download.last_shared)?;
+        w.bool(plan.download.personalized)?;
+        ckpt::write_rng_state(w, &plan.sampler_rng.export_state())?;
+        ckpt::write_rng_state(w, &plan.mask_rng.export_state())?;
+        w.f64(plan.bps)?;
+        w.u64(plan.frozen_below as u64)?;
+        match plan.share_policy {
+            SharePolicy::All => {
+                w.u8(0)?;
+                w.u64(0)?;
+            }
+            SharePolicy::LowestImportance(k) => {
+                w.u8(1)?;
+                w.u64(k as u64)?;
+            }
+            SharePolicy::TopLayers(k) => {
+                w.u8(2)?;
+                w.u64(k as u64)?;
+            }
+        }
+        w.f64(plan.agg_weight)
+    })
+}
+
+pub fn read_task(body: &[u8]) -> Result<TaskMsg> {
+    let mut r = reader(body);
+    let device = r.u64()? as usize;
+    let n_rates = r.u64()?;
+    ensure!(
+        n_rates <= r.remaining() / 8,
+        "task frame claims {n_rates} dropout rates with {} bytes left",
+        r.remaining()
+    );
+    let mut rates = Vec::with_capacity(n_rates as usize);
+    for _ in 0..n_rates {
+        rates.push(r.f64()?);
+    }
+    let personal = match r.u8()? {
+        0 => None,
+        1 => Some(ckpt::read_train_state(&mut r)?),
+        t => bail!("corrupt task frame: personal-state tag {t}"),
+    };
+    let last_shared = read_usizes(&mut r)?;
+    let dl_personalized = r.bool()?;
+    let sampler_rng = ckpt::read_rng_state(&mut r)?;
+    let mask_rng = ckpt::read_rng_state(&mut r)?;
+    let bps = r.f64()?;
+    let frozen_below = r.u64()? as usize;
+    let share_policy = {
+        let tag = r.u8()?;
+        let k = r.u64()? as usize;
+        match tag {
+            0 => SharePolicy::All,
+            1 => SharePolicy::LowestImportance(k),
+            2 => SharePolicy::TopLayers(k),
+            t => bail!("corrupt task frame: share-policy tag {t}"),
+        }
+    };
+    let agg_weight = r.f64()?;
+    finish(r, "task")?;
+    Ok(TaskMsg {
+        device,
+        rates,
+        personal,
+        last_shared,
+        dl_personalized,
+        sampler_rng,
+        mask_rng,
+        bps,
+        frozen_below,
+        share_policy,
+        agg_weight,
+    })
+}
+
+// ---- Outcome ----
+
+pub fn outcome_payload(out: &LocalOutcome) -> Result<Vec<u8>> {
+    payload(|w| {
+        w.u64(out.device as u64)?;
+        w.u64(out.upload.device as u64)?;
+        write_usizes(w, &out.upload.layers)?;
+        w.f32s(&out.upload.rows)?;
+        w.f64(out.upload.weight)?;
+        w.f32s(&out.upload.head)?;
+        match &out.final_state {
+            None => w.u8(0)?,
+            Some(state) => {
+                w.u8(1)?;
+                ckpt::write_train_state(w, state)?;
+            }
+        }
+        w.f64(out.local_acc)?;
+        w.f64(out.train_acc)?;
+        w.f64(out.mean_loss)?;
+        w.f64(out.active_frac)?;
+        w.f64(out.comp_secs)?;
+        w.f64(out.comm_secs)?;
+        w.f64(out.energy_j)?;
+        w.f64(out.mem_peak)?;
+        w.u64(out.traffic_bytes)
+    })
+}
+
+pub fn read_outcome(body: &[u8]) -> Result<LocalOutcome> {
+    let mut r = reader(body);
+    let device = r.u64()? as usize;
+    let upload = Upload {
+        device: r.u64()? as usize,
+        layers: read_usizes(&mut r)?,
+        rows: r.f32s()?,
+        weight: r.f64()?,
+        head: r.f32s()?,
+    };
+    let final_state = match r.u8()? {
+        0 => None,
+        1 => Some(ckpt::read_train_state(&mut r)?),
+        t => bail!("corrupt outcome frame: final-state tag {t}"),
+    };
+    let out = LocalOutcome {
+        device,
+        upload,
+        final_state,
+        local_acc: r.f64()?,
+        train_acc: r.f64()?,
+        mean_loss: r.f64()?,
+        active_frac: r.f64()?,
+        comp_secs: r.f64()?,
+        comm_secs: r.f64()?,
+        energy_j: r.f64()?,
+        mem_peak: r.f64()?,
+        traffic_bytes: r.u64()?,
+    };
+    finish(r, "outcome")?;
+    Ok(out)
+}
+
+/// Validate a received outcome against the round's global state before
+/// it reaches the aggregation fan-in: a corrupt peer must surface as a
+/// transport error here, never as an out-of-bounds panic inside
+/// `AggAccum::absorb`.
+pub fn validate_outcome(out: &LocalOutcome, expect_device: usize, global: &TrainState) -> Result<()> {
+    ensure!(
+        out.device == expect_device,
+        "worker replied for device {} (task was for device {expect_device})",
+        out.device
+    );
+    let q = global.q;
+    let n_layers = global.n_layers;
+    ensure!(
+        out.upload.rows.len() == out.upload.layers.len() * q,
+        "outcome upload carries {} rows for {} layers (q={q})",
+        out.upload.rows.len(),
+        out.upload.layers.len()
+    );
+    ensure!(
+        out.upload.layers.iter().all(|&l| l < n_layers),
+        "outcome upload names a layer >= {n_layers}"
+    );
+    ensure!(
+        out.upload.head.len() == global.head.len(),
+        "outcome head len {} != global head len {}",
+        out.upload.head.len(),
+        global.head.len()
+    );
+    if let Some(s) = &out.final_state {
+        ensure!(
+            s.kind == global.kind
+                && s.q == q
+                && s.n_layers == n_layers
+                && s.head.len() == global.head.len(),
+            "outcome final state ({} {}x{}, head {}) does not match the global \
+             ({} {}x{}, head {})",
+            s.kind,
+            s.n_layers,
+            s.q,
+            s.head.len(),
+            global.kind,
+            n_layers,
+            q,
+            global.head.len()
+        );
+    }
+    Ok(())
+}
+
+// ---- ClientErr ----
+
+pub fn client_err_payload(err: &anyhow::Error) -> Result<Vec<u8>> {
+    // full context chain, truncated to the wire string cap (the codec
+    // rejects over-long strings at write time)
+    let mut msg = format!("{err:#}");
+    if msg.len() > ckpt::MAX_STRING as usize {
+        let mut cut = ckpt::MAX_STRING as usize;
+        while !msg.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        msg.truncate(cut);
+    }
+    payload(|w| w.string(&msg))
+}
+
+pub fn read_client_err(body: &[u8]) -> Result<String> {
+    let mut r = reader(body);
+    let msg = r.string()?;
+    finish(r, "client-err")?;
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn state(fill: f32) -> TrainState {
+        TrainState {
+            kind: "lora".into(),
+            q: 3,
+            n_layers: 4,
+            peft: vec![fill; 12],
+            opt_m: vec![fill * 0.5; 12],
+            opt_v: vec![fill * 0.25; 12],
+            head: vec![fill; 5],
+            head_m: vec![0.0; 5],
+            head_v: vec![0.0; 5],
+            step: 17,
+        }
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        let mut buf = Vec::new();
+        send_frame(&mut buf, MSG_HELLO, &hello_payload().unwrap()).unwrap();
+        send_frame(&mut buf, MSG_ROUND_END, &[]).unwrap();
+        let mut r = &buf[..];
+        let (kind, body) = recv_frame(&mut r).unwrap().unwrap();
+        assert_eq!(kind, MSG_HELLO);
+        assert_eq!(read_hello(&body).unwrap(), PROTOCOL_VERSION);
+        let (kind, body) = recv_frame(&mut r).unwrap().unwrap();
+        assert_eq!(kind, MSG_ROUND_END);
+        assert!(body.is_empty());
+        // clean EOF at the frame boundary
+        assert!(recv_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn task_round_trips_bit_exactly() {
+        let mut sampler = Rng::seed_from(7);
+        let mut mask = Rng::seed_from(9);
+        sampler.fork(3); // advance the streams off their seeds
+        mask.fork(4);
+        let plan = DevicePlan {
+            device: 2,
+            info: crate::fed::device::DeviceInfo {
+                id: 2,
+                tier: crate::bandit::Tier::Medium,
+                effective_gflops: 1.5,
+                mem_bytes: 1 << 30,
+                n_samples: 40,
+            },
+            dropout: DropoutConfig {
+                rates: vec![0.1, 0.25, 0.5, 0.3],
+            },
+            download: DownloadSpec {
+                personal: Some(state(0.75)),
+                last_shared: vec![1, 3],
+                personalized: true,
+            },
+            shard_train: vec![5, 6, 7],
+            shard_val: vec![8],
+            sampler_rng: sampler,
+            mask_rng: mask,
+            bps: 1.25e6,
+            power_w: 4.5,
+            frozen_below: 1,
+            share_policy: SharePolicy::LowestImportance(2),
+            agg_weight: 40.0,
+        };
+        let body = task_payload(&plan).unwrap();
+        let msg = read_task(&body).unwrap();
+        assert_eq!(msg.device, 2);
+        assert_eq!(msg.rates, vec![0.1, 0.25, 0.5, 0.3]);
+        assert_eq!(msg.last_shared, vec![1, 3]);
+        assert!(msg.dl_personalized);
+        assert_eq!(msg.sampler_rng, plan.sampler_rng.export_state());
+        assert_eq!(msg.mask_rng, plan.mask_rng.export_state());
+        assert_eq!(msg.bps, 1.25e6);
+        assert_eq!(msg.frozen_below, 1);
+        assert!(matches!(msg.share_policy, SharePolicy::LowestImportance(2)));
+        assert_eq!(msg.agg_weight, 40.0);
+        let personal = msg.personal.expect("personal state survives the wire");
+        assert_eq!(personal.peft, plan.download.personal.as_ref().unwrap().peft);
+        assert_eq!(personal.step, 17);
+    }
+
+    #[test]
+    fn outcome_round_trips_and_validates() {
+        let global = state(1.0);
+        let out = LocalOutcome {
+            device: 3,
+            upload: Upload {
+                device: 3,
+                layers: vec![0, 2],
+                rows: vec![1.5; 6],
+                weight: 12.0,
+                head: vec![0.25; 5],
+            },
+            final_state: Some(state(2.0)),
+            local_acc: 0.5,
+            train_acc: 0.625,
+            mean_loss: 1.125,
+            active_frac: 0.75,
+            comp_secs: 3.5,
+            comm_secs: 0.5,
+            energy_j: 42.0,
+            mem_peak: 1e6,
+            traffic_bytes: 12345,
+        };
+        let body = outcome_payload(&out).unwrap();
+        let back = read_outcome(&body).unwrap();
+        validate_outcome(&back, 3, &global).unwrap();
+        assert_eq!(back.upload.rows, out.upload.rows);
+        assert_eq!(back.mean_loss, out.mean_loss);
+        assert_eq!(back.traffic_bytes, 12345);
+
+        // wrong device: caught before the aggregation fan-in
+        assert!(validate_outcome(&back, 4, &global).is_err());
+        // out-of-range layer index: caught, not a scatter panic
+        let mut bad = read_outcome(&body).unwrap();
+        bad.upload.layers = vec![0, 99];
+        assert!(validate_outcome(&bad, 3, &global).is_err());
+    }
+
+    #[test]
+    fn session_init_round_trips() {
+        let cfg = FedConfig::quick("tiny", "qqp");
+        let body = session_init_payload(&cfg, "droppeft-lora").unwrap();
+        let (back, key) = read_session_init(&body).unwrap();
+        assert_eq!(back, {
+            // host-side store knobs are never on the wire (they cannot
+            // affect results); the codec restores defaults
+            let mut c = cfg.clone();
+            c.device_store = Default::default();
+            c.device_cache = crate::fed::store::DEFAULT_DEVICE_CACHE;
+            c
+        });
+        assert_eq!(key, "droppeft-lora");
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let mut body = hello_payload().unwrap();
+        body.push(0xAB);
+        let err = read_hello(&body).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "got: {err}");
+    }
+
+    #[test]
+    fn client_err_truncates_to_wire_cap() {
+        let err = anyhow::anyhow!("x".repeat(3 * ckpt::MAX_STRING as usize));
+        let body = client_err_payload(&err).unwrap();
+        let msg = read_client_err(&body).unwrap();
+        assert_eq!(msg.len(), ckpt::MAX_STRING as usize);
+    }
+}

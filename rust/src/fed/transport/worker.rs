@@ -1,0 +1,179 @@
+//! The remote client worker: `droppeft worker --connect HOST:PORT`.
+//!
+//! A worker owns nothing but a `Backend` and a TCP connection. On
+//! connect it handshakes (`Hello` → `SessionInit`), then rebuilds every
+//! session static — dataset, shards, population, base model — from the
+//! config's seed via `SessionStatics::build`, exactly the computation
+//! `Engine::new` runs on the server. From then on it is a pure plan
+//! executor: each `MSG_TASK` decodes to a `DevicePlan`, runs through the
+//! same `ClientTask::run` the in-process pool uses, and the outcome goes
+//! back bit-exactly over the wire. Between rounds a worker may leave by
+//! closing its socket (a clean frame-boundary EOF); joining late is just
+//! connecting while the server is between rounds.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::fed::client::{ClientCtx, ClientTask};
+use crate::fed::engine::SessionStatics;
+use crate::methods;
+use crate::runtime::Backend;
+
+use super::wire;
+
+/// Knobs for [`run_worker`].
+pub struct WorkerOptions {
+    /// serve this many rounds, then leave cleanly between rounds
+    /// (`None` = stay until the server shuts the session down)
+    pub max_rounds: Option<usize>,
+    /// keep retrying the initial connect for this long (the server may
+    /// not be listening yet when the worker fleet starts)
+    pub connect_retry_secs: u64,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> WorkerOptions {
+        WorkerOptions {
+            max_rounds: None,
+            connect_retry_secs: 10,
+        }
+    }
+}
+
+/// What a worker did before exiting — printed by the `worker`
+/// subcommand and asserted by the loopback tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerReport {
+    pub rounds_served: usize,
+    pub tasks_run: usize,
+}
+
+/// Connect, retrying while the server comes up.
+fn connect(addr: &str, retry_secs: u64) -> Result<TcpStream> {
+    let deadline = Instant::now() + Duration::from_secs(retry_secs);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e).with_context(|| format!("connecting to round server {addr}"));
+                }
+                thread::sleep(Duration::from_millis(200));
+            }
+        }
+    }
+}
+
+/// Run one worker process's client loop against a round server.
+/// Returns when the server ends the session (`MSG_SHUTDOWN` or a clean
+/// close), or after `max_rounds` rounds (leaving between rounds).
+pub fn run_worker(
+    addr: &str,
+    runtime: Arc<dyn Backend>,
+    opts: WorkerOptions,
+) -> Result<WorkerReport> {
+    let mut stream = connect(addr, opts.connect_retry_secs)?;
+    stream.set_nodelay(true).ok();
+
+    // ---- handshake ----
+    wire::send_frame(&mut stream, wire::MSG_HELLO, &wire::hello_payload()?)?;
+    let (kind, body) = wire::recv_frame(&mut stream)?
+        .context("server closed the connection during the handshake")?;
+    if kind != wire::MSG_SESSION_INIT {
+        bail!("expected session-init after hello, got frame kind {kind}");
+    }
+    let (cfg, method_key) = wire::read_session_init(&body)?;
+
+    // rebuild the session statics from the seed — identical to the
+    // server's own `Engine::new` construction, which is what makes a
+    // remotely-executed plan the same pure function of (plan, global)
+    crate::info!(
+        "worker: joined session (preset {}, task {}, method {method_key}); building statics",
+        cfg.preset,
+        cfg.task
+    );
+    let statics = SessionStatics::build(&cfg, &*runtime)?;
+    let mut method = methods::by_name(&method_key, cfg.seed, cfg.rounds)?;
+
+    let ctx = ClientCtx {
+        runtime: &*runtime,
+        cfg: &cfg,
+        spec: &statics.spec,
+        base: &statics.base,
+        dataset: &statics.dataset,
+    };
+
+    let mut report = WorkerReport {
+        rounds_served: 0,
+        tasks_run: 0,
+    };
+
+    // ---- round loop ----
+    loop {
+        let Some((kind, body)) = wire::recv_frame(&mut stream)? else {
+            // server closed between rounds (killed or finished)
+            return Ok(report);
+        };
+        let rs = match kind {
+            wire::MSG_SHUTDOWN => return Ok(report),
+            wire::MSG_ROUND_START => wire::read_round_start(&body)?,
+            k => bail!("expected round-start, got frame kind {k}"),
+        };
+        // the method's cross-round state (bandit posteriors, schedules)
+        // so read-only hooks see exactly what the server sees
+        method.import_round_state(&rs.method_blob)?;
+        let task = ClientTask::for_round(
+            ctx,
+            &*method,
+            rs.round,
+            &rs.kind,
+            rs.personalized,
+            &rs.global,
+        );
+
+        // ---- task loop ----
+        loop {
+            let Some((kind, body)) = wire::recv_frame(&mut stream)? else {
+                // mid-round server death: tasks already returned were
+                // absorbed or lost server-side; nothing to clean up here
+                return Ok(report);
+            };
+            match kind {
+                wire::MSG_TASK => {
+                    let plan = wire::read_task(&body)?.into_plan(&statics.population)?;
+                    report.tasks_run += 1;
+                    match task.run(plan) {
+                        Ok(out) => wire::send_frame(
+                            &mut stream,
+                            wire::MSG_OUTCOME,
+                            &wire::outcome_payload(&out)?,
+                        )?,
+                        // deterministic application failure: every
+                        // worker would fail this plan the same way, so
+                        // report it instead of dying (the server fails
+                        // the round, not the connection)
+                        Err(e) => wire::send_frame(
+                            &mut stream,
+                            wire::MSG_CLIENT_ERR,
+                            &wire::client_err_payload(&e)?,
+                        )?,
+                    }
+                }
+                wire::MSG_ROUND_END => break,
+                wire::MSG_SHUTDOWN => return Ok(report),
+                k => bail!("expected task or round-end, got frame kind {k}"),
+            }
+        }
+        report.rounds_served += 1;
+        if opts.max_rounds.is_some_and(|max| report.rounds_served >= max) {
+            // leave between rounds: dropping the stream is a clean
+            // frame-boundary close the server's reaper recognizes
+            crate::info!("worker: leaving after {} rounds", report.rounds_served);
+            return Ok(report);
+        }
+    }
+}

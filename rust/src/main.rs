@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train      run one federated fine-tuning session
+//!   serve      run a session as a round server for remote workers
+//!   worker     execute client tasks for a remote round server
 //!   exp <id>   regenerate a paper table/figure (table1, fig2, ..., all)
 //!   inspect    print manifest + artifact statistics
 //!   help
@@ -16,7 +18,10 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use droppeft::fed::{spec, ConsoleReporter, DeviceStoreSpec, Engine, JsonlWriter};
+use droppeft::fed::{
+    run_worker, spec, ConsoleReporter, DeviceStoreSpec, Engine, JsonlWriter, TcpTransport,
+    WorkerOptions,
+};
 use droppeft::runtime::{self, BackendKind};
 use droppeft::util::cli::Args;
 
@@ -24,6 +29,8 @@ fn main() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("worker") => cmd_worker(&args),
         Some("exp") => droppeft::exp::run(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("help") | None => {
@@ -75,9 +82,22 @@ USAGE:
                  [--resume PATH] (resume a snapshotted session; session
                                   settings come from the snapshot, only
                                   the host-specific --workers/--artifacts/
-                                  --backend/--device-store/--device-cache
-                                  still apply; results are byte-identical
-                                  to an uninterrupted run)
+                                  --backend/--device-store/--device-cache/
+                                  --listen still apply; results are
+                                  byte-identical to an uninterrupted run)
+                 [--listen ADDR] (serve round plans to remote `droppeft
+                                  worker` processes on this TCP address
+                                  instead of the in-process pool; same
+                                  seed => byte-identical results either
+                                  way. Port 0 picks an ephemeral port)
+  droppeft serve ...              (alias for `train` that requires
+                                  --listen — a session as a round server)
+  droppeft worker --connect ADDR [--artifacts DIR]
+                 [--backend auto|xla|native]
+                 [--max-rounds N] (execute client tasks for a round
+                                  server; leaves cleanly between rounds
+                                  after N. Workers may join and leave
+                                  mid-session without changing results)
   droppeft exp <table1|fig2|fig3|fig6a|fig6b|fig7|table3|fig9|fig10|fig11|
                 fig12|fig13|fig14|fig15|all> [--quick] [--out results]
                 [--events]      (per-session JSONL event logs under
@@ -102,6 +122,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     // checks, unknown-flag detection) but never validated as a
     // combination, since they are discarded.
     let resume = args.opt_str("resume");
+    let listen = args.opt_str("listen");
     let workers_override = args.opt_usize("workers")?;
     let store_override = match args.opt_str("device-store") {
         Some(s) => Some(DeviceStoreSpec::parse(&s)?),
@@ -116,13 +137,22 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let runtime = runtime::create_backend(backend, &artifacts)?;
     let mut engine = match resume {
-        Some(path) => Engine::resume_from_path_overrides(
-            &path,
-            runtime.clone(),
-            workers_override,
-            store_override,
-            cache_override,
-        )?,
+        Some(path) => {
+            let mut engine = Engine::resume_from_path_overrides(
+                &path,
+                runtime.clone(),
+                workers_override,
+                store_override,
+                cache_override,
+            )?;
+            // the transport is host configuration (like --workers): a
+            // snapshot never records it, so serving a resumed session
+            // re-applies --listen here
+            if let Some(addr) = &listen {
+                engine.set_transport(Box::new(TcpTransport::listen(addr)?));
+            }
+            engine
+        }
         None => builder.build()?.build_engine(runtime.clone())?,
     };
     engine.add_sink(Box::new(ConsoleReporter::new()));
@@ -146,6 +176,40 @@ fn cmd_train(args: &Args) -> Result<()> {
         result.total_traffic_bytes() as f64 / 1e6
     );
     println!("\nruntime stats:\n{}", runtime.stats_report());
+    Ok(())
+}
+
+/// `serve` is `train` with a mandatory `--listen`: the session runs as a
+/// round server, fanning client work out to remote `droppeft worker`
+/// processes instead of the in-process pool.
+fn cmd_serve(args: &Args) -> Result<()> {
+    if args.opt_str("listen").is_none() {
+        anyhow::bail!("serve: --listen HOST:PORT is required (try `droppeft train` for local runs)");
+    }
+    cmd_train(args)
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let connect = args
+        .opt_str("connect")
+        .ok_or_else(|| anyhow::anyhow!("worker: --connect HOST:PORT is required"))?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let backend = BackendKind::parse(&args.str_or("backend", "auto"))?;
+    let max_rounds = args.opt_usize("max-rounds")?;
+    args.finish()?;
+    let runtime = runtime::create_backend(backend, &artifacts)?;
+    let report = run_worker(
+        &connect,
+        runtime,
+        WorkerOptions {
+            max_rounds,
+            ..Default::default()
+        },
+    )?;
+    println!(
+        "worker done: served {} rounds, ran {} tasks",
+        report.rounds_served, report.tasks_run
+    );
     Ok(())
 }
 

@@ -24,8 +24,65 @@ use super::store::TrainState;
 
 const MAGIC: &[u8; 8] = b"DPEFTCK1";
 
+/// Magic prefix of one `fed::transport` wire frame (the length-prefixed
+/// RPC protocol between a round server and its remote client workers).
+/// Lives here with the other family magics so [`check_magic`] can
+/// recognize a frame fed to the wrong loader.
+pub const RPC_MAGIC: &[u8; 9] = b"DPEFTRPC1";
+
 /// Longest accepted string section (kind names, labels, paths).
 pub const MAX_STRING: u64 = 4096;
+
+/// Every droppeft on-disk / on-wire format family. A magic mismatch
+/// that *is* one of these produces a pointed "this is actually an X"
+/// error instead of a generic one, so feeding a file to the wrong
+/// loader stays self-diagnosing (e.g. the legacy-checkpoint redirect
+/// `fed::snapshot::load` has always given).
+const FAMILIES: &[(&[u8], &str)] = &[
+    (b"DPEFTCK1", "a legacy DPEFTCK1 model checkpoint (model::ckpt::load reads these)"),
+    (b"DPEFTSN2", "a DPEFTSN2 session snapshot (fed::snapshot::load reads these)"),
+    (b"DPEFTDS1", "a DPEFTDS1 device spill file (fed::store::DiskStore reads these)"),
+    (b"DPEFTRPC1", "a DPEFTRPC1 transport frame (fed::transport speaks these)"),
+];
+
+/// Validate a magic prefix that has already been read. On mismatch the
+/// error names the format the bytes actually belong to when they open
+/// any known droppeft family.
+pub fn check_magic(got: &[u8], expect: &[u8], what: &str) -> Result<()> {
+    if got == expect {
+        return Ok(());
+    }
+    for (magic, desc) in FAMILIES {
+        if *magic != expect && got.len() >= magic.len() && &got[..magic.len()] == *magic {
+            bail!("not a {what} (this is {desc})");
+        }
+    }
+    bail!("not a {what} (bad magic)")
+}
+
+/// Read and validate a format header: the magic prefix, then (when
+/// `version` is given) a `u64` format version that must match exactly.
+/// The shared front door of every droppeft format — the legacy
+/// `DPEFTCK1` checkpoint, `DPEFTSN2` session snapshots, `DPEFTDS1`
+/// device spills, and `DPEFTRPC1` transport frames all funnel their
+/// header check through here.
+pub fn check_header<R: Read>(
+    r: &mut Reader<R>,
+    expect: &[u8],
+    version: Option<u64>,
+    what: &str,
+) -> Result<()> {
+    let mut got = vec![0u8; expect.len()];
+    r.raw(&mut got)?;
+    check_magic(&got, expect, what)?;
+    if let Some(v) = version {
+        let found = r.u64()?;
+        if found != v {
+            bail!("unsupported {what} format version {found} (expected {v})");
+        }
+    }
+    Ok(())
+}
 
 /// Binary writer over the shared wire primitives.
 pub struct Writer<W: Write> {
@@ -390,11 +447,7 @@ pub fn save(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
 /// Load a legacy `DPEFTCK1` checkpoint.
 pub fn load(path: impl AsRef<Path>) -> Result<TrainState> {
     let mut r = open_reader(path.as_ref())?;
-    let mut magic = [0u8; 8];
-    r.raw(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("not a droppeft checkpoint (bad magic)");
-    }
+    check_header(&mut r, MAGIC, None, "droppeft checkpoint")?;
     read_train_state(&mut r)
 }
 
@@ -437,6 +490,41 @@ mod tests {
         let path = tmpdir("magic").join("bad.ckpt");
         std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxx").unwrap();
         assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn check_magic_names_the_sibling_family() {
+        // a mismatch that is a known family magic gets a pointed error...
+        let err = check_magic(b"DPEFTSN2", MAGIC, "droppeft checkpoint").unwrap_err();
+        assert!(err.to_string().contains("DPEFTSN2"), "{err}");
+        let err = check_magic(b"DPEFTCK1", b"DPEFTSN2", "session snapshot").unwrap_err();
+        assert!(err.to_string().contains("DPEFTCK1"), "{err}");
+        // ...prefix-matching across different magic lengths (an RPC
+        // header starts with 9 bytes; the first 8 of a snapshot magic
+        // still identify it)
+        let err = check_magic(b"DPEFTSN2x", RPC_MAGIC, "transport frame").unwrap_err();
+        assert!(err.to_string().contains("DPEFTSN2"), "{err}");
+        // ...and unknown garbage stays a generic bad-magic error
+        let err = check_magic(b"GARBAGE!", MAGIC, "droppeft checkpoint").unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+        check_magic(MAGIC, MAGIC, "droppeft checkpoint").unwrap();
+    }
+
+    #[test]
+    fn check_header_validates_magic_then_version() {
+        let mut w = Writer::new(Vec::new());
+        w.raw(b"DPEFTSN2").unwrap();
+        w.u64(7).unwrap();
+        let bytes = w.into_inner();
+        let mut r = Reader::new(&bytes[..], bytes.len() as u64);
+        check_header(&mut r, b"DPEFTSN2", Some(7), "session snapshot").unwrap();
+        let mut r = Reader::new(&bytes[..], bytes.len() as u64);
+        let err =
+            check_header(&mut r, b"DPEFTSN2", Some(8), "session snapshot").unwrap_err();
+        assert!(err.to_string().contains("version 7 (expected 8)"), "{err}");
+        // truncated input dies in the bounded reader, not in the check
+        let mut r = Reader::new(&bytes[..4], 4);
+        assert!(check_header(&mut r, b"DPEFTSN2", None, "session snapshot").is_err());
     }
 
     #[test]

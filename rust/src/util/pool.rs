@@ -419,6 +419,42 @@ mod tests {
     }
 
     #[test]
+    fn streaming_consumer_panic_skips_unclaimed_tail() {
+        // Regression for the cancellation contract the transport relies
+        // on: once the consumer panics at the FIRST delivery, `delivered`
+        // stays 0 forever, so total claims are bounded by the window
+        // (= workers) — the unclaimed tail must never execute. A
+        // scheduler bug that kept claiming after the panic flag would
+        // show up here as executed > workers (and in production as
+        // remote tasks dispatched for a round that already failed).
+        use std::sync::atomic::AtomicUsize;
+        let executed = AtomicUsize::new(0);
+        let workers = 4usize;
+        let jobs: Vec<_> = (0..32usize)
+            .map(|i| {
+                let executed = &executed;
+                move || {
+                    executed.fetch_add(1, Ordering::SeqCst);
+                    i
+                }
+            })
+            .collect();
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            run_parallel_streaming(workers, jobs, |_, _| panic!("first delivery boom"))
+        }));
+        let payload = res.expect_err("consumer panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "first delivery boom", "panic payload must survive");
+        let ran = executed.load(Ordering::SeqCst);
+        assert!(
+            ran <= workers,
+            "{ran} jobs executed after a first-delivery consumer panic \
+             (claim window is {workers})"
+        );
+        assert!(ran >= 1, "the delivered job itself must have run");
+    }
+
+    #[test]
     fn chunk_ranges_cover_exactly_once_in_order() {
         for n in [0usize, 1, 2, 3, 7, 8, 64, 65] {
             for parts in [1usize, 2, 3, 4, 7, 8, 100] {

@@ -25,7 +25,8 @@ fn every_train_flag_translates_to_the_matching_builder_call() {
          --alpha 0.3 --samples 1234 --lr 0.002 --seed 7 --eval-every 3 \
          --eval-batches 9 --personal-eval --target-acc 0.8 \
          --cost-model roberta-large --workers 3 --snapshot-every 2 \
-         --snapshot-dir snaps --device-store disk:devstore --device-cache 7",
+         --snapshot-dir snaps --device-store disk:devstore --device-cache 7 \
+         --listen 127.0.0.1:7171",
     );
     let from_cli = spec::from_args(&args).unwrap();
     let built = SessionSpec::builder()
@@ -52,6 +53,7 @@ fn every_train_flag_translates_to_the_matching_builder_call() {
             dir: "devstore".into(),
         })
         .device_cache(7)
+        .listen("127.0.0.1:7171")
         .build()
         .unwrap();
     assert_eq!(from_cli, built);
@@ -147,6 +149,27 @@ fn device_store_flag_translates_and_defaults_to_mem() {
     let built = SessionSpec::builder().device_cache(0).build().unwrap();
     assert_eq!(from_cli, built);
     assert_eq!(from_cli.cfg.device_cache, 1);
+}
+
+#[test]
+fn listen_flag_translates_and_defaults_to_local_transport() {
+    use droppeft::fed::TransportSpec;
+
+    let default = spec::from_args(&parse("train")).unwrap();
+    assert_eq!(default.transport, TransportSpec::Local);
+
+    let from_cli = spec::from_args(&parse("train --listen 127.0.0.1:7171")).unwrap();
+    let built = SessionSpec::builder().listen("127.0.0.1:7171").build().unwrap();
+    assert_eq!(from_cli, built);
+    assert_eq!(
+        from_cli.transport,
+        TransportSpec::Tcp {
+            listen: "127.0.0.1:7171".into()
+        }
+    );
+
+    // an empty address is rejected at validation time
+    assert!(SessionSpec::builder().listen("").build().is_err());
 }
 
 #[test]

@@ -1,0 +1,333 @@
+//! Distributed-transport determinism: a round server with remote worker
+//! processes must be **byte-identical** to the in-process pool — results,
+//! JSONL event logs, snapshots, and the final global model. The loopback
+//! workers here run as threads of this test process (same `run_worker`
+//! entry the `droppeft worker` binary calls), so the suite needs no
+//! subprocess plumbing; CI additionally drives the real binaries over
+//! 127.0.0.1.
+//!
+//! Also pinned: workers joining and leaving between rounds, a worker
+//! dying mid-task (its plan re-dispatched on a surviving connection),
+//! and kill-and-resume of a served session — all without any drift in
+//! results. Pure-rust: no compiled artifacts required.
+
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use droppeft::fed::snapshot::SessionSnapshot;
+use droppeft::fed::transport::wire;
+use droppeft::fed::{
+    run_worker, Engine, JsonlWriter, SessionSpec, TcpTransport, WorkerOptions, WorkerReport,
+};
+use droppeft::methods::{MethodSpec, PeftKind};
+use droppeft::metrics::SessionResult;
+use droppeft::model::TrainState;
+
+mod common;
+use common::{assert_identical, native_backend};
+
+const ROUNDS: usize = 4;
+const PER_ROUND: usize = 4;
+
+fn spec(snapshot_dir: Option<&PathBuf>) -> SessionSpec {
+    let mut b = SessionSpec::builder()
+        .preset("tiny")
+        .dataset("mnli")
+        .method(MethodSpec::droppeft(PeftKind::Lora))
+        .rounds(ROUNDS)
+        .devices(10)
+        .per_round(PER_ROUND)
+        .local_batches(2)
+        .samples(400)
+        .eval_every(2)
+        .eval_batches(2)
+        .lr(5e-3)
+        // personalized states ride the wire in both directions
+        .personal_eval(true)
+        .workers(2);
+    if let Some(dir) = snapshot_dir {
+        b = b.snapshot_every(2).snapshot_dir(dir.to_string_lossy());
+    }
+    b.build().unwrap()
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("droppeft_transport_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_same_model(a: &TrainState, b: &TrainState) {
+    assert_eq!(a.kind, b.kind);
+    assert_eq!(a.step, b.step);
+    let bits = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+    assert_eq!(bits(&a.peft), bits(&b.peft), "peft diverged");
+    assert_eq!(bits(&a.opt_m), bits(&b.opt_m), "opt_m diverged");
+    assert_eq!(bits(&a.opt_v), bits(&b.opt_v), "opt_v diverged");
+    assert_eq!(bits(&a.head), bits(&b.head), "head diverged");
+    assert_eq!(bits(&a.head_m), bits(&b.head_m), "head_m diverged");
+    assert_eq!(bits(&a.head_v), bits(&b.head_v), "head_v diverged");
+}
+
+fn run_local(spec: SessionSpec, log: Option<&PathBuf>) -> (SessionResult, TrainState) {
+    let mut engine = spec.build_engine(native_backend()).unwrap();
+    if let Some(p) = log {
+        engine.add_sink(Box::new(JsonlWriter::create(p).unwrap()));
+    }
+    let result = engine.run().unwrap();
+    (result, engine.global_state().clone())
+}
+
+/// Spawn a loopback worker thread (the exact entry `droppeft worker`
+/// uses), optionally leaving after `max_rounds` rounds.
+fn spawn_worker(addr: String, max_rounds: Option<usize>) -> JoinHandle<WorkerReport> {
+    thread::spawn(move || {
+        run_worker(
+            &addr,
+            native_backend(),
+            WorkerOptions {
+                max_rounds,
+                ..Default::default()
+            },
+        )
+        .expect("worker failed")
+    })
+}
+
+/// Build a TCP-served engine on an ephemeral loopback port, returning
+/// the engine and the address workers should connect to.
+fn tcp_engine(spec: &SessionSpec) -> (Engine, String) {
+    let mut engine = spec.build_engine(native_backend()).unwrap();
+    let transport = TcpTransport::listen("127.0.0.1:0").unwrap();
+    let addr = transport.local_addr().unwrap().to_string();
+    engine.set_transport(Box::new(transport));
+    assert_eq!(engine.transport_name(), "tcp");
+    (engine, addr)
+}
+
+#[test]
+fn tcp_loopback_is_byte_identical_to_in_process() {
+    let dir = fresh_dir("identity");
+    let snapdir = dir.join("snaps");
+
+    // in-process reference (--workers 2), snapshots + event log on
+    let (r_local, m_local) = run_local(spec(Some(&snapdir)), Some(&dir.join("local.jsonl")));
+    let mut local_snaps: Vec<(String, Vec<u8>)> = std::fs::read_dir(&snapdir)
+        .unwrap()
+        .map(|e| {
+            let e = e.unwrap();
+            (
+                e.file_name().to_string_lossy().into_owned(),
+                std::fs::read(e.path()).unwrap(),
+            )
+        })
+        .collect();
+    local_snaps.sort();
+    assert!(!local_snaps.is_empty(), "reference run wrote no snapshots");
+    // same dir for the served run, so snapshot bytes are comparable
+    // (the config inside a snapshot records the snapshot dir)
+    std::fs::remove_dir_all(&snapdir).unwrap();
+
+    // the same session served over loopback TCP to two workers
+    let (mut engine, addr) = tcp_engine(&spec(Some(&snapdir)));
+    engine.add_sink(Box::new(JsonlWriter::create(dir.join("tcp.jsonl")).unwrap()));
+    let w1 = spawn_worker(addr.clone(), None);
+    let w2 = spawn_worker(addr, None);
+    let r_tcp = engine.run().unwrap();
+    let m_tcp = engine.global_state().clone();
+    drop(engine); // shutdown broadcast releases the workers
+    let reports = [w1.join().unwrap(), w2.join().unwrap()];
+
+    assert_identical(&r_local, &r_tcp);
+    assert_same_model(&m_local, &m_tcp);
+
+    // every task ran exactly once, somewhere
+    let tasks: usize = reports.iter().map(|r| r.tasks_run).sum();
+    assert_eq!(tasks, ROUNDS * PER_ROUND, "reports: {reports:?}");
+
+    // JSONL event logs: byte-identical
+    let local_log = std::fs::read(dir.join("local.jsonl")).unwrap();
+    let tcp_log = std::fs::read(dir.join("tcp.jsonl")).unwrap();
+    assert!(!local_log.is_empty());
+    assert_eq!(
+        local_log, tcp_log,
+        "event log differs between in-process and TCP transports"
+    );
+
+    // snapshots: byte-identical
+    let mut tcp_snaps: Vec<(String, Vec<u8>)> = std::fs::read_dir(&snapdir)
+        .unwrap()
+        .map(|e| {
+            let e = e.unwrap();
+            (
+                e.file_name().to_string_lossy().into_owned(),
+                std::fs::read(e.path()).unwrap(),
+            )
+        })
+        .collect();
+    tcp_snaps.sort();
+    assert_eq!(
+        local_snaps.len(),
+        tcp_snaps.len(),
+        "snapshot count differs"
+    );
+    for ((na, ba), (nb, bb)) in local_snaps.iter().zip(&tcp_snaps) {
+        assert_eq!(na, nb, "snapshot names differ");
+        assert_eq!(ba, bb, "snapshot {na} differs between transports");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn workers_join_and_leave_between_rounds_without_drift() {
+    let (reference, ref_model) = run_local(spec(None), None);
+
+    let (mut engine, addr) = tcp_engine(&spec(None));
+    // w1 serves two rounds then leaves; w2 joins a beat later and
+    // carries the rest. If w1 leaves before w2 ever joins, the server's
+    // blocking accept simply waits — an empty fleet stalls, never fails.
+    let w1 = spawn_worker(addr.clone(), Some(2));
+    let w2 = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            thread::sleep(Duration::from_millis(200));
+            run_worker(&addr, native_backend(), WorkerOptions::default())
+                .expect("late worker failed")
+        })
+    };
+    let r_tcp = engine.run().unwrap();
+    let m_tcp = engine.global_state().clone();
+    drop(engine);
+    let rep1 = w1.join().unwrap();
+    let rep2 = w2.join().unwrap();
+
+    assert_identical(&reference, &r_tcp);
+    assert_same_model(&ref_model, &m_tcp);
+    assert_eq!(rep1.rounds_served, 2, "max_rounds worker must leave after 2");
+    assert!(rep2.tasks_run > 0, "the late joiner never ran a task");
+    assert_eq!(
+        rep1.tasks_run + rep2.tasks_run,
+        ROUNDS * PER_ROUND,
+        "reports: {rep1:?} {rep2:?}"
+    );
+}
+
+#[test]
+fn killed_server_resumes_byte_identically_with_fresh_workers() {
+    let dir = fresh_dir("resume");
+    let (reference, ref_model) = run_local(spec(None), None);
+
+    // the "killed" session: served over TCP, snapshotting every 2 rounds
+    // (its snapshot files ARE the crash-recovery state — the atomic
+    // writer guarantees a kill mid-save leaves earlier ones intact)
+    let snapdir = dir.join("snaps");
+    let (mut engine, addr) = tcp_engine(&spec(Some(&snapdir)));
+    let w1 = spawn_worker(addr.clone(), None);
+    let w2 = spawn_worker(addr, None);
+    engine.run().unwrap();
+    drop(engine);
+    w1.join().unwrap();
+    w2.join().unwrap();
+
+    // resume from the round-2 snapshot on a NEW server with a NEW worker
+    // fleet — nothing from the first fleet survives the "crash"
+    let k = 2;
+    let snap_path = SessionSnapshot::path_in(&snapdir, "droppeft-lora", "mnli", k);
+    assert!(snap_path.exists(), "expected snapshot at {snap_path:?}");
+    let mut resumed = Engine::resume_from_path(&snap_path, native_backend(), None).unwrap();
+    assert_eq!(resumed.rounds_finished(), k);
+    let transport = TcpTransport::listen("127.0.0.1:0").unwrap();
+    let addr = transport.local_addr().unwrap().to_string();
+    resumed.set_transport(Box::new(transport));
+    let w3 = spawn_worker(addr.clone(), None);
+    let w4 = spawn_worker(addr, None);
+    let replayed = resumed.run().unwrap();
+    let resumed_model = resumed.global_state().clone();
+    drop(resumed);
+    let reports = [w3.join().unwrap(), w4.join().unwrap()];
+
+    assert_eq!(replayed.records.len(), ROUNDS);
+    assert_identical(&reference, &replayed);
+    assert_same_model(&ref_model, &resumed_model);
+    // the fresh fleet executed exactly the remaining rounds' tasks
+    let tasks: usize = reports.iter().map(|r| r.tasks_run).sum();
+    assert_eq!(tasks, (ROUNDS - k) * PER_ROUND, "reports: {reports:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn connect_retry(addr: &str) -> TcpStream {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return s,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "connect to {addr} failed: {e}");
+                thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+#[test]
+fn worker_dying_mid_task_is_retried_without_drift() {
+    let (reference, ref_model) = run_local(spec(None), None);
+
+    let (mut engine, addr) = tcp_engine(&spec(None));
+    // a protocol-correct worker that handshakes, then hangs up the
+    // moment it receives its first task — its plan must be re-dispatched
+    // on the healthy connection with no effect on results. (If task
+    // dispatch happens to never pick this connection the test still
+    // holds; starting it first makes the mid-task death the common path.)
+    let faulty = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            let mut s = connect_retry(&addr);
+            wire::send_frame(&mut s, wire::MSG_HELLO, &wire::hello_payload().unwrap())
+                .unwrap();
+            let (kind, _) = wire::recv_frame(&mut s).unwrap().expect("handshake reply");
+            assert_eq!(kind, wire::MSG_SESSION_INIT);
+            loop {
+                match wire::recv_frame(&mut s) {
+                    Ok(Some((wire::MSG_TASK, _))) => return, // die mid-round
+                    Ok(Some(_)) => continue, // round start/end, shutdown
+                    Ok(None) | Err(_) => return,
+                }
+            }
+        })
+    };
+    // a client speaking the wrong protocol version must be rejected at
+    // the handshake without taking the round down
+    let wrong_version = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            let mut s = connect_retry(&addr);
+            wire::send_frame(&mut s, wire::MSG_HELLO, &99u64.to_le_bytes()).unwrap();
+            match wire::recv_frame(&mut s) {
+                Ok(Some((kind, _))) => panic!("wrong-version hello got frame kind {kind}"),
+                Ok(None) | Err(_) => {} // server hung up on us, as it must
+            }
+        })
+    };
+    thread::sleep(Duration::from_millis(100));
+    let healthy = spawn_worker(addr, None);
+    let r_tcp = engine.run().unwrap();
+    let m_tcp = engine.global_state().clone();
+    drop(engine);
+    faulty.join().unwrap();
+    wrong_version.join().unwrap();
+    let report = healthy.join().unwrap();
+
+    assert_identical(&reference, &r_tcp);
+    assert_same_model(&ref_model, &m_tcp);
+    // every outcome came from the healthy worker: the faulty one never
+    // replied, so each of its claimed plans was re-dispatched
+    assert_eq!(
+        report.tasks_run,
+        ROUNDS * PER_ROUND,
+        "healthy worker ran {} tasks",
+        report.tasks_run
+    );
+}

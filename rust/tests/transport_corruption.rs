@@ -1,0 +1,157 @@
+//! Wire-frame corruption: every malformed input to the `fed::transport`
+//! codec must produce a clean `Err` — or the clean-EOF `Ok(None)` at an
+//! exact frame boundary — never a panic, and never an allocation sized
+//! by a hostile length prefix. Extends the `snapshot_corruption` idiom
+//! (truncation sweeps, family-magic redirects, oversized-length sweeps,
+//! flipped-byte fuzzing) to the `DPEFTRPC1` frame format.
+
+use droppeft::fed::transport::wire;
+use droppeft::fed::FedConfig;
+
+/// One complete frame as `send_frame` puts it on the wire.
+fn frame(kind: u8, payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    wire::send_frame(&mut buf, kind, payload).unwrap();
+    buf
+}
+
+fn recv(bytes: &[u8]) -> anyhow::Result<Option<(u8, Vec<u8>)>> {
+    let mut r = bytes;
+    wire::recv_frame(&mut r)
+}
+
+// byte offset of the u64 length within the fixed frame header
+// (9-byte magic, kind byte, then the length)
+const LEN_AT: usize = 10;
+
+#[test]
+fn every_truncation_is_a_clean_error() {
+    let full = frame(wire::MSG_TASK, b"0123456789abcdef");
+    assert_eq!(full.len(), wire::FRAME_HEADER + 16);
+    let (kind, payload) = recv(&full).unwrap().expect("intact frame must parse");
+    assert_eq!(kind, wire::MSG_TASK);
+    assert_eq!(payload, b"0123456789abcdef");
+
+    for cut in 0..full.len() {
+        match recv(&full[..cut]) {
+            // a peer hanging up *between* frames is how workers leave —
+            // only zero bytes may read as a clean close
+            Ok(None) => assert_eq!(cut, 0, "clean EOF inside a frame"),
+            Ok(Some(_)) => panic!("truncated frame ({cut} bytes) parsed"),
+            Err(e) => {
+                assert!(cut > 0);
+                let msg = format!("{e:#}");
+                assert!(
+                    msg.contains("mid-frame") || msg.contains("truncated"),
+                    "cut {cut}: unexpected error {msg}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn frames_stream_back_to_back_then_close_cleanly() {
+    let mut buf = frame(wire::MSG_ROUND_END, b"");
+    buf.extend_from_slice(&frame(wire::MSG_SHUTDOWN, b"tail"));
+    let mut r = &buf[..];
+    let (k1, p1) = wire::recv_frame(&mut r).unwrap().unwrap();
+    let (k2, p2) = wire::recv_frame(&mut r).unwrap().unwrap();
+    assert_eq!((k1, p1.as_slice()), (wire::MSG_ROUND_END, &b""[..]));
+    assert_eq!((k2, p2.as_slice()), (wire::MSG_SHUTDOWN, &b"tail"[..]));
+    assert!(wire::recv_frame(&mut r).unwrap().is_none(), "clean EOF");
+}
+
+#[test]
+fn bad_magic_names_the_frame_format() {
+    let mut buf = frame(wire::MSG_HELLO, b"x");
+    buf[0] ^= 0x20;
+    let err = recv(&buf).unwrap_err().to_string();
+    assert!(err.contains("droppeft transport frame"), "{err}");
+    assert!(err.contains("bad magic"), "{err}");
+}
+
+#[test]
+fn sibling_family_magic_gets_a_pointed_redirect() {
+    // a snapshot or spill file fed to the frame reader must say what the
+    // bytes actually are, not just "bad magic"
+    for (magic, mention) in [
+        (&b"DPEFTSN2"[..], "session snapshot"),
+        (&b"DPEFTDS1"[..], "device spill"),
+        (&b"DPEFTCK1"[..], "checkpoint"),
+    ] {
+        let mut buf = frame(wire::MSG_HELLO, b"x");
+        buf[..magic.len()].copy_from_slice(magic);
+        let err = recv(&buf).unwrap_err().to_string();
+        assert!(err.contains(mention), "{magic:?}: {err}");
+    }
+}
+
+#[test]
+fn oversized_length_prefix_is_rejected_up_front() {
+    let good = frame(wire::MSG_TASK, b"payload");
+    for claim in [
+        wire::MAX_FRAME + 1,
+        wire::MAX_FRAME * 2,
+        u64::MAX / 2,
+        u64::MAX,
+    ] {
+        let mut buf = good.clone();
+        buf[LEN_AT..LEN_AT + 8].copy_from_slice(&claim.to_le_bytes());
+        let err = recv(&buf).unwrap_err().to_string();
+        assert!(err.contains("claims"), "claim {claim}: {err}");
+    }
+}
+
+#[test]
+fn huge_legal_claim_reads_incrementally_not_by_preallocation() {
+    // a just-under-the-cap claim over a 7-byte body must fail by
+    // *counting* the bytes received; the reader's allocation tracks what
+    // actually arrived, never the claimed length
+    let mut buf = frame(wire::MSG_TASK, b"payload");
+    buf[LEN_AT..LEN_AT + 8].copy_from_slice(&wire::MAX_FRAME.to_le_bytes());
+    let err = recv(&buf).unwrap_err().to_string();
+    assert!(err.contains("truncated: 7 of"), "{err}");
+}
+
+#[test]
+fn hello_decodes_honestly_and_rejects_trailing_garbage() {
+    let hello = wire::hello_payload().unwrap();
+    assert_eq!(wire::read_hello(&hello).unwrap(), wire::PROTOCOL_VERSION);
+
+    // the decoder reports a foreign version as-is — rejecting it is the
+    // server handshake's job (pinned e2e in tests/transport.rs)
+    assert_eq!(wire::read_hello(&99u64.to_le_bytes()).unwrap(), 99);
+
+    let err = wire::read_hello(&hello[..3]).unwrap_err().to_string();
+    assert!(err.contains("unexpected end"), "{err}");
+
+    let mut long = hello;
+    long.push(0);
+    let err = wire::read_hello(&long).unwrap_err().to_string();
+    assert!(err.contains("trailing"), "{err}");
+}
+
+#[test]
+fn flipped_session_init_bytes_never_panic() {
+    let cfg = FedConfig::quick("tiny", "mnli");
+    let body = wire::session_init_payload(&cfg, "droppeft-lora").unwrap();
+    let (rt_cfg, key) = wire::read_session_init(&body).unwrap();
+    assert_eq!(key, "droppeft-lora");
+    assert_eq!(rt_cfg.seed, cfg.seed);
+
+    // every single-byte corruption must decode to Ok or Err — a panic or
+    // runaway allocation here would let one bad peer kill the server
+    for i in 0..body.len() {
+        let mut bad = body.clone();
+        bad[i] ^= 0xff;
+        let _ = wire::read_session_init(&bad);
+    }
+    // and every truncation too
+    for cut in 0..body.len() {
+        assert!(
+            wire::read_session_init(&body[..cut]).is_err(),
+            "truncated session-init ({cut} bytes) decoded"
+        );
+    }
+}
