@@ -1,0 +1,175 @@
+//! Availability-churn round lifecycle: what does churn cost, and what
+//! does it save on the wire? Runs the same tiny-preset session on the
+//! pure-rust native backend three ways — default (no availability),
+//! churn through the in-process pool, and churn served over loopback
+//! TCP — asserting the two churn shapes byte-identical before anything
+//! is timed, then reports completed-vs-dropped counts and the wire
+//! bytes a churny cohort actually moves (no-compute fates are
+//! synthesized server-side and never dispatched). Emits
+//! machine-readable `BENCH_round_churn.json`, diffed against the
+//! committed baseline (warn-only) before overwriting it.
+//!
+//! Run with `cargo bench` (part of `make bench`).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread;
+
+use droppeft::benchkit::{trajectory, Bench, Suite};
+use droppeft::fed::{run_worker, SessionSpec, TcpTransport, WorkerOptions};
+use droppeft::metrics::SessionResult;
+use droppeft::runtime::{Backend, NativeBackend};
+use droppeft::util::json::Json;
+
+const BASELINE: &str = "BENCH_round_churn.json";
+
+const ROUNDS: usize = 3;
+const PER_ROUND: usize = 4;
+const N_WORKERS: usize = 2;
+
+fn backend() -> Arc<dyn Backend> {
+    Arc::new(NativeBackend::new())
+}
+
+fn spec(churn: bool) -> SessionSpec {
+    let mut b = SessionSpec::builder()
+        .preset("tiny")
+        .dataset("mnli")
+        .rounds(ROUNDS)
+        .devices(10)
+        .per_round(PER_ROUND)
+        .local_batches(2)
+        .samples(400)
+        .eval_every(2)
+        .eval_batches(2)
+        .workers(N_WORKERS);
+    if churn {
+        b = b.avail_trace("off:0.3").upload_loss(0.3);
+    }
+    b.build().expect("bench spec")
+}
+
+fn run_local(churn: bool) -> SessionResult {
+    let mut engine = spec(churn).build_engine(backend()).expect("local engine");
+    engine.run().expect("local session")
+}
+
+/// The churn session served over loopback TCP to two worker threads.
+/// Returns the result plus total (sent, received) wire bytes.
+fn run_tcp_churn() -> (SessionResult, u64, u64) {
+    let mut engine = spec(true).build_engine(backend()).expect("tcp engine");
+    let transport = TcpTransport::listen("127.0.0.1:0").expect("bind loopback");
+    let addr = transport.local_addr().expect("local addr").to_string();
+    let (sent, received) = transport.wire_counters();
+    engine.set_transport(Box::new(transport));
+    let workers: Vec<_> = (0..N_WORKERS)
+        .map(|_| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                run_worker(&addr, backend(), WorkerOptions::default()).expect("bench worker")
+            })
+        })
+        .collect();
+    let result = engine.run().expect("tcp session");
+    drop(engine); // shutdown broadcast releases the workers
+    for w in workers {
+        w.join().expect("worker thread");
+    }
+    (
+        result,
+        sent.load(Ordering::Relaxed),
+        received.load(Ordering::Relaxed),
+    )
+}
+
+fn main() {
+    // correctness cross-check before timing anything: churn must be
+    // byte-identical across transports, fate counts included
+    let local = run_local(true);
+    let (tcp, wire_sent, wire_received) = run_tcp_churn();
+    assert_eq!(local.records.len(), tcp.records.len());
+    let (mut completed, mut straggled, mut dropped, mut partial) = (0, 0, 0, 0);
+    for (a, b) in local.records.iter().zip(&tcp.records) {
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "transports disagree at round {}",
+            a.round
+        );
+        assert_eq!(a.counts, b.counts, "fate counts diverge at round {}", a.round);
+        let c = a.counts.expect("churn rounds report counts");
+        completed += c.completed;
+        straggled += c.straggled;
+        dropped += c.dropped;
+        partial += c.partial;
+    }
+    assert_eq!(
+        completed + straggled + dropped + partial,
+        ROUNDS * PER_ROUND,
+        "counts must cover every selection"
+    );
+    assert!(wire_sent > 0 && wire_received > 0, "no bytes on the wire?");
+
+    let mut suite = Suite::new();
+    let i = suite.results.len();
+    suite.add(
+        Bench::new(format!("round_churn/default {ROUNDS}r x{N_WORKERS}w"))
+            .warmup(1)
+            .iters(2, 10)
+            .target_secs(1.0)
+            .run(|| run_local(false).records.len()),
+    );
+    let default_ns = suite.results[i].mean_ns;
+
+    let i = suite.results.len();
+    suite.add(
+        Bench::new(format!(
+            "round_churn/churn off:0.3+loss:0.3 {ROUNDS}r x{N_WORKERS}w"
+        ))
+        .warmup(1)
+        .iters(2, 10)
+        .target_secs(1.0)
+        .run(|| run_local(true).records.len()),
+    );
+    let churn_ns = suite.results[i].mean_ns;
+
+    let per_round = (wire_sent + wire_received) / ROUNDS as u64;
+    println!(
+        "\nround-churn: {ROUNDS} rounds, {PER_ROUND} devices/round  \
+         fates {completed} completed / {straggled} straggled / {dropped} dropped / \
+         {partial} partial  wire {wire_sent} B out + {wire_received} B in \
+         (~{per_round} B/round incl. handshake)"
+    );
+    println!("{}", suite.markdown("Default vs availability-churn round lifecycle"));
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("round_churn".to_string())),
+        ("provenance", Json::str("measured".to_string())),
+        ("rounds", Json::num(ROUNDS as f64)),
+        ("devices_per_round", Json::num(PER_ROUND as f64)),
+        ("workers", Json::num(N_WORKERS as f64)),
+        ("completed", Json::num(completed as f64)),
+        ("straggled", Json::num(straggled as f64)),
+        ("dropped", Json::num(dropped as f64)),
+        ("partial_uploads", Json::num(partial as f64)),
+        ("default_session_mean_ns", Json::num(default_ns)),
+        ("churn_session_mean_ns", Json::num(churn_ns)),
+        ("wire_sent_bytes", Json::num(wire_sent as f64)),
+        ("wire_received_bytes", Json::num(wire_received as f64)),
+        ("wire_bytes_per_round", Json::num(per_round as f64)),
+    ]);
+
+    // diff against the committed baseline before clobbering it (warn-only)
+    match trajectory::load_baseline(BASELINE) {
+        Some(baseline) => {
+            let cmp = trajectory::compare(&baseline, &j);
+            print!("{}", cmp.report(BASELINE));
+        }
+        None => println!("no committed {BASELINE} baseline to diff against"),
+    }
+
+    match std::fs::write(BASELINE, j.to_string()) {
+        Ok(()) => println!("wrote {BASELINE}"),
+        Err(e) => eprintln!("could not write {BASELINE}: {e}"),
+    }
+}

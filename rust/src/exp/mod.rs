@@ -53,6 +53,13 @@ pub struct Ctx {
     pub snapshot_dir: Option<String>,
     /// write a per-session JSONL event log under `<out>/events/`
     pub events: bool,
+    /// per-device availability trace (`--avail-trace`): selected devices
+    /// may be offline and contribute nothing to their round
+    pub avail_trace: Option<String>,
+    /// per-round straggler deadline in simulated seconds (`--deadline-secs`)
+    pub deadline_secs: Option<f64>,
+    /// probability a finished device's upload truncates (`--upload-loss`)
+    pub upload_loss: f64,
     /// session sequencing: snapshot subdirs + pending `--resume` routing
     plan: SweepPlan,
 }
@@ -92,6 +99,15 @@ impl Ctx {
         };
         if let Some(dir) = &self.snapshot_dir {
             b = b.snapshot_dir(dir.clone());
+        }
+        if let Some(trace) = &self.avail_trace {
+            b = b.avail_trace(trace.clone());
+        }
+        if let Some(secs) = self.deadline_secs {
+            b = b.deadline_secs(secs);
+        }
+        if self.upload_loss > 0.0 {
+            b = b.upload_loss(self.upload_loss);
         }
         b
     }
@@ -170,6 +186,14 @@ pub fn run(args: &Args) -> Result<()> {
         snapshot_every: args.usize_or("snapshot-every", 0)?,
         snapshot_dir: args.opt_str("snapshot-dir"),
         events: args.flag("events"),
+        avail_trace: args.opt_str("avail-trace"),
+        deadline_secs: match args.opt_str("deadline-secs") {
+            Some(s) => Some(s.parse().with_context(|| {
+                format!("--deadline-secs {s:?} is not a number")
+            })?),
+            None => None,
+        },
+        upload_loss: args.f64_or("upload-loss", 0.0)?,
         plan,
     };
     args.finish()?;

@@ -16,7 +16,7 @@ use anyhow::{Context, Result};
 
 use crate::data::{batch::eval_batches, Batch, BatchSampler, Dataset};
 use crate::fed::config::FedConfig;
-use crate::fed::round::{DevicePlan, LocalOutcome, RoundPlan};
+use crate::fed::round::{ClientOutcome, DeviceFate, DevicePlan, LocalOutcome, RoundPlan};
 use crate::hw::cost;
 use crate::methods::{Method, SharePolicy};
 use crate::model::{gather_rows, BaseModel, TrainState};
@@ -80,7 +80,9 @@ impl<'a> ClientTask<'a> {
 
     /// Device-side work for one round: local STLD training, importance
     /// accounting, share-set selection, upload packaging, cost accounting.
-    pub fn run(&self, plan: DevicePlan) -> Result<LocalOutcome> {
+    /// A plan whose fate skips compute (dropped / straggled) resolves
+    /// immediately — no download is materialized, no artifact runs.
+    pub fn run(&self, plan: DevicePlan) -> Result<ClientOutcome> {
         let DevicePlan {
             device,
             info,
@@ -95,7 +97,11 @@ impl<'a> ClientTask<'a> {
             frozen_below,
             share_policy,
             agg_weight,
+            fate,
         } = plan;
+        if let Some(out) = fate.resolve_no_compute(device) {
+            return Ok(out);
+        }
         let mcfg = &self.ctx.spec.config;
         let n_layers = mcfg.n_layers;
 
@@ -215,7 +221,30 @@ impl<'a> ClientTask<'a> {
         let comm_secs = cost::comm_secs(comm_bytes, bps);
         let energy_j = cost::energy_j(comp_secs, power_w, comm_secs);
 
-        Ok(LocalOutcome {
+        // availability: a partial upload pays full compute plus the
+        // fraction of comm time that elapsed before the connection died,
+        // then contributes nothing — the device's round (including any
+        // personalized state) is lost, as if it never reported back
+        if let DeviceFate::PartialUpload { frac } = fate {
+            let n = upload.layers.len();
+            let layers_received = (frac * n as f64).floor() as usize;
+            let received_frac = if n > 0 {
+                layers_received as f64 / n as f64
+            } else {
+                0.0
+            };
+            if final_state.is_some() {
+                // the discarded state ends the download's round-trip here
+                crate::testkit::DOWNLOADS.dec();
+            }
+            return Ok(ClientOutcome::PartialUpload {
+                device,
+                layers_received,
+                sim_secs: comp_secs + comm_secs * received_frac,
+            });
+        }
+
+        Ok(ClientOutcome::Completed(LocalOutcome {
             device,
             upload,
             final_state,
@@ -228,7 +257,7 @@ impl<'a> ClientTask<'a> {
             energy_j,
             mem_peak,
             traffic_bytes: comm_bytes,
-        })
+        }))
     }
 
     /// Execute one STLD mini-batch through the K-active-layer artifact.

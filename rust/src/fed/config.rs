@@ -48,6 +48,15 @@ pub struct FedConfig {
     /// max device sessions resident in RAM under the disk store (LRU
     /// capacity; ignored by the in-memory store)
     pub device_cache: usize,
+    /// per-device availability trace spec (`off:P` | `period:ON,OFF`);
+    /// `None` = every selected device is online (the historical behavior)
+    pub avail_trace: Option<String>,
+    /// per-round reporting deadline in simulated seconds: a device whose
+    /// plan-time cost estimate exceeds it straggles and is cut off
+    pub deadline_secs: Option<f64>,
+    /// probability a completed device's upload is truncated mid-transfer
+    /// (a partial upload contributes nothing to aggregation)
+    pub upload_loss: f64,
 }
 
 impl FedConfig {
@@ -75,6 +84,16 @@ impl FedConfig {
             snapshot_dir: None,
             device_store: DeviceStoreSpec::Mem,
             device_cache: crate::fed::store::DEFAULT_DEVICE_CACHE,
+            avail_trace: None,
+            deadline_secs: None,
+            upload_loss: 0.0,
         }
+    }
+
+    /// True when any availability mechanism is active. When false the
+    /// round lifecycle draws zero availability RNG and behaves (and
+    /// serializes) byte-identically to the pre-availability engine.
+    pub fn availability_enabled(&self) -> bool {
+        self.avail_trace.is_some() || self.deadline_secs.is_some() || self.upload_loss > 0.0
     }
 }

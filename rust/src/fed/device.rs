@@ -11,11 +11,78 @@
 //! devices cost nothing — only *diverged* sessions need to live in RAM
 //! or on disk.
 
+use anyhow::{bail, Result};
+
 use crate::bandit::{tier_of, Tier};
 use crate::data::{dirichlet_partition, split_shard, Shard};
 use crate::hw::{sample_device, Bandwidth, DeviceProfile};
 use crate::model::TrainState;
 use crate::util::rng::{Rng, RngState};
+
+/// Fork tag deriving a device's availability RNG stream from its
+/// `initial_rng`. The stream is forked from a *discarded clone* so the
+/// session's training stream never advances differently whether or not
+/// availability is enabled.
+const AVAIL_TAG: u64 = 0x4156_4149_4C41_424C; // "AVAILABL"
+
+/// Per-device availability model, parsed from `--avail-trace`.
+///
+/// Offline decisions are made during the sequential planning pass, in
+/// selection order, from each device's dedicated availability RNG
+/// stream — like every other RNG in the system, so churn is
+/// byte-identical at any worker count, device store, or transport.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AvailTrace {
+    /// i.i.d. churn: each selection is offline with probability `p`
+    /// (one `f64` draw from the device's availability stream)
+    Bernoulli { p: f64 },
+    /// deterministic duty cycle: device `d` is online in round `r` iff
+    /// `(r + d) % (on + off) < on` — no RNG draw at all
+    Periodic { on: usize, off: usize },
+}
+
+impl AvailTrace {
+    /// Parse `off:P` (Bernoulli offline probability) or
+    /// `period:ON,OFF` (duty cycle in rounds).
+    pub fn parse(s: &str) -> Result<AvailTrace> {
+        if let Some(p) = s.strip_prefix("off:") {
+            let p: f64 = p
+                .parse()
+                .map_err(|_| anyhow::anyhow!("avail-trace: bad probability in {s:?}"))?;
+            if !(0.0..1.0).contains(&p) {
+                bail!("avail-trace: offline probability must be in [0,1), got {p}");
+            }
+            return Ok(AvailTrace::Bernoulli { p });
+        }
+        if let Some(spec) = s.strip_prefix("period:") {
+            let (on, off) = spec
+                .split_once(',')
+                .ok_or_else(|| anyhow::anyhow!("avail-trace: expected period:ON,OFF, got {s:?}"))?;
+            let on: usize = on
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("avail-trace: bad ON rounds in {s:?}"))?;
+            let off: usize = off
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("avail-trace: bad OFF rounds in {s:?}"))?;
+            if on == 0 {
+                bail!("avail-trace: ON rounds must be >= 1 (a never-online population cannot train)");
+            }
+            return Ok(AvailTrace::Periodic { on, off });
+        }
+        bail!("avail-trace: expected off:P or period:ON,OFF, got {s:?}")
+    }
+
+    /// Is `device` offline in `round`? Draws from `avail_rng` only for
+    /// the Bernoulli form; the periodic form is a pure function.
+    pub fn offline(&self, round: usize, device: usize, avail_rng: &mut Rng) -> bool {
+        match *self {
+            AvailTrace::Bernoulli { p } => avail_rng.bernoulli(p),
+            AvailTrace::Periodic { on, off } => (round + device) % (on + off) >= on,
+        }
+    }
+}
 
 /// What strategy objects are allowed to see about a device.
 #[derive(Clone, Debug)]
@@ -66,10 +133,19 @@ impl DeviceStatic {
     pub fn fresh_session(&self) -> DeviceSession {
         DeviceSession {
             rng: Rng::from_state(self.initial_rng),
+            avail_rng: Rng::from_state(self.initial_avail_rng()),
             personal: None,
             last_shared: Vec::new(),
             participations: 0,
         }
+    }
+
+    /// Initial state of the device's availability RNG stream: forked
+    /// from a *discarded clone* of `initial_rng`, so introducing (or
+    /// enabling) availability never perturbs the training stream. Pure —
+    /// safe to call anywhere (resume skip-checks, spill codecs).
+    pub fn initial_avail_rng(&self) -> RngState {
+        Rng::from_state(self.initial_rng).fork(AVAIL_TAG).export_state()
     }
 }
 
@@ -80,6 +156,10 @@ impl DeviceStatic {
 #[derive(Clone, Debug)]
 pub struct DeviceSession {
     pub rng: Rng,
+    /// availability RNG stream (churn / upload-loss draws during
+    /// planning); advanced only when availability is enabled, so the
+    /// default path stays byte-identical
+    pub avail_rng: Rng,
     /// persistent local state (PTLS-personalized methods only)
     pub personal: Option<TrainState>,
     /// layers this device shared last round (these get refreshed from the
@@ -99,6 +179,7 @@ impl DeviceSession {
             && self.last_shared.is_empty()
             && self.personal.is_none()
             && self.rng.export_state() == statics.initial_rng
+            && self.avail_rng.export_state() == statics.initial_avail_rng()
     }
 }
 

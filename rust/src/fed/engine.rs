@@ -31,7 +31,7 @@ use crate::fed::client::ClientCtx;
 use crate::fed::config::FedConfig;
 use crate::fed::device;
 use crate::fed::events::{Collector, EngineEvent, EventSink};
-use crate::fed::round;
+use crate::fed::round::{self, ClientOutcome};
 use crate::fed::server::{self, Server};
 use crate::fed::snapshot::{self, SessionSnapshot};
 use crate::fed::store::{self, DeviceStore, DeviceStoreSpec};
@@ -252,6 +252,7 @@ impl Engine {
                 && ds.last_shared.is_empty()
                 && ds.personal.is_none()
                 && ds.rng == statics.initial_rng
+                && ds.avail_rng == statics.initial_avail_rng()
             {
                 continue;
             }
@@ -259,6 +260,7 @@ impl Engine {
             sess.participations = ds.participations;
             sess.last_shared = ds.last_shared;
             sess.rng = Rng::from_state(ds.rng);
+            sess.avail_rng = Rng::from_state(ds.avail_rng);
             sess.personal = ds.personal;
             engine.store.commit(ds.id, sess)?;
         }
@@ -473,6 +475,12 @@ impl Engine {
         // whether clients ran on pool threads or remote processes, so
         // everything below is transport-agnostic.
         let mut accum = self.server.begin_round(round);
+        if self.cfg.availability_enabled() {
+            // per-round completion counts ride on the record only when
+            // the availability model is active, keeping default-path
+            // records (and their JSON) byte-identical
+            accum.track_counts();
+        }
         let mut first_err: Option<anyhow::Error> = None;
         let mut sink_err: Option<anyhow::Error> = None;
         let mut store_err: Option<anyhow::Error> = None;
@@ -505,7 +513,7 @@ impl Engine {
             transport_res =
                 self.transport
                     .run_round(exec, devices, &mut |_, res| match res {
-                        Ok(mut out) => {
+                        Ok(ClientOutcome::Completed(mut out)) => {
                             if first_err.is_some()
                                 || sink_err.is_some()
                                 || store_err.is_some()
@@ -540,6 +548,50 @@ impl Engine {
                                 store_err = Some(e);
                                 return;
                             }
+                            if let Err(e) = deliver(collector, sinks, &ev) {
+                                sink_err = Some(e);
+                            }
+                        }
+                        // availability failure: nothing aggregates or
+                        // persists (a device that never contributed keeps
+                        // participations untouched); the failure still
+                        // feeds the round clock and the counts, and emits
+                        // its event at the sequential fan-in
+                        Ok(fail) => {
+                            if first_err.is_some()
+                                || sink_err.is_some()
+                                || store_err.is_some()
+                            {
+                                return;
+                            }
+                            let ev = match &fail {
+                                ClientOutcome::Straggled { device, sim_secs } => {
+                                    EngineEvent::ClientStraggled {
+                                        round,
+                                        device: *device,
+                                        sim_secs: *sim_secs,
+                                    }
+                                }
+                                ClientOutcome::Dropped { device, phase } => {
+                                    EngineEvent::ClientDropped {
+                                        round,
+                                        device: *device,
+                                        phase: *phase,
+                                    }
+                                }
+                                ClientOutcome::PartialUpload {
+                                    device,
+                                    layers_received,
+                                    sim_secs,
+                                } => EngineEvent::ClientPartialUpload {
+                                    round,
+                                    device: *device,
+                                    layers_received: *layers_received,
+                                    sim_secs: *sim_secs,
+                                },
+                                ClientOutcome::Completed(_) => unreachable!(),
+                            };
+                            accum.absorb_failure(&fail);
                             if let Err(e) = deliver(collector, sinks, &ev) {
                                 sink_err = Some(e);
                             }

@@ -31,6 +31,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::fed::round::DropPhase;
 use crate::metrics::{RoundRecord, SessionResult};
 use crate::util::json::Json;
 
@@ -71,6 +72,32 @@ pub enum EngineEvent {
         comp_secs: f64,
         comm_secs: f64,
         traffic_bytes: u64,
+    },
+    /// A selected device was offline per its availability trace and
+    /// contributed nothing: no compute ran, no state changed, no
+    /// aggregation weight. Emitted at the same sequential fan-in as
+    /// `ClientDone`, in selection order.
+    ClientDropped {
+        round: usize,
+        device: usize,
+        phase: DropPhase,
+    },
+    /// A selected device would have missed the round deadline; it was
+    /// cut off without contributing. `sim_secs` is the deadline the
+    /// round clock absorbs for it.
+    ClientStraggled {
+        round: usize,
+        device: usize,
+        sim_secs: f64,
+    },
+    /// A selected device trained but its upload truncated mid-transfer:
+    /// `layers_received` of its shared layers arrived before the cut.
+    /// The truncated update is discarded whole — nothing aggregates.
+    ClientPartialUpload {
+        round: usize,
+        device: usize,
+        layers_received: usize,
+        sim_secs: f64,
     },
     /// Server absorbed the round: PTLS aggregation, clock accounting,
     /// bandit feedback.
@@ -163,6 +190,38 @@ impl EngineEvent {
                 ("comp_secs", Json::num(*comp_secs)),
                 ("comm_secs", Json::num(*comm_secs)),
                 ("traffic_bytes", Json::num(*traffic_bytes as f64)),
+            ]),
+            EngineEvent::ClientDropped {
+                round,
+                device,
+                phase,
+            } => Json::obj(vec![
+                tag("client_dropped"),
+                ("round", Json::num(*round as f64)),
+                ("device", Json::num(*device as f64)),
+                ("phase", Json::str(phase.as_str().to_string())),
+            ]),
+            EngineEvent::ClientStraggled {
+                round,
+                device,
+                sim_secs,
+            } => Json::obj(vec![
+                tag("client_straggled"),
+                ("round", Json::num(*round as f64)),
+                ("device", Json::num(*device as f64)),
+                ("sim_secs", Json::num(*sim_secs)),
+            ]),
+            EngineEvent::ClientPartialUpload {
+                round,
+                device,
+                layers_received,
+                sim_secs,
+            } => Json::obj(vec![
+                tag("client_partial_upload"),
+                ("round", Json::num(*round as f64)),
+                ("device", Json::num(*device as f64)),
+                ("layers_received", Json::num(*layers_received as f64)),
+                ("sim_secs", Json::num(*sim_secs)),
             ]),
             EngineEvent::RoundAggregated {
                 round,
@@ -306,6 +365,35 @@ impl EventSink for ConsoleReporter {
                 crate::debug!(
                     "round {round}: device {device} done (local acc {:.1}%, loss {mean_loss:.4})",
                     100.0 * local_acc
+                );
+            }
+            EngineEvent::ClientDropped {
+                round,
+                device,
+                phase,
+            } => {
+                crate::debug!(
+                    "round {round}: device {device} dropped ({} phase)",
+                    phase.as_str()
+                );
+            }
+            EngineEvent::ClientStraggled {
+                round,
+                device,
+                sim_secs,
+            } => {
+                crate::debug!(
+                    "round {round}: device {device} straggled past the deadline ({sim_secs:.1}s)"
+                );
+            }
+            EngineEvent::ClientPartialUpload {
+                round,
+                device,
+                layers_received,
+                ..
+            } => {
+                crate::debug!(
+                    "round {round}: device {device} upload truncated after {layers_received} layers"
                 );
             }
             EngineEvent::RoundAggregated {
@@ -560,6 +648,22 @@ mod tests {
             EngineEvent::RoundPlanned {
                 round: 0,
                 selected: vec![3, 1, 4],
+            },
+            EngineEvent::ClientDropped {
+                round: 0,
+                device: 3,
+                phase: DropPhase::Download,
+            },
+            EngineEvent::ClientStraggled {
+                round: 0,
+                device: 1,
+                sim_secs: 1800.0,
+            },
+            EngineEvent::ClientPartialUpload {
+                round: 0,
+                device: 4,
+                layers_received: 2,
+                sim_secs: 950.0,
             },
             finished(0, Some(0.25)),
             EngineEvent::SessionEnded {

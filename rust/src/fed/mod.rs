@@ -1,8 +1,9 @@
 //! Federated fine-tuning engine, layered server/client style:
 //!
 //! - [`round`] — the sequential planning pass (`RoundPlan` / `DevicePlan`
-//!   carrying a lightweight `DownloadSpec`, never materialized state) and
-//!   per-device results (`LocalOutcome`);
+//!   carrying a lightweight `DownloadSpec` and an availability
+//!   `DeviceFate`, never materialized state) and per-device results
+//!   (`ClientOutcome`: completed, dropped, straggled, or partial upload);
 //! - [`client`] — `ClientTask`, the self-contained local-round worker that
 //!   runs on pool threads and materializes its own download from
 //!   `&global`;
@@ -46,7 +47,9 @@ pub use config::FedConfig;
 pub use device::{DeviceInfo, DeviceSession, DeviceStatic, Population};
 pub use engine::Engine;
 pub use events::{Collector, ConsoleReporter, EngineEvent, EventSink, JsonlWriter};
-pub use round::{DevicePlan, DownloadSpec, LocalOutcome, RoundPlan};
+pub use round::{
+    ClientOutcome, DeviceFate, DevicePlan, DownloadSpec, DropPhase, LocalOutcome, RoundPlan,
+};
 pub use server::{RoundAccum, Server};
 pub use snapshot::SessionSnapshot;
 pub use spec::{SessionSpec, SessionSpecBuilder, SweepPlan};

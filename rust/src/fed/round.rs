@@ -1,7 +1,9 @@
 //! Round planning: the sequential pass that turns the `&mut` pieces of a
 //! federated round (method strategy state, device RNG streams, persistent
 //! personalized state) into an immutable `RoundPlan` that client workers
-//! can execute in parallel, plus the `LocalOutcome` each worker returns.
+//! can execute in parallel, plus the [`ClientOutcome`] each worker
+//! returns (`Completed(LocalOutcome)` or one of the availability
+//! failures drawn during planning).
 //!
 //! Determinism contract: everything stochastic about a round is drawn
 //! *here*, in selection order, from per-device RNG streams — exactly the
@@ -22,8 +24,9 @@
 use anyhow::Result;
 
 use crate::fed::config::FedConfig;
-use crate::fed::device::{DeviceInfo, DeviceSession};
+use crate::fed::device::{AvailTrace, DeviceInfo, DeviceSession};
 use crate::fed::store::DeviceStore;
+use crate::hw::cost;
 use crate::methods::{Method, SharePolicy};
 use crate::model::TrainState;
 use crate::ptls::Upload;
@@ -128,6 +131,9 @@ pub struct DevicePlan {
     pub share_policy: SharePolicy,
     /// server aggregation weight for this device's upload
     pub agg_weight: f64,
+    /// availability fate drawn during planning (`Run` when availability
+    /// is disabled — the historical behavior)
+    pub fate: DeviceFate,
 }
 
 /// An immutable plan for one federated round.
@@ -145,6 +151,100 @@ impl RoundPlan {
     /// Selected device indices, in selection order.
     pub fn selected(&self) -> Vec<usize> {
         self.devices.iter().map(|d| d.device).collect()
+    }
+}
+
+/// Where in the round lifecycle a dropped device went offline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropPhase {
+    /// offline per its availability trace — never even downloaded
+    Download,
+    /// died during local training
+    Compute,
+    /// died before any upload bytes arrived
+    Upload,
+}
+
+impl DropPhase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DropPhase::Download => "download",
+            DropPhase::Compute => "compute",
+            DropPhase::Upload => "upload",
+        }
+    }
+}
+
+/// A selected device's availability fate, drawn entirely during the
+/// sequential planning pass (like all other round RNG) so outcomes are
+/// byte-identical at any worker count, device store, or transport.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DeviceFate {
+    /// online, on time, upload intact — the only fate when availability
+    /// is disabled
+    Run,
+    /// offline per its availability trace: contributes nothing
+    Dropped { phase: DropPhase },
+    /// plan-time cost estimate exceeds `--deadline-secs`: the server
+    /// cuts the device off at the deadline, so compute is skipped
+    Straggled { sim_secs: f64 },
+    /// local training completes, but only `frac` of the upload bytes
+    /// arrive — the truncated upload contributes nothing
+    PartialUpload { frac: f64 },
+}
+
+impl DeviceFate {
+    /// Fates whose outcome is fully known at plan time — the client
+    /// worker skips download, compute, and upload entirely.
+    pub fn skips_compute(&self) -> bool {
+        matches!(self, DeviceFate::Dropped { .. } | DeviceFate::Straggled { .. })
+    }
+
+    /// Resolve a no-compute fate directly into its outcome (transports
+    /// use this to synthesize results without dispatching work).
+    pub fn resolve_no_compute(&self, device: usize) -> Option<ClientOutcome> {
+        match *self {
+            DeviceFate::Dropped { phase } => Some(ClientOutcome::Dropped { device, phase }),
+            DeviceFate::Straggled { sim_secs } => {
+                Some(ClientOutcome::Straggled { device, sim_secs })
+            }
+            DeviceFate::Run | DeviceFate::PartialUpload { .. } => None,
+        }
+    }
+}
+
+/// What one selected device contributed to the round. The historical
+/// success-only lifecycle is the `Completed` arm; every other arm is a
+/// deterministic availability failure that carries only its simulated
+/// cost (the server absorbs it with zero aggregation weight).
+pub enum ClientOutcome {
+    Completed(LocalOutcome),
+    /// cut off at the round deadline: the clock advances to the
+    /// deadline, nothing is aggregated or persisted
+    Straggled { device: usize, sim_secs: f64 },
+    /// offline / died mid-round: contributes nothing, costs nothing
+    Dropped { device: usize, phase: DropPhase },
+    /// trained but the upload truncated after `layers_received` layers:
+    /// the round's compute + partial comm time is paid, nothing lands
+    PartialUpload {
+        device: usize,
+        layers_received: usize,
+        sim_secs: f64,
+    },
+}
+
+impl ClientOutcome {
+    pub fn device(&self) -> usize {
+        match self {
+            ClientOutcome::Completed(out) => out.device,
+            ClientOutcome::Straggled { device, .. }
+            | ClientOutcome::Dropped { device, .. }
+            | ClientOutcome::PartialUpload { device, .. } => *device,
+        }
+    }
+
+    pub fn is_completed(&self) -> bool {
+        matches!(self, ClientOutcome::Completed(_))
     }
 }
 
@@ -191,20 +291,75 @@ pub fn plan_round(
     let selected = rng.sample_indices(pop.len(), cfg.devices_per_round.min(pop.len()));
     let personalized = method.personalized();
     let kind = method.kind().to_string();
+    let availability = cfg.availability_enabled();
+    let trace = match &cfg.avail_trace {
+        Some(s) => Some(AvailTrace::parse(s)?),
+        None => None,
+    };
 
     let mut plans = Vec::with_capacity(selected.len());
     for &d in &selected {
         let statics = pop.device(d);
         let info = statics.info();
         let mut sess = store.checkout(d)?;
+        // availability: the offline decision draws (if at all) from the
+        // device's dedicated availability stream, never from `sess.rng` —
+        // the training-stream draw order below stays frozen whether or
+        // not availability is enabled
+        let mut fate = DeviceFate::Run;
+        if let Some(trace) = &trace {
+            if trace.offline(round, d, &mut sess.avail_rng) {
+                fate = DeviceFate::Dropped {
+                    phase: DropPhase::Download,
+                };
+            }
+        }
         // per-device RNG draws in the exact order of the serial engine:
-        // dropout fork, sampler fork, mask fork, bandwidth jitter
+        // dropout fork, sampler fork, mask fork, bandwidth jitter. Drawn
+        // unconditionally — a dropped device's training stream advances
+        // exactly as if it had run, so churn never perturbs later rounds
         let mut drng = sess.rng.fork(round as u64);
         let dropout = method.dropout_for(round, &info, n_layers, &mut drng);
-        let download = DownloadSpec::for_device(&mut sess, personalized);
         let sampler_rng = sess.rng.fork(0x10CA1 ^ round as u64);
         let mask_rng = sess.rng.fork(0x5eed ^ round as u64);
         let bps = statics.bandwidth.round_bps(&mut sess.rng);
+        let share_policy = method.share_policy(n_layers);
+        if availability && matches!(fate, DeviceFate::Run) {
+            // deadline: pure function of already-drawn values (no RNG)
+            if let Some(deadline) = cfg.deadline_secs {
+                let est = estimate_round_secs(
+                    cfg,
+                    spec,
+                    &info,
+                    &dropout,
+                    &share_policy,
+                    &kind,
+                    statics.shard.train.len(),
+                    bps,
+                );
+                if est > deadline {
+                    fate = DeviceFate::Straggled { sim_secs: deadline };
+                }
+            }
+            if matches!(fate, DeviceFate::Run) && cfg.upload_loss > 0.0 {
+                if sess.avail_rng.bernoulli(cfg.upload_loss) {
+                    let frac = sess.avail_rng.f64();
+                    fate = DeviceFate::PartialUpload { frac };
+                }
+            }
+        }
+        // a device that will never run must not surrender its personal
+        // state (`for_device` would move it out and lose it); it draws no
+        // RNG, so capturing it after the fate decision changes nothing
+        let download = if fate.skips_compute() {
+            DownloadSpec {
+                personal: None,
+                last_shared: Vec::new(),
+                personalized,
+            }
+        } else {
+            DownloadSpec::for_device(&mut sess, personalized)
+        };
         store.commit(d, sess)?;
         plans.push(DevicePlan {
             device: d,
@@ -217,8 +372,9 @@ pub fn plan_round(
             bps,
             power_w: statics.power_w(),
             frozen_below: method.frozen_below(round, n_layers),
-            share_policy: method.share_policy(n_layers),
+            share_policy,
             agg_weight: method.aggregation_weight(&info),
+            fate,
             info,
         });
     }
@@ -228,6 +384,46 @@ pub fn plan_round(
         personalized,
         devices: plans,
     })
+}
+
+/// Plan-time cost estimate for the deadline check: mirrors the client's
+/// cost accounting (same cost-model config, same epoch extrapolation,
+/// same share-set sizing) with the STLD mask's *expected* active layer
+/// count in place of the per-batch samples. Pure — draws no RNG, so the
+/// straggler decision is a deterministic function of the plan.
+#[allow(clippy::too_many_arguments)]
+fn estimate_round_secs(
+    cfg: &FedConfig,
+    spec: &ModelSpec,
+    info: &DeviceInfo,
+    dropout: &DropoutConfig,
+    share_policy: &SharePolicy,
+    kind: &str,
+    n_shard_train: usize,
+    bps: f64,
+) -> f64 {
+    let mcfg = &spec.config;
+    let n_layers = mcfg.n_layers;
+    let ccfg = match &cfg.cost_model {
+        Some(name) => cost::paper_model(name),
+        None => mcfg.clone(),
+    };
+    // E[K] = sum of per-layer keep probabilities (at least one layer is
+    // always active, mirroring `DropoutConfig::sample_active`)
+    let e_k: f64 = dropout.rates.iter().map(|r| 1.0 - r).sum::<f64>().max(1.0);
+    let scaled_k = ((e_k / n_layers as f64) * ccfg.n_layers as f64)
+        .round()
+        .max(1.0) as usize;
+    let epoch_batches = (n_shard_train / mcfg.batch).max(1);
+    let flops = cost::train_flops(&ccfg, scaled_k, kind, false) * epoch_batches as f64;
+    let shared = match *share_policy {
+        SharePolicy::All => n_layers,
+        SharePolicy::LowestImportance(k) | SharePolicy::TopLayers(k) => k.min(n_layers),
+    };
+    let shared_scaled =
+        ((shared as f64 / n_layers as f64) * ccfg.n_layers as f64).round() as usize;
+    let comm_bytes = cost::comm_bytes(&ccfg, kind, shared_scaled, false);
+    cost::comp_secs(flops, info.effective_gflops) + cost::comm_secs(comm_bytes, bps)
 }
 
 #[cfg(test)]

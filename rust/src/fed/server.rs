@@ -17,10 +17,10 @@ use anyhow::Result;
 
 use crate::data::batch::{eval_batches, Batch};
 use crate::fed::client::{eval_state, ClientCtx};
-use crate::fed::round::LocalOutcome;
+use crate::fed::round::{ClientOutcome, LocalOutcome};
 use crate::fed::store::DeviceStore;
 use crate::methods::Method;
-use crate::metrics::RoundRecord;
+use crate::metrics::{RoundCounts, RoundRecord};
 use crate::model::TrainState;
 use crate::ptls::AggAccum;
 use crate::util::stats;
@@ -69,6 +69,14 @@ pub struct RoundAccum {
     sum_active: f64,
     sum_local_acc: f64,
     sum_train_acc: f64,
+    /// availability failures absorbed this round
+    straggled: usize,
+    dropped: usize,
+    partial: usize,
+    /// emit per-round completion counts into the `RoundRecord` (set by
+    /// the engine iff availability is enabled, so the default-path
+    /// record — and its JSON — stays byte-identical)
+    track_counts: bool,
 }
 
 impl RoundAccum {
@@ -90,6 +98,39 @@ impl RoundAccum {
         self.sum_local_acc += out.local_acc;
         self.sum_train_acc += out.train_acc;
         persist_only(&mut out, store)
+    }
+
+    /// Absorb a non-completed outcome. Synchronous FedAvg still waits
+    /// for a straggler's deadline cut-off and a partial upload's elapsed
+    /// time, so the round clock advances to them — but nothing is
+    /// aggregated, nothing is persisted (a `Dropped`-only device never
+    /// *contributed*, so its participation count must not move), and
+    /// none of the statistic sums change: the bandit reward's mean-time
+    /// and mean-accuracy terms are computed over completed devices only,
+    /// which is exactly how failures feed the cost signal.
+    pub fn absorb_failure(&mut self, out: &ClientOutcome) {
+        match out {
+            ClientOutcome::Completed(_) => {
+                debug_assert!(false, "completed outcomes go through absorb()");
+            }
+            ClientOutcome::Straggled { sim_secs, .. } => {
+                self.straggled += 1;
+                self.round_secs = self.round_secs.max(*sim_secs);
+            }
+            ClientOutcome::Dropped { .. } => {
+                self.dropped += 1;
+            }
+            ClientOutcome::PartialUpload { sim_secs, .. } => {
+                self.partial += 1;
+                self.round_secs = self.round_secs.max(*sim_secs);
+            }
+        }
+    }
+
+    /// Enable per-round completion counts on the finished record (the
+    /// engine turns this on iff availability is enabled).
+    pub fn track_counts(&mut self) {
+        self.track_counts = true;
     }
 
     /// Outcomes absorbed so far.
@@ -153,6 +194,10 @@ impl Server {
             sum_active: 0.0,
             sum_local_acc: 0.0,
             sum_train_acc: 0.0,
+            straggled: 0,
+            dropped: 0,
+            partial: 0,
+            track_counts: false,
         }
     }
 
@@ -175,23 +220,46 @@ impl Server {
             sum_active,
             sum_local_acc,
             sum_train_acc,
+            straggled,
+            dropped,
+            partial,
+            track_counts,
         } = accum;
 
-        // heterogeneous aggregation (Fig. 8)
+        // heterogeneous aggregation (Fig. 8); a zero-completion round's
+        // empty accumulator applies as a no-op
         agg.apply(&mut self.global.peft, &mut self.global.head);
 
         // round accounting: synchronous FedAvg => round time is the
-        // slowest participant
+        // slowest participant (or the latest availability failure)
         self.clock += round_secs;
         let nf = n.max(1) as f64; // sums are all 0.0 when n == 0
 
-        // bandit reward: mean accuracy gain per simulated second (Eq. 5)
-        let mean_local_acc = sum_local_acc / nf;
-        let mean_t = (sum_secs / nf).max(1e-6);
-        let reward = (mean_local_acc - self.prev_acc) / mean_t;
-        self.prev_acc = mean_local_acc;
+        // bandit reward: mean accuracy gain per simulated second (Eq. 5),
+        // over *completed* devices only. A round where every device
+        // failed feeds a defined penalty — zero measured accuracy against
+        // the baseline, over the round's wall time (min 1s so the
+        // division is never by zero/NaN) — and leaves `prev_acc`
+        // untouched: no accuracy was measured, so the baseline must not
+        // collapse to 0 and hand the *next* round a spurious bonus.
+        let reward = if n == 0 {
+            (0.0 - self.prev_acc) / round_secs.max(1.0)
+        } else {
+            let mean_local_acc = sum_local_acc / nf;
+            let mean_t = (sum_secs / nf).max(1e-6);
+            let r = (mean_local_acc - self.prev_acc) / mean_t;
+            self.prev_acc = mean_local_acc;
+            r
+        };
         let arm = method.arm_label();
         method.end_round(reward);
+
+        let counts = track_counts.then_some(RoundCounts {
+            completed: n,
+            straggled,
+            dropped,
+            partial,
+        });
 
         RoundRecord {
             round,
@@ -207,6 +275,7 @@ impl Server {
             mem_peak_mean: sum_mem / nf,
             arm,
             host_secs: 0.0,
+            counts,
         }
     }
 
@@ -355,6 +424,83 @@ mod tests {
         assert_eq!(server.global().head, vec![2.0, 2.0]);
         // bandit baseline updated to the round's mean local accuracy
         assert!((server.prev_acc() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_completion_round_feeds_defined_penalty_and_keeps_baseline() {
+        let (q, l, h) = (2, 3, 2);
+        // mid-session server with an established bandit baseline
+        let mut server = Server::resume(ts(q, l, h, 0.5), 100.0, 0.4);
+        let mut method = crate::methods::by_name("fedlora", 1, 10).unwrap();
+
+        let mut accum = server.begin_round(7);
+        accum.track_counts();
+        accum.absorb_failure(&ClientOutcome::Dropped {
+            device: 0,
+            phase: crate::fed::round::DropPhase::Download,
+        });
+        accum.absorb_failure(&ClientOutcome::Straggled {
+            device: 1,
+            sim_secs: 1800.0,
+        });
+        accum.absorb_failure(&ClientOutcome::PartialUpload {
+            device: 2,
+            layers_received: 1,
+            sim_secs: 900.0,
+        });
+        assert_eq!(accum.absorbed(), 0);
+
+        let rec = server.finish_round(accum, &mut *method);
+        // no aggregation: the global model is untouched
+        assert!(server.global().peft.iter().all(|&x| x == 0.5));
+        // the clock still waits out the latest failure
+        assert_eq!(rec.sim_secs, 1800.0);
+        assert_eq!(rec.clock_secs, 1900.0);
+        // no accuracy was measured, so the baseline must not move — a
+        // collapse to 0 would hand the next round a spurious bonus
+        assert!((server.prev_acc() - 0.4).abs() < 1e-12);
+        // every record field stays finite (the old path divided the
+        // reward by a zero mean time)
+        for x in [rec.train_loss, rec.train_acc, rec.active_frac, rec.energy_j_mean] {
+            assert!(x.is_finite(), "NaN leaked into the record: {x}");
+        }
+        let c = rec.counts.expect("track_counts was enabled");
+        assert_eq!(
+            (c.completed, c.straggled, c.dropped, c.partial),
+            (0, 1, 1, 1)
+        );
+    }
+
+    #[test]
+    fn failures_never_touch_participation_counts() {
+        // "participations" means *contributed*: a device whose only
+        // selection dropped or straggled must not count as a participant
+        // (eval_personalized and selection strategies read this)
+        let (q, l, h) = (2, 3, 2);
+        let mut server = Server::new(ts(q, l, h, 0.0));
+        let mut store = MemStore::new(population(2));
+        let mut accum = server.begin_round(0);
+        accum.absorb_failure(&ClientOutcome::Dropped {
+            device: 0,
+            phase: crate::fed::round::DropPhase::Download,
+        });
+        accum.absorb_failure(&ClientOutcome::Straggled {
+            device: 1,
+            sim_secs: 60.0,
+        });
+        for d in [0, 1] {
+            store
+                .with_session(d, &mut |sess| {
+                    assert_eq!(sess.participations, 0);
+                    assert!(sess.personal.is_none());
+                    Ok(())
+                })
+                .unwrap();
+        }
+        let mut method = crate::methods::by_name("fedlora", 1, 10).unwrap();
+        let rec = server.finish_round(accum, &mut *method);
+        // counts stay out of the record unless the engine asked for them
+        assert!(rec.counts.is_none());
     }
 
     #[test]

@@ -36,7 +36,11 @@ use crate::util::rng::{Rng, RngState};
 pub const MAGIC: &[u8; 8] = b"DPEFTSN2";
 /// Bump when the section layout changes incompatibly.
 /// v2: `RoundRecord` gained `train_acc`.
-pub const FORMAT_VERSION: u64 = 2;
+/// v3: availability model — the config carries the churn knobs
+/// (`avail_trace` / `deadline_secs` / `upload_loss`), each device
+/// section its availability RNG stream, and each round record its
+/// optional completion counts.
+pub const FORMAT_VERSION: u64 = 3;
 /// Snapshot directory when `--snapshot-dir` is not given.
 pub const DEFAULT_DIR: &str = "snapshots";
 
@@ -50,6 +54,9 @@ pub struct DeviceSnapshot {
     pub participations: usize,
     pub last_shared: Vec<usize>,
     pub rng: RngState,
+    /// availability RNG stream (churn / upload-loss draws) — separate
+    /// from `rng` so enabling availability never perturbs training
+    pub avail_rng: RngState,
     pub personal: Option<TrainState>,
 }
 
@@ -119,7 +126,10 @@ pub(crate) fn write_config<W: std::io::Write>(w: &mut Writer<W>, cfg: &FedConfig
     w.u64(cfg.workers as u64)?;
     w.opt_string(cfg.cost_model.as_deref())?;
     w.u64(cfg.snapshot_every as u64)?;
-    w.opt_string(cfg.snapshot_dir.as_deref())
+    w.opt_string(cfg.snapshot_dir.as_deref())?;
+    w.opt_string(cfg.avail_trace.as_deref())?;
+    w.opt_f64(cfg.deadline_secs)?;
+    w.f64(cfg.upload_loss)
 }
 
 pub(crate) fn read_config<R: Read>(r: &mut Reader<R>) -> Result<FedConfig> {
@@ -142,6 +152,9 @@ pub(crate) fn read_config<R: Read>(r: &mut Reader<R>) -> Result<FedConfig> {
         cost_model: r.opt_string()?,
         snapshot_every: r.u64()? as usize,
         snapshot_dir: r.opt_string()?,
+        avail_trace: r.opt_string()?,
+        deadline_secs: r.opt_f64()?,
+        upload_loss: r.f64()?,
         // host-side store knobs are never serialized (like `workers`
         // they cannot affect results): default here, overridden by
         // `--device-store` / `--device-cache` on resume
@@ -163,7 +176,17 @@ fn write_record<W: std::io::Write>(w: &mut Writer<W>, rec: &RoundRecord) -> Resu
     w.f64(rec.energy_j_mean)?;
     w.f64(rec.mem_peak_mean)?;
     w.opt_string(rec.arm.as_deref())?;
-    w.f64(rec.host_secs)
+    w.f64(rec.host_secs)?;
+    match &rec.counts {
+        None => w.u8(0),
+        Some(c) => {
+            w.u8(1)?;
+            w.u64(c.completed as u64)?;
+            w.u64(c.straggled as u64)?;
+            w.u64(c.dropped as u64)?;
+            w.u64(c.partial as u64)
+        }
+    }
 }
 
 fn read_record<R: Read>(r: &mut Reader<R>) -> Result<RoundRecord> {
@@ -181,6 +204,16 @@ fn read_record<R: Read>(r: &mut Reader<R>) -> Result<RoundRecord> {
         mem_peak_mean: r.f64()?,
         arm: r.opt_string()?,
         host_secs: r.f64()?,
+        counts: match r.u8()? {
+            0 => None,
+            1 => Some(crate::metrics::RoundCounts {
+                completed: r.u64()? as usize,
+                straggled: r.u64()? as usize,
+                dropped: r.u64()? as usize,
+                partial: r.u64()? as usize,
+            }),
+            t => bail!("corrupt snapshot: round-counts tag {t}"),
+        },
     })
 }
 
@@ -193,6 +226,7 @@ pub(crate) struct DeviceFields<'a> {
     pub(crate) participations: usize,
     pub(crate) last_shared: &'a [usize],
     pub(crate) rng: RngState,
+    pub(crate) avail_rng: RngState,
     pub(crate) personal: Option<&'a TrainState>,
 }
 
@@ -203,6 +237,7 @@ impl<'a> From<&'a DeviceSnapshot> for DeviceFields<'a> {
             participations: d.participations,
             last_shared: &d.last_shared,
             rng: d.rng,
+            avail_rng: d.avail_rng,
             personal: d.personal.as_ref(),
         }
     }
@@ -216,6 +251,7 @@ impl<'a> DeviceFields<'a> {
             participations: s.participations,
             last_shared: &s.last_shared,
             rng: s.rng.export_state(),
+            avail_rng: s.avail_rng.export_state(),
             personal: s.personal.as_ref(),
         }
     }
@@ -230,6 +266,7 @@ pub(crate) fn write_device<W: std::io::Write>(
     let shared: Vec<u64> = d.last_shared.iter().map(|&l| l as u64).collect();
     w.u64s(&shared)?;
     ckpt::write_rng_state(w, &d.rng)?;
+    ckpt::write_rng_state(w, &d.avail_rng)?;
     match d.personal {
         None => w.u8(0),
         Some(state) => {
@@ -244,6 +281,7 @@ pub(crate) fn read_device<R: Read>(r: &mut Reader<R>) -> Result<DeviceSnapshot> 
     let participations = r.u64()? as usize;
     let last_shared: Vec<usize> = r.u64s()?.into_iter().map(|l| l as usize).collect();
     let rng = ckpt::read_rng_state(r)?;
+    let avail_rng = ckpt::read_rng_state(r)?;
     let personal = match r.u8()? {
         0 => None,
         1 => Some(ckpt::read_train_state(r)?),
@@ -254,6 +292,7 @@ pub(crate) fn read_device<R: Read>(r: &mut Reader<R>) -> Result<DeviceSnapshot> 
         participations,
         last_shared,
         rng,
+        avail_rng,
         personal,
     })
 }

@@ -130,6 +130,21 @@ impl SessionSpec {
         if c.device_cache == 0 {
             bail!("spec: device_cache must be >= 1");
         }
+        if let Some(t) = &c.avail_trace {
+            crate::fed::device::AvailTrace::parse(t)
+                .with_context(|| format!("spec: invalid --avail-trace {t:?}"))?;
+        }
+        if let Some(d) = c.deadline_secs {
+            if !(d.is_finite() && d > 0.0) {
+                bail!("spec: deadline_secs must be a positive finite number (got {d})");
+            }
+        }
+        if !(c.upload_loss.is_finite() && (0.0..1.0).contains(&c.upload_loss)) {
+            bail!(
+                "spec: upload_loss must be a probability in [0, 1) (got {})",
+                c.upload_loss
+            );
+        }
         if let TransportSpec::Tcp { listen } = &self.transport {
             if listen.is_empty() {
                 bail!("spec: --listen address must not be empty");
@@ -271,6 +286,29 @@ impl SessionSpecBuilder {
         self
     }
 
+    /// Per-device availability trace (`--avail-trace`, e.g. "off:0.2" or
+    /// "period:3,1"). Selected devices that are offline contribute
+    /// nothing to their round.
+    pub fn avail_trace(mut self, trace: impl Into<String>) -> Self {
+        self.spec.cfg.avail_trace = Some(trace.into());
+        self
+    }
+
+    /// Per-round deadline in simulated seconds (`--deadline-secs`);
+    /// devices whose estimated round time exceeds it straggle and are
+    /// cut off without contributing.
+    pub fn deadline_secs(mut self, secs: f64) -> Self {
+        self.spec.cfg.deadline_secs = Some(secs);
+        self
+    }
+
+    /// Probability a completed device's upload truncates mid-transfer
+    /// (`--upload-loss`).
+    pub fn upload_loss(mut self, p: f64) -> Self {
+        self.spec.cfg.upload_loss = p;
+        self
+    }
+
     /// Execution backend (`--backend auto|xla|native`). Host-specific;
     /// auto selects XLA exactly when compiled artifacts are present.
     pub fn backend(mut self, kind: BackendKind) -> Self {
@@ -344,7 +382,17 @@ pub fn builder_from_args(args: &Args) -> Result<SessionSpecBuilder> {
             &args.str_or("device-store", "mem"),
         )?)
         .device_cache(args.usize_or("device-cache", d.device_cache)?)
-        .snapshot_every(args.usize_or("snapshot-every", 0)?);
+        .snapshot_every(args.usize_or("snapshot-every", 0)?)
+        .upload_loss(args.f64_or("upload-loss", 0.0)?);
+    if let Some(t) = args.opt_str("avail-trace") {
+        b = b.avail_trace(t);
+    }
+    if let Some(secs) = args.opt_str("deadline-secs") {
+        b = b.deadline_secs(
+            secs.parse()
+                .with_context(|| format!("--deadline-secs {secs:?} is not a number"))?,
+        );
+    }
     if let Some(t) = args.opt_str("target-acc") {
         b = b.target_acc(
             t.parse()
@@ -490,6 +538,30 @@ mod tests {
         assert!(SessionSpec::builder().target_acc(1.5).build().is_err());
         assert!(SessionSpec::builder().samples(0).build().is_err());
         assert!(SessionSpec::builder().eval_every(0).build().is_err());
+        assert!(SessionSpec::builder()
+            .avail_trace("sometimes")
+            .build()
+            .is_err());
+        assert!(SessionSpec::builder().deadline_secs(0.0).build().is_err());
+        assert!(SessionSpec::builder()
+            .deadline_secs(f64::INFINITY)
+            .build()
+            .is_err());
+        assert!(SessionSpec::builder().upload_loss(1.0).build().is_err());
+        assert!(SessionSpec::builder().upload_loss(-0.1).build().is_err());
+    }
+
+    #[test]
+    fn availability_knobs_accept_valid_values() {
+        let spec = SessionSpec::builder()
+            .avail_trace("off:0.2")
+            .deadline_secs(1800.0)
+            .upload_loss(0.1)
+            .build()
+            .unwrap();
+        assert!(spec.cfg.availability_enabled());
+        let off = SessionSpec::builder().build().unwrap();
+        assert!(!off.cfg.availability_enabled());
     }
 
     #[test]

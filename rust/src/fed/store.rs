@@ -40,7 +40,8 @@ use crate::util::rng::Rng;
 /// Magic prefix of a per-device spill file.
 pub const SPILL_MAGIC: &[u8; 8] = b"DPEFTDS1";
 /// Bump when the spill layout changes incompatibly.
-pub const SPILL_VERSION: u64 = 1;
+/// v2: device sections carry the availability RNG stream.
+pub const SPILL_VERSION: u64 = 2;
 /// Default bounded-LRU capacity for the disk store (`--device-cache`).
 pub const DEFAULT_DEVICE_CACHE: usize = 1024;
 
@@ -326,6 +327,7 @@ impl DiskStore {
         }
         Ok(DeviceSession {
             rng: Rng::from_state(d.rng),
+            avail_rng: Rng::from_state(d.avail_rng),
             personal: d.personal,
             last_shared: d.last_shared,
             participations: d.participations,

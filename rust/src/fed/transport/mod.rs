@@ -1,5 +1,5 @@
 //! Distributed round transport: how one round's `DevicePlan`s reach
-//! client executors and how their `LocalOutcome`s come back.
+//! client executors and how their `ClientOutcome`s come back.
 //!
 //! The engine plans rounds sequentially and absorbs outcomes at a
 //! sequential fan-in (`RoundAccum`) — neither side cares *where* the
@@ -28,7 +28,7 @@ pub mod wire;
 use anyhow::Result;
 
 use crate::fed::client::{ClientCtx, ClientTask};
-use crate::fed::round::{DevicePlan, LocalOutcome};
+use crate::fed::round::{ClientOutcome, DevicePlan};
 use crate::methods::Method;
 use crate::model::TrainState;
 use crate::util::pool;
@@ -84,7 +84,7 @@ pub trait RoundTransport: Send {
         &mut self,
         exec: RoundExec<'_>,
         plans: Vec<DevicePlan>,
-        consume: &mut dyn FnMut(usize, Result<LocalOutcome>),
+        consume: &mut dyn FnMut(usize, Result<ClientOutcome>),
     ) -> Result<()>;
 }
 
@@ -103,7 +103,7 @@ impl RoundTransport for LocalTransport {
         &mut self,
         exec: RoundExec<'_>,
         plans: Vec<DevicePlan>,
-        consume: &mut dyn FnMut(usize, Result<LocalOutcome>),
+        consume: &mut dyn FnMut(usize, Result<ClientOutcome>),
     ) -> Result<()> {
         let task = ClientTask::for_round(
             exec.ctx,

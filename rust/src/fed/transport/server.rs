@@ -1,7 +1,7 @@
 //! The TCP round server: [`TcpTransport`] accepts `droppeft worker`
 //! connections, broadcasts each round's start (method blob + global
 //! state), fans the round's `DevicePlan`s out over the live connections,
-//! and feeds the returned `LocalOutcome`s to the engine's sequential
+//! and feeds the returned `ClientOutcome`s to the engine's sequential
 //! fan-in in selection order.
 //!
 //! Scheduling reuses `util::pool::run_parallel_streaming` verbatim: one
@@ -21,7 +21,11 @@
 //!   double as crash recovery when the *server* is killed;
 //! - a worker-reported application error (`MSG_CLIENT_ERR`) is
 //!   deterministic and is NOT retried: it flows to the fan-in like a
-//!   local task failure.
+//!   local task failure;
+//! - a *simulated* availability failure (a plan whose fate skips
+//!   compute) never touches a connection at all: the server synthesizes
+//!   its `ClientOutcome` locally, so simulated dropout stays fully
+//!   distinct from real worker-connection death and its re-dispatch.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -31,7 +35,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::fed::round::{DevicePlan, LocalOutcome};
+use crate::fed::round::{ClientOutcome, DevicePlan};
 use crate::fed::transport::{wire, RoundExec, RoundTransport};
 use crate::model::TrainState;
 use crate::util::pool;
@@ -79,7 +83,7 @@ struct WorkerConn {
 
 /// What one task dispatch produced on a connection.
 enum Reply {
-    Outcome(Box<LocalOutcome>),
+    Outcome(Box<ClientOutcome>),
     /// deterministic application error reported by the worker
     ClientErr(String),
 }
@@ -146,7 +150,7 @@ impl ConnPool {
         device: usize,
         task_body: &[u8],
         global: &TrainState,
-    ) -> Result<LocalOutcome> {
+    ) -> Result<ClientOutcome> {
         loop {
             let mut conn = self.claim()?;
             match attempt(&mut conn, device, task_body, global) {
@@ -370,7 +374,7 @@ impl RoundTransport for TcpTransport {
         &mut self,
         exec: RoundExec<'_>,
         plans: Vec<DevicePlan>,
-        consume: &mut dyn FnMut(usize, Result<LocalOutcome>),
+        consume: &mut dyn FnMut(usize, Result<ClientOutcome>),
     ) -> Result<()> {
         self.reap_departed();
         self.accept_joins(&exec)?;
@@ -397,11 +401,27 @@ impl RoundTransport for TcpTransport {
             return self.run_round(exec, plans, consume);
         }
 
-        // serialize every plan up front: payload bytes survive their
-        // plan, so a dead connection's task can be re-sent elsewhere
-        let tasks: Vec<(usize, Vec<u8>)> = plans
+        // serialize every dispatched plan up front: payload bytes
+        // survive their plan, so a dead connection's task can be re-sent
+        // elsewhere. A plan whose fate skips compute is resolved here,
+        // server-side, without ever claiming a connection — simulated
+        // dropout stays distinct from real worker death (which keeps its
+        // re-dispatch path).
+        enum Job {
+            Synth(ClientOutcome),
+            Dispatch { device: usize, body: Vec<u8> },
+        }
+        let tasks: Vec<Job> = plans
             .iter()
-            .map(|p| Ok((p.device, wire::task_payload(p)?)))
+            .map(|p| {
+                Ok(match p.fate.resolve_no_compute(p.device) {
+                    Some(out) => Job::Synth(out),
+                    None => Job::Dispatch {
+                        device: p.device,
+                        body: wire::task_payload(p)?,
+                    },
+                })
+            })
             .collect::<Result<_>>()?;
         drop(plans);
 
@@ -411,10 +431,14 @@ impl RoundTransport for TcpTransport {
             let conn_pool = &conn_pool;
             let global = exec.global;
             let jobs: Vec<_> = tasks
-                .iter()
-                .map(|(device, body)| {
-                    let (device, body) = (*device, body.as_slice());
-                    move || conn_pool.run_task(device, body, global)
+                .into_iter()
+                .map(|job| {
+                    move || match job {
+                        Job::Synth(out) => Ok(out),
+                        Job::Dispatch { device, body } => {
+                            conn_pool.run_task(device, &body, global)
+                        }
+                    }
                 })
                 .collect();
             pool::run_parallel_streaming(n_workers, jobs, consume);

@@ -32,7 +32,7 @@ use std::io::{Read, Write};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::fed::config::FedConfig;
-use crate::fed::round::{DevicePlan, DownloadSpec, LocalOutcome};
+use crate::fed::round::{ClientOutcome, DeviceFate, DevicePlan, DownloadSpec, DropPhase, LocalOutcome};
 use crate::fed::snapshot;
 use crate::methods::SharePolicy;
 use crate::model::{ckpt, TrainState};
@@ -42,7 +42,9 @@ use crate::util::rng::Rng;
 
 /// Protocol revision spoken by this build; the `Hello`/`SessionInit`
 /// handshake rejects any mismatch (bump on ANY codec change).
-pub const PROTOCOL_VERSION: u64 = 1;
+/// v2: tasks carry an availability fate, outcomes a `ClientOutcome`
+/// variant tag, and the session config its availability knobs.
+pub const PROTOCOL_VERSION: u64 = 2;
 
 /// Hard cap on one frame's payload. Generous for any realistic
 /// `TrainState` (a "base"-preset global is a few MB) while bounding
@@ -61,7 +63,7 @@ pub const MSG_SESSION_INIT: u8 = 2;
 pub const MSG_ROUND_START: u8 = 3;
 /// server → worker: one device's plan (the dynamic `DevicePlan` fields)
 pub const MSG_TASK: u8 = 4;
-/// worker → server: one device's `LocalOutcome`
+/// worker → server: one device's `ClientOutcome`
 pub const MSG_OUTCOME: u8 = 5;
 /// worker → server: `ClientTask::run` failed (deterministic app error)
 pub const MSG_CLIENT_ERR: u8 = 6;
@@ -252,6 +254,10 @@ pub struct TaskMsg {
     pub frozen_below: usize,
     pub share_policy: SharePolicy,
     pub agg_weight: f64,
+    /// availability fate drawn during planning. Only `Run` and
+    /// `PartialUpload` tasks ever reach the wire (no-compute fates are
+    /// synthesized server-side), but the codec is total over the enum.
+    pub fate: DeviceFate,
 }
 
 impl TaskMsg {
@@ -284,7 +290,55 @@ impl TaskMsg {
             frozen_below: self.frozen_below,
             share_policy: self.share_policy,
             agg_weight: self.agg_weight,
+            fate: self.fate,
         })
+    }
+}
+
+fn write_drop_phase<W: Write>(w: &mut ckpt::Writer<W>, phase: DropPhase) -> Result<()> {
+    w.u8(match phase {
+        DropPhase::Download => 0,
+        DropPhase::Compute => 1,
+        DropPhase::Upload => 2,
+    })
+}
+
+fn read_drop_phase<R: Read>(r: &mut ckpt::Reader<R>) -> Result<DropPhase> {
+    match r.u8()? {
+        0 => Ok(DropPhase::Download),
+        1 => Ok(DropPhase::Compute),
+        2 => Ok(DropPhase::Upload),
+        t => bail!("corrupt frame: drop-phase tag {t}"),
+    }
+}
+
+fn write_fate<W: Write>(w: &mut ckpt::Writer<W>, fate: &DeviceFate) -> Result<()> {
+    match *fate {
+        DeviceFate::Run => w.u8(0),
+        DeviceFate::Dropped { phase } => {
+            w.u8(1)?;
+            write_drop_phase(w, phase)
+        }
+        DeviceFate::Straggled { sim_secs } => {
+            w.u8(2)?;
+            w.f64(sim_secs)
+        }
+        DeviceFate::PartialUpload { frac } => {
+            w.u8(3)?;
+            w.f64(frac)
+        }
+    }
+}
+
+fn read_fate<R: Read>(r: &mut ckpt::Reader<R>) -> Result<DeviceFate> {
+    match r.u8()? {
+        0 => Ok(DeviceFate::Run),
+        1 => Ok(DeviceFate::Dropped {
+            phase: read_drop_phase(r)?,
+        }),
+        2 => Ok(DeviceFate::Straggled { sim_secs: r.f64()? }),
+        3 => Ok(DeviceFate::PartialUpload { frac: r.f64()? }),
+        t => bail!("corrupt task frame: fate tag {t}"),
     }
 }
 
@@ -331,7 +385,8 @@ pub fn task_payload(plan: &DevicePlan) -> Result<Vec<u8>> {
                 w.u64(k as u64)?;
             }
         }
-        w.f64(plan.agg_weight)
+        w.f64(plan.agg_weight)?;
+        write_fate(w, &plan.fate)
     })
 }
 
@@ -370,6 +425,7 @@ pub fn read_task(body: &[u8]) -> Result<TaskMsg> {
         }
     };
     let agg_weight = r.f64()?;
+    let fate = read_fate(&mut r)?;
     finish(r, "task")?;
     Ok(TaskMsg {
         device,
@@ -383,66 +439,111 @@ pub fn read_task(body: &[u8]) -> Result<TaskMsg> {
         frozen_below,
         share_policy,
         agg_weight,
+        fate,
     })
 }
 
 // ---- Outcome ----
 
-pub fn outcome_payload(out: &LocalOutcome) -> Result<Vec<u8>> {
-    payload(|w| {
-        w.u64(out.device as u64)?;
-        w.u64(out.upload.device as u64)?;
-        write_usizes(w, &out.upload.layers)?;
-        w.f32s(&out.upload.rows)?;
-        w.f64(out.upload.weight)?;
-        w.f32s(&out.upload.head)?;
-        match &out.final_state {
-            None => w.u8(0)?,
-            Some(state) => {
-                w.u8(1)?;
-                ckpt::write_train_state(w, state)?;
+/// Variant tag leading every outcome payload: 0 = `Completed` (the
+/// historical body follows), 1 = `Straggled`, 2 = `Dropped`,
+/// 3 = `PartialUpload`.
+pub fn outcome_payload(out: &ClientOutcome) -> Result<Vec<u8>> {
+    payload(|w| match out {
+        ClientOutcome::Completed(out) => {
+            w.u8(0)?;
+            w.u64(out.device as u64)?;
+            w.u64(out.upload.device as u64)?;
+            write_usizes(w, &out.upload.layers)?;
+            w.f32s(&out.upload.rows)?;
+            w.f64(out.upload.weight)?;
+            w.f32s(&out.upload.head)?;
+            match &out.final_state {
+                None => w.u8(0)?,
+                Some(state) => {
+                    w.u8(1)?;
+                    ckpt::write_train_state(w, state)?;
+                }
             }
+            w.f64(out.local_acc)?;
+            w.f64(out.train_acc)?;
+            w.f64(out.mean_loss)?;
+            w.f64(out.active_frac)?;
+            w.f64(out.comp_secs)?;
+            w.f64(out.comm_secs)?;
+            w.f64(out.energy_j)?;
+            w.f64(out.mem_peak)?;
+            w.u64(out.traffic_bytes)
         }
-        w.f64(out.local_acc)?;
-        w.f64(out.train_acc)?;
-        w.f64(out.mean_loss)?;
-        w.f64(out.active_frac)?;
-        w.f64(out.comp_secs)?;
-        w.f64(out.comm_secs)?;
-        w.f64(out.energy_j)?;
-        w.f64(out.mem_peak)?;
-        w.u64(out.traffic_bytes)
+        ClientOutcome::Straggled { device, sim_secs } => {
+            w.u8(1)?;
+            w.u64(*device as u64)?;
+            w.f64(*sim_secs)
+        }
+        ClientOutcome::Dropped { device, phase } => {
+            w.u8(2)?;
+            w.u64(*device as u64)?;
+            write_drop_phase(w, *phase)
+        }
+        ClientOutcome::PartialUpload {
+            device,
+            layers_received,
+            sim_secs,
+        } => {
+            w.u8(3)?;
+            w.u64(*device as u64)?;
+            w.u64(*layers_received as u64)?;
+            w.f64(*sim_secs)
+        }
     })
 }
 
-pub fn read_outcome(body: &[u8]) -> Result<LocalOutcome> {
+pub fn read_outcome(body: &[u8]) -> Result<ClientOutcome> {
     let mut r = reader(body);
-    let device = r.u64()? as usize;
-    let upload = Upload {
-        device: r.u64()? as usize,
-        layers: read_usizes(&mut r)?,
-        rows: r.f32s()?,
-        weight: r.f64()?,
-        head: r.f32s()?,
-    };
-    let final_state = match r.u8()? {
-        0 => None,
-        1 => Some(ckpt::read_train_state(&mut r)?),
-        t => bail!("corrupt outcome frame: final-state tag {t}"),
-    };
-    let out = LocalOutcome {
-        device,
-        upload,
-        final_state,
-        local_acc: r.f64()?,
-        train_acc: r.f64()?,
-        mean_loss: r.f64()?,
-        active_frac: r.f64()?,
-        comp_secs: r.f64()?,
-        comm_secs: r.f64()?,
-        energy_j: r.f64()?,
-        mem_peak: r.f64()?,
-        traffic_bytes: r.u64()?,
+    let out = match r.u8()? {
+        0 => {
+            let device = r.u64()? as usize;
+            let upload = Upload {
+                device: r.u64()? as usize,
+                layers: read_usizes(&mut r)?,
+                rows: r.f32s()?,
+                weight: r.f64()?,
+                head: r.f32s()?,
+            };
+            let final_state = match r.u8()? {
+                0 => None,
+                1 => Some(ckpt::read_train_state(&mut r)?),
+                t => bail!("corrupt outcome frame: final-state tag {t}"),
+            };
+            ClientOutcome::Completed(LocalOutcome {
+                device,
+                upload,
+                final_state,
+                local_acc: r.f64()?,
+                train_acc: r.f64()?,
+                mean_loss: r.f64()?,
+                active_frac: r.f64()?,
+                comp_secs: r.f64()?,
+                comm_secs: r.f64()?,
+                energy_j: r.f64()?,
+                mem_peak: r.f64()?,
+                traffic_bytes: r.u64()?,
+            })
+        }
+        1 => ClientOutcome::Straggled {
+            device: r.u64()? as usize,
+            sim_secs: r.f64()?,
+        },
+        2 => ClientOutcome::Dropped {
+            device: r.u64()? as usize,
+            phase: read_drop_phase(&mut r)?,
+        },
+        3 => ClientOutcome::PartialUpload {
+            device: r.u64()? as usize,
+            layers_received: r.u64()? as usize,
+            sim_secs: r.f64()?,
+        },
+        t => bail!("corrupt outcome frame: variant tag {t}"),
     };
     finish(r, "outcome")?;
     Ok(out)
@@ -451,13 +552,22 @@ pub fn read_outcome(body: &[u8]) -> Result<LocalOutcome> {
 /// Validate a received outcome against the round's global state before
 /// it reaches the aggregation fan-in: a corrupt peer must surface as a
 /// transport error here, never as an out-of-bounds panic inside
-/// `AggAccum::absorb`.
-pub fn validate_outcome(out: &LocalOutcome, expect_device: usize, global: &TrainState) -> Result<()> {
+/// `AggAccum::absorb`. Non-completed variants carry only their device id
+/// and simulated cost, so the device check is all there is to validate.
+pub fn validate_outcome(
+    out: &ClientOutcome,
+    expect_device: usize,
+    global: &TrainState,
+) -> Result<()> {
     ensure!(
-        out.device == expect_device,
+        out.device() == expect_device,
         "worker replied for device {} (task was for device {expect_device})",
-        out.device
+        out.device()
     );
+    let out = match out {
+        ClientOutcome::Completed(out) => out,
+        _ => return Ok(()),
+    };
     let q = global.q;
     let n_layers = global.n_layers;
     ensure!(
@@ -588,6 +698,7 @@ mod tests {
             frozen_below: 1,
             share_policy: SharePolicy::LowestImportance(2),
             agg_weight: 40.0,
+            fate: DeviceFate::PartialUpload { frac: 0.375 },
         };
         let body = task_payload(&plan).unwrap();
         let msg = read_task(&body).unwrap();
@@ -601,6 +712,7 @@ mod tests {
         assert_eq!(msg.frozen_below, 1);
         assert!(matches!(msg.share_policy, SharePolicy::LowestImportance(2)));
         assert_eq!(msg.agg_weight, 40.0);
+        assert_eq!(msg.fate, DeviceFate::PartialUpload { frac: 0.375 });
         let personal = msg.personal.expect("personal state survives the wire");
         assert_eq!(personal.peft, plan.download.personal.as_ref().unwrap().peft);
         assert_eq!(personal.step, 17);
@@ -609,7 +721,7 @@ mod tests {
     #[test]
     fn outcome_round_trips_and_validates() {
         let global = state(1.0);
-        let out = LocalOutcome {
+        let out = ClientOutcome::Completed(LocalOutcome {
             device: 3,
             upload: Upload {
                 device: 3,
@@ -628,20 +740,98 @@ mod tests {
             energy_j: 42.0,
             mem_peak: 1e6,
             traffic_bytes: 12345,
-        };
+        });
         let body = outcome_payload(&out).unwrap();
         let back = read_outcome(&body).unwrap();
         validate_outcome(&back, 3, &global).unwrap();
+        let (back, out) = match (back, out) {
+            (ClientOutcome::Completed(b), ClientOutcome::Completed(o)) => (b, o),
+            _ => panic!("completed outcome must round-trip as Completed"),
+        };
         assert_eq!(back.upload.rows, out.upload.rows);
         assert_eq!(back.mean_loss, out.mean_loss);
         assert_eq!(back.traffic_bytes, 12345);
 
         // wrong device: caught before the aggregation fan-in
-        assert!(validate_outcome(&back, 4, &global).is_err());
+        assert!(validate_outcome(&ClientOutcome::Completed(back), 4, &global).is_err());
         // out-of-range layer index: caught, not a scatter panic
-        let mut bad = read_outcome(&body).unwrap();
+        let mut bad = match read_outcome(&body).unwrap() {
+            ClientOutcome::Completed(o) => o,
+            _ => unreachable!(),
+        };
         bad.upload.layers = vec![0, 99];
-        assert!(validate_outcome(&bad, 3, &global).is_err());
+        assert!(validate_outcome(&ClientOutcome::Completed(bad), 3, &global).is_err());
+    }
+
+    #[test]
+    fn failure_outcomes_round_trip_and_validate_device() {
+        let global = state(1.0);
+        let cases = [
+            ClientOutcome::Straggled {
+                device: 5,
+                sim_secs: 12.5,
+            },
+            ClientOutcome::Dropped {
+                device: 5,
+                phase: DropPhase::Download,
+            },
+            ClientOutcome::Dropped {
+                device: 5,
+                phase: DropPhase::Upload,
+            },
+            ClientOutcome::PartialUpload {
+                device: 5,
+                layers_received: 3,
+                sim_secs: 7.25,
+            },
+        ];
+        for out in cases {
+            let body = outcome_payload(&out).unwrap();
+            let back = read_outcome(&body).unwrap();
+            validate_outcome(&back, 5, &global).unwrap();
+            assert!(validate_outcome(&back, 6, &global).is_err());
+            match (&out, &back) {
+                (
+                    ClientOutcome::Straggled { sim_secs: a, .. },
+                    ClientOutcome::Straggled { sim_secs: b, .. },
+                ) => assert_eq!(a, b),
+                (
+                    ClientOutcome::Dropped { phase: a, .. },
+                    ClientOutcome::Dropped { phase: b, .. },
+                ) => assert_eq!(a, b),
+                (
+                    ClientOutcome::PartialUpload {
+                        layers_received: la,
+                        sim_secs: sa,
+                        ..
+                    },
+                    ClientOutcome::PartialUpload {
+                        layers_received: lb,
+                        sim_secs: sb,
+                        ..
+                    },
+                ) => {
+                    assert_eq!(la, lb);
+                    assert_eq!(sa, sb);
+                }
+                (a, b) => panic!(
+                    "variant changed across the wire: sent device {} got device {}",
+                    a.device(),
+                    b.device()
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_outcome_variant_tag_is_rejected() {
+        let body = payload(|w| {
+            w.u8(9)?; // no such variant
+            w.u64(5)
+        })
+        .unwrap();
+        let err = read_outcome(&body).unwrap_err();
+        assert!(err.to_string().contains("variant tag"), "got: {err}");
     }
 
     #[test]

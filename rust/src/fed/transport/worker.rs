@@ -92,9 +92,9 @@ pub fn run_worker(
     // server's own `Engine::new` construction, which is what makes a
     // remotely-executed plan the same pure function of (plan, global)
     crate::info!(
-        "worker: joined session (preset {}, task {}, method {method_key}); building statics",
+        "worker: joined session (preset {}, dataset {}, method {method_key}); building statics",
         cfg.preset,
-        cfg.task
+        cfg.dataset
     );
     let statics = SessionStatics::build(&cfg, &*runtime)?;
     let mut method = methods::by_name(&method_key, cfg.seed, cfg.rounds)?;

@@ -73,6 +73,20 @@ USAGE:
                  [--device-cache N]
                                  (hot sessions kept in RAM by the disk
                                   store, default 1024)
+                 [--avail-trace off:P|period:ON,OFF]
+                                 (per-device availability: each selected
+                                  device is offline with probability P,
+                                  or on a deterministic ON/OFF round
+                                  cycle; offline devices contribute
+                                  nothing to their round)
+                 [--deadline-secs S]
+                                 (per-round deadline on the simulated
+                                  clock; devices estimated to exceed it
+                                  straggle and are cut off)
+                 [--upload-loss P]
+                                 (probability a finished device's upload
+                                  truncates mid-transfer; the partial
+                                  update is discarded, default 0)
                  [--out DIR]     (write a structured JSONL event log to
                                   DIR/events.jsonl — byte-identical at any
                                   --workers; a --resume run appends to it)
@@ -104,6 +118,10 @@ USAGE:
                                  <out>/events/)
                 [--workers N] [--snapshot-every N] [--snapshot-dir DIR]
                 [--device-store mem|disk:DIR] [--device-cache N]
+                [--avail-trace off:P|period:ON,OFF] [--deadline-secs S]
+                [--upload-loss P]
+                                (availability model for every session of
+                                 the experiment, as in `train`)
                 [--backend auto|xla|native]
                 [--resume PATH] (resumes the session matching the
                                  snapshot's method/dataset; others fresh)

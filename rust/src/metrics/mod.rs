@@ -31,6 +31,25 @@ pub struct RoundRecord {
     pub arm: Option<String>,
     /// host wall-clock spent on this round (perf diagnostics)
     pub host_secs: f64,
+    /// per-round completion accounting, present iff availability
+    /// (churn / deadline / upload-loss) is enabled — `None` keeps the
+    /// default-path record and its JSON byte-identical to the
+    /// pre-availability engine
+    pub counts: Option<RoundCounts>,
+}
+
+/// How the round's selected cohort resolved under the availability
+/// model: `completed + straggled + dropped + partial` = devices selected.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RoundCounts {
+    /// devices that trained, uploaded intact, and were aggregated
+    pub completed: usize,
+    /// devices cut off at the round deadline
+    pub straggled: usize,
+    /// devices offline per their availability trace
+    pub dropped: usize,
+    /// devices whose upload truncated mid-transfer
+    pub partial: usize,
 }
 
 impl RoundRecord {
@@ -39,7 +58,7 @@ impl RoundRecord {
     /// identical runs, and serialized record streams must stay
     /// byte-identical at any worker count.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("round", Json::num(self.round as f64)),
             ("sim_secs", Json::num(self.sim_secs)),
             ("clock_secs", Json::num(self.clock_secs)),
@@ -64,7 +83,16 @@ impl RoundRecord {
                     .map(|a| Json::str(a.clone()))
                     .unwrap_or(Json::Null),
             ),
-        ])
+        ];
+        // availability counts are appended only when tracked, so default
+        // sessions serialize the exact historical field set
+        if let Some(c) = &self.counts {
+            fields.push(("completed", Json::num(c.completed as f64)));
+            fields.push(("straggled", Json::num(c.straggled as f64)));
+            fields.push(("dropped", Json::num(c.dropped as f64)));
+            fields.push(("partial_uploads", Json::num(c.partial as f64)));
+        }
+        Json::obj(fields)
     }
 }
 

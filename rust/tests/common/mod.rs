@@ -79,6 +79,7 @@ pub fn assert_identical(
             "personalized acc @{r}"
         );
         assert_eq!(ra.arm, rb.arm, "bandit arm @{r}");
+        assert_eq!(ra.counts, rb.counts, "availability counts @{r}");
     }
 }
 

@@ -10,7 +10,7 @@
 
 use std::sync::Arc;
 
-use droppeft::fed::{Engine, FedConfig};
+use droppeft::fed::{DeviceStoreSpec, Engine, FedConfig};
 use droppeft::methods;
 use droppeft::metrics::SessionResult;
 use droppeft::runtime::Backend;
@@ -65,6 +65,70 @@ fn native_intra_client_threads_1_and_4_produce_identical_records() {
     let t1 = run_with_workers(Arc::new(NativeBackend::with_threads(1)), "droppeft-lora", 2);
     let t4 = run_with_workers(Arc::new(NativeBackend::with_threads(4)), "droppeft-lora", 2);
     assert_identical(&t1, &t4);
+}
+
+/// The availability model must not break the worker-count contract:
+/// every fate (offline churn, deadline stragglers, upload loss) is drawn
+/// in the sequential planning pass, so a session with heavy churn is as
+/// byte-identical across `--workers` — and across device stores — as a
+/// default one.
+fn run_churn(
+    backend: Arc<dyn Backend>,
+    workers: usize,
+    store: DeviceStoreSpec,
+) -> SessionResult {
+    let mut cfg = FedConfig::quick("tiny", "mnli");
+    cfg.rounds = 4;
+    cfg.n_devices = 10;
+    cfg.devices_per_round = 4;
+    cfg.local_batches = 2;
+    cfg.samples = 400;
+    cfg.eval_every = 2;
+    cfg.eval_batches = 2;
+    cfg.lr = 5e-3;
+    cfg.workers = workers;
+    cfg.device_store = store;
+    cfg.avail_trace = Some("off:0.3".into());
+    cfg.upload_loss = 0.3;
+    let method = methods::by_name("droppeft-lora", cfg.seed, cfg.rounds).unwrap();
+    let mut engine = Engine::new(cfg, backend, method).unwrap();
+    engine.run().unwrap()
+}
+
+/// At these rates, 4 rounds x 4 selections with no failure at all would
+/// mean the availability RNG is not being consulted — fail loudly.
+fn assert_churn_happened(r: &SessionResult) {
+    let mut failures = 0;
+    for rec in &r.records {
+        let c = rec
+            .counts
+            .expect("availability-enabled sessions must report per-round counts");
+        failures += c.straggled + c.dropped + c.partial;
+    }
+    assert!(failures > 0, "churn session saw no failures — rates ignored?");
+}
+
+#[test]
+fn native_churn_workers_1_and_4_produce_identical_records() {
+    let serial = run_churn(native_backend(), 1, DeviceStoreSpec::Mem);
+    let parallel = run_churn(native_backend(), 4, DeviceStoreSpec::Mem);
+    assert_churn_happened(&serial);
+    assert_identical(&serial, &parallel);
+}
+
+#[test]
+fn native_churn_mem_and_disk_stores_produce_identical_records() {
+    let d = std::env::temp_dir().join("droppeft_churn_store_det");
+    let mem = run_churn(native_backend(), 4, DeviceStoreSpec::Mem);
+    let disk = run_churn(
+        native_backend(),
+        4,
+        DeviceStoreSpec::Disk {
+            dir: d.to_string_lossy().into_owned(),
+        },
+    );
+    assert_churn_happened(&mem);
+    assert_identical(&mem, &disk);
 }
 
 #[test]

@@ -118,6 +118,49 @@ fn native_fedadaopt_resume_is_byte_identical() {
     check_kill_and_resume(native_backend(), "fedadaopt", "nat_ada", 2, 1);
 }
 
+/// Kill-and-resume in the middle of availability churn: the per-device
+/// availability RNG streams ride the snapshot, so the resumed session
+/// must replay the exact same offline draws and upload losses the
+/// uninterrupted one saw after round k.
+#[test]
+fn native_churn_resume_is_byte_identical() {
+    let rt = native_backend();
+    let dir = fresh_dir("nat_churn");
+    let churn_cfg = |workers: usize| {
+        let mut c = cfg(workers, &dir);
+        c.avail_trace = Some("off:0.3".into());
+        c.upload_loss = 0.3;
+        c
+    };
+
+    let m = methods::by_name("droppeft-lora", 42, ROUNDS).unwrap();
+    let mut full = Engine::new(churn_cfg(2), rt.clone(), m).unwrap();
+    let reference = full.run().unwrap();
+    let reference_model = full.global_state().clone();
+
+    let k = SNAP_EVERY;
+    // churn must have actually hit the replayed tail, or the test proves
+    // nothing about the snapshotted availability streams
+    let tail_failures: usize = reference.records[k..]
+        .iter()
+        .map(|r| {
+            let c = r.counts.expect("churn session must report counts");
+            c.straggled + c.dropped + c.partial
+        })
+        .sum();
+    assert!(tail_failures > 0, "no churn after round {k} — rates ignored?");
+
+    let snap_path = SessionSnapshot::path_in(&dir, "droppeft-lora", "mnli", k);
+    assert!(snap_path.exists(), "expected snapshot at {snap_path:?}");
+    let mut resumed = Engine::resume_from_path(&snap_path, rt, Some(1)).unwrap();
+    assert_eq!(resumed.rounds_finished(), k);
+    let replayed = resumed.run().unwrap();
+
+    assert_eq!(replayed.records.len(), ROUNDS);
+    assert_identical(&reference, &replayed);
+    assert_same_model(&reference_model, resumed.global_state());
+}
+
 #[test]
 fn xla_droppeft_resume_is_byte_identical() {
     require_artifacts!();

@@ -7,7 +7,7 @@
 
 use droppeft::fed::snapshot::{self, DeviceSnapshot, SessionSnapshot};
 use droppeft::fed::FedConfig;
-use droppeft::metrics::RoundRecord;
+use droppeft::metrics::{RoundCounts, RoundRecord};
 use droppeft::model::{ckpt, TrainState};
 use droppeft::util::rng::Rng;
 
@@ -32,6 +32,11 @@ fn dummy_snapshot() -> SessionSnapshot {
     let mut cfg = FedConfig::quick("tiny", "mnli");
     cfg.rounds = 8;
     cfg.n_devices = 3;
+    // non-default availability knobs: the v3 config sections must
+    // round-trip and survive the corruption sweeps like everything else
+    cfg.avail_trace = Some("off:0.25".into());
+    cfg.deadline_secs = Some(1200.0);
+    cfg.upload_loss = 0.125;
     let mut rng = Rng::seed_from(99);
     let devices = (0..cfg.n_devices)
         .map(|id| DeviceSnapshot {
@@ -39,6 +44,7 @@ fn dummy_snapshot() -> SessionSnapshot {
             participations: id,
             last_shared: vec![0, 2],
             rng: rng.fork(id as u64).export_state(),
+            avail_rng: rng.fork(1000 + id as u64).export_state(),
             personal: if id % 2 == 0 {
                 Some(dummy_train_state(id as u64))
             } else {
@@ -61,6 +67,17 @@ fn dummy_snapshot() -> SessionSnapshot {
             mem_peak_mean: 1e6,
             arm: Some("[0.5/0.3/0.2]?".into()),
             host_secs: 0.01,
+            // exercise both branches of the per-record counts tag
+            counts: if round % 2 == 0 {
+                Some(RoundCounts {
+                    completed: 3,
+                    straggled: 1,
+                    dropped: round,
+                    partial: 0,
+                })
+            } else {
+                None
+            },
         })
         .collect();
     SessionSnapshot {
@@ -104,6 +121,7 @@ fn assert_roundtrip_eq(a: &SessionSnapshot, b: &SessionSnapshot) {
         assert_eq!(x.traffic_bytes, y.traffic_bytes);
         assert_eq!(x.arm, y.arm);
         assert_eq!(x.host_secs.to_bits(), y.host_secs.to_bits());
+        assert_eq!(x.counts, y.counts);
     }
     assert_eq!(a.cfg.seed, b.cfg.seed);
     assert_eq!(a.cfg.rounds, b.cfg.rounds);
@@ -111,6 +129,12 @@ fn assert_roundtrip_eq(a: &SessionSnapshot, b: &SessionSnapshot) {
     assert_eq!(a.cfg.target_acc, b.cfg.target_acc);
     assert_eq!(a.cfg.cost_model, b.cfg.cost_model);
     assert_eq!(a.cfg.snapshot_dir, b.cfg.snapshot_dir);
+    assert_eq!(a.cfg.avail_trace, b.cfg.avail_trace);
+    assert_eq!(
+        a.cfg.deadline_secs.map(f64::to_bits),
+        b.cfg.deadline_secs.map(f64::to_bits)
+    );
+    assert_eq!(a.cfg.upload_loss.to_bits(), b.cfg.upload_loss.to_bits());
 }
 
 #[test]

@@ -26,6 +26,7 @@ fn every_train_flag_translates_to_the_matching_builder_call() {
          --eval-batches 9 --personal-eval --target-acc 0.8 \
          --cost-model roberta-large --workers 3 --snapshot-every 2 \
          --snapshot-dir snaps --device-store disk:devstore --device-cache 7 \
+         --avail-trace off:0.2 --deadline-secs 900 --upload-loss 0.05 \
          --listen 127.0.0.1:7171",
     );
     let from_cli = spec::from_args(&args).unwrap();
@@ -53,6 +54,9 @@ fn every_train_flag_translates_to_the_matching_builder_call() {
             dir: "devstore".into(),
         })
         .device_cache(7)
+        .avail_trace("off:0.2")
+        .deadline_secs(900.0)
+        .upload_loss(0.05)
         .listen("127.0.0.1:7171")
         .build()
         .unwrap();
@@ -101,6 +105,10 @@ fn cli_translation_validates_like_the_builder() {
     assert!(spec::from_args(&parse("train --method bogus")).is_err());
     assert!(spec::from_args(&parse("train --target-acc 1.5")).is_err());
     assert!(spec::from_args(&parse("train --lr abc")).is_err());
+    assert!(spec::from_args(&parse("train --avail-trace off:1.5")).is_err());
+    assert!(spec::from_args(&parse("train --avail-trace sometimes")).is_err());
+    assert!(spec::from_args(&parse("train --deadline-secs 0")).is_err());
+    assert!(spec::from_args(&parse("train --upload-loss 1.0")).is_err());
 }
 
 #[test]

@@ -258,6 +258,66 @@ fn killed_server_resumes_byte_identically_with_fresh_workers() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Availability churn over the wire: a session where selected devices go
+/// offline or lose their upload must be byte-identical between the
+/// in-process pool and a TCP worker fleet — and no-compute fates must be
+/// synthesized server-side, never dispatched to a worker (a simulated
+/// dropout is not a dead connection; re-dispatch stays reserved for real
+/// worker death).
+#[test]
+fn tcp_churn_is_byte_identical_and_never_dispatches_no_compute_fates() {
+    fn churn_spec() -> SessionSpec {
+        SessionSpec::builder()
+            .preset("tiny")
+            .dataset("mnli")
+            .method(MethodSpec::droppeft(PeftKind::Lora))
+            .rounds(ROUNDS)
+            .devices(10)
+            .per_round(PER_ROUND)
+            .local_batches(2)
+            .samples(400)
+            .eval_every(2)
+            .eval_batches(2)
+            .lr(5e-3)
+            .workers(2)
+            .avail_trace("off:0.3")
+            .upload_loss(0.3)
+            .build()
+            .unwrap()
+    }
+    let (reference, ref_model) = run_local(churn_spec(), None);
+    // dispatched tasks = fates that actually compute (Run + PartialUpload)
+    let mut expect_dispatch = 0;
+    let mut failures = 0;
+    for rec in &reference.records {
+        let c = rec.counts.expect("churn session must report per-round counts");
+        assert_eq!(
+            c.completed + c.straggled + c.dropped + c.partial,
+            PER_ROUND,
+            "counts must cover the whole cohort"
+        );
+        expect_dispatch += c.completed + c.partial;
+        failures += c.straggled + c.dropped + c.partial;
+    }
+    assert!(failures > 0, "churn session saw no failures — rates ignored?");
+
+    let (mut engine, addr) = tcp_engine(&churn_spec());
+    let w1 = spawn_worker(addr.clone(), None);
+    let w2 = spawn_worker(addr, None);
+    let r_tcp = engine.run().unwrap();
+    let m_tcp = engine.global_state().clone();
+    drop(engine);
+    let reports = [w1.join().unwrap(), w2.join().unwrap()];
+
+    assert_identical(&reference, &r_tcp);
+    assert_same_model(&ref_model, &m_tcp);
+    let tasks: usize = reports.iter().map(|r| r.tasks_run).sum();
+    assert_eq!(
+        tasks, expect_dispatch,
+        "workers must see exactly the computing fates; reports: {reports:?}"
+    );
+}
+
 fn connect_retry(addr: &str) -> TcpStream {
     let deadline = Instant::now() + Duration::from_secs(10);
     loop {
