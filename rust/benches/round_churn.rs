@@ -60,7 +60,7 @@ fn run_tcp_churn() -> (SessionResult, u64, u64) {
     let mut engine = spec(true).build_engine(backend()).expect("tcp engine");
     let transport = TcpTransport::listen("127.0.0.1:0").expect("bind loopback");
     let addr = transport.local_addr().expect("local addr").to_string();
-    let (sent, received) = transport.wire_counters();
+    let stats = transport.wire_counters();
     engine.set_transport(Box::new(transport));
     let workers: Vec<_> = (0..N_WORKERS)
         .map(|_| {
@@ -77,8 +77,8 @@ fn run_tcp_churn() -> (SessionResult, u64, u64) {
     }
     (
         result,
-        sent.load(Ordering::Relaxed),
-        received.load(Ordering::Relaxed),
+        stats.sent.load(Ordering::Relaxed),
+        stats.received.load(Ordering::Relaxed),
     )
 }
 

@@ -1,12 +1,14 @@
 //! In-process vs loopback-TCP round transport: whole-session wall time
-//! and bytes on the wire per round. Both shapes run the same tiny-preset
-//! session on the pure-rust native backend (no compiled XLA artifacts
-//! needed); the TCP shape serves rounds to two worker threads over
-//! 127.0.0.1 through the real `fed::transport` stack — the same
-//! `run_worker` entry the `droppeft worker` binary calls. Results are
-//! asserted byte-identical across transports before anything is timed.
-//! Emits machine-readable `BENCH_round_net.json`, diffed against the
-//! committed baseline (warn-only) before overwriting it.
+//! and bytes on the wire per round, split by frame family. Both shapes
+//! run the same tiny-preset session on the pure-rust native backend (no
+//! compiled XLA artifacts needed); the TCP shape serves rounds to two
+//! pipelined worker threads over 127.0.0.1 through the real
+//! `fed::transport` stack — the same `run_worker` entry the `droppeft
+//! worker` binary calls. Results are asserted byte-identical across
+//! transports before anything is timed, and the delta-compressed
+//! broadcast is asserted strictly cheaper than the full (v2) encoding
+//! it replaced. Emits machine-readable `BENCH_round_net.json`, diffed
+//! against the committed baseline (warn-only) before overwriting it.
 //!
 //! Run with `cargo bench` (part of `make bench`).
 
@@ -15,7 +17,7 @@ use std::sync::Arc;
 use std::thread;
 
 use droppeft::benchkit::{trajectory, Bench, Suite};
-use droppeft::fed::{run_worker, SessionSpec, TcpTransport, WorkerOptions};
+use droppeft::fed::{run_worker, SessionSpec, TcpOptions, TcpTransport, WireStats, WorkerOptions};
 use droppeft::metrics::SessionResult;
 use droppeft::runtime::{Backend, NativeBackend};
 use droppeft::util::json::Json;
@@ -25,6 +27,7 @@ const BASELINE: &str = "BENCH_round_net.json";
 const ROUNDS: usize = 3;
 const PER_ROUND: usize = 4;
 const N_WORKERS: usize = 2;
+const SLOTS: usize = 4;
 
 fn backend() -> Arc<dyn Backend> {
     Arc::new(NativeBackend::new())
@@ -52,19 +55,29 @@ fn run_local() -> SessionResult {
     engine.run().expect("local session")
 }
 
-/// The same session served over loopback TCP to two worker threads.
-/// Returns the result plus total (sent, received) wire bytes.
-fn run_tcp() -> (SessionResult, u64, u64) {
+/// The same session served over loopback TCP to two worker threads,
+/// each multiplexing [`SLOTS`] tagged tasks over its socket. Returns
+/// the result plus the transport's wire counters.
+fn run_tcp() -> (SessionResult, Arc<WireStats>) {
     let mut engine = spec().build_engine(backend()).expect("tcp engine");
-    let transport = TcpTransport::listen("127.0.0.1:0").expect("bind loopback");
+    let transport =
+        TcpTransport::listen_opts("127.0.0.1:0", TcpOptions::default()).expect("bind loopback");
     let addr = transport.local_addr().expect("local addr").to_string();
-    let (sent, received) = transport.wire_counters();
+    let stats = transport.wire_counters();
     engine.set_transport(Box::new(transport));
     let workers: Vec<_> = (0..N_WORKERS)
         .map(|_| {
             let addr = addr.clone();
             thread::spawn(move || {
-                run_worker(&addr, backend(), WorkerOptions::default()).expect("bench worker")
+                run_worker(
+                    &addr,
+                    backend(),
+                    WorkerOptions {
+                        slots: SLOTS,
+                        ..Default::default()
+                    },
+                )
+                .expect("bench worker")
             })
         })
         .collect();
@@ -73,18 +86,14 @@ fn run_tcp() -> (SessionResult, u64, u64) {
     for w in workers {
         w.join().expect("worker thread");
     }
-    (
-        result,
-        sent.load(Ordering::Relaxed),
-        received.load(Ordering::Relaxed),
-    )
+    (result, stats)
 }
 
 fn main() {
     // correctness cross-check before timing anything: the transports
     // must agree bit-for-bit
     let local = run_local();
-    let (tcp, wire_sent, wire_received) = run_tcp();
+    let (tcp, stats) = run_tcp();
     assert_eq!(local.records.len(), tcp.records.len());
     for (a, b) in local.records.iter().zip(&tcp.records) {
         assert_eq!(
@@ -95,7 +104,31 @@ fn main() {
         );
         assert_eq!(a.traffic_bytes, b.traffic_bytes);
     }
+    let wire_sent = stats.sent.load(Ordering::Relaxed);
+    let wire_received = stats.received.load(Ordering::Relaxed);
+    let broadcast = stats.broadcast_bytes.load(Ordering::Relaxed);
+    let broadcast_raw = stats.broadcast_raw_bytes.load(Ordering::Relaxed);
+    let task_bytes = stats.task_bytes.load(Ordering::Relaxed);
+    let outcome_bytes = stats.outcome_bytes.load(Ordering::Relaxed);
+    let dispatch_peak = stats.dispatch_peak.load(Ordering::Relaxed);
     assert!(wire_sent > 0 && wire_received > 0, "no bytes on the wire?");
+    assert!(
+        broadcast > 0 && task_bytes > 0 && outcome_bytes > 0,
+        "a frame family went unmeasured: broadcast {broadcast} B, \
+         task {task_bytes} B, outcome {outcome_bytes} B"
+    );
+    // the tentpole claim: the delta-compressed broadcast must beat the
+    // full per-round state encoding it replaced (rounds past the first
+    // ship sparse XOR deltas, so this is a strict win, not a tie)
+    assert!(
+        broadcast < broadcast_raw,
+        "delta+compressed broadcast ({broadcast} B) is not below the \
+         full encoding ({broadcast_raw} B)"
+    );
+    assert!(
+        dispatch_peak > 1,
+        "dispatch never pipelined (peak {dispatch_peak} in-flight)"
+    );
 
     let mut suite = Suite::new();
     let i = suite.results.len();
@@ -113,7 +146,7 @@ fn main() {
     let i = suite.results.len();
     suite.add(
         Bench::new(format!(
-            "round_net/loopback-tcp {ROUNDS}r x{N_WORKERS}w"
+            "round_net/loopback-tcp {ROUNDS}r x{N_WORKERS}w s{SLOTS}"
         ))
         .warmup(1)
         .iters(2, 10)
@@ -123,9 +156,17 @@ fn main() {
     let tcp_ns = suite.results[i].mean_ns;
 
     let per_round = (wire_sent + wire_received) / ROUNDS as u64;
+    let broadcast_per_round = broadcast / ROUNDS as u64;
+    let broadcast_raw_per_round = broadcast_raw / ROUNDS as u64;
     println!(
-        "\nround-net: {ROUNDS} rounds, {PER_ROUND} devices/round, {N_WORKERS} workers  \
+        "\nround-net: {ROUNDS} rounds, {PER_ROUND} devices/round, {N_WORKERS} workers x{SLOTS} slots  \
          wire {wire_sent} B out + {wire_received} B in (~{per_round} B/round incl. handshake)"
+    );
+    println!(
+        "  by family: broadcast {broadcast} B (full encoding would be {broadcast_raw} B, \
+         {:.1}x), tasks {task_bytes} B, outcomes {outcome_bytes} B; peak {dispatch_peak} \
+         tasks in flight",
+        broadcast_raw as f64 / broadcast.max(1) as f64
     );
     println!("{}", suite.markdown("In-process vs loopback-TCP round transport"));
 
@@ -135,11 +176,22 @@ fn main() {
         ("rounds", Json::num(ROUNDS as f64)),
         ("devices_per_round", Json::num(PER_ROUND as f64)),
         ("workers", Json::num(N_WORKERS as f64)),
+        ("worker_slots", Json::num(SLOTS as f64)),
         ("local_session_mean_ns", Json::num(local_ns)),
         ("tcp_session_mean_ns", Json::num(tcp_ns)),
         ("wire_sent_bytes", Json::num(wire_sent as f64)),
         ("wire_received_bytes", Json::num(wire_received as f64)),
         ("wire_bytes_per_round", Json::num(per_round as f64)),
+        ("broadcast_bytes", Json::num(broadcast as f64)),
+        ("broadcast_raw_bytes", Json::num(broadcast_raw as f64)),
+        ("broadcast_bytes_per_round", Json::num(broadcast_per_round as f64)),
+        (
+            "broadcast_raw_bytes_per_round",
+            Json::num(broadcast_raw_per_round as f64),
+        ),
+        ("task_bytes", Json::num(task_bytes as f64)),
+        ("outcome_bytes", Json::num(outcome_bytes as f64)),
+        ("dispatch_concurrency", Json::num(dispatch_peak as f64)),
     ]);
 
     // diff against the committed baseline before clobbering it (warn-only)

@@ -55,6 +55,6 @@ pub use snapshot::SessionSnapshot;
 pub use spec::{SessionSpec, SessionSpecBuilder, SweepPlan};
 pub use store::{DeviceStore, DeviceStoreSpec, DiskStore, MemStore};
 pub use transport::{
-    run_worker, LocalTransport, RoundTransport, TcpTransport, TransportSpec, WorkerOptions,
-    WorkerReport,
+    run_worker, LocalTransport, RoundTransport, TcpOptions, TcpTransport, TransportSpec,
+    WireStats, WorkerOptions, WorkerReport,
 };

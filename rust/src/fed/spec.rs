@@ -23,7 +23,7 @@ use crate::fed::config::FedConfig;
 use crate::fed::engine::Engine;
 use crate::fed::snapshot::{self, SessionSnapshot};
 use crate::fed::store::DeviceStoreSpec;
-use crate::fed::transport::{TcpTransport, TransportSpec};
+use crate::fed::transport::{TcpOptions, TcpTransport, TransportSpec};
 use crate::methods::{Method, MethodSpec};
 use crate::runtime::{self, Backend, BackendKind};
 use crate::util::cli::Args;
@@ -63,6 +63,8 @@ impl SessionSpec {
                 backend: BackendKind::Auto,
                 transport: TransportSpec::Local,
             },
+            wire_delta: true,
+            wire_compress: true,
         }
     }
 
@@ -145,7 +147,7 @@ impl SessionSpec {
                 c.upload_loss
             );
         }
-        if let TransportSpec::Tcp { listen } = &self.transport {
+        if let TransportSpec::Tcp { listen, .. } = &self.transport {
             if listen.is_empty() {
                 bail!("spec: --listen address must not be empty");
             }
@@ -164,8 +166,19 @@ impl SessionSpec {
     pub fn build_engine(&self, runtime: Arc<dyn Backend>) -> Result<Engine> {
         self.validate()?;
         let mut engine = Engine::new(self.cfg.clone(), runtime, self.build_method())?;
-        if let TransportSpec::Tcp { listen } = &self.transport {
-            engine.set_transport(Box::new(TcpTransport::listen(listen)?));
+        if let TransportSpec::Tcp {
+            listen,
+            delta,
+            compress,
+        } = &self.transport
+        {
+            engine.set_transport(Box::new(TcpTransport::listen_opts(
+                listen,
+                TcpOptions {
+                    delta: *delta,
+                    compress: *compress,
+                },
+            )?));
         }
         Ok(engine)
     }
@@ -176,6 +189,10 @@ impl SessionSpec {
 #[derive(Clone, Debug)]
 pub struct SessionSpecBuilder {
     spec: SessionSpec,
+    /// pending wire knobs, applied when `.listen()` selects the TCP
+    /// transport — kept here so the setters are order-independent
+    wire_delta: bool,
+    wire_compress: bool,
 }
 
 impl SessionSpecBuilder {
@@ -337,8 +354,41 @@ impl SessionSpecBuilder {
     pub fn listen(mut self, addr: impl Into<String>) -> Self {
         self.spec.transport = TransportSpec::Tcp {
             listen: addr.into(),
+            delta: self.wire_delta,
+            compress: self.wire_compress,
         };
         self
+    }
+
+    /// Broadcast round starts as XOR deltas against each connection's
+    /// last-sent state (`--wire-delta on|off`, default on). Only
+    /// meaningful with [`listen`](Self::listen); order-independent with
+    /// it. Host-specific: workers reconstruct bit-identical state.
+    pub fn wire_delta(mut self, on: bool) -> Self {
+        self.wire_delta = on;
+        if let TransportSpec::Tcp { delta, .. } = &mut self.spec.transport {
+            *delta = on;
+        }
+        self
+    }
+
+    /// LZ-compress round-start broadcasts when that is smaller
+    /// (`--wire-compress on|off`, default on). Only meaningful with
+    /// [`listen`](Self::listen); order-independent with it.
+    pub fn wire_compress(mut self, on: bool) -> Self {
+        self.wire_compress = on;
+        if let TransportSpec::Tcp { compress, .. } = &mut self.spec.transport {
+            *compress = on;
+        }
+        self
+    }
+
+    /// The transport this builder currently selects (`--listen` +
+    /// `--wire-*`). The CLI's `--resume` path reads it to re-apply host
+    /// transport configuration to a snapshotted session (snapshots never
+    /// record transports).
+    pub fn transport(&self) -> &TransportSpec {
+        &self.spec.transport
     }
 
     pub fn build(self) -> Result<SessionSpec> {
@@ -405,10 +455,22 @@ pub fn builder_from_args(args: &Args) -> Result<SessionSpecBuilder> {
     if let Some(dir) = args.opt_str("snapshot-dir") {
         b = b.snapshot_dir(dir);
     }
+    b = b
+        .wire_delta(on_off("wire-delta", &args.str_or("wire-delta", "on"))?)
+        .wire_compress(on_off("wire-compress", &args.str_or("wire-compress", "on"))?);
     if let Some(addr) = args.opt_str("listen") {
         b = b.listen(addr);
     }
     Ok(b)
+}
+
+/// Parse an `on|off` flag value (`--wire-delta`, `--wire-compress`).
+fn on_off(flag: &str, value: &str) -> Result<bool> {
+    match value {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        _ => bail!("--{flag} must be \"on\" or \"off\" (got {value:?})"),
+    }
 }
 
 /// Sequences the sessions of a sweep (an experiment bundle, an ablation
@@ -590,6 +652,42 @@ mod tests {
         );
         assert!(DeviceStoreSpec::parse("disk:").is_err());
         assert!(DeviceStoreSpec::parse("ram").is_err());
+    }
+
+    #[test]
+    fn wire_knobs_are_order_independent_with_listen() {
+        let tcp = |delta: bool, compress: bool| TransportSpec::Tcp {
+            listen: "127.0.0.1:0".into(),
+            delta,
+            compress,
+        };
+        let before = SessionSpec::builder()
+            .wire_delta(false)
+            .wire_compress(false)
+            .listen("127.0.0.1:0")
+            .build()
+            .unwrap();
+        assert_eq!(before.transport, tcp(false, false));
+        let after = SessionSpec::builder()
+            .listen("127.0.0.1:0")
+            .wire_delta(false)
+            .build()
+            .unwrap();
+        assert_eq!(after.transport, tcp(false, true));
+        let defaults = SessionSpec::builder().listen("127.0.0.1:0").build().unwrap();
+        assert_eq!(defaults.transport, tcp(true, true));
+        // wire knobs without --listen never select the TCP transport
+        let local = SessionSpec::builder().wire_delta(false).build().unwrap();
+        assert_eq!(local.transport, TransportSpec::Local);
+    }
+
+    #[test]
+    fn wire_flags_parse_on_off_only() {
+        assert!(on_off("wire-delta", "on").unwrap());
+        assert!(!on_off("wire-delta", "off").unwrap());
+        let err = on_off("wire-compress", "maybe").unwrap_err().to_string();
+        assert!(err.contains("--wire-compress"), "{err}");
+        assert!(err.contains("maybe"), "{err}");
     }
 
     #[test]

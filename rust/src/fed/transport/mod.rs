@@ -11,7 +11,12 @@
 //! - [`TcpTransport`] (`--listen`, the `serve` subcommand) streams each
 //!   plan to remote worker processes (`droppeft worker --connect`) over
 //!   the length-prefixed [`wire`] protocol, retrying a plan on another
-//!   live worker if a connection dies mid-task.
+//!   live worker if a connection dies mid-task. Dispatch is pipelined:
+//!   each worker advertises a slot count and up to that many tagged
+//!   tasks ride its socket concurrently, demultiplexed by a reader
+//!   thread per connection. Round-start broadcasts travel as XOR deltas
+//!   against each connection's previous state, LZ-compressed when that
+//!   is smaller (`--wire-delta` / `--wire-compress`).
 //!
 //! Determinism contract: a `ClientTask::run` is a pure function of
 //! `(DevicePlan, global)`, all RNG is pre-drawn during planning, and
@@ -33,7 +38,7 @@ use crate::methods::Method;
 use crate::model::TrainState;
 use crate::util::pool;
 
-pub use server::TcpTransport;
+pub use server::{TcpOptions, TcpTransport, WireStats};
 pub use worker::{run_worker, WorkerOptions, WorkerReport};
 
 /// Which transport a session's rounds execute over. Host configuration,
@@ -49,6 +54,12 @@ pub enum TransportSpec {
     Tcp {
         /// listen address, e.g. "127.0.0.1:7171" (port 0 = ephemeral)
         listen: String,
+        /// broadcast round starts as XOR deltas against each
+        /// connection's last state (`--wire-delta`, default on)
+        delta: bool,
+        /// LZ-compress round-start broadcasts when smaller
+        /// (`--wire-compress`, default on)
+        compress: bool,
     },
 }
 

@@ -5,17 +5,33 @@
 //! fan-in in selection order.
 //!
 //! Scheduling reuses `util::pool::run_parallel_streaming` verbatim: one
-//! in-process job per plan, each claiming a connection from a shared
-//! free-list, so the bounded claim window, in-order delivery, and panic
-//! semantics are *identical* to the local transport — the fan-in cannot
-//! tell the difference.
+//! in-process job per plan, each claiming a **slot** on a live
+//! connection from the shared [`Fleet`], so the bounded claim window,
+//! in-order delivery, and panic semantics are *identical* to the local
+//! transport — the fan-in cannot tell the difference.
+//!
+//! Pipelined dispatch (protocol v3): a worker's hello advertises how
+//! many tasks it runs concurrently, task and reply frames carry a u64
+//! task id, and one reader thread per connection demultiplexes tagged
+//! replies into per-task mailboxes — so up to `slots` tasks ride each
+//! socket at once instead of one blocking round-trip per connection.
+//! A v2 worker is negotiated down to one slot and untagged frames.
+//!
+//! Broadcast economy (protocol v3): the server remembers the full
+//! global-state bytes last sent on each connection and ships the next
+//! round as an XOR delta against them (LZ-compressed when that is
+//! smaller), falling back to a full frame for fresh joins; the worker
+//! checksum-verifies the reconstruction, so the bytes feeding every
+//! task are known bit-identical to the server's.
 //!
 //! Fault model:
 //! - workers may join between rounds (handshake at round start) and
-//!   leave between rounds (clean close, detected by an EOF probe);
-//! - a connection that dies **mid-task** is dropped and its plan is
-//!   re-dispatched on another live connection — outcomes are pure
-//!   functions of `(plan, global)`, so a retry is byte-identical;
+//!   leave between rounds (clean close, observed by the reader thread);
+//! - a connection that dies **mid-task** is killed and *every* task id
+//!   in flight on it is re-dispatched: each waiting dispatcher wakes
+//!   from its mailbox, observes the death, and retries on another live
+//!   connection — outcomes are pure functions of `(plan, global)`, so
+//!   a retry is byte-identical;
 //! - a round fails only when no connections remain; the session itself
 //!   survives via snapshots (`--snapshot-every` + `--resume`), which
 //!   double as crash recovery when the *server* is killed;
@@ -27,13 +43,15 @@
 //!   its `ClientOutcome` locally, so simulated dropout stays fully
 //!   distinct from real worker-connection death and its re-dispatch.
 
+use std::collections::HashMap;
 use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::fed::round::{ClientOutcome, DevicePlan};
 use crate::fed::transport::{wire, RoundExec, RoundTransport};
@@ -45,19 +63,62 @@ use crate::util::pool;
 /// must not stall round start for the healthy workers).
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
-/// A `Read + Write` stream that counts bytes both ways into shared
-/// atomics — the source of the bytes-on-wire numbers `benches/round_net`
-/// reports.
+/// Wire accounting for one served session, split by frame family so
+/// the broadcast economy is measurable separately from dispatch
+/// traffic. All counters are cumulative across rounds; byte counts
+/// include the fixed frame header. `benches/round_net` is the consumer.
+#[derive(Debug, Default)]
+pub struct WireStats {
+    /// bytes written to worker sockets (socket-level, everything)
+    pub sent: AtomicU64,
+    /// bytes read from worker sockets (socket-level, everything)
+    pub received: AtomicU64,
+    /// round-start frames as actually sent (delta/compressed form)
+    pub broadcast_bytes: AtomicU64,
+    /// what the same broadcasts would have cost in the v2 full-state
+    /// encoding — the yardstick the delta encoding is scored against
+    pub broadcast_raw_bytes: AtomicU64,
+    /// task frames sent (tag + payload + header)
+    pub task_bytes: AtomicU64,
+    /// outcome + client-err frames received (tag + payload + header)
+    pub outcome_bytes: AtomicU64,
+    /// tasks currently checked out across all connections
+    pub dispatch_inflight: AtomicU64,
+    /// high-water mark of `dispatch_inflight` — the realized dispatch
+    /// concurrency (1 per connection under v2; up to Σ slots under v3)
+    pub dispatch_peak: AtomicU64,
+}
+
+/// Knobs for the v3 broadcast path, threaded from `--wire-delta` /
+/// `--wire-compress`. Both default on; turning them off reproduces the
+/// v2 full-broadcast bytes (inside v3 framing) for A/B measurement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TcpOptions {
+    pub delta: bool,
+    pub compress: bool,
+}
+
+impl Default for TcpOptions {
+    fn default() -> TcpOptions {
+        TcpOptions {
+            delta: true,
+            compress: true,
+        }
+    }
+}
+
+/// A `Read + Write` stream that counts bytes both ways into the shared
+/// [`WireStats`] — the source of the bytes-on-wire numbers
+/// `benches/round_net` reports.
 struct CountingStream {
     inner: TcpStream,
-    sent: Arc<AtomicU64>,
-    received: Arc<AtomicU64>,
+    stats: Arc<WireStats>,
 }
 
 impl Read for CountingStream {
     fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
         let n = self.inner.read(buf)?;
-        self.received.fetch_add(n as u64, Ordering::Relaxed);
+        self.stats.received.fetch_add(n as u64, Ordering::Relaxed);
         Ok(n)
     }
 }
@@ -65,20 +126,13 @@ impl Read for CountingStream {
 impl Write for CountingStream {
     fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
         let n = self.inner.write(buf)?;
-        self.sent.fetch_add(n as u64, Ordering::Relaxed);
+        self.stats.sent.fetch_add(n as u64, Ordering::Relaxed);
         Ok(n)
     }
 
     fn flush(&mut self) -> std::io::Result<()> {
         self.inner.flush()
     }
-}
-
-/// One handshaken worker connection.
-struct WorkerConn {
-    stream: CountingStream,
-    /// monotone join id, for log lines only
-    id: u64,
 }
 
 /// What one task dispatch produced on a connection.
@@ -88,63 +142,161 @@ enum Reply {
     ClientErr(String),
 }
 
-/// Shared connection free-list for one round's dispatch. `alive` counts
-/// every usable connection (free or checked out); a claim blocks until a
-/// connection frees up and errors only once none remain anywhere.
-struct ConnPool {
-    state: Mutex<PoolState>,
+/// Mailboxes and liveness for one connection, guarded together so a
+/// death wakes every waiter exactly once.
+#[derive(Default)]
+struct ConnState {
+    /// task id → reply slot; a key with `None` is a task in flight
+    pending: HashMap<u64, Option<Reply>>,
+    /// the connection failed (I/O error, protocol violation, or killed
+    /// by a dispatcher); waiters must re-dispatch
+    dead: bool,
+    /// the worker closed cleanly between tasks; no more dispatches
+    departed: bool,
+}
+
+/// One handshaken worker connection. The writer half (with its reused
+/// [`wire::FrameScratch`]) is mutex-shared by dispatchers; the reader
+/// half lives on the connection's demux thread.
+struct Conn {
+    /// monotone join id, for log lines only
+    id: u64,
+    /// negotiated protocol revision (2 or 3)
+    proto: u64,
+    /// concurrent tasks this worker advertised (1 under v2)
+    slots: usize,
+    writer: Mutex<(CountingStream, wire::FrameScratch)>,
+    /// plain clone used to shut the socket down from any thread,
+    /// unblocking a reader parked in `recv_frame`
+    ctrl: TcpStream,
+    state: Mutex<ConnState>,
     cv: Condvar,
 }
 
-struct PoolState {
-    free: Vec<WorkerConn>,
-    alive: usize,
-}
-
-impl ConnPool {
-    fn new(conns: Vec<WorkerConn>) -> ConnPool {
-        ConnPool {
-            state: Mutex::new(PoolState {
-                alive: conns.len(),
-                free: conns,
-            }),
-            cv: Condvar::new(),
-        }
+impl Conn {
+    fn usable(&self) -> bool {
+        let st = self.state.lock().unwrap();
+        !st.dead && !st.departed
     }
 
-    fn claim(&self) -> Result<WorkerConn> {
+    /// Send one frame (payload = concatenated `sections`) through the
+    /// shared writer; zero steady-state allocations via the scratch.
+    fn send(&self, kind: u8, sections: &[&[u8]]) -> Result<()> {
+        let mut guard = self.writer.lock().unwrap();
+        let (stream, scratch) = &mut *guard;
+        scratch.send(stream, kind, sections)
+    }
+
+    /// Mark the connection dead and shut the socket both ways so its
+    /// reader thread unblocks and exits. Idempotent.
+    fn shut(&self) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.dead = true;
+        }
+        let _ = self.ctrl.shutdown(Shutdown::Both);
+        self.cv.notify_all();
+    }
+
+    /// Block until task `id`'s mailbox fills or the connection dies /
+    /// departs; `None` means re-dispatch. A reply that arrived before
+    /// the death is still honored (retries are byte-identical anyway).
+    fn await_reply(&self, id: u64) -> Option<Reply> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(c) = st.free.pop() {
-                return Ok(c);
+            match st.pending.get(&id) {
+                Some(Some(_)) => {
+                    return Some(st.pending.remove(&id).unwrap().unwrap());
+                }
+                None => return None,
+                Some(None) => {}
             }
-            if st.alive == 0 {
-                bail!("all remote workers disconnected mid-round");
+            if st.dead || st.departed {
+                st.pending.remove(&id);
+                return None;
             }
             st = self.cv.wait(st).unwrap();
         }
     }
+}
 
-    fn release(&self, conn: WorkerConn) {
-        self.state.lock().unwrap().free.push(conn);
-        self.cv.notify_one();
+/// One fleet entry: the connection, its checked-out slot count, its
+/// demux thread, and the last full global-state bytes it received (the
+/// delta base for the next broadcast).
+struct FleetSlot {
+    conn: Arc<Conn>,
+    in_flight: usize,
+    reader: Option<JoinHandle<()>>,
+    sent: Option<(u64, Arc<Vec<u8>>)>,
+}
+
+/// The shared slot free-list: dispatchers claim the least-loaded live
+/// connection with a free slot, block while all slots are checked out,
+/// and fail only once no live connection remains anywhere.
+struct Fleet {
+    slots: Mutex<Vec<FleetSlot>>,
+    cv: Condvar,
+    task_ids: AtomicU64,
+    stats: Arc<WireStats>,
+}
+
+impl Fleet {
+    /// Claim one slot; returns the fleet index (stable within a round —
+    /// entries are only added/removed between rounds) and the conn.
+    fn claim(&self) -> Result<(usize, Arc<Conn>)> {
+        let mut slots = self.slots.lock().unwrap();
+        loop {
+            let mut any_alive = false;
+            let mut best: Option<usize> = None;
+            for (i, s) in slots.iter().enumerate() {
+                if !s.conn.usable() {
+                    continue;
+                }
+                any_alive = true;
+                let lighter = match best {
+                    None => true,
+                    Some(b) => s.in_flight < slots[b].in_flight,
+                };
+                if s.in_flight < s.conn.slots && lighter {
+                    best = Some(i);
+                }
+            }
+            if let Some(i) = best {
+                slots[i].in_flight += 1;
+                let now = self.stats.dispatch_inflight.fetch_add(1, Ordering::Relaxed) + 1;
+                self.stats.dispatch_peak.fetch_max(now, Ordering::Relaxed);
+                return Ok((i, slots[i].conn.clone()));
+            }
+            if !any_alive {
+                bail!("all remote workers disconnected mid-round");
+            }
+            slots = self.cv.wait(slots).unwrap();
+        }
     }
 
-    fn discard(&self, conn: WorkerConn) {
-        drop(conn); // closes the socket
-        self.state.lock().unwrap().alive -= 1;
-        // every waiter must re-check: if this was the last connection
-        // they all need to fail rather than sleep forever
+    fn release(&self, idx: usize) {
+        {
+            let mut slots = self.slots.lock().unwrap();
+            slots[idx].in_flight -= 1;
+        }
+        self.stats.dispatch_inflight.fetch_sub(1, Ordering::Relaxed);
         self.cv.notify_all();
     }
 
-    /// Surviving connections after the round's dispatch completed.
-    fn into_conns(self) -> Vec<WorkerConn> {
-        self.state.into_inner().unwrap().free
+    /// Kill a connection and wake every claim waiter so they re-check
+    /// fleet liveness (and fail rather than sleep if it was the last).
+    fn kill(&self, conn: &Conn) {
+        conn.shut();
+        let guard = self.slots.lock().unwrap();
+        drop(guard);
+        self.cv.notify_all();
     }
 
-    /// Dispatch one plan: send the task, await the reply, retry on
-    /// another live connection if this one dies mid-exchange.
+    /// Dispatch one plan: claim a slot, send the tagged task, await the
+    /// demuxed reply; on connection death anywhere in the exchange,
+    /// retry on another live connection. Every task id in flight on a
+    /// dead connection takes this same path — each waiting dispatcher
+    /// wakes with an empty mailbox and re-dispatches its own task.
     fn run_task(
         &self,
         device: usize,
@@ -152,84 +304,206 @@ impl ConnPool {
         global: &TrainState,
     ) -> Result<ClientOutcome> {
         loop {
-            let mut conn = self.claim()?;
-            match attempt(&mut conn, device, task_body, global) {
-                Ok(Reply::Outcome(out)) => {
-                    self.release(conn);
+            let (idx, conn) = self.claim()?;
+            let id = self.task_ids.fetch_add(1, Ordering::Relaxed);
+            {
+                // register the mailbox before sending so a fast reply
+                // always finds its task id; bail out if the claim raced
+                // a death
+                let mut st = conn.state.lock().unwrap();
+                if st.dead || st.departed {
+                    drop(st);
+                    self.release(idx);
+                    continue;
+                }
+                st.pending.insert(id, None);
+            }
+            let tag = id.to_le_bytes();
+            let sent = if conn.proto >= 3 {
+                conn.send(wire::MSG_TASK, &[&tag, task_body])
+            } else {
+                conn.send(wire::MSG_TASK, &[task_body])
+            };
+            match sent {
+                Ok(()) => {
+                    let tagged = if conn.proto >= 3 { 8 } else { 0 };
+                    self.stats.task_bytes.fetch_add(
+                        (wire::FRAME_HEADER + tagged + task_body.len()) as u64,
+                        Ordering::Relaxed,
+                    );
+                }
+                Err(e) => {
+                    conn.state.lock().unwrap().pending.remove(&id);
+                    crate::info!(
+                        "transport: worker {} lost sending a task (device {device}): {e:#}; \
+                         re-dispatching",
+                        conn.id
+                    );
+                    self.kill(&conn);
+                    self.release(idx);
+                    continue;
+                }
+            }
+            match conn.await_reply(id) {
+                Some(Reply::Outcome(out)) => {
+                    if let Err(e) = wire::validate_outcome(&out, device, global) {
+                        crate::info!(
+                            "transport: worker {} sent an invalid outcome (device {device}): \
+                             {e:#}; re-dispatching",
+                            conn.id
+                        );
+                        self.kill(&conn);
+                        self.release(idx);
+                        continue;
+                    }
+                    self.release(idx);
                     return Ok(*out);
                 }
-                Ok(Reply::ClientErr(msg)) => {
-                    self.release(conn);
+                Some(Reply::ClientErr(msg)) => {
+                    self.release(idx);
                     // deterministic application failure: retrying on
                     // another worker would fail identically
                     return Err(anyhow::anyhow!(
                         "remote client task failed (device {device}): {msg}"
                     ));
                 }
-                Err(e) => {
+                None => {
                     crate::info!(
-                        "transport: worker {} lost mid-task (device {device}): {e:#}; \
-                         re-dispatching",
+                        "transport: worker {} lost mid-task (device {device}); re-dispatching",
                         conn.id
                     );
-                    self.discard(conn);
+                    self.release(idx);
+                    continue;
                 }
             }
         }
     }
 }
 
-/// One task exchange on one connection. Any error here — I/O failure,
-/// clean close mid-round, corrupt or geometry-violating reply — means
-/// the connection is unusable; the caller drops it and retries the plan
-/// elsewhere.
-fn attempt(
-    conn: &mut WorkerConn,
-    device: usize,
-    task_body: &[u8],
-    global: &TrainState,
-) -> Result<Reply> {
-    wire::send_frame(&mut conn.stream, wire::MSG_TASK, task_body)?;
-    let (kind, body) = wire::recv_frame(&mut conn.stream)?
-        .context("worker closed the connection mid-task")?;
-    match kind {
-        wire::MSG_OUTCOME => {
-            let out = wire::read_outcome(&body)?;
-            wire::validate_outcome(&out, device, global)?;
-            Ok(Reply::Outcome(Box::new(out)))
+/// Route one reply frame into its task's mailbox. v3 replies carry the
+/// task id; a v2 connection has at most one task in flight, so the
+/// single pending key is the route. Any failure here is a protocol
+/// violation — the caller kills the connection.
+fn route_reply(conn: &Conn, kind: u8, body: &[u8]) -> Result<()> {
+    let mut st = conn.state.lock().unwrap();
+    let (id, inner) = if conn.proto >= 3 {
+        let (id, inner) = wire::split_tag(body)?;
+        ensure!(
+            st.pending.contains_key(&id),
+            "reply for unknown task id {id}"
+        );
+        (id, inner)
+    } else {
+        let id = *st
+            .pending
+            .keys()
+            .next()
+            .context("reply with no task in flight")?;
+        (id, body)
+    };
+    let reply = match kind {
+        wire::MSG_OUTCOME => Reply::Outcome(Box::new(wire::read_outcome(inner)?)),
+        _ => Reply::ClientErr(wire::read_client_err(inner)?),
+    };
+    st.pending.insert(id, Some(reply));
+    drop(st);
+    conn.cv.notify_all();
+    Ok(())
+}
+
+/// Per-connection demux thread: reads frames until the connection ends,
+/// routing replies to their dispatchers, then records how it ended —
+/// a clean close with nothing in flight is a departure (the worker
+/// left), anything else is a death (in-flight tasks re-dispatch).
+fn reader_loop(conn: Arc<Conn>, fleet: Arc<Fleet>, mut stream: CountingStream) {
+    let failure: Option<String> = loop {
+        match wire::recv_frame(&mut stream) {
+            Ok(Some((kind, body))) => {
+                if kind != wire::MSG_OUTCOME && kind != wire::MSG_CLIENT_ERR {
+                    break Some(format!("unexpected reply frame kind {kind} (expected outcome)"));
+                }
+                fleet.stats.outcome_bytes.fetch_add(
+                    (wire::FRAME_HEADER + body.len()) as u64,
+                    Ordering::Relaxed,
+                );
+                if let Err(e) = route_reply(&conn, kind, &body) {
+                    break Some(format!("{e:#}"));
+                }
+            }
+            Ok(None) => break None,
+            Err(e) => break Some(format!("{e:#}")),
         }
-        wire::MSG_CLIENT_ERR => Ok(Reply::ClientErr(wire::read_client_err(&body)?)),
-        k => bail!("unexpected reply frame kind {k} (expected outcome)"),
+    };
+    {
+        let mut st = conn.state.lock().unwrap();
+        match failure {
+            None if st.pending.is_empty() && !st.dead => {
+                st.departed = true;
+                crate::info!("transport: worker {} left", conn.id);
+            }
+            None => {
+                if !st.dead {
+                    crate::info!(
+                        "transport: worker {} closed with {} tasks in flight",
+                        conn.id,
+                        st.pending.len()
+                    );
+                }
+                st.dead = true;
+            }
+            Some(e) => {
+                if !st.dead {
+                    crate::info!("transport: worker {} lost ({e})", conn.id);
+                }
+                st.dead = true;
+            }
+        }
     }
+    conn.cv.notify_all();
+    // waiters in Fleet::claim must re-check liveness; take the fleet
+    // lock so none of them can miss the wakeup
+    let guard = fleet.slots.lock().unwrap();
+    drop(guard);
+    fleet.cv.notify_all();
 }
 
 /// The TCP round transport (the `serve` side).
 pub struct TcpTransport {
     listener: TcpListener,
-    /// handshaken connections carried between rounds
-    conns: Vec<WorkerConn>,
+    fleet: Arc<Fleet>,
     next_id: u64,
-    bytes_sent: Arc<AtomicU64>,
-    bytes_received: Arc<AtomicU64>,
+    opts: TcpOptions,
+    stats: Arc<WireStats>,
 }
 
 impl TcpTransport {
     /// Bind the listen address (port 0 = ephemeral, see
-    /// [`TcpTransport::local_addr`]). Accepting is lazy: workers join at
-    /// the next round start.
+    /// [`TcpTransport::local_addr`]) with delta + compression on.
+    /// Accepting is lazy: workers join at the next round start.
     pub fn listen(addr: &str) -> Result<TcpTransport> {
+        Self::listen_opts(addr, TcpOptions::default())
+    }
+
+    /// [`TcpTransport::listen`] with explicit broadcast-encoding knobs.
+    pub fn listen_opts(addr: &str, opts: TcpOptions) -> Result<TcpTransport> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding transport listener on {addr:?}"))?;
         listener
             .set_nonblocking(true)
             .context("setting transport listener nonblocking")?;
         crate::info!("transport: serving rounds on {}", listener.local_addr()?);
+        let stats = Arc::new(WireStats::default());
         Ok(TcpTransport {
             listener,
-            conns: Vec::new(),
+            fleet: Arc::new(Fleet {
+                slots: Mutex::new(Vec::new()),
+                cv: Condvar::new(),
+                task_ids: AtomicU64::new(0),
+                stats: stats.clone(),
+            }),
             next_id: 0,
-            bytes_sent: Arc::new(AtomicU64::new(0)),
-            bytes_received: Arc::new(AtomicU64::new(0)),
+            opts,
+            stats,
         })
     }
 
@@ -242,88 +516,128 @@ impl TcpTransport {
     /// (wire frames only; counted at the socket).
     pub fn bytes_on_wire(&self) -> (u64, u64) {
         (
-            self.bytes_sent.load(Ordering::Relaxed),
-            self.bytes_received.load(Ordering::Relaxed),
+            self.stats.sent.load(Ordering::Relaxed),
+            self.stats.received.load(Ordering::Relaxed),
         )
     }
 
-    /// Handles onto the (sent, received) byte counters. The counters
-    /// stay live after the transport is boxed into an engine — how the
+    /// Handle onto the session's wire accounting. The counters stay
+    /// live after the transport is boxed into an engine — how the
     /// `round_net` bench reads bytes-on-wire out of a finished session.
-    pub fn wire_counters(&self) -> (Arc<AtomicU64>, Arc<AtomicU64>) {
-        (self.bytes_sent.clone(), self.bytes_received.clone())
+    pub fn wire_counters(&self) -> Arc<WireStats> {
+        self.stats.clone()
     }
 
-    /// Connections currently carried between rounds.
+    /// Connections currently usable for dispatch.
     pub fn workers_connected(&self) -> usize {
-        self.conns.len()
+        self.fleet
+            .slots
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.conn.usable())
+            .count()
     }
 
-    /// Handshake one accepted socket into a usable connection.
-    fn handshake(&mut self, stream: TcpStream, exec: &RoundExec<'_>) -> Result<WorkerConn> {
+    /// Handshake one accepted socket into a fleet entry with its demux
+    /// thread running.
+    fn handshake(&mut self, stream: TcpStream, exec: &RoundExec<'_>) -> Result<()> {
         // the listener is nonblocking; its accepted sockets must not be
         stream.set_nonblocking(false)?;
         stream.set_nodelay(true)?;
         stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
-        let mut conn = WorkerConn {
-            stream: CountingStream {
-                inner: stream,
-                sent: self.bytes_sent.clone(),
-                received: self.bytes_received.clone(),
-            },
-            id: self.next_id,
+        let ctrl = stream.try_clone().context("cloning worker socket")?;
+        let mut reader_half = CountingStream {
+            inner: stream.try_clone().context("cloning worker socket")?,
+            stats: self.stats.clone(),
         };
-        let (kind, body) = wire::recv_frame(&mut conn.stream)?
+        let writer_half = CountingStream {
+            inner: stream,
+            stats: self.stats.clone(),
+        };
+        let (kind, body) = wire::recv_frame(&mut reader_half)?
             .context("worker closed during handshake")?;
-        anyhow::ensure!(
+        ensure!(
             kind == wire::MSG_HELLO,
             "expected hello frame, got kind {kind}"
         );
-        let ver = wire::read_hello(&body)?;
-        anyhow::ensure!(
-            ver == wire::PROTOCOL_VERSION,
-            "worker speaks protocol {ver}, this server speaks {}",
-            wire::PROTOCOL_VERSION
+        let hello = wire::read_hello(&body)?;
+        ensure!(
+            (wire::MIN_PROTOCOL_VERSION..=wire::PROTOCOL_VERSION).contains(&hello.version),
+            "worker speaks protocol {}, this server speaks {} (oldest supported: {})",
+            hello.version,
+            wire::PROTOCOL_VERSION,
+            wire::MIN_PROTOCOL_VERSION
         );
+        ensure!(
+            (1..=wire::MAX_SLOTS).contains(&hello.slots),
+            "worker advertises {} slots (allowed: 1..={})",
+            hello.slots,
+            wire::MAX_SLOTS
+        );
+        let slots = if hello.version >= 3 {
+            hello.slots as usize
+        } else {
+            1
+        };
+        let conn = Arc::new(Conn {
+            id: self.next_id,
+            proto: hello.version,
+            slots,
+            writer: Mutex::new((writer_half, wire::FrameScratch::new())),
+            ctrl,
+            state: Mutex::new(ConnState::default()),
+            cv: Condvar::new(),
+        });
         let init = wire::session_init_payload(exec.ctx.cfg, &exec.method.key())?;
-        wire::send_frame(&mut conn.stream, wire::MSG_SESSION_INIT, &init)?;
-        conn.stream.inner.set_read_timeout(None)?;
+        conn.send(wire::MSG_SESSION_INIT, &[&init])?;
+        conn.ctrl.set_read_timeout(None)?;
         self.next_id += 1;
-        crate::info!("transport: worker {} joined", conn.id);
-        Ok(conn)
+        crate::info!(
+            "transport: worker {} joined (protocol v{}, {} slot{})",
+            conn.id,
+            conn.proto,
+            slots,
+            if slots == 1 { "" } else { "s" }
+        );
+        let reader = {
+            let conn = conn.clone();
+            let fleet = self.fleet.clone();
+            std::thread::spawn(move || reader_loop(conn, fleet, reader_half))
+        };
+        self.fleet.slots.lock().unwrap().push(FleetSlot {
+            conn,
+            in_flight: 0,
+            reader: Some(reader),
+            sent: None,
+        });
+        Ok(())
     }
 
-    /// Drop connections whose worker left between rounds. A worker
-    /// leaves by closing its socket after a round ends; between rounds a
-    /// healthy worker sends nothing, so a readable socket means either
-    /// EOF (left) or a protocol violation (dropped too).
-    fn reap_departed(&mut self) {
-        self.conns.retain_mut(|c| {
-            if c.stream.inner.set_nonblocking(true).is_err() {
-                crate::info!("transport: worker {} lost (probe failed)", c.id);
-                return false;
+    /// Drop fleet entries whose worker left or died since last round and
+    /// join their demux threads (they have exited or are unblocking on
+    /// the shut socket — never a long wait).
+    fn reap(&mut self) {
+        let mut gone = Vec::new();
+        {
+            let mut slots = self.fleet.slots.lock().unwrap();
+            let mut i = 0;
+            while i < slots.len() {
+                if slots[i].conn.usable() {
+                    i += 1;
+                } else {
+                    gone.push(slots.remove(i));
+                }
             }
-            let mut probe = [0u8; 1];
-            let alive = match c.stream.inner.peek(&mut probe) {
-                Ok(0) => {
-                    crate::info!("transport: worker {} left", c.id);
-                    false
-                }
-                Ok(_) => {
-                    crate::info!(
-                        "transport: worker {} sent data between rounds; dropping",
-                        c.id
-                    );
-                    false
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => true,
-                Err(e) => {
-                    crate::info!("transport: worker {} lost ({e})", c.id);
-                    false
-                }
-            };
-            alive && c.stream.inner.set_nonblocking(false).is_ok()
-        });
+        }
+        // join outside the fleet lock: an exiting reader takes it to
+        // publish its death
+        for mut slot in gone {
+            slot.conn.shut();
+            if let Some(h) = slot.reader.take() {
+                let _ = h.join();
+            }
+        }
     }
 
     /// Accept every worker waiting to join. With no workers connected at
@@ -332,15 +646,14 @@ impl TcpTransport {
     fn accept_joins(&mut self, exec: &RoundExec<'_>) -> Result<()> {
         loop {
             match self.listener.accept() {
-                Ok((stream, peer)) => match self.handshake(stream, exec) {
-                    Ok(conn) => self.conns.push(conn),
-                    Err(e) => {
+                Ok((stream, peer)) => {
+                    if let Err(e) = self.handshake(stream, exec) {
                         // a broken joiner must not take the round down
                         crate::info!("transport: rejected join from {peer}: {e:#}");
                     }
-                },
+                }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    if !self.conns.is_empty() {
+                    if self.workers_connected() > 0 {
                         return Ok(());
                     }
                     // no workers at all: block until one arrives (the
@@ -350,18 +663,75 @@ impl TcpTransport {
                     self.listener.set_nonblocking(false)?;
                     let accept = self.listener.accept();
                     self.listener.set_nonblocking(true)?;
-                    let (stream, peer) =
-                        accept.context("waiting for a worker connection")?;
-                    match self.handshake(stream, exec) {
-                        Ok(conn) => self.conns.push(conn),
-                        Err(e) => {
-                            crate::info!("transport: rejected join from {peer}: {e:#}");
-                        }
+                    let (stream, peer) = accept.context("waiting for a worker connection")?;
+                    if let Err(e) = self.handshake(stream, exec) {
+                        crate::info!("transport: rejected join from {peer}: {e:#}");
                     }
                 }
                 Err(e) => return Err(e).context("accepting worker connection"),
             }
         }
+    }
+
+    /// Broadcast the round start to every usable connection, deltaing
+    /// against each connection's last-sent state under v3. Returns the
+    /// total dispatch slots across the connections that took the frame.
+    fn broadcast_round_start(&mut self, exec: &RoundExec<'_>) -> Result<usize> {
+        let full = Arc::new(wire::encode_state_bytes(exec.global)?);
+        let blob = exec.method.export_round_state();
+        // the v2 payload is both the downgraded-connection frame and the
+        // yardstick `broadcast_raw_bytes` scores the delta path against
+        let v2_payload = wire::round_start_payload(
+            exec.round,
+            exec.kind,
+            exec.personalized,
+            &blob,
+            exec.global,
+        )?;
+        let raw_cost = (wire::FRAME_HEADER + v2_payload.len()) as u64;
+
+        let mut live_slots = 0;
+        let mut slots = self.fleet.slots.lock().unwrap();
+        for slot in slots.iter_mut() {
+            if !slot.conn.usable() {
+                continue;
+            }
+            let payload = if slot.conn.proto >= 3 {
+                let base = slot
+                    .sent
+                    .as_ref()
+                    .map(|(round, bytes)| (*round, bytes.as_slice()));
+                let frame =
+                    wire::build_state_frame(&full, base, self.opts.delta, self.opts.compress);
+                wire::round_start3_payload(
+                    exec.round,
+                    exec.kind,
+                    exec.personalized,
+                    &blob,
+                    &frame,
+                )?
+            } else {
+                v2_payload.clone()
+            };
+            match slot.conn.send(wire::MSG_ROUND_START, &[&payload]) {
+                Ok(()) => {
+                    self.stats.broadcast_bytes.fetch_add(
+                        (wire::FRAME_HEADER + payload.len()) as u64,
+                        Ordering::Relaxed,
+                    );
+                    self.stats
+                        .broadcast_raw_bytes
+                        .fetch_add(raw_cost, Ordering::Relaxed);
+                    slot.sent = Some((exec.round as u64, full.clone()));
+                    live_slots += slot.conn.slots;
+                }
+                Err(e) => {
+                    crate::info!("transport: worker {} lost ({e:#})", slot.conn.id);
+                    slot.conn.shut();
+                }
+            }
+        }
+        Ok(live_slots)
     }
 }
 
@@ -376,26 +746,11 @@ impl RoundTransport for TcpTransport {
         plans: Vec<DevicePlan>,
         consume: &mut dyn FnMut(usize, Result<ClientOutcome>),
     ) -> Result<()> {
-        self.reap_departed();
+        self.reap();
         self.accept_joins(&exec)?;
 
-        // round-start broadcast: method blob + global state; a send
-        // failure means the worker is gone — drop it and carry on
-        let start = wire::round_start_payload(
-            exec.round,
-            exec.kind,
-            exec.personalized,
-            &exec.method.export_round_state(),
-            exec.global,
-        )?;
-        let mut live = Vec::new();
-        for mut conn in self.conns.drain(..) {
-            match wire::send_frame(&mut conn.stream, wire::MSG_ROUND_START, &start) {
-                Ok(()) => live.push(conn),
-                Err(e) => crate::info!("transport: worker {} lost ({e:#})", conn.id),
-            }
-        }
-        if live.is_empty() {
+        let live_slots = self.broadcast_round_start(&exec)?;
+        if live_slots == 0 {
             // every worker vanished between handshake and round start;
             // loop back to blocking accept rather than failing
             return self.run_round(exec, plans, consume);
@@ -404,8 +759,8 @@ impl RoundTransport for TcpTransport {
         // serialize every dispatched plan up front: payload bytes
         // survive their plan, so a dead connection's task can be re-sent
         // elsewhere. A plan whose fate skips compute is resolved here,
-        // server-side, without ever claiming a connection — simulated
-        // dropout stays distinct from real worker death (which keeps its
+        // server-side, without ever claiming a slot — simulated dropout
+        // stays distinct from real worker death (which keeps its
         // re-dispatch path).
         enum Job {
             Synth(ClientOutcome),
@@ -425,34 +780,35 @@ impl RoundTransport for TcpTransport {
             .collect::<Result<_>>()?;
         drop(plans);
 
-        let n_workers = live.len();
-        let conn_pool = ConnPool::new(live);
         {
-            let conn_pool = &conn_pool;
+            let fleet = &*self.fleet;
             let global = exec.global;
             let jobs: Vec<_> = tasks
                 .into_iter()
                 .map(|job| {
                     move || match job {
                         Job::Synth(out) => Ok(out),
-                        Job::Dispatch { device, body } => {
-                            conn_pool.run_task(device, &body, global)
-                        }
+                        Job::Dispatch { device, body } => fleet.run_task(device, &body, global),
                     }
                 })
                 .collect();
-            pool::run_parallel_streaming(n_workers, jobs, consume);
+            // the claim window scales with the total advertised slots,
+            // so every slot on every connection can hold a task at once
+            pool::run_parallel_streaming(live_slots, jobs, consume);
         }
 
         // round end: surviving connections carry over to the next round
-        let mut survivors = Vec::new();
-        for mut conn in conn_pool.into_conns() {
-            match wire::send_frame(&mut conn.stream, wire::MSG_ROUND_END, &[]) {
-                Ok(()) => survivors.push(conn),
-                Err(e) => crate::info!("transport: worker {} lost ({e:#})", conn.id),
+        let slots = self.fleet.slots.lock().unwrap();
+        for slot in slots.iter() {
+            if !slot.conn.usable() {
+                continue;
+            }
+            if let Err(e) = slot.conn.send(wire::MSG_ROUND_END, &[]) {
+                crate::info!("transport: worker {} lost ({e:#})", slot.conn.id);
+                slot.conn.shut();
             }
         }
-        self.conns = survivors;
+        drop(slots);
         Ok(())
     }
 }
@@ -462,8 +818,18 @@ impl Drop for TcpTransport {
         // best-effort goodbye so workers exit promptly instead of
         // waiting on EOF (which they also handle — a killed server
         // never sends this, and workers still exit cleanly)
-        for conn in &mut self.conns {
-            let _ = wire::send_frame(&mut conn.stream, wire::MSG_SHUTDOWN, &[]);
+        let drained: Vec<FleetSlot> = {
+            let mut slots = self.fleet.slots.lock().unwrap();
+            slots.drain(..).collect()
+        };
+        for mut slot in drained {
+            if slot.conn.usable() {
+                let _ = slot.conn.send(wire::MSG_SHUTDOWN, &[]);
+            }
+            slot.conn.shut();
+            if let Some(h) = slot.reader.take() {
+                let _ = h.join();
+            }
         }
     }
 }

@@ -21,6 +21,20 @@
 //! a dying or hostile peer never costs more memory than the bytes that
 //! actually arrived (`tests/transport_corruption.rs` pins this).
 //!
+//! Protocol v3 adds two payload-level conventions on top of the frame
+//! format (which is unchanged):
+//!
+//! - **Tagged dispatch.** `MSG_TASK`, `MSG_OUTCOME`, and
+//!   `MSG_CLIENT_ERR` payloads lead with a u64 task id ([`split_tag`]),
+//!   so several tasks can ride one socket concurrently and each reply
+//!   routes back to the dispatcher that sent its task.
+//! - **Delta/compressed broadcast.** The round-start global state
+//!   travels as a self-describing [`StateFrame`]: full bytes or an XOR
+//!   delta against the last state this connection received, optionally
+//!   run through the in-crate LZ byte compressor, always carrying the
+//!   FNV-1a checksum of the *reconstructed* full bytes so the worker
+//!   asserts exact-bitwise reconstruction before using it.
+//!
 //! Determinism contract: the codecs below round-trip every field
 //! bit-exactly — floats travel as raw IEEE-754 bytes, RNG streams as
 //! their exported state — so a plan executed by a remote worker is the
@@ -40,11 +54,22 @@ use crate::ptls::Upload;
 use crate::stld::DropoutConfig;
 use crate::util::rng::Rng;
 
-/// Protocol revision spoken by this build; the `Hello`/`SessionInit`
-/// handshake rejects any mismatch (bump on ANY codec change).
+/// Protocol revision spoken by this build (bump on ANY codec change).
 /// v2: tasks carry an availability fate, outcomes a `ClientOutcome`
 /// variant tag, and the session config its availability knobs.
-pub const PROTOCOL_VERSION: u64 = 2;
+/// v3: the hello advertises a slot count, task/outcome/client-err
+/// payloads are tagged with a u64 task id, and the round-start global
+/// state is a delta-capable, compressible [`StateFrame`].
+pub const PROTOCOL_VERSION: u64 = 3;
+
+/// Oldest revision the server still speaks: a v2 worker is negotiated
+/// down to one slot, untagged frames, and full uncompressed round
+/// starts (the v2 codecs below are kept verbatim for that path).
+pub const MIN_PROTOCOL_VERSION: u64 = 2;
+
+/// Upper bound on the slot count a hello may advertise; a worker
+/// claiming more is lying or corrupt, not just ambitious.
+pub const MAX_SLOTS: u64 = 4096;
 
 /// Hard cap on one frame's payload. Generous for any realistic
 /// `TrainState` (a "base"-preset global is a few MB) while bounding
@@ -55,7 +80,8 @@ pub const MAX_FRAME: u64 = 1 << 30;
 pub const FRAME_HEADER: usize = ckpt::RPC_MAGIC.len() + 1 + 8;
 
 // ---- frame kinds ----
-/// worker → server: protocol version (first frame on a connection)
+/// worker → server: protocol version + slot count (first frame on a
+/// connection)
 pub const MSG_HELLO: u8 = 1;
 /// server → worker: session config + method factory key
 pub const MSG_SESSION_INIT: u8 = 2;
@@ -86,6 +112,42 @@ pub fn send_frame(w: &mut impl Write, kind: u8, payload: &[u8]) -> Result<()> {
     w.write_all(payload)?;
     w.flush()?;
     Ok(())
+}
+
+/// Reusable frame-assembly buffer for the hot dispatch path: the whole
+/// frame (header + tag + payload sections) is laid out in one held
+/// `Vec` and shipped with a single `write_all`, so steady-state sends
+/// make **zero** heap allocations (`tests/wire_alloc.rs` pins this with
+/// a counting allocator) and one syscall per frame instead of four.
+#[derive(Default)]
+pub struct FrameScratch {
+    buf: Vec<u8>,
+}
+
+impl FrameScratch {
+    pub fn new() -> FrameScratch {
+        FrameScratch { buf: Vec::new() }
+    }
+
+    /// Send one frame whose payload is the concatenation of `sections`
+    /// (e.g. an 8-byte task-id tag followed by a pre-encoded body).
+    pub fn send(&mut self, w: &mut impl Write, kind: u8, sections: &[&[u8]]) -> Result<()> {
+        let len: u64 = sections.iter().map(|s| s.len() as u64).sum();
+        ensure!(
+            len <= MAX_FRAME,
+            "refusing to send a {len} byte frame (MAX_FRAME {MAX_FRAME})"
+        );
+        self.buf.clear();
+        self.buf.extend_from_slice(ckpt::RPC_MAGIC);
+        self.buf.push(kind);
+        self.buf.extend_from_slice(&len.to_le_bytes());
+        for s in sections {
+            self.buf.extend_from_slice(s);
+        }
+        w.write_all(&self.buf)?;
+        w.flush()?;
+        Ok(())
+    }
 }
 
 /// Read one frame. `Ok(None)` is a **clean** end-of-stream exactly at a
@@ -158,17 +220,49 @@ fn finish<R: Read>(r: ckpt::Reader<R>, what: &str) -> Result<()> {
     Ok(())
 }
 
-// ---- Hello ----
+// ---- task-id tag ----
 
-pub fn hello_payload() -> Result<Vec<u8>> {
-    payload(|w| w.u64(PROTOCOL_VERSION))
+/// Split the leading u64 task id off a tagged v3 payload, returning the
+/// id and the untagged body. The tag rides *outside* the `ckpt` codec
+/// so replies can be routed to their dispatcher before (and regardless
+/// of whether) the body decodes.
+pub fn split_tag(body: &[u8]) -> Result<(u64, &[u8])> {
+    ensure!(
+        body.len() >= 8,
+        "tagged frame too short: {} bytes (need an 8-byte task id)",
+        body.len()
+    );
+    let id = u64::from_le_bytes(body[..8].try_into().unwrap());
+    Ok((id, &body[8..]))
 }
 
-pub fn read_hello(body: &[u8]) -> Result<u64> {
+// ---- Hello ----
+
+/// What a worker's first frame claims: the protocol revision it speaks
+/// and how many tasks it will run concurrently per connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hello {
+    pub version: u64,
+    pub slots: u64,
+}
+
+pub fn hello_payload(slots: u64) -> Result<Vec<u8>> {
+    payload(|w| {
+        w.u64(PROTOCOL_VERSION)?;
+        w.u64(slots)
+    })
+}
+
+/// Decode a hello honestly: the version is reported as sent (foreign
+/// revisions included, so the caller can name them in its error), and a
+/// legacy v2 hello — exactly the 8-byte version, no slot field — decodes
+/// as one slot.
+pub fn read_hello(body: &[u8]) -> Result<Hello> {
     let mut r = reader(body);
-    let ver = r.u64()?;
+    let version = r.u64()?;
+    let slots = if r.remaining() == 0 { 1 } else { r.u64()? };
     finish(r, "hello")?;
-    Ok(ver)
+    Ok(Hello { version, slots })
 }
 
 // ---- SessionInit ----
@@ -192,6 +286,278 @@ pub fn read_session_init(body: &[u8]) -> Result<(FedConfig, String)> {
     Ok((cfg, key))
 }
 
+// ---- FNV-1a checksum ----
+
+/// FNV-1a 64 over a byte slice: cheap, dependency-free, and plenty to
+/// catch a mis-applied delta or a corrupt compressed block (framing
+/// errors are already caught structurally).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---- LZ byte compressor ----
+//
+// A deliberately small LZSS variant (greedy, hash-chain-free) tuned for
+// the broadcast path: XOR deltas of a slowly-changing `TrainState` are
+// mostly zero bytes, which this encodes as long self-referential
+// matches. Token stream:
+//
+//   ctrl 0x00..=0x7F : literal run of (ctrl + 1) bytes, raw bytes follow
+//   ctrl 0x80..=0xFF : match of ((ctrl & 0x7F) + 4) bytes at a u16 LE
+//                      distance (1..=65535) back into the output
+//
+// Overlapping matches are legal (distance < length), which is how a run
+// of identical bytes compresses: one literal + one long match.
+
+const LZ_MIN_MATCH: usize = 4;
+const LZ_MAX_MATCH: usize = 0x7F + LZ_MIN_MATCH; // 131
+const LZ_MAX_DIST: usize = u16::MAX as usize;
+const LZ_HASH_BITS: u32 = 15;
+
+fn lz_hash(window: &[u8]) -> usize {
+    let v = u32::from_le_bytes([window[0], window[1], window[2], window[3]]);
+    (v.wrapping_mul(2_654_435_761) >> (32 - LZ_HASH_BITS)) as usize
+}
+
+fn lz_flush_literals(out: &mut Vec<u8>, mut lits: &[u8]) {
+    while !lits.is_empty() {
+        let n = lits.len().min(0x7F + 1);
+        out.push((n - 1) as u8);
+        out.extend_from_slice(&lits[..n]);
+        lits = &lits[n..];
+    }
+}
+
+/// Compress `src`. Always succeeds; the caller compares lengths and
+/// keeps the raw bytes when compression does not pay (incompressible
+/// input costs at most `len/128 + 1` ctrl bytes of overhead here, but
+/// the self-describing frame never ships the larger form).
+pub fn lz_compress(src: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(src.len() / 2 + 16);
+    let mut table = vec![usize::MAX; 1 << LZ_HASH_BITS];
+    let mut i = 0;
+    let mut lit_start = 0;
+    while i < src.len() {
+        if i + LZ_MIN_MATCH <= src.len() {
+            let h = lz_hash(&src[i..]);
+            let cand = table[h];
+            table[h] = i;
+            if cand != usize::MAX
+                && i - cand <= LZ_MAX_DIST
+                && src[cand..cand + LZ_MIN_MATCH] == src[i..i + LZ_MIN_MATCH]
+            {
+                let mut len = LZ_MIN_MATCH;
+                while len < LZ_MAX_MATCH && i + len < src.len() && src[cand + len] == src[i + len] {
+                    len += 1;
+                }
+                lz_flush_literals(&mut out, &src[lit_start..i]);
+                out.push(0x80 | (len - LZ_MIN_MATCH) as u8);
+                out.extend_from_slice(&((i - cand) as u16).to_le_bytes());
+                i += len;
+                lit_start = i;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    lz_flush_literals(&mut out, &src[lit_start..]);
+    out
+}
+
+/// Decompress exactly `expected_len` bytes. Fully bounded: truncated
+/// tokens, out-of-window distances, and output overruns are clean
+/// errors, and nothing is allocated beyond the declared (capped)
+/// output size.
+pub fn lz_decompress(src: &[u8], expected_len: u64) -> Result<Vec<u8>> {
+    ensure!(
+        expected_len <= MAX_FRAME,
+        "compressed block claims {expected_len} decompressed bytes (MAX_FRAME {MAX_FRAME})"
+    );
+    let expected = expected_len as usize;
+    let mut out = Vec::with_capacity(expected);
+    let mut i = 0;
+    while i < src.len() {
+        let ctrl = src[i];
+        i += 1;
+        if ctrl & 0x80 == 0 {
+            let n = ctrl as usize + 1;
+            ensure!(
+                i + n <= src.len(),
+                "compressed block truncated inside a {n}-byte literal run"
+            );
+            ensure!(
+                out.len() + n <= expected,
+                "compressed block overruns its declared {expected} bytes"
+            );
+            out.extend_from_slice(&src[i..i + n]);
+            i += n;
+        } else {
+            let len = (ctrl & 0x7F) as usize + LZ_MIN_MATCH;
+            ensure!(
+                i + 2 <= src.len(),
+                "compressed block truncated inside a match token"
+            );
+            let dist = u16::from_le_bytes([src[i], src[i + 1]]) as usize;
+            i += 2;
+            ensure!(
+                dist > 0 && dist <= out.len(),
+                "compressed block match reaches {dist} bytes back with only {} decoded",
+                out.len()
+            );
+            ensure!(
+                out.len() + len <= expected,
+                "compressed block overruns its declared {expected} bytes"
+            );
+            // byte-by-byte so overlapping matches (dist < len) replicate
+            let start = out.len() - dist;
+            for k in 0..len {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+    }
+    ensure!(
+        out.len() == expected,
+        "compressed block decodes to {} bytes, declared {expected}",
+        out.len()
+    );
+    Ok(out)
+}
+
+// ---- global-state framing (full | delta, raw | compressed) ----
+
+/// Canonical byte encoding of a `TrainState` (the `ckpt` train-state
+/// codec over a plain vector). Within a session the encoding has
+/// constant length — shapes never change round-to-round — which is what
+/// makes a byte-wise XOR delta against the previous round valid.
+pub fn encode_state_bytes(state: &TrainState) -> Result<Vec<u8>> {
+    let mut w = ckpt::Writer::new(Vec::new());
+    ckpt::write_train_state(&mut w, state)?;
+    Ok(w.into_inner())
+}
+
+pub fn decode_state_bytes(bytes: &[u8]) -> Result<TrainState> {
+    let mut r = reader(bytes);
+    let state = ckpt::read_train_state(&mut r)?;
+    finish(r, "train-state")?;
+    Ok(state)
+}
+
+/// XOR delta of two equal-length byte strings; `None` when the lengths
+/// differ (shape change — the caller falls back to a full broadcast).
+pub fn xor_delta(base: &[u8], new: &[u8]) -> Option<Vec<u8>> {
+    if base.len() != new.len() {
+        return None;
+    }
+    Some(base.iter().zip(new).map(|(a, b)| a ^ b).collect())
+}
+
+/// Self-describing encoding of one round's global state: full bytes or
+/// an XOR delta against `base_round`, raw or LZ-compressed, plus the
+/// declared pre-compression length and the FNV-1a checksum of the
+/// reconstructed **full** bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StateFrame {
+    /// `Some(r)` ⇒ `data` (after decompression) is an XOR delta against
+    /// the full state bytes of round `r`; `None` ⇒ `data` is the full
+    /// state.
+    pub base_round: Option<u64>,
+    pub compressed: bool,
+    /// length of `data` before compression (== the full-state length,
+    /// since a delta is the same length as what it patches)
+    pub raw_len: u64,
+    /// `fnv1a` of the reconstructed full state bytes
+    pub checksum: u64,
+    pub data: Vec<u8>,
+}
+
+/// Build the cheapest legal frame for `full`, given the last full state
+/// this connection is known to hold (`base`). The delta is only taken
+/// when enabled *and* the base length matches; the compressed form is
+/// only used when it is strictly smaller.
+pub fn build_state_frame(
+    full: &[u8],
+    base: Option<(u64, &[u8])>,
+    delta_on: bool,
+    compress_on: bool,
+) -> StateFrame {
+    let checksum = fnv1a(full);
+    let (base_round, raw) = match base {
+        Some((round, base_bytes)) if delta_on => match xor_delta(base_bytes, full) {
+            Some(delta) => (Some(round), delta),
+            None => (None, full.to_vec()),
+        },
+        _ => (None, full.to_vec()),
+    };
+    let raw_len = raw.len() as u64;
+    if compress_on {
+        let packed = lz_compress(&raw);
+        if packed.len() < raw.len() {
+            return StateFrame {
+                base_round,
+                compressed: true,
+                raw_len,
+                checksum,
+                data: packed,
+            };
+        }
+    }
+    StateFrame {
+        base_round,
+        compressed: false,
+        raw_len,
+        checksum,
+        data: raw,
+    }
+}
+
+/// Worker-side inverse of [`build_state_frame`]: decompress, apply the
+/// delta against the held base (rejecting a missing, wrong-round, or
+/// wrong-length base cleanly), and assert the checksum so the
+/// reconstruction is known exact-bitwise before anything uses it.
+pub fn reconstruct_state(frame: &StateFrame, base: Option<(u64, &[u8])>) -> Result<Vec<u8>> {
+    let raw = if frame.compressed {
+        lz_decompress(&frame.data, frame.raw_len)?
+    } else {
+        ensure!(
+            frame.data.len() as u64 == frame.raw_len,
+            "state frame declares {} raw bytes but carries {}",
+            frame.raw_len,
+            frame.data.len()
+        );
+        frame.data.clone()
+    };
+    let full = match frame.base_round {
+        None => raw,
+        Some(want) => {
+            let (held, base_bytes) = base.context(
+                "delta broadcast but this worker holds no base state (expected a full broadcast)",
+            )?;
+            ensure!(
+                held == want,
+                "delta broadcast is against round {want} but this worker's base is round {held}"
+            );
+            ensure!(
+                base_bytes.len() == raw.len(),
+                "delta broadcast is {} bytes against a {}-byte base",
+                raw.len(),
+                base_bytes.len()
+            );
+            base_bytes.iter().zip(&raw).map(|(a, b)| a ^ b).collect()
+        }
+    };
+    ensure!(
+        fnv1a(&full) == frame.checksum,
+        "reconstructed global state fails its checksum (wire corruption or a bad delta base)"
+    );
+    Ok(full)
+}
+
 // ---- RoundStart ----
 
 pub struct RoundStartMsg {
@@ -207,6 +573,10 @@ pub struct RoundStartMsg {
     pub global: TrainState,
 }
 
+/// Legacy v2 round-start codec: the full `TrainState`, always, inline.
+/// Kept verbatim for connections negotiated down to v2 (and as the
+/// yardstick `benches/round_net.rs` measures the delta encoding
+/// against).
 pub fn round_start_payload(
     round: usize,
     kind: &str,
@@ -234,6 +604,78 @@ pub fn read_round_start(body: &[u8]) -> Result<RoundStartMsg> {
     };
     finish(r, "round-start")?;
     Ok(msg)
+}
+
+/// v3 round start: the global travels as a [`StateFrame`] instead of an
+/// inline `TrainState`; the worker reconstructs and checksum-verifies
+/// the full bytes before decoding.
+pub struct RoundStart3Msg {
+    pub round: usize,
+    pub kind: String,
+    pub personalized: bool,
+    pub method_blob: Vec<u8>,
+    pub state: StateFrame,
+}
+
+pub fn round_start3_payload(
+    round: usize,
+    kind: &str,
+    personalized: bool,
+    method_blob: &[u8],
+    state: &StateFrame,
+) -> Result<Vec<u8>> {
+    payload(|w| {
+        w.u64(round as u64)?;
+        w.string(kind)?;
+        w.bool(personalized)?;
+        w.bytes(method_blob)?;
+        match state.base_round {
+            None => w.u8(0)?,
+            Some(base) => {
+                w.u8(1)?;
+                w.u64(base)?;
+            }
+        }
+        w.u8(if state.compressed { 1 } else { 0 })?;
+        w.u64(state.raw_len)?;
+        w.u64(state.checksum)?;
+        w.bytes(&state.data)
+    })
+}
+
+pub fn read_round_start3(body: &[u8]) -> Result<RoundStart3Msg> {
+    let mut r = reader(body);
+    let round = r.u64()? as usize;
+    let kind = r.string()?;
+    let personalized = r.bool()?;
+    let method_blob = r.bytes()?;
+    let base_round = match r.u8()? {
+        0 => None,
+        1 => Some(r.u64()?),
+        t => bail!("corrupt round-start frame: state tag {t} (want 0=full or 1=delta)"),
+    };
+    let compressed = match r.u8()? {
+        0 => false,
+        1 => true,
+        t => bail!("corrupt round-start frame: compression tag {t} (want 0=raw or 1=lz)"),
+    };
+    let raw_len = r.u64()?;
+    let checksum = r.u64()?;
+    let data = r.bytes()?;
+    finish(r, "round-start")?;
+    Ok(RoundStart3Msg {
+        round,
+        kind,
+        personalized,
+        method_blob,
+        state: StateFrame {
+            base_round,
+            compressed,
+            raw_len,
+            checksum,
+            data,
+        },
+    })
 }
 
 // ---- Task ----
@@ -653,17 +1095,195 @@ mod tests {
     #[test]
     fn frames_round_trip() {
         let mut buf = Vec::new();
-        send_frame(&mut buf, MSG_HELLO, &hello_payload().unwrap()).unwrap();
+        send_frame(&mut buf, MSG_HELLO, &hello_payload(4).unwrap()).unwrap();
         send_frame(&mut buf, MSG_ROUND_END, &[]).unwrap();
         let mut r = &buf[..];
         let (kind, body) = recv_frame(&mut r).unwrap().unwrap();
         assert_eq!(kind, MSG_HELLO);
-        assert_eq!(read_hello(&body).unwrap(), PROTOCOL_VERSION);
+        assert_eq!(
+            read_hello(&body).unwrap(),
+            Hello {
+                version: PROTOCOL_VERSION,
+                slots: 4
+            }
+        );
         let (kind, body) = recv_frame(&mut r).unwrap().unwrap();
         assert_eq!(kind, MSG_ROUND_END);
         assert!(body.is_empty());
         // clean EOF at the frame boundary
         assert!(recv_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn legacy_v2_hello_decodes_as_one_slot() {
+        // a v2 worker's hello is exactly the 8-byte version
+        let hello = read_hello(&2u64.to_le_bytes()).unwrap();
+        assert_eq!(hello, Hello { version: 2, slots: 1 });
+    }
+
+    #[test]
+    fn frame_scratch_matches_send_frame_bytes() {
+        let body = hello_payload(7).unwrap();
+        let mut plain = Vec::new();
+        send_frame(&mut plain, MSG_HELLO, &body).unwrap();
+        let mut scratch = FrameScratch::new();
+        let mut out = Vec::new();
+        // split the payload across sections: the wire bytes must not care
+        scratch
+            .send(&mut out, MSG_HELLO, &[&body[..3], &body[3..]])
+            .unwrap();
+        assert_eq!(plain, out);
+    }
+
+    #[test]
+    fn split_tag_routes_and_rejects_short_bodies() {
+        let mut tagged = 42u64.to_le_bytes().to_vec();
+        tagged.extend_from_slice(b"body");
+        let (id, body) = split_tag(&tagged).unwrap();
+        assert_eq!(id, 42);
+        assert_eq!(body, b"body");
+        let err = split_tag(&[1, 2, 3]).unwrap_err();
+        assert!(err.to_string().contains("task id"), "got: {err}");
+    }
+
+    #[test]
+    fn lz_round_trips_and_compresses_sparse_deltas() {
+        // a mostly-zero delta (what round-over-round XOR produces)
+        let mut delta = vec![0u8; 4096];
+        for i in (0..delta.len()).step_by(97) {
+            delta[i] = (i % 251) as u8;
+        }
+        let packed = lz_compress(&delta);
+        assert!(
+            packed.len() < delta.len() / 4,
+            "sparse delta should compress hard: {} of {}",
+            packed.len(),
+            delta.len()
+        );
+        assert_eq!(lz_decompress(&packed, delta.len() as u64).unwrap(), delta);
+
+        // incompressible-ish input still round-trips
+        let mut rng = Rng::seed_from(11);
+        let noise: Vec<u8> = (0..1500).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        let packed = lz_compress(&noise);
+        assert_eq!(lz_decompress(&packed, noise.len() as u64).unwrap(), noise);
+
+        // empty input
+        assert!(lz_compress(&[]).is_empty());
+        assert!(lz_decompress(&[], 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn lz_decompress_rejects_corruption_cleanly() {
+        let src = vec![7u8; 1000];
+        let packed = lz_compress(&src);
+        // truncation anywhere inside the token stream
+        for cut in 0..packed.len() {
+            assert!(
+                lz_decompress(&packed[..cut], src.len() as u64).is_err(),
+                "truncation at {cut} must not decode to the declared length"
+            );
+        }
+        // a match token with distance 0
+        let bad = vec![0x00, 0xAB, 0x80, 0, 0];
+        assert!(lz_decompress(&bad, 5).is_err());
+        // declared length overrun
+        assert!(lz_decompress(&packed, 10).is_err());
+        // hostile declared length is capped before allocation
+        assert!(lz_decompress(&[], u64::MAX).is_err());
+    }
+
+    #[test]
+    fn state_frame_full_and_delta_reconstruct_bitwise() {
+        let a = encode_state_bytes(&state(1.0)).unwrap();
+        let b = encode_state_bytes(&state(1.0625)).unwrap();
+        assert_eq!(a.len(), b.len(), "same shapes must encode to the same length");
+
+        // full, uncompressed
+        let f = build_state_frame(&b, None, true, false);
+        assert_eq!(f.base_round, None);
+        assert!(!f.compressed);
+        assert_eq!(reconstruct_state(&f, None).unwrap(), b);
+
+        // delta + compression against round 4's bytes
+        let f = build_state_frame(&b, Some((4, &a)), true, true);
+        assert_eq!(f.base_round, Some(4));
+        assert_eq!(reconstruct_state(&f, Some((4, &a))).unwrap(), b);
+
+        // the delta should beat the full encoding once compressed
+        if f.compressed {
+            assert!(f.data.len() < b.len());
+        }
+
+        // delta disabled: full frame even when a base is offered
+        let f = build_state_frame(&b, Some((4, &a)), false, false);
+        assert_eq!(f.base_round, None);
+        assert_eq!(reconstruct_state(&f, None).unwrap(), b);
+    }
+
+    #[test]
+    fn state_frame_rejects_bad_bases_and_corruption() {
+        let a = encode_state_bytes(&state(1.0)).unwrap();
+        let b = encode_state_bytes(&state(2.0)).unwrap();
+        let f = build_state_frame(&b, Some((4, &a)), true, true);
+
+        // no base held
+        let err = reconstruct_state(&f, None).unwrap_err();
+        assert!(err.to_string().contains("no base state"), "got: {err}");
+        // wrong base round
+        let err = reconstruct_state(&f, Some((3, &a))).unwrap_err();
+        assert!(err.to_string().contains("round 4"), "got: {err}");
+        // right round, wrong bytes: the checksum catches it
+        let c = encode_state_bytes(&state(9.0)).unwrap();
+        let err = reconstruct_state(&f, Some((4, &c))).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "got: {err}");
+        // flipped payload byte: checksum again
+        let mut bad = f.clone();
+        if let Some(byte) = bad.data.first_mut() {
+            *byte ^= 0xFF;
+        }
+        assert!(reconstruct_state(&bad, Some((4, &a))).is_err());
+    }
+
+    #[test]
+    fn round_start3_round_trips_both_forms() {
+        let global = state(1.5);
+        let full = encode_state_bytes(&global).unwrap();
+        let base = encode_state_bytes(&state(1.0)).unwrap();
+        for frame in [
+            build_state_frame(&full, None, true, true),
+            build_state_frame(&full, Some((6, &base)), true, true),
+            build_state_frame(&full, None, true, false),
+        ] {
+            let body =
+                round_start3_payload(7, "lora", true, b"blob", &frame).unwrap();
+            let msg = read_round_start3(&body).unwrap();
+            assert_eq!(msg.round, 7);
+            assert_eq!(msg.kind, "lora");
+            assert!(msg.personalized);
+            assert_eq!(msg.method_blob, b"blob");
+            assert_eq!(msg.state, frame);
+            let held = frame.base_round.map(|r| (r, &base[..]));
+            let bytes = reconstruct_state(&msg.state, held).unwrap();
+            assert_eq!(decode_state_bytes(&bytes).unwrap().peft, global.peft);
+        }
+    }
+
+    #[test]
+    fn round_start3_rejects_bad_tags() {
+        let frame = build_state_frame(b"0123456789", None, false, false);
+        let body = round_start3_payload(1, "lora", false, b"", &frame).unwrap();
+        // the state tag sits right after round(8) + kind(8+4) + bool(1) +
+        // blob len(8); flip it to an unknown value
+        let tag_at = 8 + 8 + 4 + 1 + 8;
+        let mut bad = body.clone();
+        bad[tag_at] = 9;
+        let err = read_round_start3(&bad).unwrap_err();
+        assert!(err.to_string().contains("state tag"), "got: {err}");
+        let mut bad = body.clone();
+        bad[tag_at + 1] = 7; // compression tag (full form: no base round)
+        let err = read_round_start3(&bad).unwrap_err();
+        assert!(err.to_string().contains("compression tag"), "got: {err}");
     }
 
     #[test]
@@ -852,7 +1472,7 @@ mod tests {
 
     #[test]
     fn trailing_garbage_is_rejected() {
-        let mut body = hello_payload().unwrap();
+        let mut body = hello_payload(1).unwrap();
         body.push(0xAB);
         let err = read_hello(&body).unwrap_err();
         assert!(err.to_string().contains("trailing"), "got: {err}");

@@ -10,18 +10,39 @@
 //! back bit-exactly over the wire. Between rounds a worker may leave by
 //! closing its socket (a clean frame-boundary EOF); joining late is just
 //! connecting while the server is between rounds.
+//!
+//! Pipelining: the hello advertises `--slots` concurrent task slots
+//! (default: host parallelism). Each round runs a frame-driver loop on
+//! the connection's read half feeding a bounded crew of executor
+//! threads; tagged outcomes go back through a shared write half, so up
+//! to `slots` plans are in flight on the one socket at any moment.
+//! Execution order does not affect results — plans are pure functions
+//! of `(DevicePlan, global)` and the server re-orders outcomes into
+//! selection order — so pipelining preserves byte-identity.
+//!
+//! Broadcast reconstruction: the round-start global arrives as a
+//! [`wire::StateFrame`] (full, or an XOR delta against the previous
+//! round's bytes, either form optionally LZ-compressed). The worker
+//! keeps the last reconstructed full bytes as the next delta base and
+//! checksum-verifies every reconstruction, so the state every task
+//! materializes from is known bit-identical to the server's.
 
+use std::collections::VecDeque;
 use std::net::TcpStream;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::fed::client::{ClientCtx, ClientTask};
+use crate::fed::device::Population;
 use crate::fed::engine::SessionStatics;
+use crate::fed::round::DevicePlan;
 use crate::methods;
 use crate::runtime::Backend;
+use crate::util::pool;
 
 use super::wire;
 
@@ -33,6 +54,9 @@ pub struct WorkerOptions {
     /// keep retrying the initial connect for this long (the server may
     /// not be listening yet when the worker fleet starts)
     pub connect_retry_secs: u64,
+    /// concurrent task slots advertised in the hello (`--slots`);
+    /// clamped to `1..=MAX_SLOTS`. Default: host parallelism.
+    pub slots: usize,
 }
 
 impl Default for WorkerOptions {
@@ -40,6 +64,7 @@ impl Default for WorkerOptions {
         WorkerOptions {
             max_rounds: None,
             connect_retry_secs: 10,
+            slots: pool::default_workers(),
         }
     }
 }
@@ -52,20 +77,186 @@ pub struct WorkerReport {
     pub tasks_run: usize,
 }
 
-/// Connect, retrying while the server comes up.
+/// First connect delay of the capped exponential backoff schedule.
+const CONNECT_BACKOFF_START: Duration = Duration::from_millis(50);
+/// Backoff cap: once reached, retries stay at this cadence.
+const CONNECT_BACKOFF_CAP: Duration = Duration::from_millis(2000);
+
+/// Connect, retrying while the server comes up. The schedule is a
+/// deterministic capped doubling (50ms, 100ms, ... 2s, 2s, ...) — no
+/// jitter, so a fleet of workers probes identically and test timing is
+/// reproducible — until `retry_secs` has elapsed.
 fn connect(addr: &str, retry_secs: u64) -> Result<TcpStream> {
     let deadline = Instant::now() + Duration::from_secs(retry_secs);
+    let mut delay = CONNECT_BACKOFF_START;
+    let mut attempts: u64 = 0;
     loop {
+        attempts += 1;
         match TcpStream::connect(addr) {
-            Ok(s) => return Ok(s),
+            Ok(s) => {
+                if attempts > 1 {
+                    crate::info!("worker: connected to {addr} (attempt {attempts})");
+                }
+                return Ok(s);
+            }
             Err(e) => {
                 if Instant::now() >= deadline {
-                    return Err(e).with_context(|| format!("connecting to round server {addr}"));
+                    return Err(e).with_context(|| {
+                        format!(
+                            "connecting to round server {addr} \
+                             ({attempts} attempts over {retry_secs}s)"
+                        )
+                    });
                 }
-                thread::sleep(Duration::from_millis(200));
+                crate::info!(
+                    "worker: connect to {addr} failed (attempt {attempts}: {e}); \
+                     retrying in {delay:?}"
+                );
+                thread::sleep(delay);
+                delay = (delay * 2).min(CONNECT_BACKOFF_CAP);
             }
         }
     }
+}
+
+/// How a served round ended.
+enum RoundEnd {
+    /// `MSG_ROUND_END`: wait for the next round
+    End,
+    /// `MSG_SHUTDOWN`: the session is over
+    Shutdown,
+    /// clean close mid-round: the server was killed or finished;
+    /// nothing to clean up (outcomes already sent were absorbed or
+    /// lost server-side)
+    ServerGone,
+}
+
+/// Bounded handoff from the frame driver to the executor crew.
+struct TaskQueue {
+    state: Mutex<(VecDeque<(u64, DevicePlan)>, bool)>,
+    cv: Condvar,
+}
+
+impl TaskQueue {
+    fn new() -> TaskQueue {
+        TaskQueue {
+            state: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, id: u64, plan: DevicePlan) {
+        self.state.lock().unwrap().0.push_back((id, plan));
+        self.cv.notify_one();
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().1 = true;
+        self.cv.notify_all();
+    }
+
+    /// Next task, blocking; `None` once closed and drained.
+    fn pop(&self) -> Option<(u64, DevicePlan)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.0.pop_front() {
+                return Some(item);
+            }
+            if st.1 {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+/// Serve one round: drive the read half (tasks in), execute on `slots`
+/// scoped threads, send tagged outcomes through the shared write half.
+/// `tasks_run` counts plans actually executed.
+fn serve_round(
+    reader: &mut TcpStream,
+    writer: &Mutex<(TcpStream, wire::FrameScratch)>,
+    task: &ClientTask<'_>,
+    pop: &Population,
+    slots: usize,
+    tasks_run: &mut usize,
+) -> Result<RoundEnd> {
+    let queue = TaskQueue::new();
+    let send_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let ran = AtomicUsize::new(0);
+
+    let (end, joins) = thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(slots);
+        for _ in 0..slots {
+            let queue = &queue;
+            let send_err = &send_err;
+            let ran = &ran;
+            handles.push(scope.spawn(move || {
+                while let Some((id, plan)) = queue.pop() {
+                    ran.fetch_add(1, Ordering::Relaxed);
+                    let result = task.run(plan);
+                    // deterministic application failure: every worker
+                    // would fail this plan the same way, so report it
+                    // instead of dying (the server fails the round, not
+                    // the connection)
+                    let tag = id.to_le_bytes();
+                    let sent = (|| -> Result<()> {
+                        let (kind, body) = match result {
+                            Ok(out) => (wire::MSG_OUTCOME, wire::outcome_payload(&out)?),
+                            Err(e) => (wire::MSG_CLIENT_ERR, wire::client_err_payload(&e)?),
+                        };
+                        let mut guard = writer.lock().unwrap();
+                        let (stream, scratch) = &mut *guard;
+                        scratch.send(stream, kind, &[&tag, &body])
+                    })();
+                    if let Err(e) = sent {
+                        let mut slot = send_err.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                        // the connection is gone: stop the crew
+                        queue.close();
+                        return;
+                    }
+                }
+            }));
+        }
+
+        // frame driver: the only reader of the socket this round
+        let end = loop {
+            match wire::recv_frame(reader) {
+                Ok(None) => break Ok(RoundEnd::ServerGone),
+                Ok(Some((kind, body))) => match kind {
+                    wire::MSG_TASK => {
+                        let decoded = wire::split_tag(&body).and_then(|(id, inner)| {
+                            Ok((id, wire::read_task(inner)?.into_plan(pop)?))
+                        });
+                        match decoded {
+                            Ok((id, plan)) => queue.push(id, plan),
+                            Err(e) => break Err(e),
+                        }
+                    }
+                    wire::MSG_ROUND_END => break Ok(RoundEnd::End),
+                    wire::MSG_SHUTDOWN => break Ok(RoundEnd::Shutdown),
+                    k => break Err(anyhow!("expected task or round-end, got frame kind {k}")),
+                },
+                Err(e) => break Err(e),
+            }
+        };
+        queue.close();
+        let joins: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
+        (end, joins)
+    });
+    for join in joins {
+        if let Err(payload) = join {
+            std::panic::resume_unwind(payload);
+        }
+    }
+    *tasks_run += ran.load(Ordering::Relaxed);
+    if let Some(e) = send_err.lock().unwrap().take() {
+        return Err(e).context("sending a task outcome");
+    }
+    end
 }
 
 /// Run one worker process's client loop against a round server.
@@ -76,12 +267,14 @@ pub fn run_worker(
     runtime: Arc<dyn Backend>,
     opts: WorkerOptions,
 ) -> Result<WorkerReport> {
-    let mut stream = connect(addr, opts.connect_retry_secs)?;
-    stream.set_nodelay(true).ok();
+    let slots = opts.slots.clamp(1, wire::MAX_SLOTS as usize);
+    let mut reader = connect(addr, opts.connect_retry_secs)?;
+    reader.set_nodelay(true).ok();
+    let writer_half = reader.try_clone().context("cloning server socket")?;
 
-    // ---- handshake ----
-    wire::send_frame(&mut stream, wire::MSG_HELLO, &wire::hello_payload()?)?;
-    let (kind, body) = wire::recv_frame(&mut stream)?
+    // ---- handshake (sequential: either half may carry it) ----
+    wire::send_frame(&mut reader, wire::MSG_HELLO, &wire::hello_payload(slots as u64)?)?;
+    let (kind, body) = wire::recv_frame(&mut reader)?
         .context("server closed the connection during the handshake")?;
     if kind != wire::MSG_SESSION_INIT {
         bail!("expected session-init after hello, got frame kind {kind}");
@@ -107,6 +300,10 @@ pub fn run_worker(
         dataset: &statics.dataset,
     };
 
+    let writer = Mutex::new((writer_half, wire::FrameScratch::new()));
+    // last reconstructed full global-state bytes: the delta base for
+    // the next round-start broadcast
+    let mut last_state: Option<(u64, Vec<u8>)> = None;
     let mut report = WorkerReport {
         rounds_served: 0,
         tasks_run: 0,
@@ -114,15 +311,22 @@ pub fn run_worker(
 
     // ---- round loop ----
     loop {
-        let Some((kind, body)) = wire::recv_frame(&mut stream)? else {
+        let Some((kind, body)) = wire::recv_frame(&mut reader)? else {
             // server closed between rounds (killed or finished)
             return Ok(report);
         };
         let rs = match kind {
             wire::MSG_SHUTDOWN => return Ok(report),
-            wire::MSG_ROUND_START => wire::read_round_start(&body)?,
+            wire::MSG_ROUND_START => wire::read_round_start3(&body)?,
             k => bail!("expected round-start, got frame kind {k}"),
         };
+        // reconstruct the global bit-exactly (checksum-asserted) and
+        // keep the bytes as the next round's delta base
+        let held = last_state.as_ref().map(|(round, bytes)| (*round, &bytes[..]));
+        let full = wire::reconstruct_state(&rs.state, held)?;
+        let global = wire::decode_state_bytes(&full)?;
+        last_state = Some((rs.round as u64, full));
+
         // the method's cross-round state (bandit posteriors, schedules)
         // so read-only hooks see exactly what the server sees
         method.import_round_state(&rs.method_blob)?;
@@ -132,42 +336,21 @@ pub fn run_worker(
             rs.round,
             &rs.kind,
             rs.personalized,
-            &rs.global,
+            &global,
         );
 
-        // ---- task loop ----
-        loop {
-            let Some((kind, body)) = wire::recv_frame(&mut stream)? else {
-                // mid-round server death: tasks already returned were
-                // absorbed or lost server-side; nothing to clean up here
-                return Ok(report);
-            };
-            match kind {
-                wire::MSG_TASK => {
-                    let plan = wire::read_task(&body)?.into_plan(&statics.population)?;
-                    report.tasks_run += 1;
-                    match task.run(plan) {
-                        Ok(out) => wire::send_frame(
-                            &mut stream,
-                            wire::MSG_OUTCOME,
-                            &wire::outcome_payload(&out)?,
-                        )?,
-                        // deterministic application failure: every
-                        // worker would fail this plan the same way, so
-                        // report it instead of dying (the server fails
-                        // the round, not the connection)
-                        Err(e) => wire::send_frame(
-                            &mut stream,
-                            wire::MSG_CLIENT_ERR,
-                            &wire::client_err_payload(&e)?,
-                        )?,
-                    }
-                }
-                wire::MSG_ROUND_END => break,
-                wire::MSG_SHUTDOWN => return Ok(report),
-                k => bail!("expected task or round-end, got frame kind {k}"),
-            }
+        match serve_round(
+            &mut reader,
+            &writer,
+            &task,
+            &statics.population,
+            slots,
+            &mut report.tasks_run,
+        )? {
+            RoundEnd::End => {}
+            RoundEnd::Shutdown | RoundEnd::ServerGone => return Ok(report),
         }
+
         report.rounds_served += 1;
         if opts.max_rounds.is_some_and(|max| report.rounds_served >= max) {
             // leave between rounds: dropping the stream is a clean

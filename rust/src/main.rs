@@ -19,8 +19,8 @@ use std::path::Path;
 use anyhow::Result;
 
 use droppeft::fed::{
-    run_worker, spec, ConsoleReporter, DeviceStoreSpec, Engine, JsonlWriter, TcpTransport,
-    WorkerOptions,
+    run_worker, spec, ConsoleReporter, DeviceStoreSpec, Engine, JsonlWriter, TcpOptions,
+    TcpTransport, TransportSpec, WorkerOptions,
 };
 use droppeft::runtime::{self, BackendKind};
 use droppeft::util::cli::Args;
@@ -97,17 +97,29 @@ USAGE:
                                   settings come from the snapshot, only
                                   the host-specific --workers/--artifacts/
                                   --backend/--device-store/--device-cache/
-                                  --listen still apply; results are
-                                  byte-identical to an uninterrupted run)
+                                  --listen/--wire-* still apply; results
+                                  are byte-identical to an uninterrupted
+                                  run)
                  [--listen ADDR] (serve round plans to remote `droppeft
                                   worker` processes on this TCP address
                                   instead of the in-process pool; same
                                   seed => byte-identical results either
                                   way. Port 0 picks an ephemeral port)
+                 [--wire-delta on|off] [--wire-compress on|off]
+                                 (round-start broadcast encoding when
+                                  serving: send the global state as an
+                                  XOR delta against each worker's last
+                                  state, LZ-compressed when smaller.
+                                  Both default on; workers reconstruct
+                                  bit-identical state either way)
   droppeft serve ...              (alias for `train` that requires
                                   --listen — a session as a round server)
   droppeft worker --connect ADDR [--artifacts DIR]
                  [--backend auto|xla|native]
+                 [--slots N]     (concurrent tasks this worker accepts
+                                  over its one socket — the server
+                                  pipelines up to N tagged tasks to it;
+                                  default: host parallelism)
                  [--max-rounds N] (execute client tasks for a round
                                   server; leaves cleanly between rounds
                                   after N. Workers may join and leave
@@ -140,7 +152,6 @@ fn cmd_train(args: &Args) -> Result<()> {
     // checks, unknown-flag detection) but never validated as a
     // combination, since they are discarded.
     let resume = args.opt_str("resume");
-    let listen = args.opt_str("listen");
     let workers_override = args.opt_usize("workers")?;
     let store_override = match args.opt_str("device-store") {
         Some(s) => Some(DeviceStoreSpec::parse(&s)?),
@@ -165,9 +176,20 @@ fn cmd_train(args: &Args) -> Result<()> {
             )?;
             // the transport is host configuration (like --workers): a
             // snapshot never records it, so serving a resumed session
-            // re-applies --listen here
-            if let Some(addr) = &listen {
-                engine.set_transport(Box::new(TcpTransport::listen(addr)?));
+            // re-applies --listen/--wire-* here
+            if let TransportSpec::Tcp {
+                listen,
+                delta,
+                compress,
+            } = builder.transport()
+            {
+                engine.set_transport(Box::new(TcpTransport::listen_opts(
+                    listen,
+                    TcpOptions {
+                        delta: *delta,
+                        compress: *compress,
+                    },
+                )?));
             }
             engine
         }
@@ -214,16 +236,17 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
     let backend = BackendKind::parse(&args.str_or("backend", "auto"))?;
     let max_rounds = args.opt_usize("max-rounds")?;
+    let slots = args.opt_usize("slots")?;
     args.finish()?;
     let runtime = runtime::create_backend(backend, &artifacts)?;
-    let report = run_worker(
-        &connect,
-        runtime,
-        WorkerOptions {
-            max_rounds,
-            ..Default::default()
-        },
-    )?;
+    let mut opts = WorkerOptions {
+        max_rounds,
+        ..Default::default()
+    };
+    if let Some(n) = slots {
+        opts.slots = n;
+    }
+    let report = run_worker(&connect, runtime, opts)?;
     println!(
         "worker done: served {} rounds, ran {} tasks",
         report.rounds_served, report.tasks_run

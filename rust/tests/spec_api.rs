@@ -27,7 +27,7 @@ fn every_train_flag_translates_to_the_matching_builder_call() {
          --cost-model roberta-large --workers 3 --snapshot-every 2 \
          --snapshot-dir snaps --device-store disk:devstore --device-cache 7 \
          --avail-trace off:0.2 --deadline-secs 900 --upload-loss 0.05 \
-         --listen 127.0.0.1:7171",
+         --listen 127.0.0.1:7171 --wire-delta off --wire-compress off",
     );
     let from_cli = spec::from_args(&args).unwrap();
     let built = SessionSpec::builder()
@@ -57,6 +57,8 @@ fn every_train_flag_translates_to_the_matching_builder_call() {
         .avail_trace("off:0.2")
         .deadline_secs(900.0)
         .upload_loss(0.05)
+        .wire_delta(false)
+        .wire_compress(false)
         .listen("127.0.0.1:7171")
         .build()
         .unwrap();
@@ -172,9 +174,25 @@ fn listen_flag_translates_and_defaults_to_local_transport() {
     assert_eq!(
         from_cli.transport,
         TransportSpec::Tcp {
-            listen: "127.0.0.1:7171".into()
+            listen: "127.0.0.1:7171".into(),
+            delta: true,
+            compress: true,
         }
     );
+
+    // the wire knobs parse strictly and ride along with --listen
+    let from_cli =
+        spec::from_args(&parse("train --listen 127.0.0.1:7171 --wire-delta off")).unwrap();
+    assert_eq!(
+        from_cli.transport,
+        TransportSpec::Tcp {
+            listen: "127.0.0.1:7171".into(),
+            delta: false,
+            compress: true,
+        }
+    );
+    assert!(spec::from_args(&parse("train --wire-delta yes")).is_err());
+    assert!(spec::from_args(&parse("train --wire-compress 1")).is_err());
 
     // an empty address is rejected at validation time
     assert!(SessionSpec::builder().listen("").build().is_err());

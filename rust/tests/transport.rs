@@ -19,7 +19,8 @@ use std::time::{Duration, Instant};
 use droppeft::fed::snapshot::SessionSnapshot;
 use droppeft::fed::transport::wire;
 use droppeft::fed::{
-    run_worker, Engine, JsonlWriter, SessionSpec, TcpTransport, WorkerOptions, WorkerReport,
+    run_worker, Engine, JsonlWriter, SessionSpec, TcpOptions, TcpTransport, WorkerOptions,
+    WorkerReport,
 };
 use droppeft::methods::{MethodSpec, PeftKind};
 use droppeft::metrics::SessionResult;
@@ -84,28 +85,49 @@ fn run_local(spec: SessionSpec, log: Option<&PathBuf>) -> (SessionResult, TrainS
 /// Spawn a loopback worker thread (the exact entry `droppeft worker`
 /// uses), optionally leaving after `max_rounds` rounds.
 fn spawn_worker(addr: String, max_rounds: Option<usize>) -> JoinHandle<WorkerReport> {
-    thread::spawn(move || {
-        run_worker(
-            &addr,
-            native_backend(),
-            WorkerOptions {
-                max_rounds,
-                ..Default::default()
-            },
-        )
-        .expect("worker failed")
-    })
+    spawn_worker_opts(
+        addr,
+        WorkerOptions {
+            max_rounds,
+            ..Default::default()
+        },
+    )
+}
+
+/// [`spawn_worker`] with full control over the worker options (slot
+/// count, retry budget).
+fn spawn_worker_opts(addr: String, opts: WorkerOptions) -> JoinHandle<WorkerReport> {
+    thread::spawn(move || run_worker(&addr, native_backend(), opts).expect("worker failed"))
 }
 
 /// Build a TCP-served engine on an ephemeral loopback port, returning
 /// the engine and the address workers should connect to.
 fn tcp_engine(spec: &SessionSpec) -> (Engine, String) {
+    tcp_engine_opts(spec, TcpOptions::default())
+}
+
+fn tcp_engine_opts(spec: &SessionSpec, opts: TcpOptions) -> (Engine, String) {
     let mut engine = spec.build_engine(native_backend()).unwrap();
-    let transport = TcpTransport::listen("127.0.0.1:0").unwrap();
+    let transport = TcpTransport::listen_opts("127.0.0.1:0", opts).unwrap();
     let addr = transport.local_addr().unwrap().to_string();
     engine.set_transport(Box::new(transport));
     assert_eq!(engine.transport_name(), "tcp");
     (engine, addr)
+}
+
+fn read_snaps(dir: &PathBuf) -> Vec<(String, Vec<u8>)> {
+    let mut snaps: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| {
+            let e = e.unwrap();
+            (
+                e.file_name().to_string_lossy().into_owned(),
+                std::fs::read(e.path()).unwrap(),
+            )
+        })
+        .collect();
+    snaps.sort();
+    snaps
 }
 
 #[test]
@@ -345,7 +367,7 @@ fn worker_dying_mid_task_is_retried_without_drift() {
         let addr = addr.clone();
         thread::spawn(move || {
             let mut s = connect_retry(&addr);
-            wire::send_frame(&mut s, wire::MSG_HELLO, &wire::hello_payload().unwrap())
+            wire::send_frame(&mut s, wire::MSG_HELLO, &wire::hello_payload(1).unwrap())
                 .unwrap();
             let (kind, _) = wire::recv_frame(&mut s).unwrap().expect("handshake reply");
             assert_eq!(kind, wire::MSG_SESSION_INIT);
@@ -384,6 +406,138 @@ fn worker_dying_mid_task_is_retried_without_drift() {
     assert_same_model(&ref_model, &m_tcp);
     // every outcome came from the healthy worker: the faulty one never
     // replied, so each of its claimed plans was re-dispatched
+    assert_eq!(
+        report.tasks_run,
+        ROUNDS * PER_ROUND,
+        "healthy worker ran {} tasks",
+        report.tasks_run
+    );
+}
+
+/// The pipelined dispatch path: ONE worker multiplexing several tagged
+/// tasks over its single socket must stay byte-identical to the
+/// in-process pool — results, event logs, snapshots — at any slot count
+/// and with the delta/compressed broadcast on or off.
+#[test]
+fn single_pipelined_worker_is_byte_identical_at_any_slot_count() {
+    let dir = fresh_dir("slots");
+    let snapdir = dir.join("snaps");
+
+    let (r_local, m_local) = run_local(spec(Some(&snapdir)), Some(&dir.join("local.jsonl")));
+    let local_log = std::fs::read(dir.join("local.jsonl")).unwrap();
+    assert!(!local_log.is_empty());
+    let local_snaps = read_snaps(&snapdir);
+    assert!(!local_snaps.is_empty(), "reference run wrote no snapshots");
+    std::fs::remove_dir_all(&snapdir).unwrap();
+
+    let raw_wire = TcpOptions {
+        delta: false,
+        compress: false,
+    };
+    for (slots, opts) in [
+        (1usize, TcpOptions::default()),
+        (4, TcpOptions::default()),
+        (4, raw_wire),
+    ] {
+        let tag = format!(
+            "slots={slots} delta={} compress={}",
+            opts.delta, opts.compress
+        );
+        let (mut engine, addr) = tcp_engine_opts(&spec(Some(&snapdir)), opts);
+        let log_path = dir.join(format!("tcp_slots{slots}_{}.jsonl", opts.delta));
+        engine.add_sink(Box::new(JsonlWriter::create(&log_path).unwrap()));
+        let w = spawn_worker_opts(
+            addr,
+            WorkerOptions {
+                slots,
+                ..Default::default()
+            },
+        );
+        let r_tcp = engine.run().unwrap();
+        let m_tcp = engine.global_state().clone();
+        drop(engine);
+        let report = w.join().unwrap();
+
+        assert_identical(&r_local, &r_tcp);
+        assert_same_model(&m_local, &m_tcp);
+        // the lone worker ran every task, pipelined or not
+        assert_eq!(report.tasks_run, ROUNDS * PER_ROUND, "{tag}: {report:?}");
+        assert_eq!(
+            std::fs::read(&log_path).unwrap(),
+            local_log,
+            "{tag}: event log differs from in-process"
+        );
+        assert_eq!(
+            read_snaps(&snapdir),
+            local_snaps,
+            "{tag}: snapshots differ from in-process"
+        );
+        std::fs::remove_dir_all(&snapdir).unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A pipelined worker dying while holding SEVERAL tagged tasks in
+/// flight: every one of its in-flight task ids must be re-dispatched on
+/// the surviving connection, with no effect on results.
+#[test]
+fn worker_dying_with_multiple_tasks_in_flight_is_retried_without_drift() {
+    let (reference, ref_model) = run_local(spec(None), None);
+
+    let (mut engine, addr) = tcp_engine(&spec(None));
+    // A protocol-correct client advertising 3 slots that hangs up after
+    // its SECOND task frame — dying with two tagged tasks in flight.
+    // Claims prefer the least-loaded connection, so with the healthy
+    // worker pinned to one slot this client soaks up the round's spare
+    // tasks almost immediately. The read timeout is a liveness guard:
+    // if scheduling only ever routed one task here, the client still
+    // dies (holding that one) instead of deadlocking the round.
+    let faulty = {
+        let addr = addr.clone();
+        thread::spawn(move || -> usize {
+            let mut s = connect_retry(&addr);
+            wire::send_frame(&mut s, wire::MSG_HELLO, &wire::hello_payload(3).unwrap())
+                .unwrap();
+            let (kind, _) = wire::recv_frame(&mut s).unwrap().expect("handshake reply");
+            assert_eq!(kind, wire::MSG_SESSION_INIT);
+            s.set_read_timeout(Some(Duration::from_secs(3))).unwrap();
+            let mut tasks_seen = 0;
+            loop {
+                match wire::recv_frame(&mut s) {
+                    Ok(Some((wire::MSG_TASK, _))) => {
+                        tasks_seen += 1;
+                        if tasks_seen >= 2 {
+                            return tasks_seen; // die with 2 in flight
+                        }
+                    }
+                    Ok(Some(_)) => continue, // round start/end, shutdown
+                    Ok(None) | Err(_) => return tasks_seen,
+                }
+            }
+        })
+    };
+    thread::sleep(Duration::from_millis(100));
+    let healthy = spawn_worker_opts(
+        addr,
+        WorkerOptions {
+            slots: 1,
+            ..Default::default()
+        },
+    );
+    let r_tcp = engine.run().unwrap();
+    let m_tcp = engine.global_state().clone();
+    drop(engine);
+    let in_flight_at_death = faulty.join().unwrap();
+    let report = healthy.join().unwrap();
+
+    assert_identical(&reference, &r_tcp);
+    assert_same_model(&ref_model, &m_tcp);
+    assert!(
+        in_flight_at_death >= 2,
+        "faulty client died with only {in_flight_at_death} task(s) in flight"
+    );
+    // every outcome came from the healthy worker: each task id the dead
+    // connection held was re-dispatched
     assert_eq!(
         report.tasks_run,
         ROUNDS * PER_ROUND,

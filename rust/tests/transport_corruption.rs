@@ -116,12 +116,17 @@ fn huge_legal_claim_reads_incrementally_not_by_preallocation() {
 
 #[test]
 fn hello_decodes_honestly_and_rejects_trailing_garbage() {
-    let hello = wire::hello_payload().unwrap();
-    assert_eq!(wire::read_hello(&hello).unwrap(), wire::PROTOCOL_VERSION);
+    let hello = wire::hello_payload(4).unwrap();
+    let decoded = wire::read_hello(&hello).unwrap();
+    assert_eq!(decoded.version, wire::PROTOCOL_VERSION);
+    assert_eq!(decoded.slots, 4);
 
     // the decoder reports a foreign version as-is — rejecting it is the
-    // server handshake's job (pinned e2e in tests/transport.rs)
-    assert_eq!(wire::read_hello(&99u64.to_le_bytes()).unwrap(), 99);
+    // server handshake's job (pinned e2e in tests/transport.rs). An
+    // 8-byte body is a v2 hello: version only, one implied slot.
+    let v2 = wire::read_hello(&99u64.to_le_bytes()).unwrap();
+    assert_eq!(v2.version, 99);
+    assert_eq!(v2.slots, 1);
 
     let err = wire::read_hello(&hello[..3]).unwrap_err().to_string();
     assert!(err.contains("unexpected end"), "{err}");
@@ -130,6 +135,97 @@ fn hello_decodes_honestly_and_rejects_trailing_garbage() {
     long.push(0);
     let err = wire::read_hello(&long).unwrap_err().to_string();
     assert!(err.contains("trailing"), "{err}");
+}
+
+#[test]
+fn tagged_bodies_shorter_than_a_task_id_are_rejected() {
+    // pipelined task/outcome frames lead with an 8-byte task id
+    let (id, rest) = wire::split_tag(&[7, 0, 0, 0, 0, 0, 0, 0, 0xAB]).unwrap();
+    assert_eq!((id, rest), (7, &[0xAB][..]));
+    for short in 0..8 {
+        let err = wire::split_tag(&vec![0u8; short]).unwrap_err().to_string();
+        assert!(err.contains("tagged frame"), "len {short}: {err}");
+    }
+}
+
+/// The v3 round-start codec: every truncation and every tag byte flip
+/// must fail cleanly, and a delta applied against the wrong (or no, or
+/// corrupted) base state must be rejected before anything trains on it.
+#[test]
+fn round_start3_and_delta_corruption_are_rejected_cleanly() {
+    // two "states" a round apart, sparse difference — the delta case
+    let base: Vec<u8> = (0..4096u32).map(|i| (i % 251) as u8).collect();
+    let mut next = base.clone();
+    next[17] ^= 0x5A;
+    next[4000] ^= 0x01;
+
+    let full_frame = wire::build_state_frame(&next, None, true, true);
+    let delta_frame = wire::build_state_frame(&next, Some((3, &base)), true, true);
+    assert_eq!(delta_frame.base_round, Some(3));
+
+    for (tag, frame, held) in [
+        ("full", &full_frame, None),
+        ("delta", &delta_frame, Some((3u64, &base[..]))),
+    ] {
+        let body = wire::round_start3_payload(4, "lora", false, b"mb", frame).unwrap();
+        let rt = wire::read_round_start3(&body).unwrap();
+        assert_eq!(&rt.state, frame, "{tag}: codec round trip");
+        assert_eq!(
+            wire::reconstruct_state(&rt.state, held).unwrap(),
+            next,
+            "{tag}: reconstruction must be exact-bitwise"
+        );
+        for cut in 0..body.len() {
+            assert!(
+                wire::read_round_start3(&body[..cut]).is_err(),
+                "{tag}: truncated round-start ({cut} bytes) decoded"
+            );
+        }
+        // no single-byte corruption may panic; and if it decodes, the
+        // checksum catches it at reconstruction
+        for i in 0..body.len() {
+            let mut bad = body.clone();
+            bad[i] ^= 0xff;
+            if let Ok(msg) = wire::read_round_start3(&bad) {
+                if let Ok(state) = wire::reconstruct_state(&msg.state, held) {
+                    assert_eq!(state, next, "{tag}: corrupt byte {i} reconstructed wrong");
+                }
+            }
+        }
+    }
+
+    // a delta against the wrong base round, or with no base at all
+    let err = wire::reconstruct_state(&delta_frame, Some((2, &base)))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("round 3"), "{err}");
+    assert!(err.contains("round 2"), "{err}");
+    let err = wire::reconstruct_state(&delta_frame, None)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no base state"), "{err}");
+    // the right round but mutated base bytes: checksum must catch it
+    let mut rotten = base.clone();
+    rotten[100] ^= 1;
+    let err = wire::reconstruct_state(&delta_frame, Some((3, &rotten)))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("checksum"), "{err}");
+}
+
+#[test]
+fn compressed_state_truncation_is_a_clean_error() {
+    let full: Vec<u8> = vec![0u8; 2048];
+    let frame = wire::build_state_frame(&full, None, false, true);
+    assert!(frame.compressed, "2 KiB of zeros must compress");
+    for cut in 0..frame.data.len() {
+        let mut bad = frame.clone();
+        bad.data.truncate(cut);
+        assert!(
+            wire::reconstruct_state(&bad, None).is_err(),
+            "truncated compressed state ({cut} bytes) reconstructed"
+        );
+    }
 }
 
 #[test]

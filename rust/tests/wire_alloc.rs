@@ -1,0 +1,124 @@
+//! Steady-state allocation audit for the transport's hot dispatch path.
+//!
+//! `wire::FrameScratch` promises that once its buffer has grown to the
+//! working frame size, sending further frames of that size (or smaller)
+//! performs **zero** heap allocations: the whole frame — header, task-id
+//! tag, payload sections — is assembled in the one held `Vec` and
+//! shipped with a single `write_all`. A counting `GlobalAlloc` makes
+//! that testable, exactly like `tests/native_alloc.rs` does for the
+//! native kernels.
+//!
+//! This file is its own integration-test binary so the
+//! `#[global_allocator]` swap cannot perturb (or be perturbed by)
+//! unrelated tests.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use droppeft::fed::transport::wire;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+/// A preallocated sink: writing to it must never allocate, so every
+/// allocation the test counts belongs to the frame-assembly path.
+struct FixedSink {
+    buf: Vec<u8>,
+}
+
+impl Write for FixedSink {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        assert!(
+            self.buf.len() + data.len() <= self.buf.capacity(),
+            "sink would reallocate — size it up in the test"
+        );
+        self.buf.extend_from_slice(data);
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn warm_frame_scratch_sends_do_not_allocate() {
+    let body = vec![0xA5u8; 64 * 1024];
+    let tag = 7u64.to_le_bytes();
+    let mut sink = FixedSink {
+        buf: Vec::with_capacity(4 * (wire::FRAME_HEADER + 8 + body.len())),
+    };
+    let mut scratch = wire::FrameScratch::new();
+
+    // first send grows the scratch buffer to the working frame size
+    scratch
+        .send(&mut sink, wire::MSG_TASK, &[&tag, &body])
+        .unwrap();
+
+    let before = allocs();
+    for _ in 0..3 {
+        sink.buf.clear();
+        scratch
+            .send(&mut sink, wire::MSG_TASK, &[&tag, &body])
+            .unwrap();
+    }
+    let steady = allocs() - before;
+    assert_eq!(
+        steady, 0,
+        "3 warm FrameScratch sends made {steady} allocations — the hot \
+         dispatch path must reuse its scratch buffer"
+    );
+
+    // smaller frames reuse the same capacity: still zero
+    let small = vec![1u8; 128];
+    let before = allocs();
+    for _ in 0..3 {
+        sink.buf.clear();
+        scratch
+            .send(&mut sink, wire::MSG_OUTCOME, &[&tag, &small])
+            .unwrap();
+    }
+    let steady = allocs() - before;
+    assert_eq!(steady, 0, "smaller warm sends made {steady} allocations");
+
+    // the frames are still exactly what send_frame would produce
+    sink.buf.clear();
+    scratch
+        .send(&mut sink, wire::MSG_TASK, &[&tag, &small])
+        .unwrap();
+    let mut reference = Vec::new();
+    let mut payload = tag.to_vec();
+    payload.extend_from_slice(&small);
+    wire::send_frame(&mut reference, wire::MSG_TASK, &payload).unwrap();
+    assert_eq!(sink.buf, reference, "FrameScratch framing drifted");
+}
